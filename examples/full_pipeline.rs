@@ -1,0 +1,160 @@
+//! **End-to-end validation driver** (DESIGN.md §6): the whole CAPSim
+//! system on the full synthetic suite.
+//!
+//! 1. generate the 24 Table-II benchmarks;
+//! 2. SimPoint-profile them, build the golden clip dataset (functional
+//!    trace + O3 commit times + Algorithm-1 slicing + Fig.-5/6 tokens);
+//! 3. Fig.-3 sampling;
+//! 4. train the attention predictor through the AOT SGD step, logging the
+//!    Fig.-9 loss curve;
+//! 5. evaluate clip MAPE on held-out data;
+//! 6. run both Fig.-1 modes per benchmark and report the Fig.-7
+//!    speed/accuracy comparison.
+//!
+//! Run: `cargo run --release --example full_pipeline [-- --full --steps N]`
+//! (default is the fast `Scale::Test` configuration; `--full` is the
+//! EXPERIMENTS.md configuration and takes much longer).
+
+use std::path::Path;
+use std::time::Instant;
+
+use capsim::config::PipelineConfig;
+use capsim::coordinator::{build_dataset, capsim_mode, gem5_mode, pool};
+use capsim::predictor::{evaluate, train, TrainParams};
+use capsim::report::{Series, Table};
+use capsim::runtime::Runtime;
+use capsim::sampler::sample;
+use capsim::util::stats;
+use capsim::workloads::{suite, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let steps = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if full { 600 } else { 300 });
+
+    let mut cfg = PipelineConfig::default();
+    if full {
+        cfg.scale = Scale::Full;
+        cfg.simpoint.interval_insts = 1_000_000;
+        cfg.simpoint.warmup_insts = 50_000;
+        cfg.simpoint.max_k = 6;
+        cfg.train_slicing = capsim::config::TrainSlicing::Fixed;
+    } else {
+        cfg.simpoint.interval_insts = 10_000;
+        cfg.simpoint.warmup_insts = 1_000;
+        cfg.simpoint.max_k = 4;
+        cfg.train_slicing = capsim::config::TrainSlicing::Fixed;
+    }
+    println!("== CAPSim full pipeline ({:?} scale, {steps} steps) ==", cfg.scale);
+
+    // ---- 1+2: suite + golden dataset ----
+    let t0 = Instant::now();
+    let benches = suite(cfg.scale);
+    let (ds, profiles) = build_dataset(&benches, &cfg, pool::default_threads());
+    println!(
+        "golden dataset: {} clips from {} benchmarks in {:.1}s ({} dropped long)",
+        ds.len(),
+        benches.len(),
+        t0.elapsed().as_secs_f64(),
+        ds.dropped_long
+    );
+
+    let mut t2 = Table::new("Table II (reproduced)", &["Name", "CKP", "Tag", "Set"]);
+    for (b, p) in benches.iter().zip(&profiles) {
+        t2.row(vec![
+            b.name.into(),
+            p.selected.len().to_string(),
+            p.tag_string.clone(),
+            b.set_no.to_string(),
+        ]);
+    }
+    t2.emit("e2e_table2");
+
+    // ---- 3: Fig.-3 sampling ----
+    // The paper's coefficient (0.02) is calibrated for a 30M-clip corpus;
+    // ours is ~1000x smaller, so scale the kept fraction up accordingly.
+    cfg.sampler.coefficient = 0.15;
+    let keys = ds.keys();
+    let sel = sample(&keys, &cfg.sampler);
+    let train_ds = if sel.len() > 256 { ds.subset(&sel) } else { ds.clone() };
+    println!(
+        "sampler: {} -> {} clips (threshold {}, coefficient {})",
+        ds.len(),
+        train_ds.len(),
+        cfg.sampler.threshold,
+        cfg.sampler.coefficient
+    );
+
+    // ---- 4: train through the AOT SGD step ----
+    let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+    let mut model = rt.load_variant("capsim")?;
+    model.init_params(cfg.seed as u32)?;
+    let (tr, va, te) = train_ds.split(cfg.seed);
+    let t1 = Instant::now();
+    let log = train(
+        &mut model,
+        &train_ds,
+        &tr,
+        &va,
+        &TrainParams { steps, lr: cfg.lr, eval_every: 25, seed: cfg.seed, patience: 10_000 },
+    )?;
+    println!("training: {} steps in {:.1}s", log.steps_run, t1.elapsed().as_secs_f64());
+
+    let mut fig9 = Series::new("train MAPE");
+    for (s, l) in log.smoothed_train(10) {
+        fig9.push(s as f64, l);
+    }
+    fig9.emit("e2e_fig9_train");
+    let mut fig9v = Series::new("val MAPE");
+    for (s, l) in &log.val_loss {
+        fig9v.push(*s as f64, *l);
+    }
+    fig9v.emit("e2e_fig9_val");
+
+    // ---- 5: held-out clip accuracy ----
+    let ev = evaluate(&model, &train_ds, &te, log.time_scale)?;
+    println!(
+        "held-out clips: MAPE {:.3} (accuracy {:.1}%) over {} clips",
+        ev.mape, ev.accuracy_pct, ev.n
+    );
+
+    // ---- 6: Fig.-7 comparison over the suite ----
+    let mut t7 = Table::new(
+        "Fig. 7 (reproduced) — gem5 mode vs CAPSim mode",
+        &["Benchmark", "CKP", "gem5 s", "CAPSim s", "Speedup", "CyclesErr %", "uniq/total clips"],
+    );
+    let mut speedups = Vec::new();
+    let mut errs = Vec::new();
+    for (b, p) in benches.iter().zip(&profiles) {
+        let g = gem5_mode(&p.selected, p.n_intervals, &cfg);
+        let c = capsim_mode(&p.selected, p.n_intervals, &cfg, &model, log.time_scale)?;
+        let speedup = g.wall_s / c.wall_s.max(1e-9);
+        let err = 100.0 * (c.total_cycles - g.total_cycles).abs() / g.total_cycles;
+        speedups.push(speedup);
+        errs.push(err);
+        t7.row(vec![
+            b.name.into(),
+            p.selected.len().to_string(),
+            format!("{:.3}", g.wall_s),
+            format!("{:.3}", c.wall_s),
+            format!("{:.2}x", speedup),
+            format!("{:.1}", err),
+            format!("{}/{}", c.clips_unique, c.clips_total),
+        ]);
+    }
+    t7.emit("e2e_fig7");
+    println!(
+        "speedup: mean {:.2}x, max {:.2}x | whole-benchmark cycle error: mean {:.1}%, max {:.1}%",
+        stats::mean(&speedups),
+        speedups.iter().cloned().fold(0.0, f64::max),
+        stats::mean(&errs),
+        errs.iter().cloned().fold(0.0, f64::max)
+    );
+    println!("total wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Quickstart: the CAPSim public API in ~80 lines.
+//!
+//! 1. assemble a small PISA program;
+//! 2. run it on the functional simulator (trace);
+//! 3. time it on the cycle-level O3 model (golden);
+//! 4. slice + standardize + context-annotate the trace;
+//! 5. if `make artifacts` has run, predict clip times with the
+//!    AOT-compiled attention model (untrained weights — the point here is
+//!    the plumbing; see `examples/full_pipeline.rs` for real training).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use capsim::context::{context_tokens, REGISTER_SPEC};
+use capsim::coordinator::golden::snapshots_at;
+use capsim::dataset::{ClipSample, Dataset};
+use capsim::functional::AtomicCpu;
+use capsim::isa::Assembler;
+use capsim::o3::{O3Config, O3Core};
+use capsim::predictor::predict_all;
+use capsim::runtime::Runtime;
+use capsim::simpoint::Checkpoint;
+use capsim::slicer::slice_labeled;
+use capsim::tokenizer::standardize::{clip_key, tokenize_clip};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. a small program: dot product over 256 doubles ----
+    let mut a = Assembler::new(0x1000);
+    a.data_f64(0x20000, &(0..512).map(|i| 1.0 + (i % 7) as f64).collect::<Vec<_>>());
+    a.load_imm64(1, 0x20000);
+    a.li(2, 256);
+    a.mtctr(2);
+    let top = a.here();
+    a.lfd(1, 0, 1);
+    a.lfd(2, 8, 1);
+    a.fmadd(3, 1, 2); // acc += x*y
+    a.addi(1, 1, 16);
+    a.bdnz(top);
+    a.halt();
+    let program = a.finish();
+    println!("assembled {} instructions", program.insts.len());
+
+    // ---- 2. functional trace ----
+    let ck = Checkpoint::capture(&AtomicCpu::load(&program));
+    let mut cpu = AtomicCpu::load(&program);
+    let trace = cpu.run_trace(1_000_000);
+    println!(
+        "functional: {} dynamic instructions, result acc = {:.1}",
+        trace.len(),
+        cpu.regs.fpr[3]
+    );
+
+    // ---- 3. golden timing ----
+    let mut core = O3Core::new(O3Config::default());
+    let golden = core.simulate(&trace);
+    println!(
+        "O3 golden: {} cycles, IPC {:.2}, {} branches ({} mispredicted)",
+        golden.stats.cycles,
+        golden.stats.ipc(),
+        golden.stats.branches,
+        golden.stats.mispredicts
+    );
+
+    // ---- 4. slice + tokenize + context ----
+    const L_MIN: usize = 24;
+    const L_TOKEN: usize = 16;
+    let clips = slice_labeled(trace.len(), &golden.commit_cycle, L_MIN);
+    println!("slicer: {} clips (Algorithm 1)", clips.len());
+    let starts: Vec<usize> = clips.iter().map(|c| c.start).collect();
+    let snaps = snapshots_at(&ck, &starts);
+
+    let mut ds = Dataset::new(L_TOKEN, 32, capsim::context::M_ROWS);
+    for (clip, regs) in clips.iter().zip(&snaps) {
+        let tokens = tokenize_clip(clip.records(&trace), L_TOKEN);
+        ds.push(ClipSample {
+            key: clip_key(&tokens),
+            len: clip.len as u16,
+            tokens,
+            ctx: context_tokens(regs, &REGISTER_SPEC),
+            time: clip.time as f32,
+            bench: 0,
+        });
+    }
+    println!(
+        "dataset: {} samples, mean golden clip time {:.1} cycles",
+        ds.len(),
+        ds.mean_time()
+    );
+
+    // ---- 5. predict with the AOT model (if artifacts are built) ----
+    let art = Path::new("artifacts");
+    if art.join("manifest.json").exists() {
+        let rt = Runtime::load(art)?;
+        let mut model = rt.load_variant("capsim")?;
+        model.init_params(42)?;
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let pred = predict_all(&model, &ds, &idx, ds.mean_time() as f32)?;
+        let total_pred: f64 = pred.iter().sum();
+        let total_golden: f64 = ds.samples.iter().map(|s| s.time as f64).sum();
+        println!(
+            "predictor (untrained): predicted {:.0} vs golden {:.0} cycles over {} clips",
+            total_pred,
+            total_golden,
+            pred.len()
+        );
+        println!("(train it with `capsim train` or examples/full_pipeline)");
+    } else {
+        println!("artifacts/ missing — run `make artifacts` to try the predictor");
+    }
+    Ok(())
+}

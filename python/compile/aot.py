@@ -1,0 +1,129 @@
+"""AOT export: lower every predictor entry point to HLO *text* + manifest.
+
+Python runs ONCE (``make artifacts``); the Rust coordinator loads the HLO
+text through the PJRT C API and never touches Python again.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/load_hlo and aot_recipe).
+
+Exported per predictor variant (capsim, nocontext, ithemal):
+  {name}_init.hlo.txt       (seed:u32[])                           -> (params,)
+  {name}_fwd_b{B}.hlo.txt   (params, tokens, tok_mask, clip_mask,
+                             ctx, time_scale)                      -> (pred,)
+  {name}_train_b{B}.hlo.txt (params, mom, tokens, tok_mask,
+                             clip_mask, ctx, target, lr,
+                             time_scale)                           -> (params',
+                                                                       mom',
+                                                                       loss)
+plus ``manifest.json`` describing shapes, parameter layout, batch sizes and
+artifact file names — the single contract consumed by ``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import CFG, LC, LT, M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(b: int):
+    return (
+        _spec((b, LC, LT), jnp.int32),    # tokens
+        _spec((b, LC, LT), jnp.float32),  # tok_mask
+        _spec((b, LC), jnp.float32),      # clip_mask
+        _spec((b, M), jnp.int32),         # ctx tokens
+    )
+
+
+def export_variant(name: str, spec, fwd, out_dir: str) -> dict:
+    files = {}
+    p_spec = _spec((spec.size,), jnp.float32)
+    scalar = _spec((), jnp.float32)
+
+    # ---- init ----
+    def init_fn(seed):
+        return (spec.init_flat(jax.random.PRNGKey(seed)),)
+
+    lowered = jax.jit(init_fn, keep_unused=True).lower(_spec((), jnp.uint32))
+    path = f"{name}_init.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    files["init"] = path
+    print(f"  {path}")
+
+    # ---- forward at every batch size ----
+    files["fwd"] = {}
+    for b in CFG["fwd_batch_sizes"]:
+        def fwd_fn(params, tokens, tok_mask, clip_mask, ctx, time_scale):
+            return (fwd(params, tokens, tok_mask, clip_mask, ctx,
+                        time_scale),)
+
+        lowered = jax.jit(fwd_fn, keep_unused=True).lower(p_spec, *batch_specs(b), scalar)
+        path = f"{name}_fwd_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        files["fwd"][str(b)] = path
+        print(f"  {path}")
+
+    # ---- train step ----
+    tb = CFG["train_batch"]
+    train = model.make_train_step(fwd)
+    lowered = jax.jit(train, keep_unused=True).lower(
+        p_spec, p_spec, *batch_specs(tb), _spec((tb,), jnp.float32),
+        scalar, scalar)
+    path = f"{name}_train_b{tb}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    files["train"] = {str(tb): path}
+    print(f"  {path}")
+
+    return {
+        "param_size": spec.size,
+        "params": spec.manifest()["entries"],
+        "files": files,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="capsim,nocontext,ithemal")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = args.variants.split(",")
+    manifest = {"config": CFG, "m_rows": M, "variants": {}}
+    for name, (spec, fwd) in model.variants().items():
+        if name not in wanted:
+            continue
+        print(f"exporting {name} (P={spec.size})")
+        manifest["variants"][name] = export_variant(name, spec, fwd, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""L1 — fused masked scaled-dot-product attention as a Pallas kernel.
+
+This is the compute hot-spot of CAPSim's performance predictor (paper Eq. 1,
+used by both the instruction encoder and the block encoder, Section V).
+
+TPU-oriented design (see DESIGN.md §2 "Hardware adaptation"):
+  * the grid iterates over attention *heads*; each program instance holds a
+    whole ``(batch, 1, seq, d_head)`` Q/K/V block in VMEM — at CAPSim's
+    sequence lengths (L_token=16, L_clip=32) an entire head fits comfortably
+    in the ~16 MiB VMEM budget, so no cross-instance reduction is needed;
+  * the mask enters as an additive bias tile fused *before* the softmax, so
+    the attention matrix never materializes in HBM;
+  * contractions use ``preferred_element_type=float32`` so the MXU accumulates
+    in f32 even for bf16 inputs;
+  * the softmax is the numerically-stable max-subtracted form, computed
+    entirely in registers/VMEM.
+
+``interpret=True`` is mandatory on this CPU-only image: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is
+checked against the pure-jnp oracle in ``ref.py`` (pytest, shape/dtype sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    """One head: softmax(q @ k^T * scale + bias) @ v, stable softmax."""
+    q = q_ref[...].astype(jnp.float32)   # [B, 1, Sq, D]
+    k = k_ref[...].astype(jnp.float32)   # [B, 1, Sk, D]
+    v = v_ref[...].astype(jnp.float32)   # [B, 1, Sk, D]
+    b = bias_ref[...].astype(jnp.float32)  # [B, 1, Sq, Sk]
+
+    # MXU contraction: scores[B,1,Sq,Sk]
+    s = jax.lax.dot_general(
+        q, k,
+        dimension_numbers=(((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    ) * scale + b
+
+    # Numerically-stable softmax along the key axis, fused in VMEM.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    # p @ v -> [B,1,Sq,D]
+    o = jax.lax.dot_general(
+        p, v,
+        dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _attention_bwd_kernel(q_ref, k_ref, v_ref, bias_ref, do_ref,
+                          dq_ref, dk_ref, dv_ref, dbias_ref, *, scale: float):
+    """Flash-style backward: recompute p in VMEM, emit dq/dk/dv/dbias.
+
+    Recomputing the attention matrix instead of saving it keeps the residual
+    footprint at O(S·D) per head — the same trade the paper's GPU stack makes
+    with flash-attention, re-expressed for the VMEM budget.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    b = bias_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+
+    bh = (((3,), (3,)), ((0, 1), (0, 1)))   # contract last dims, batch (B, h)
+    s = jax.lax.dot_general(q, k, bh, preferred_element_type=jnp.float32)
+    s = s * scale + b
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)        # [B,1,Sq,Sk]
+
+    # dv = p^T @ do  -> contract the Sq axis
+    dv = jax.lax.dot_general(
+        p, do, (((2,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)           # [B,1,Sk,D]
+    # dp = do @ v^T
+    dp = jax.lax.dot_general(do, v, bh,
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    # dq = ds @ k * scale
+    dq = jax.lax.dot_general(
+        ds, k, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32) * scale
+    # dk = ds^T @ q * scale
+    dk = jax.lax.dot_general(
+        ds, q, (((2,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32) * scale
+
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+    dbias_ref[...] = ds.astype(dbias_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array) -> jax.Array:
+    """Multi-head attention over ``[B, H, S, D]`` tensors.
+
+    ``bias`` is an additive mask of shape ``[B, H, Sq, Sk]``
+    (``0`` for visible positions, large-negative for masked ones).
+    Differentiable: the VJP is a second Pallas kernel (flash-style
+    recompute), since interpret-mode ``pallas_call`` has no built-in
+    reverse-mode rule.
+    """
+    return _mha_fwd_impl(q, k, v, bias)
+
+
+# Per-instance VMEM budget: a quarter of a 16 MiB core so double-buffered
+# HBM->VMEM pipelining of the next tile still fits (see DESIGN.md §Perf).
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def plan_batch_tile(batch: int, sq: int, sk: int, d: int,
+                    dtype_bytes: int = 4) -> int:
+    """Largest batch tile (a divisor of ``batch``) whose per-instance VMEM
+    footprint stays within :data:`VMEM_BUDGET`. The grid then iterates
+    ``(heads, batch // tile)`` — the TPU analogue of the paper's GPU
+    threadblock decomposition."""
+    bt = batch
+    while bt > 1 and vmem_bytes(bt, 1, sq, sk, d, dtype_bytes) > VMEM_BUDGET:
+        # prefer halving; fall back to the largest proper divisor
+        if bt % 2 == 0:
+            bt //= 2
+        else:
+            bt = next((bt // f for f in range(3, bt + 1) if bt % f == 0), 1)
+    return bt
+
+
+def _tile_specs(bt, sq, sk, d):
+    return [
+        pl.BlockSpec((bt, 1, sq, d), lambda h, i: (i, h, 0, 0)),
+        pl.BlockSpec((bt, 1, sk, d), lambda h, i: (i, h, 0, 0)),
+        pl.BlockSpec((bt, 1, sk, d), lambda h, i: (i, h, 0, 0)),
+        pl.BlockSpec((bt, 1, sq, sk), lambda h, i: (i, h, 0, 0)),
+    ]
+
+
+# Kernel lowering mode:
+#   default      — "whole-array" schedule: one grid instance computes every
+#                  head with batched contractions. On the CPU interpreter
+#                  this removes the per-grid-step while-loop overhead
+#                  (measured 2.2x on the full forward pass, §Perf) and is
+#                  the shape XLA-CPU fuses best.
+#   CAPSIM_KERNEL_TILED=1 — the TPU-oriented (heads x batch-tiles) grid with
+#                  VMEM-budgeted BlockSpecs (DESIGN.md §2). Functionally
+#                  identical (tested against the oracle either way); use it
+#                  when lowering for a real TPU target.
+TILED = os.environ.get("CAPSIM_KERNEL_TILED") == "1"
+
+
+def _mha_fwd_impl(q, k, v, bias):
+    batch, heads, sq, d = q.shape
+    sk = k.shape[2]
+    bias = jnp.broadcast_to(bias, (batch, heads, sq, sk))
+    scale = 1.0 / float(d) ** 0.5
+    out_shape = jax.ShapeDtypeStruct((batch, heads, sq, d), q.dtype)
+
+    kernel = functools.partial(_attention_kernel, scale=scale)
+    if not TILED:
+        # _attention_kernel batches over dims (0, 1), so it handles the
+        # whole [B, H, S, D] array in one instance
+        return pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            interpret=True,  # CPU-only image; see module docstring
+        )(q, k, v, bias)
+
+    bt = plan_batch_tile(batch, sq, sk, d)
+    return pl.pallas_call(
+        kernel,
+        grid=(heads, batch // bt),
+        in_specs=_tile_specs(bt, sq, sk, d),
+        out_specs=pl.BlockSpec((bt, 1, sq, d), lambda h, i: (i, h, 0, 0)),
+        out_shape=out_shape,
+        interpret=True,  # CPU-only image; see module docstring
+    )(q, k, v, bias)
+
+
+def _mha_fwd(q, k, v, bias):
+    out = _mha_fwd_impl(q, k, v, bias)
+    return out, (q, k, v, bias)
+
+
+def _mha_bwd(res, do):
+    q, k, v, bias = res
+    orig_bias_shape, orig_bias_dtype = bias.shape, bias.dtype
+    batch, heads, sq, d = q.shape
+    sk = k.shape[2]
+    bias = jnp.broadcast_to(bias, (batch, heads, sq, sk))
+    scale = 1.0 / float(d) ** 0.5
+
+    kernel = functools.partial(_attention_bwd_kernel, scale=scale)
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, heads, sq, d), q.dtype),
+        jax.ShapeDtypeStruct((batch, heads, sk, d), k.dtype),
+        jax.ShapeDtypeStruct((batch, heads, sk, d), v.dtype),
+        jax.ShapeDtypeStruct((batch, heads, sq, sk), jnp.float32),
+    ]
+    if not TILED:
+        # whole-array schedule (the bwd kernel body is already head-batched)
+        dq, dk, dv, dbias = pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            interpret=True,
+        )(q, k, v, bias, do)
+    else:
+        bt = plan_batch_tile(batch, sq, sk, d)
+        dq, dk, dv, dbias = pl.pallas_call(
+            kernel,
+            grid=(heads, batch // bt),
+            in_specs=_tile_specs(bt, sq, sk, d)
+            + [pl.BlockSpec((bt, 1, sq, d), lambda h, i: (i, h, 0, 0))],
+            out_specs=[
+                pl.BlockSpec((bt, 1, sq, d), lambda h, i: (i, h, 0, 0)),
+                pl.BlockSpec((bt, 1, sk, d), lambda h, i: (i, h, 0, 0)),
+                pl.BlockSpec((bt, 1, sk, d), lambda h, i: (i, h, 0, 0)),
+                pl.BlockSpec((bt, 1, sq, sk), lambda h, i: (i, h, 0, 0)),
+            ],
+            out_shape=out_shape,
+            interpret=True,
+        )(q, k, v, bias, do)
+    # reduce dbias over the axes the primal bias broadcast along
+    dbias = dbias.astype(orig_bias_dtype)
+    for ax, (bn, fn) in enumerate(zip(orig_bias_shape, dbias.shape)):
+        if bn != fn:
+            dbias = jnp.sum(dbias, axis=ax, keepdims=True)
+    return dq, dk, dv, dbias
+
+
+mha.defvjp(_mha_fwd, _mha_bwd)
+
+
+def vmem_bytes(batch: int, heads: int, sq: int, sk: int, d: int,
+               dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid instance (perf-model input, §Perf).
+
+    One instance holds Q, K, V, bias, scores and the output block.
+    """
+    q = batch * sq * d
+    kv = 2 * batch * sk * d
+    b = batch * sq * sk
+    s = batch * sq * sk
+    o = batch * sq * d
+    return (q + kv + b + s + o) * dtype_bytes
+
+
+def mxu_utilization_estimate(sq: int, sk: int, d: int) -> float:
+    """Fraction of 128x128 MXU lanes busy for the two contractions (§Perf)."""
+    def eff(m, n, kk):
+        pad = lambda x: -(-x // 128) * 128
+        return (m * n * kk) / (pad(m) * pad(n) * pad(kk))
+    return 0.5 * (eff(sq, sk, d) + eff(sq, d, sk))

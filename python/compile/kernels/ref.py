@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the L1 Pallas attention kernel.
+
+This is the correctness reference (paper Eq. 1):
+    Attention(Q, K, V) = softmax(Q K^T / sqrt(d) + bias) V
+computed head-by-head with plain jax.numpy — no Pallas, no custom lowering.
+pytest sweeps shapes/dtypes and asserts ``allclose`` between this and
+``attention.mha``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array) -> jax.Array:
+    """Reference multi-head attention over ``[B, H, S, D]`` tensors."""
+    d = q.shape[-1]
+    scale = 1.0 / float(d) ** 0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + jnp.broadcast_to(bias, s.shape).astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

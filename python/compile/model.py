@@ -1,0 +1,402 @@
+"""L2 — CAPSim's attention-based performance predictor in JAX (build-time).
+
+Implements Section V of the paper:
+
+  * **standardized token stream** in, one scalar (predicted cycles of the
+    code trace clip) out (Eq. 3–4);
+  * **instruction encoder** — per-instruction self-attention over the
+    ``L_token`` standardized tokens; the row of the leading ``<REP>`` token is
+    the instruction's *ideal execution time vector* ``RT_i`` (Eq. 5–8);
+  * **block encoder** — sinusoidal positional encoding over the clip, then
+    self-attention across instructions, then a cross-attention in which the
+    **context matrix** (register-value embeddings, Fig. 6 / Table I) queries
+    the ideal-execution-time matrix ``T`` (Eq. 9);
+  * **MLP head with arithmetic mean** producing the cycle count.
+
+Also implemented here, for the paper's evaluation section:
+
+  * the **no-context ablation** (Fig. 10) — the cross-attention query is a
+    learned query bank of the same shape instead of the register context;
+  * the **Ithemal-style LSTM baseline** (Fig. 10) — token-level LSTM feeding
+    an instruction-level LSTM feeding a linear head;
+  * parameter **initialization** and the **SGD-with-momentum train step**
+    (paper §VI-B: MAPE loss, lr 1e-3, momentum 0.9) with global-norm gradient
+    clipping.
+
+Every variant stores its parameters in ONE flat ``f32[P]`` vector whose
+layout (name → offset/shape) is emitted into ``artifacts/manifest.json`` so
+the Rust side can keep parameters as device-resident PJRT buffers and drive
+training without Python.  All attention calls route through the L1 Pallas
+kernel (``kernels.attention.mha``) so the kernel lowers into the same HLO.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention
+
+_CFG_PATH = os.path.join(os.path.dirname(__file__), "model_config.json")
+with open(_CFG_PATH) as f:
+    CFG = json.load(f)
+
+V = CFG["vocab_size"]
+E = CFG["embed_dim"]
+H = CFG["num_heads"]
+INST_LAYERS = CFG["inst_layers"]
+BLOCK_LAYERS = CFG["block_layers"]
+F = CFG["mlp_hidden"]
+LT = CFG["l_token"]
+LC = CFG["l_clip"]
+M = CFG["ctx_regs"] * (1 + CFG["ctx_value_tokens"])  # context-matrix rows
+HD = CFG["lstm_hidden"]
+INIT_TIME_BIAS = CFG["init_time_bias"]
+GRAD_CLIP = CFG["grad_clip"]
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# Flat parameter packing
+# --------------------------------------------------------------------------
+
+class ParamSpec:
+    """Ordered (name, shape, init) list with a flat-vector layout."""
+
+    def __init__(self):
+        self.entries: list[tuple[str, tuple[int, ...], str]] = []
+        self._offsets: dict[str, tuple[int, tuple[int, ...]]] = {}
+        self._size = 0
+
+    def add(self, name: str, shape: tuple[int, ...], init: str = "normal"):
+        assert name not in self._offsets, name
+        n = int(math.prod(shape))
+        self.entries.append((name, shape, init))
+        self._offsets[name] = (self._size, shape)
+        self._size += n
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def slice(self, params: jax.Array, name: str) -> jax.Array:
+        off, shape = self._offsets[name]
+        n = int(math.prod(shape))
+        return jax.lax.dynamic_slice(params, (off,), (n,)).reshape(shape)
+
+    def init_flat(self, key: jax.Array) -> jax.Array:
+        """Build the flat parameter vector with per-entry initializers."""
+        chunks = []
+        for i, (name, shape, init) in enumerate(self.entries):
+            n = int(math.prod(shape))
+            sub = jax.random.fold_in(key, i)
+            if init == "normal":
+                # scaled-normal (0.02), the standard transformer init
+                c = jax.random.normal(sub, (n,), jnp.float32) * 0.02
+            elif init == "xavier":
+                fan_in = shape[0] if len(shape) > 1 else n
+                std = (2.0 / (fan_in + shape[-1])) ** 0.5
+                c = jax.random.normal(sub, (n,), jnp.float32) * std
+            elif init == "zeros":
+                c = jnp.zeros((n,), jnp.float32)
+            elif init == "ones":
+                c = jnp.ones((n,), jnp.float32)
+            elif init == "time_bias":
+                c = jnp.full((n,), INIT_TIME_BIAS, jnp.float32)
+            else:
+                raise ValueError(init)
+            chunks.append(c)
+        return jnp.concatenate(chunks)
+
+    def manifest(self) -> dict:
+        return {
+            "size": self._size,
+            "entries": [
+                {"name": n, "shape": list(s), "offset": self._offsets[n][0]}
+                for (n, s, _) in self.entries
+            ],
+        }
+
+
+def _add_encoder_layer(spec: ParamSpec, prefix: str):
+    """Pre-LN transformer encoder layer: MHA + FFN, residual both."""
+    spec.add(f"{prefix}.ln1.scale", (E,), "ones")
+    spec.add(f"{prefix}.ln1.bias", (E,), "zeros")
+    for w in ("wq", "wk", "wv", "wo"):
+        spec.add(f"{prefix}.{w}", (E, E), "xavier")
+    spec.add(f"{prefix}.ln2.scale", (E,), "ones")
+    spec.add(f"{prefix}.ln2.bias", (E,), "zeros")
+    spec.add(f"{prefix}.ffn.w1", (E, F), "xavier")
+    spec.add(f"{prefix}.ffn.b1", (F,), "zeros")
+    spec.add(f"{prefix}.ffn.w2", (F, E), "xavier")
+    spec.add(f"{prefix}.ffn.b2", (E,), "zeros")
+
+
+def capsim_spec(context: bool = True) -> ParamSpec:
+    """Parameter layout of the attention predictor (and its ablation)."""
+    spec = ParamSpec()
+    spec.add("embed", (V, E), "normal")
+    for i in range(INST_LAYERS):
+        _add_encoder_layer(spec, f"inst{i}")
+    for i in range(BLOCK_LAYERS):
+        _add_encoder_layer(spec, f"block{i}")
+    if not context:
+        # Perceiver-style learned query bank replacing the register context
+        spec.add("query_bank", (M, E), "normal")
+    spec.add("cross.lnq.scale", (E,), "ones")
+    spec.add("cross.lnq.bias", (E,), "zeros")
+    for w in ("wq", "wk", "wv", "wo"):
+        spec.add(f"cross.{w}", (E, E), "xavier")
+    spec.add("head.ln.scale", (E,), "ones")
+    spec.add("head.ln.bias", (E,), "zeros")
+    spec.add("head.w1", (E, F), "xavier")
+    spec.add("head.b1", (F,), "zeros")
+    spec.add("head.w2", (F, 1), "xavier")
+    spec.add("head.b2", (1,), "time_bias")
+    return spec
+
+
+def ithemal_spec() -> ParamSpec:
+    """Parameter layout of the Ithemal-style LSTM baseline."""
+    spec = ParamSpec()
+    spec.add("embed", (V, E), "normal")
+    spec.add("tok_lstm.wx", (E, 4 * HD), "xavier")
+    spec.add("tok_lstm.wh", (HD, 4 * HD), "xavier")
+    spec.add("tok_lstm.b", (4 * HD,), "zeros")
+    spec.add("inst_lstm.wx", (HD, 4 * HD), "xavier")
+    spec.add("inst_lstm.wh", (HD, 4 * HD), "xavier")
+    spec.add("inst_lstm.b", (4 * HD,), "zeros")
+    spec.add("head.w1", (HD, F), "xavier")
+    spec.add("head.b1", (F,), "zeros")
+    spec.add("head.w2", (F, 1), "xavier")
+    spec.add("head.b2", (1,), "time_bias")
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Model building blocks
+# --------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _split_heads(x: jax.Array) -> jax.Array:
+    """[B, S, E] -> [B, H, S, E/H]"""
+    b, s, _ = x.shape
+    return x.reshape(b, s, H, E // H).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """[B, H, S, E/H] -> [B, S, E]"""
+    b, _, s, _ = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, E)
+
+
+def mha_block(x_q: jax.Array, x_kv: jax.Array, bias: jax.Array,
+              p, name: str) -> jax.Array:
+    """Multi-head attention with projections; attention via the L1 kernel."""
+    q = _split_heads(x_q @ p(f"{name}.wq"))
+    k = _split_heads(x_kv @ p(f"{name}.wk"))
+    v = _split_heads(x_kv @ p(f"{name}.wv"))
+    o = attention.mha(q, k, v, bias)
+    return _merge_heads(o) @ p(f"{name}.wo")
+
+
+def encoder_layer(x: jax.Array, bias: jax.Array, p, prefix: str) -> jax.Array:
+    """Pre-LN self-attention encoder layer."""
+    h = layer_norm(x, p(f"{prefix}.ln1.scale"), p(f"{prefix}.ln1.bias"))
+    x = x + mha_block(h, h, bias, p, prefix)
+    h = layer_norm(x, p(f"{prefix}.ln2.scale"), p(f"{prefix}.ln2.bias"))
+    ff = jax.nn.relu(h @ p(f"{prefix}.ffn.w1") + p(f"{prefix}.ffn.b1"))
+    return x + ff @ p(f"{prefix}.ffn.w2") + p(f"{prefix}.ffn.b2")
+
+
+def positional_encoding(length: int, dim: int) -> jax.Array:
+    """Fixed sinusoidal positional encoding (Section V-C)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _mask_bias(mask: jax.Array) -> jax.Array:
+    """valid-mask [..., Sk] (1 valid / 0 pad) -> additive key bias."""
+    return (1.0 - mask) * NEG_INF
+
+
+# --------------------------------------------------------------------------
+# CAPSim forward pass (Eq. 3–9)
+# --------------------------------------------------------------------------
+
+def capsim_forward(spec: ParamSpec, params: jax.Array, tokens: jax.Array,
+                   tok_mask: jax.Array, clip_mask: jax.Array,
+                   ctx_tokens: jax.Array, time_scale: jax.Array,
+                   context: bool = True) -> jax.Array:
+    """Predict clip execution time (cycles).
+
+    tokens     : i32[B, LC, LT]  standardized tokens, row 0 of each
+                 instruction is <REP> (Section V-C)
+    tok_mask   : f32[B, LC, LT]  1 = real token
+    clip_mask  : f32[B, LC]      1 = real instruction
+    ctx_tokens : i32[B, M]       context-matrix tokens (Fig. 6)
+    time_scale : f32[]           dataset mean clip time (Rust-supplied)
+    returns    : f32[B]          predicted cycles
+    """
+    p = lambda name: spec.slice(params, name)
+    b = tokens.shape[0]
+
+    # ---- token embedding (intermediate result B in Fig. 4) ----
+    emb = jnp.take(p("embed"), tokens.reshape(-1), axis=0)
+    emb = emb.reshape(b * LC, LT, E)
+
+    # ---- instruction encoder: self-attention inside each instruction ----
+    tbias = _mask_bias(tok_mask.reshape(b * LC, 1, 1, LT))
+    x = emb
+    for i in range(INST_LAYERS):
+        x = encoder_layer(x, tbias, p, f"inst{i}")
+    # the <REP> row is the ideal-execution-time vector RT_i (Eq. 7–8)
+    rt = x[:, 0, :].reshape(b, LC, E)
+
+    # ---- block encoder over the clip ----
+    rt = rt + positional_encoding(LC, E)[None, :, :]
+    cbias = _mask_bias(clip_mask.reshape(b, 1, 1, LC))
+    for i in range(BLOCK_LAYERS):
+        rt = encoder_layer(rt, cbias, p, f"block{i}")
+
+    # ---- context cross-attention (Eq. 9) ----
+    if context:
+        ctx = jnp.take(p("embed"), ctx_tokens.reshape(-1), axis=0)
+        ctx = ctx.reshape(b, M, E)
+    else:
+        ctx = jnp.broadcast_to(p("query_bank")[None], (b, M, E))
+    q = layer_norm(ctx, p("cross.lnq.scale"), p("cross.lnq.bias"))
+    h = mha_block(q, rt, cbias, p, "cross")  # [B, M, E]
+
+    # ---- MLP head with arithmetic mean ----
+    h = layer_norm(h, p("head.ln.scale"), p("head.ln.bias"))
+    h = jax.nn.relu(h @ p("head.w1") + p("head.b1"))
+    y = (h @ p("head.w2") + p("head.b2"))[..., 0]  # [B, M]
+    y = jnp.mean(y, axis=-1)                        # arithmetic mean over M
+    return jax.nn.softplus(y) * time_scale
+
+
+# --------------------------------------------------------------------------
+# Ithemal-style LSTM baseline (Fig. 10)
+# --------------------------------------------------------------------------
+
+def _lstm_scan(xs: jax.Array, mask: jax.Array, wx: jax.Array, wh: jax.Array,
+               b: jax.Array, hidden: int) -> jax.Array:
+    """Masked LSTM over axis 1 of ``xs`` [N, S, D]; returns final h [N, Hd]."""
+    n = xs.shape[0]
+
+    def step(carry, inp):
+        h, c = carry
+        x_t, m_t = inp
+        z = x_t @ wx + h @ wh + b
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c_new = f * c + i * g
+        h_new = o * jnp.tanh(c_new)
+        m = m_t[:, None]
+        return (h * (1 - m) + h_new * m, c * (1 - m) + c_new * m), None
+
+    h0 = jnp.zeros((n, hidden), jnp.float32)
+    xs_t = xs.transpose(1, 0, 2)       # [S, N, D]
+    mask_t = mask.transpose(1, 0)      # [S, N]
+    (h, _), _ = jax.lax.scan(step, (h0, h0), (xs_t, mask_t))
+    return h
+
+
+def ithemal_forward(spec: ParamSpec, params: jax.Array, tokens: jax.Array,
+                    tok_mask: jax.Array, clip_mask: jax.Array,
+                    ctx_tokens: jax.Array, time_scale: jax.Array) -> jax.Array:
+    """Token-LSTM -> instruction-LSTM -> linear head (Ithemal architecture).
+
+    Takes the same inputs as CAPSim (ctx_tokens ignored) so the Rust batcher
+    is predictor-agnostic.
+    """
+    del ctx_tokens
+    p = lambda name: spec.slice(params, name)
+    b = tokens.shape[0]
+
+    emb = jnp.take(p("embed"), tokens.reshape(-1), axis=0)
+    emb = emb.reshape(b * LC, LT, E)
+    h_tok = _lstm_scan(emb, tok_mask.reshape(b * LC, LT),
+                       p("tok_lstm.wx"), p("tok_lstm.wh"), p("tok_lstm.b"), HD)
+    inst_seq = h_tok.reshape(b, LC, HD)
+    h_inst = _lstm_scan(inst_seq, clip_mask,
+                        p("inst_lstm.wx"), p("inst_lstm.wh"),
+                        p("inst_lstm.b"), HD)
+    h = jax.nn.relu(h_inst @ p("head.w1") + p("head.b1"))
+    y = (h @ p("head.w2") + p("head.b2"))[:, 0]
+    return jax.nn.softplus(y) * time_scale
+
+
+# --------------------------------------------------------------------------
+# Loss + SGD-with-momentum train step (paper §VI-B)
+# --------------------------------------------------------------------------
+
+def mape_loss(pred: jax.Array, target: jax.Array) -> jax.Array:
+    """Eq. 11: mean |pred - fact| / fact."""
+    return jnp.mean(jnp.abs(pred - target) / jnp.maximum(target, 1e-6))
+
+
+def make_train_step(fwd: Callable) -> Callable:
+    """Build ``(params, mom, batch..., target, lr, time_scale) -> (params',
+    mom', loss)`` with momentum-0.9 SGD and global-norm gradient clipping."""
+
+    def loss_fn(params, tokens, tok_mask, clip_mask, ctx, target, time_scale):
+        pred = fwd(params, tokens, tok_mask, clip_mask, ctx, time_scale)
+        return mape_loss(pred, target)
+
+    def train_step(params, mom, tokens, tok_mask, clip_mask, ctx, target,
+                   lr, time_scale):
+        loss, g = jax.value_and_grad(loss_fn)(
+            params, tokens, tok_mask, clip_mask, ctx, target, time_scale)
+        gnorm = jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-12)
+        g = g * jnp.minimum(1.0, GRAD_CLIP / gnorm)
+        mom_new = 0.9 * mom + g
+        params_new = params - lr * mom_new
+        return params_new, mom_new, loss
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Entry points used by aot.py
+# --------------------------------------------------------------------------
+
+def variants() -> dict:
+    """name -> (spec, forward) for each exported predictor."""
+    cap_spec = capsim_spec(context=True)
+    noctx_spec = capsim_spec(context=False)
+    ith_spec = ithemal_spec()
+
+    def cap_fwd(params, tokens, tok_mask, clip_mask, ctx, time_scale):
+        return capsim_forward(cap_spec, params, tokens, tok_mask, clip_mask,
+                              ctx, time_scale, context=True)
+
+    def noctx_fwd(params, tokens, tok_mask, clip_mask, ctx, time_scale):
+        return capsim_forward(noctx_spec, params, tokens, tok_mask, clip_mask,
+                              ctx, time_scale, context=False)
+
+    def ith_fwd(params, tokens, tok_mask, clip_mask, ctx, time_scale):
+        return ithemal_forward(ith_spec, params, tokens, tok_mask, clip_mask,
+                               ctx, time_scale)
+
+    return {
+        "capsim": (cap_spec, cap_fwd),
+        "nocontext": (noctx_spec, noctx_fwd),
+        "ithemal": (ith_spec, ith_fwd),
+    }

@@ -1,0 +1,219 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: a hypothesis sweep
+over shapes/dtypes plus directed edge cases (fully-masked rows, large
+magnitudes, gradient agreement through the custom VJP).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _mask_bias(key, b, h, sq, sk, p=0.2):
+    """Random additive key mask, guaranteed >=1 visible key per row."""
+    m = jax.random.bernoulli(key, p, (b, 1, 1, sk))
+    m = m.at[..., 0].set(False)
+    return jnp.where(m, attention.NEG_INF if hasattr(attention, "NEG_INF")
+                     else -1e9, 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([1, 3, 8, 16, 32]),
+    sk=st.sampled_from([1, 4, 16, 32]),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_f32(b, h, sq, sk, d, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = _rand(ks[0], (b, h, sq, d), jnp.float32)
+    k = _rand(ks[1], (b, h, sk, d), jnp.float32)
+    v = _rand(ks[2], (b, h, sk, d), jnp.float32)
+    bias = _mask_bias(ks[3], b, h, sq, sk)
+    got = attention.mha(q, k, v, bias)
+    want = ref.mha_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.sampled_from([4, 16]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_bf16(sq, d, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (2, 2, sq, d), jnp.bfloat16)
+    k = _rand(ks[1], (2, 2, sq, d), jnp.bfloat16)
+    v = _rand(ks[2], (2, 2, sq, d), jnp.bfloat16)
+    bias = jnp.zeros((2, 2, sq, sq), jnp.float32)
+    got = attention.mha(q, k, v, bias).astype(jnp.float32)
+    want = ref.mha_ref(q, k, v, bias).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_under_jit():
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (2, 4, 16, 16))
+    bias = jnp.zeros((2, 4, 16, 16))
+    got = jax.jit(attention.mha)(q, q, q, bias)
+    want = ref.mha_ref(q, q, q, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_broadcast_bias_shapes():
+    """Bias of shape [B,1,1,Sk] must broadcast like the full bias."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 2, 8, 8))
+    small = jnp.where(jax.random.bernoulli(key, 0.3, (2, 1, 1, 8)),
+                      -1e9, 0.0)
+    full = jnp.broadcast_to(small, (2, 2, 8, 8))
+    a = attention.mha(q, q, q, small)
+    b = attention.mha(q, q, q, full)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_masked_keys_have_no_influence():
+    """Changing the content of masked-out key positions must not change
+    the output — the mask is the correctness-critical part for padding."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (1, 2, 4, 8))
+    k = jax.random.normal(ks[1], (1, 2, 6, 8))
+    v = jax.random.normal(ks[2], (1, 2, 6, 8))
+    bias = jnp.zeros((1, 1, 1, 6)).at[..., 4:].set(-1e9)
+    base = attention.mha(q, k, v, bias)
+    k2 = k.at[:, :, 4:, :].set(999.0)
+    v2 = v.at[:, :, 4:, :].set(-777.0)
+    pert = attention.mha(q, k2, v2, bias)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-6)
+
+
+def test_large_magnitude_stability():
+    """Stable softmax: huge score magnitudes must not produce NaN/Inf."""
+    q = jnp.full((1, 1, 4, 8), 80.0)
+    k = jnp.full((1, 1, 4, 8), 80.0)
+    v = jnp.ones((1, 1, 4, 8))
+    bias = jnp.zeros((1, 1, 4, 4))
+    out = attention.mha(q, k, v, bias)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.ones((1, 1, 4, 8)),
+                               rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       sq=st.sampled_from([4, 8, 16]),
+       d=st.sampled_from([8, 16]))
+def test_vjp_matches_ref_grad(seed, sq, d):
+    """The hand-written Pallas backward kernel vs jax-autodiff of the oracle."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (2, 2, sq, d))
+    k = jax.random.normal(ks[1], (2, 2, sq, d))
+    v = jax.random.normal(ks[2], (2, 2, sq, d))
+    bias = _mask_bias(ks[3], 2, 2, sq, sq)
+
+    def loss_pal(q, k, v):
+        return (attention.mha(q, k, v, bias) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (ref.mha_ref(q, k, v, bias) ** 2).sum()
+
+    gp = jax.grad(loss_pal, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_vjp_bias_grad_reduces_broadcast_axes():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (2, 2, 4, 8))
+    bias = jnp.zeros((2, 1, 1, 4))
+
+    def f(bias):
+        return (attention.mha(q, q, q, bias) ** 2).sum()
+
+    g = jax.grad(f)(bias)
+    assert g.shape == bias.shape
+
+    def f_ref(bias):
+        return (ref.mha_ref(q, q, q, bias) ** 2).sum()
+
+    gr = jax.grad(f_ref)(bias)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_vmem_footprint_within_budget():
+    """§Perf: with the planned batch tile, every attention site in the
+    default CAPSim config fits one grid instance in <= 4 MiB VMEM (quarter
+    of a 16 MiB core budget, leaving room for double-buffering)."""
+    from compile.model import CFG, LC, LT, M
+    e = CFG["embed_dim"]
+    h = CFG["num_heads"]
+    dh = e // h
+    sites = [
+        (CFG["train_batch"] * LC, LT, LT),   # instruction encoder
+        (CFG["train_batch"], LC, LC),        # block encoder
+        (CFG["train_batch"], M, LC),         # context cross-attention
+    ]
+    for batch, sq, sk in sites:
+        bt = attention.plan_batch_tile(batch, sq, sk, dh)
+        assert batch % bt == 0
+        used = attention.vmem_bytes(bt, 1, sq, sk, dh)
+        assert used <= attention.VMEM_BUDGET, (batch, sq, sk, bt, used)
+
+
+def test_tiled_mode_matches_whole_array_mode():
+    """Both lowering schedules (whole-array default and the TPU-oriented
+    tiled grid) must produce identical numerics."""
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (6, 4, 16, 16))
+    k = jax.random.normal(ks[1], (6, 4, 16, 16))
+    v = jax.random.normal(ks[2], (6, 4, 16, 16))
+    bias = _mask_bias(ks[3], 6, 4, 16, 16)
+    fast = attention.mha(q, k, v, bias)
+    old = attention.TILED
+    try:
+        attention.TILED = True
+        tiled = attention.mha(q, k, v, bias)
+    finally:
+        attention.TILED = old
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(tiled),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fast),
+                               np.asarray(ref.mha_ref(q, k, v, bias)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_batch_tile_divides_and_fits():
+    for batch in [1, 3, 7, 32, 1024, 1000]:
+        bt = attention.plan_batch_tile(batch, 16, 16, 16)
+        assert batch % bt == 0 and bt >= 1
+        assert attention.vmem_bytes(bt, 1, 16, 16, 16) <= attention.VMEM_BUDGET
+
+
+def test_mxu_estimate_monotone():
+    assert attention.mxu_utilization_estimate(128, 128, 128) == 1.0
+    small = attention.mxu_utilization_estimate(16, 16, 16)
+    assert 0.0 < small < 1.0

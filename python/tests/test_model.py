@@ -1,0 +1,235 @@
+"""L2 correctness: predictor shapes, masking invariants, param packing,
+training behaviour (loss decreases), and variant differences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import CFG, LC, LT, M
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(0)
+    b = 4
+    tokens = jax.random.randint(key, (b, LC, LT), 0, CFG["vocab_size"])
+    tok_mask = jnp.ones((b, LC, LT))
+    clip_mask = jnp.ones((b, LC))
+    ctx = jax.random.randint(jax.random.fold_in(key, 1), (b, M), 0,
+                             CFG["vocab_size"])
+    return tokens, tok_mask, clip_mask, ctx
+
+
+@pytest.fixture(scope="module")
+def all_variants():
+    return model.variants()
+
+
+# --------------------------------------------------------------------------
+# Parameter packing
+# --------------------------------------------------------------------------
+
+def test_param_spec_offsets_contiguous():
+    spec = model.capsim_spec()
+    off = 0
+    for name, shape, _ in spec.entries:
+        got_off, got_shape = spec._offsets[name]
+        assert got_off == off and got_shape == shape
+        off += int(np.prod(shape))
+    assert off == spec.size
+
+
+def test_param_slice_roundtrip():
+    spec = model.capsim_spec()
+    flat = jnp.arange(spec.size, dtype=jnp.float32)
+    off = 0
+    for name, shape, _ in spec.entries:
+        got = spec.slice(flat, name)
+        n = int(np.prod(shape))
+        want = jnp.arange(off, off + n, dtype=jnp.float32).reshape(shape)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        off += n
+
+
+def test_init_deterministic_and_finite():
+    spec = model.capsim_spec()
+    a = spec.init_flat(jax.random.PRNGKey(42))
+    b = spec.init_flat(jax.random.PRNGKey(42))
+    c = spec.init_flat(jax.random.PRNGKey(43))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_layer_norm_params_init_to_identity():
+    spec = model.capsim_spec()
+    flat = spec.init_flat(jax.random.PRNGKey(0))
+    s = spec.slice(flat, "inst0.ln1.scale")
+    b = spec.slice(flat, "inst0.ln1.bias")
+    np.testing.assert_array_equal(np.asarray(s), np.ones(CFG["embed_dim"]))
+    np.testing.assert_array_equal(np.asarray(b), np.zeros(CFG["embed_dim"]))
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["capsim", "nocontext", "ithemal"])
+def test_forward_shape_and_positivity(all_variants, batch, name):
+    spec, fwd = all_variants[name]
+    params = spec.init_flat(jax.random.PRNGKey(1))
+    pred = fwd(params, *batch, jnp.float32(50.0))
+    assert pred.shape == (4,)
+    assert np.isfinite(np.asarray(pred)).all()
+    assert (np.asarray(pred) > 0).all(), "softplus output must be positive"
+
+
+def test_padded_instructions_do_not_affect_prediction(all_variants):
+    """Masking invariant: garbage in padded instruction slots is inert."""
+    spec, fwd = all_variants["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (2, LC, LT), 0, CFG["vocab_size"])
+    valid = LC // 2
+    clip_mask = jnp.zeros((2, LC)).at[:, :valid].set(1.0)
+    tok_mask = jnp.ones((2, LC, LT)) * clip_mask[:, :, None]
+    ctx = jnp.zeros((2, M), jnp.int32)
+
+    base = fwd(params, tokens, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    tokens2 = tokens.at[:, valid:, :].set(777 % CFG["vocab_size"])
+    pert = fwd(params, tokens2, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-5)
+
+
+def test_padded_tokens_do_not_affect_prediction(all_variants):
+    spec, fwd = all_variants["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (2, LC, LT), 0, CFG["vocab_size"])
+    tok_mask = jnp.ones((2, LC, LT)).at[:, :, LT // 2:].set(0.0)
+    clip_mask = jnp.ones((2, LC))
+    ctx = jnp.zeros((2, M), jnp.int32)
+    base = fwd(params, tokens, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    tokens2 = tokens.at[:, :, LT // 2:].set(123)
+    pert = fwd(params, tokens2, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-5)
+
+
+def test_context_changes_prediction(all_variants, batch):
+    """The context matrix must actually flow into the prediction (Fig. 6)."""
+    spec, fwd = all_variants["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(5))
+    tokens, tok_mask, clip_mask, ctx = batch
+    a = fwd(params, tokens, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    ctx2 = (ctx + 7) % CFG["vocab_size"]
+    b = fwd(params, tokens, tok_mask, clip_mask, ctx2, jnp.float32(50.0))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_nocontext_ignores_context(all_variants, batch):
+    spec, fwd = all_variants["nocontext"]
+    params = spec.init_flat(jax.random.PRNGKey(5))
+    tokens, tok_mask, clip_mask, ctx = batch
+    a = fwd(params, tokens, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    ctx2 = (ctx + 7) % CFG["vocab_size"]
+    b = fwd(params, tokens, tok_mask, clip_mask, ctx2, jnp.float32(50.0))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_instruction_order_matters(all_variants, batch):
+    """Positional encoding: reordering instructions changes the prediction
+    (paper §II-B: execution order is performance-relevant)."""
+    spec, fwd = all_variants["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(6))
+    tokens, tok_mask, clip_mask, ctx = batch
+    a = fwd(params, tokens, tok_mask, clip_mask, ctx, jnp.float32(50.0))
+    b = fwd(params, tokens[:, ::-1, :], tok_mask, clip_mask, ctx,
+            jnp.float32(50.0))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_time_scale_scales_output(all_variants, batch):
+    spec, fwd = all_variants["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(7))
+    a = fwd(params, *batch, jnp.float32(10.0))
+    b = fwd(params, *batch, jnp.float32(20.0))
+    np.testing.assert_allclose(np.asarray(b), 2 * np.asarray(a), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Loss + training
+# --------------------------------------------------------------------------
+
+def test_mape_loss_matches_eq11():
+    pred = jnp.array([110.0, 90.0])
+    fact = jnp.array([100.0, 100.0])
+    assert float(model.mape_loss(pred, fact)) == pytest.approx(0.1)
+
+
+def test_mape_loss_zero_at_perfect():
+    t = jnp.array([5.0, 50.0, 500.0])
+    assert float(model.mape_loss(t, t)) == 0.0
+
+
+@pytest.mark.parametrize("name", ["capsim", "ithemal"])
+def test_training_reduces_loss(all_variants, name):
+    """A few SGD steps on a fixed batch must reduce the MAPE."""
+    spec, fwd = all_variants[name]
+    params = spec.init_flat(jax.random.PRNGKey(8))
+    mom = jnp.zeros_like(params)
+    step = jax.jit(model.make_train_step(fwd))
+
+    key = jax.random.PRNGKey(9)
+    b = 4
+    tokens = jax.random.randint(key, (b, LC, LT), 0, CFG["vocab_size"])
+    tok_mask = jnp.ones((b, LC, LT))
+    clip_mask = jnp.ones((b, LC))
+    ctx = jax.random.randint(jax.random.fold_in(key, 1), (b, M), 0,
+                             CFG["vocab_size"])
+    target = jnp.array([40.0, 60.0, 80.0, 100.0])
+
+    first = None
+    for i in range(20):
+        params, mom, loss = step(params, mom, tokens, tok_mask, clip_mask,
+                                 ctx, target, jnp.float32(3e-3),
+                                 jnp.float32(70.0))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_gradient_clipping_bounds_update():
+    """With grad clip at G and lr, a single step moves params by at most
+    lr * (0.9*|mom| + G) in L2 norm."""
+    spec, fwd = model.variants()["capsim"]
+    params = spec.init_flat(jax.random.PRNGKey(10))
+    mom = jnp.zeros_like(params)
+    step = model.make_train_step(fwd)
+    key = jax.random.PRNGKey(11)
+    tokens = jax.random.randint(key, (2, LC, LT), 0, CFG["vocab_size"])
+    args = (tokens, jnp.ones((2, LC, LT)), jnp.ones((2, LC)),
+            jnp.zeros((2, M), jnp.int32), jnp.array([1.0, 1.0]),
+            jnp.float32(0.1), jnp.float32(1000.0))  # absurd scale => big grads
+    p2, m2, _ = step(params, mom, *args)
+    delta = float(jnp.linalg.norm(p2 - params))
+    assert delta <= 0.1 * (model.GRAD_CLIP + 1e-6) + 1e-5
+
+
+def test_positional_encoding_properties():
+    pe = model.positional_encoding(LC, CFG["embed_dim"])
+    assert pe.shape == (LC, CFG["embed_dim"])
+    arr = np.asarray(pe)
+    assert np.isfinite(arr).all()
+    assert (np.abs(arr) <= 1.0 + 1e-6).all()
+    # rows must be distinct (otherwise order information is lost)
+    assert len(np.unique(arr.round(6), axis=0)) == LC
+
+
+def test_layer_norm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(12), (5, CFG["embed_dim"])) * 10
+    y = model.layer_norm(x, jnp.ones(CFG["embed_dim"]),
+                         jnp.zeros(CFG["embed_dim"]))
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)

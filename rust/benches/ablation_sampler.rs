@@ -1,0 +1,75 @@
+//! **Ablation** — the Fig.-3 sampler's accuracy/cost trade-off (paper
+//! §VI-A: threshold 200 + coefficient 0.02 cut training from 300 h to
+//! ~10 h without hurting accuracy). We sweep the coefficient and report
+//! dataset size, wall-clock per 50 steps, and held-out MAPE.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use capsim::predictor::{evaluate, train, TrainParams};
+use capsim::report::Table;
+use capsim::sampler::{sample, SamplerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::pipeline_config();
+    let (_, ds) = common::golden_cached(&cfg);
+    let rt = common::runtime(&cfg);
+    let steps = common::train_steps(100, 300);
+
+    // shared held-out set from the UNsampled corpus
+    let (_, _, test_idx) = ds.split(cfg.seed);
+    let test_ds = ds.subset(&test_idx);
+    let test_all: Vec<usize> = (0..test_ds.len()).collect();
+
+    let mut t = Table::new(
+        "Sampler ablation — training cost vs accuracy",
+        &["sampler", "train clips", "s / step", "test MAPE %"],
+    );
+
+    let mut configs: Vec<(String, Option<SamplerConfig>)> = vec![
+        ("none (full corpus)".into(), None),
+    ];
+    for co in [0.02, 0.1, 0.5] {
+        configs.push((
+            format!("threshold 200, coeff {co}"),
+            Some(SamplerConfig { threshold: 200, coefficient: co }),
+        ));
+    }
+
+    for (label, sampler) in configs {
+        let train_ds = match &sampler {
+            None => ds.clone(),
+            Some(sc) => {
+                let sel = sample(&ds.keys(), sc);
+                ds.subset(&sel)
+            }
+        };
+        if train_ds.len() < 64 {
+            t.row(vec![label, train_ds.len().to_string(), "-".into(), "-".into()]);
+            continue;
+        }
+        let mut model = rt.load_variant("capsim")?;
+        model.init_params(cfg.seed as u32)?;
+        let idx: Vec<usize> = (0..train_ds.len()).collect();
+        let t0 = Instant::now();
+        let log = train(
+            &mut model,
+            &train_ds,
+            &idx,
+            &[],
+            &TrainParams { steps, lr: 1e-3, eval_every: 1_000, seed: 3, patience: 10_000 },
+        )?;
+        let per_step = t0.elapsed().as_secs_f64() / log.steps_run as f64;
+        let ev = evaluate(&model, &test_ds, &test_all, log.time_scale)?;
+        t.row(vec![
+            label,
+            train_ds.len().to_string(),
+            format!("{per_step:.3}"),
+            format!("{:.1}", 100.0 * ev.mape),
+        ]);
+    }
+    t.emit("ablation_sampler");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Shared setup for the paper-reproduction benches.
+//!
+//! Scale control: `CAPSIM_BENCH_FULL=1` switches to the EXPERIMENTS.md
+//! configuration (much longer); the default keeps `cargo bench` tractable
+//! on one core while preserving every qualitative shape.
+
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use capsim::config::PipelineConfig;
+use capsim::coordinator::{build_dataset, pool, BenchProfile};
+use capsim::dataset::Dataset;
+use capsim::predictor::{train, TrainLog, TrainParams};
+use capsim::runtime::{ModelHandle, Runtime};
+use capsim::workloads::{suite, Benchmark, Scale};
+
+pub fn is_full() -> bool {
+    std::env::var("CAPSIM_BENCH_FULL").map_or(false, |v| v == "1")
+}
+
+pub fn pipeline_config() -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    if is_full() {
+        cfg.scale = Scale::Full;
+        cfg.simpoint.interval_insts = 1_000_000;
+        cfg.simpoint.warmup_insts = 50_000;
+        cfg.simpoint.max_k = 6;
+    } else {
+        cfg.simpoint.interval_insts = 10_000;
+        cfg.simpoint.warmup_insts = 1_000;
+        cfg.simpoint.max_k = 4;
+    }
+    cfg
+}
+
+pub fn train_steps(default_small: usize, default_full: usize) -> usize {
+    if let Ok(v) = std::env::var("CAPSIM_BENCH_STEPS") {
+        if let Ok(n) = v.parse() {
+            return n;
+        }
+    }
+    if is_full() {
+        default_full
+    } else {
+        default_small
+    }
+}
+
+/// Suite + golden dataset + profiles under the bench config.
+pub fn golden(cfg: &PipelineConfig) -> (Vec<Benchmark>, Dataset, Vec<BenchProfile>) {
+    let benches = suite(cfg.scale);
+    let (ds, profiles) = build_dataset(&benches, cfg, pool::default_threads());
+    (benches, ds, profiles)
+}
+
+/// Like [`golden`] but caches the dataset on disk so the bench suite does
+/// not regenerate identical golden labels six times over (`cargo bench`
+/// runs each bench as its own process). Profiles are NOT cached
+/// (checkpoints embed memory images); benches that need them use
+/// [`golden`].
+pub fn golden_cached(cfg: &PipelineConfig) -> (Vec<Benchmark>, Dataset) {
+    let benches = suite(cfg.scale);
+    let tag = if is_full() { "full" } else { "test" };
+    let path = std::path::PathBuf::from(format!("target/capsim_ds_{tag}.bin"));
+    if let Ok(ds) = Dataset::load(&path) {
+        eprintln!("[common] using cached dataset {path:?} ({} clips)", ds.len());
+        return (benches, ds);
+    }
+    let (ds, _) = build_dataset(&benches, cfg, pool::default_threads());
+    let _ = ds.save(&path);
+    (benches, ds)
+}
+
+/// Load the PJRT runtime; exits with a clear message if artifacts are
+/// missing (benches are meaningless without them).
+pub fn runtime(cfg: &PipelineConfig) -> Runtime {
+    match Runtime::load(Path::new(&cfg.artifacts)) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            std::process::exit(0); // don't fail `cargo bench` on a clean tree
+        }
+    }
+}
+
+/// Init + train one variant on a Method-1 split of `ds`.
+pub fn train_variant(
+    rt: &Runtime,
+    variant: &str,
+    ds: &Dataset,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<(ModelHandle, TrainLog, Vec<usize>)> {
+    let mut model = rt.load_variant(variant)?;
+    model.init_params(seed as u32)?;
+    let (tr, va, te) = ds.split(seed);
+    let log = train(
+        &mut model,
+        ds,
+        &tr,
+        &va,
+        &TrainParams { steps, lr: 1e-3, eval_every: 25, seed, patience: 10_000 },
+    )?;
+    Ok((model, log, te))
+}

@@ -1,0 +1,76 @@
+//! **Fig. 10** — average prediction error per benchmark for the three
+//! predictors: CAPSim (attention + context), the Ithemal-style LSTM, and
+//! the no-context ablation; plus the native linear-regression baseline.
+//! Paper: CAPSim beats Ithemal by 15.8% on average and the no-context
+//! ablation by 6.2%.
+
+#[path = "common.rs"]
+mod common;
+
+use capsim::predictor::{evaluate, LinRegBaseline};
+use capsim::report::Table;
+use capsim::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::pipeline_config();
+    let (benches, ds) = common::golden_cached(&cfg);
+    let rt = common::runtime(&cfg);
+    let steps = common::train_steps(150, 600);
+
+    // Method 1: one shared 80/10/10 split for all predictors
+    let (m_cap, log_cap, te) = common::train_variant(&rt, "capsim", &ds, steps, cfg.seed)?;
+    let (m_noc, log_noc, _) = common::train_variant(&rt, "nocontext", &ds, steps, cfg.seed)?;
+    let (m_ith, log_ith, _) = common::train_variant(&rt, "ithemal", &ds, steps, cfg.seed)?;
+    let (tr, _, _) = ds.split(cfg.seed);
+    let linreg = LinRegBaseline::fit(&ds, &tr, 1e-3);
+
+    // per-benchmark MAPE over the shared test split
+    let mut t = Table::new(
+        "Fig. 10 — average error (MAPE %) per benchmark",
+        &["Benchmark", "CAPSim", "no-context", "Ithemal(LSTM)", "LinReg"],
+    );
+    let mut cap_all = Vec::new();
+    let mut noc_all = Vec::new();
+    let mut ith_all = Vec::new();
+    let mut lin_all = Vec::new();
+    for (bi, b) in benches.iter().enumerate() {
+        let idx: Vec<usize> = te
+            .iter()
+            .copied()
+            .filter(|&i| ds.samples[i].bench as usize == bi)
+            .collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let cap = evaluate(&m_cap, &ds, &idx, log_cap.time_scale)?.mape;
+        let noc = evaluate(&m_noc, &ds, &idx, log_noc.time_scale)?.mape;
+        let ith = evaluate(&m_ith, &ds, &idx, log_ith.time_scale)?.mape;
+        let lin = linreg.mape(&ds, &idx);
+        cap_all.push(cap);
+        noc_all.push(noc);
+        ith_all.push(ith);
+        lin_all.push(lin);
+        t.row(vec![
+            b.name.into(),
+            format!("{:.1}", 100.0 * cap),
+            format!("{:.1}", 100.0 * noc),
+            format!("{:.1}", 100.0 * ith),
+            format!("{:.1}", 100.0 * lin),
+        ]);
+    }
+    t.row(vec![
+        "MEAN".into(),
+        format!("{:.1}", 100.0 * stats::mean(&cap_all)),
+        format!("{:.1}", 100.0 * stats::mean(&noc_all)),
+        format!("{:.1}", 100.0 * stats::mean(&ith_all)),
+        format!("{:.1}", 100.0 * stats::mean(&lin_all)),
+    ]);
+    t.emit("fig10_error");
+
+    println!(
+        "deltas: vs LSTM {:+.1}pp (paper -15.8)  vs no-context {:+.1}pp (paper -6.2)",
+        100.0 * (stats::mean(&cap_all) - stats::mean(&ith_all)),
+        100.0 * (stats::mean(&cap_all) - stats::mean(&noc_all)),
+    );
+    Ok(())
+}

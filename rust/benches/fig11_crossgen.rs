@@ -1,0 +1,77 @@
+//! **Fig. 11** — cross-generalization: train on one of the six Table-II
+//! benchmark sets, evaluate on every set — the 6x6 accuracy matrix
+//! (Method 2, §VI-D; paper: 91.3% on the training set, 88.3% overall).
+
+#[path = "common.rs"]
+mod common;
+
+use capsim::predictor::{evaluate, train, TrainParams};
+use capsim::report::Table;
+use capsim::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::pipeline_config();
+    let (benches, ds) = common::golden_cached(&cfg);
+    let rt = common::runtime(&cfg);
+    let steps = common::train_steps(120, 500);
+
+    let set_of: Vec<u8> = benches.iter().map(|b| b.set_no).collect();
+    let mut sets = ds.by_set(&set_of);
+    // cap per-set evaluation size (36 evaluations; MAPE stabilizes well
+    // below this many clips)
+    let cap = if common::is_full() { 2_000 } else { 500 };
+    for s in sets.iter_mut() {
+        if s.len() > cap {
+            let stride = s.len() / cap;
+            *s = s.iter().step_by(stride.max(1)).copied().take(cap).collect();
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 11 — 6x6 train/test accuracy (%) over the Table-II sets",
+        &["train\\test", "Set1", "Set2", "Set3", "Set4", "Set5", "Set6"],
+    );
+    let mut diag = Vec::new();
+    let mut off = Vec::new();
+    for train_set in 0..6 {
+        let mut model = rt.load_variant("capsim")?;
+        model.init_params(cfg.seed as u32)?;
+        let idx = &sets[train_set];
+        if idx.is_empty() {
+            continue;
+        }
+        // hold out 10% of the training set as validation
+        let n_val = (idx.len() / 10).max(1);
+        let (va, tr) = idx.split_at(n_val);
+        let log = train(
+            &mut model,
+            &ds,
+            tr,
+            va,
+            &TrainParams { steps, lr: 1e-3, eval_every: 50, seed: cfg.seed, patience: 10_000 },
+        )?;
+
+        let mut row = vec![format!("Set{}", train_set + 1)];
+        for (test_set, test_idx) in sets.iter().enumerate() {
+            let acc = if test_idx.is_empty() {
+                f64::NAN
+            } else {
+                evaluate(&model, &ds, test_idx, log.time_scale)?.accuracy_pct
+            };
+            if test_set == train_set {
+                diag.push(acc);
+            } else {
+                off.push(acc);
+            }
+            row.push(format!("{acc:.1}"));
+        }
+        t.row(row);
+    }
+    t.emit("fig11_crossgen");
+    println!(
+        "train-set accuracy {:.1}% (paper 91.3%)  overall {:.1}% (paper 88.3%)",
+        stats::mean(&diag),
+        stats::mean(&diag.iter().chain(&off).copied().collect::<Vec<_>>()),
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! **Fig. 7** — per-benchmark restore time: gem5 mode (serial O3 restore)
+//! vs CAPSim (functional trace + batched attention inference), plus the
+//! headline speedup (paper: 2.2–8.3x, arithmetic mean 4.9x).
+
+#[path = "common.rs"]
+mod common;
+
+use capsim::coordinator::{capsim_mode, gem5_mode};
+use capsim::report::Table;
+use capsim::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::pipeline_config();
+    let (benches, ds, profiles) = common::golden(&cfg);
+    let rt = common::runtime(&cfg);
+    let steps = common::train_steps(150, 600);
+    let (model, log, _) = common::train_variant(&rt, "capsim", &ds, steps, cfg.seed)?;
+
+    let mut t = Table::new(
+        "Fig. 7 — speed comparison: simulator (gem5 mode) vs predictor (CAPSim)",
+        &["Benchmark", "CKPs", "gem5 s", "CAPSim s", "Speedup", "CyclesErr %"],
+    );
+    let mut speedups = Vec::new();
+    for (b, p) in benches.iter().zip(&profiles) {
+        let g = gem5_mode(&p.selected, p.n_intervals, &cfg);
+        let c = capsim_mode(&p.selected, p.n_intervals, &cfg, &model, log.time_scale)?;
+        let speedup = g.wall_s / c.wall_s.max(1e-9);
+        speedups.push(speedup);
+        let err = 100.0 * (c.total_cycles - g.total_cycles).abs() / g.total_cycles;
+        t.row(vec![
+            b.name.into(),
+            p.selected.len().to_string(),
+            format!("{:.3}", g.wall_s),
+            format!("{:.3}", c.wall_s),
+            format!("{:.2}x", speedup),
+            format!("{:.1}", err),
+        ]);
+    }
+    t.emit("fig7_speed");
+    println!(
+        "speedup: mean {:.2}x (paper 4.9x)  max {:.2}x (paper 8.3x)  min {:.2}x (paper 2.2x)",
+        stats::mean(&speedups),
+        speedups.iter().cloned().fold(0.0, f64::max),
+        speedups.iter().cloned().fold(f64::INFINITY, f64::min),
+    );
+    Ok(())
+}

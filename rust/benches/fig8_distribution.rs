@@ -1,0 +1,64 @@
+//! **Fig. 8** — the clip-occurrence distribution of one interval of the
+//! bwaves analog: (a) in first-appearance order, (b) sorted descending —
+//! the two-population shape that justifies the Fig.-3 sampler. Also prints
+//! the §VI-A sampler-compression numbers (threshold 200, coefficient 0.02).
+
+#[path = "common.rs"]
+mod common;
+
+use capsim::coordinator::build_bench_dataset;
+use capsim::report::{Series, Table};
+use capsim::sampler::{occurrence_distribution, sample, SamplerConfig};
+use capsim::workloads::suite;
+
+fn main() {
+    let cfg = common::pipeline_config();
+    let benches = suite(cfg.scale);
+    // 503.bwaves analog (paper uses its second interval)
+    let bwaves = benches.iter().position(|b| b.name == "503.bwaves").unwrap();
+    let (ds, prof) = build_bench_dataset(bwaves, &benches[bwaves], &cfg);
+    println!(
+        "503.bwaves analog: {} clips from {} checkpoints",
+        ds.len(),
+        prof.selected.len()
+    );
+
+    let keys = ds.keys();
+    let (orig, sorted) = occurrence_distribution(&keys);
+    let mut a = Series::new("occurrences (appearance order)");
+    for (i, &c) in orig.iter().enumerate() {
+        a.push(i as f64, c as f64);
+    }
+    a.emit("fig8a_original");
+    let mut b = Series::new("occurrences (sorted desc)");
+    for (i, &c) in sorted.iter().enumerate() {
+        b.push(i as f64, c as f64);
+    }
+    b.emit("fig8b_sorted");
+
+    let head: u64 = sorted.iter().take(5).sum();
+    let total: u64 = sorted.iter().sum();
+    println!(
+        "unique clips {}  total {}  top-5 categories carry {:.0}% of all clips",
+        sorted.len(),
+        total,
+        100.0 * head as f64 / total as f64
+    );
+
+    // §VI-A: sampler compression at the paper's parameters
+    let mut t = Table::new(
+        "Sampler compression (threshold/coefficient sweep)",
+        &["threshold", "coefficient", "clips in", "clips out", "ratio"],
+    );
+    for (th, co) in [(200u64, 0.02f64), (200, 0.1), (50, 0.02), (10, 0.2)] {
+        let sel = sample(&keys, &SamplerConfig { threshold: th, coefficient: co });
+        t.row(vec![
+            th.to_string(),
+            format!("{co}"),
+            keys.len().to_string(),
+            sel.len().to_string(),
+            format!("{:.1}%", 100.0 * sel.len() as f64 / keys.len() as f64),
+        ]);
+    }
+    t.emit("fig8_sampler");
+}

@@ -1,0 +1,38 @@
+//! **Fig. 9** — training loss vs validation loss of the attention
+//! predictor (paper: SGD lr 1e-3 momentum 0.9, converging by ~epoch 128).
+
+#[path = "common.rs"]
+mod common;
+
+use capsim::report::Series;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::pipeline_config();
+    let (_, ds) = common::golden_cached(&cfg);
+    let rt = common::runtime(&cfg);
+    let steps = common::train_steps(200, 800);
+    let (_, log, _) = common::train_variant(&rt, "capsim", &ds, steps, cfg.seed)?;
+
+    let mut tr = Series::new("training loss (MAPE)");
+    for (s, l) in log.smoothed_train(10) {
+        tr.push(s as f64, l);
+    }
+    tr.emit("fig9_train");
+
+    let mut va = Series::new("validation loss (MAPE)");
+    for (s, l) in &log.val_loss {
+        va.push(*s as f64, *l);
+    }
+    va.emit("fig9_val");
+
+    let first = log.smoothed_train(10).first().map(|p| p.1).unwrap_or(0.0);
+    let last = log.smoothed_train(10).last().map(|p| p.1).unwrap_or(0.0);
+    println!(
+        "train loss {first:.3} -> {last:.3} over {} steps; final val MAPE {:.3}",
+        log.steps_run,
+        log.val_loss.last().map(|p| p.1).unwrap_or(f64::NAN)
+    );
+    // the paper's qualitative claims: both curves decrease, no divergence
+    assert!(last < first, "training loss must decrease");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! §Perf microbenchmarks — the per-layer hot paths (DESIGN.md §8):
+//! functional-simulator and O3 throughput, tokenizer throughput, SimPoint
+//! k-means, PJRT inference latency per batch size, and AOT train-step time.
+//! Criterion is not in the offline crate set; `util::timer::bench_fn`
+//! provides the warmup + repeat harness.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use capsim::config::PipelineConfig;
+use capsim::dataset::ClipSample;
+use capsim::functional::AtomicCpu;
+use capsim::o3::{O3Config, O3Core};
+use capsim::predictor::build_batch;
+use capsim::simpoint::kmeans;
+use capsim::tokenizer::standardize::tokenize_clip;
+use capsim::util::timer::bench_fn;
+use capsim::util::Rng;
+use capsim::workloads::{suite, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(
+        std::env::var("CAPSIM_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500),
+    );
+    let benches = suite(Scale::Test);
+    let program = &benches[3].program; // mcf analog: mixed behaviour
+
+    // ---- functional simulator throughput ----
+    let n_insts = 200_000u64;
+    let mut cpu = AtomicCpu::load(program);
+    let executed = cpu.run_with(n_insts, |_| {});
+    let r = bench_fn("functional_sim (mcf analog)", budget, || {
+        let mut cpu = AtomicCpu::load(program);
+        cpu.run_with(n_insts, |_| {});
+    });
+    println!("{}  | {:.2} M inst/s", r.report(), executed as f64 / r.mean_s / 1e6);
+
+    // ---- trace collection ----
+    let mut cpu = AtomicCpu::load(program);
+    let trace = cpu.run_trace(n_insts);
+    let r = bench_fn("functional_trace 200k insts", budget, || {
+        let mut cpu = AtomicCpu::load(program);
+        let _ = cpu.run_trace(n_insts);
+    });
+    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+
+    // ---- O3 timing throughput ----
+    let r = bench_fn("o3_simulate 200k insts", budget, || {
+        let mut core = O3Core::new(O3Config::default());
+        let _ = core.simulate(&trace);
+    });
+    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+
+    // ---- tokenizer throughput ----
+    let r = bench_fn("tokenize 200k insts", budget, || {
+        let _ = tokenize_clip(&trace, 16);
+    });
+    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+
+    // ---- simpoint k-means ----
+    let mut rng = Rng::new(5);
+    let pts: Vec<Vec<f64>> = (0..200)
+        .map(|_| (0..16).map(|_| rng.normal()).collect())
+        .collect();
+    let r = bench_fn("kmeans 200x16 k=6", budget, || {
+        let _ = kmeans(&pts, 6, 40, 7);
+    });
+    println!("{}", r.report());
+
+    // ---- PJRT inference + training ----
+    let cfg = PipelineConfig::default();
+    let rt = common::runtime(&cfg);
+    let g = rt.manifest.geometry.clone();
+    let mut model = rt.load_variant("capsim")?;
+    model.init_params(1)?;
+
+    let mut rng = Rng::new(9);
+    let mk = |rng: &mut Rng| -> ClipSample {
+        let len = g.l_clip as u16;
+        ClipSample {
+            tokens: (0..len as usize * g.l_token)
+                .map(|_| rng.range(1, 150) as u16)
+                .collect(),
+            len,
+            ctx: (0..g.m_rows).map(|_| rng.range(150, 400) as u16).collect(),
+            time: 50.0,
+            key: 0,
+            bench: 0,
+        }
+    };
+    for &b in &g.fwd_batch_sizes.clone() {
+        let samples: Vec<ClipSample> = (0..b).map(|_| mk(&mut rng)).collect();
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let batch = build_batch(&refs, b, &g);
+        let r = bench_fn(&format!("pjrt_forward b={b}"), budget, || {
+            let _ = model.forward(&batch, 50.0).unwrap();
+        });
+        println!(
+            "{}  | {:.1} clips/s",
+            r.report(),
+            b as f64 / r.mean_s
+        );
+    }
+
+    let tb = model.train_batch().unwrap();
+    let samples: Vec<ClipSample> = (0..tb).map(|_| mk(&mut rng)).collect();
+    let refs: Vec<&ClipSample> = samples.iter().collect();
+    let batch = build_batch(&refs, tb, &g);
+    let r = bench_fn(&format!("pjrt_train_step b={tb}"), budget, || {
+        let _ = model.train_step(&batch, 1e-3, 50.0).unwrap();
+    });
+    println!("{}  | {:.1} clips/s", r.report(), tb as f64 / r.mean_s);
+
+    Ok(())
+}

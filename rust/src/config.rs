@@ -1,0 +1,325 @@
+//! Configuration system: a TOML-subset parser (the offline crate set has no
+//! toml crate) plus the typed `PipelineConfig` the launcher and benches use.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string /
+//! integer / float / boolean / flat-array values, `#` comments. That covers
+//! every config in `configs/`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::o3::O3Config;
+use crate::sampler::SamplerConfig;
+use crate::simpoint::SimpointConfig;
+use crate::workloads::Scale;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Toml {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl Toml {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(v) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(src: &str) -> Result<Toml, String> {
+    let mut out = Toml::default();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        // strip the first '#' that sits outside a quoted string
+        let mut in_quotes = false;
+        let mut cut = raw.len();
+        for (i, c) in raw.char_indices() {
+            match c {
+                '"' => in_quotes = !in_quotes,
+                '#' if !in_quotes => {
+                    cut = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let line = raw[..cut].trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.entries.insert(
+            key,
+            parse_value(v).map_err(|e| format!("line {}: {e}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// How training clips are delimited (see `slicer`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainSlicing {
+    /// Algorithm 1 (paper §IV-A): boundaries on commit-time changes.
+    Algo1,
+    /// Fixed `l_min` windows with telescoping labels — matches the
+    /// inference-time slicing distribution exactly (used by the Fig.-7
+    /// end-to-end runs; see DESIGN.md §7).
+    Fixed,
+}
+
+/// Everything one experiment run needs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub scale: Scale,
+    pub simpoint: SimpointConfig,
+    pub o3: O3Config,
+    pub sampler: SamplerConfig,
+    /// Slicer minimum clip length (paper L_min).
+    pub l_min: usize,
+    /// Training-label slicing policy.
+    pub train_slicing: TrainSlicing,
+    /// Training settings.
+    pub train_steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Artifact directory.
+    pub artifacts: String,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            scale: Scale::Test,
+            simpoint: SimpointConfig::default(),
+            o3: O3Config::default(),
+            sampler: SamplerConfig::default(),
+            l_min: 24,
+            train_slicing: TrainSlicing::Algo1,
+            train_steps: 300,
+            lr: 1e-3,
+            seed: 42,
+            artifacts: "artifacts".to_string(),
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Build from a parsed TOML document, using defaults for absent keys.
+    pub fn from_toml(t: &Toml) -> Self {
+        let mut c = PipelineConfig::default();
+        c.scale = match t.str("pipeline.scale", "test").as_str() {
+            "full" => Scale::Full,
+            _ => Scale::Test,
+        };
+        c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
+        c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
+            "fixed" => TrainSlicing::Fixed,
+            _ => TrainSlicing::Algo1,
+        };
+        c.train_steps = t.int("train.steps", c.train_steps as i64) as usize;
+        c.lr = t.float("train.lr", c.lr as f64) as f32;
+        c.seed = t.int("pipeline.seed", c.seed as i64) as u64;
+        c.artifacts = t.str("pipeline.artifacts", &c.artifacts);
+
+        c.simpoint.interval_insts =
+            t.int("simpoint.interval_insts", c.simpoint.interval_insts as i64) as u64;
+        c.simpoint.warmup_insts =
+            t.int("simpoint.warmup_insts", c.simpoint.warmup_insts as i64) as u64;
+        c.simpoint.max_k = t.int("simpoint.max_k", c.simpoint.max_k as i64) as usize;
+
+        c.sampler.threshold =
+            t.int("sampler.threshold", c.sampler.threshold as i64) as u64;
+        c.sampler.coefficient = t.float("sampler.coefficient", c.sampler.coefficient);
+
+        c.o3.fetch_width = t.int("o3.fetch_width", c.o3.fetch_width as i64) as usize;
+        c.o3.issue_width = t.int("o3.issue_width", c.o3.issue_width as i64) as usize;
+        c.o3.commit_width = t.int("o3.commit_width", c.o3.commit_width as i64) as usize;
+        c.o3.rob_entries = t.int("o3.rob_entries", c.o3.rob_entries as i64) as usize;
+        c
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Ok(Self::from_toml(&parse_toml(&src)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse_toml(
+            r#"
+            # comment
+            top = 1
+            [o3]
+            fetch_width = 4
+            name = "wide"   # trailing comment
+            ratio = 0.5
+            flag = true
+            widths = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.int("top", 0), 1);
+        assert_eq!(t.int("o3.fetch_width", 0), 4);
+        assert_eq!(t.str("o3.name", ""), "wide");
+        assert_eq!(t.float("o3.ratio", 0.0), 0.5);
+        assert!(t.bool("o3.flag", false));
+        assert_eq!(
+            t.get("o3.widths"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse_toml("n = 5_000_000").unwrap();
+        assert_eq!(t.int("n", 0), 5_000_000);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("just a line").is_err());
+        assert!(parse_toml("x = @@").is_err());
+    }
+
+    #[test]
+    fn pipeline_config_from_toml_overrides() {
+        let t = parse_toml(
+            r#"
+            [pipeline]
+            scale = "full"
+            l_min = 48
+            [o3]
+            rob_entries = 128
+            [train]
+            steps = 10
+            lr = 0.01
+            [sampler]
+            threshold = 99
+            "#,
+        )
+        .unwrap();
+        let c = PipelineConfig::from_toml(&t);
+        assert_eq!(c.scale, Scale::Full);
+        assert_eq!(c.l_min, 48);
+        assert_eq!(c.o3.rob_entries, 128);
+        assert_eq!(c.o3.fetch_width, 8, "default preserved");
+        assert_eq!(c.train_steps, 10);
+        assert_eq!(c.sampler.threshold, 99);
+        assert!((c.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.l_min, 24);
+        assert_eq!(c.o3.fetch_width, 8);
+    }
+}

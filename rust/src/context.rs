@@ -1,0 +1,141 @@
+//! The context matrix (paper §V-B, Fig. 6, Table I): the CPU state before
+//! a trace clip executes, rendered as embedding-table tokens.
+//!
+//! Each selected register contributes one *name* token followed by its
+//! value split into byte tokens, most-significant byte first (the paper
+//! splits 128-bit VSR values into 16 hex-pair groups; our 64-bit registers
+//! split into 8). The register list is configurable; the default is the
+//! `ctx_regs = 10` prefix declared in `model_config.json`, mirroring the
+//! Table-I classes that matter most on PISA workloads (argument/stack GPRs,
+//! CR, LR, CTR, XER, CIA).
+
+use crate::isa::RegFile;
+use crate::tokenizer::{RegName, Vocab};
+
+/// One context register: its name token and how to read its value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CtxReg {
+    Gpr(u8),
+    Fpr(u8),
+    Cr,
+    Lr,
+    Ctr,
+    Xer,
+    Cia,
+    Nia,
+}
+
+impl CtxReg {
+    pub fn name(&self) -> RegName {
+        match self {
+            CtxReg::Gpr(i) => RegName::Gpr(*i),
+            CtxReg::Fpr(i) => RegName::Fpr(*i),
+            CtxReg::Cr => RegName::Cr,
+            CtxReg::Lr => RegName::Lr,
+            CtxReg::Ctr => RegName::Ctr,
+            CtxReg::Xer => RegName::Xer,
+            CtxReg::Cia => RegName::Cia,
+            CtxReg::Nia => RegName::Nia,
+        }
+    }
+
+    pub fn value(&self, regs: &RegFile) -> u64 {
+        match self {
+            CtxReg::Gpr(i) => regs.gpr[*i as usize],
+            CtxReg::Fpr(i) => regs.fpr_bits(*i as usize),
+            CtxReg::Cr => regs.cr.0 as u64,
+            CtxReg::Lr => regs.lr,
+            CtxReg::Ctr => regs.ctr,
+            CtxReg::Xer => regs.xer,
+            CtxReg::Cia => regs.cia,
+            CtxReg::Nia => regs.nia,
+        }
+    }
+}
+
+/// The default register set (must stay consistent with
+/// `model_config.json`'s `ctx_regs`): working GPRs the kernels use for
+/// cursors/counters, plus the control registers of Table I.
+pub const REGISTER_SPEC: [CtxReg; 10] = [
+    CtxReg::Gpr(1),
+    CtxReg::Gpr(3),
+    CtxReg::Gpr(4),
+    CtxReg::Gpr(5),
+    CtxReg::Gpr(31),
+    CtxReg::Cr,
+    CtxReg::Lr,
+    CtxReg::Ctr,
+    CtxReg::Xer,
+    CtxReg::Cia,
+];
+
+/// Tokens contributed per register: 1 name + 8 value bytes.
+pub const TOKENS_PER_REG: usize = 9;
+
+/// Total context rows with the default spec (the model's `M`).
+pub const M_ROWS: usize = REGISTER_SPEC.len() * TOKENS_PER_REG;
+
+/// Build the context matrix token row for one register snapshot (Fig. 6b).
+pub fn context_tokens(regs: &RegFile, spec: &[CtxReg]) -> Vec<u16> {
+    let mut out = Vec::with_capacity(spec.len() * TOKENS_PER_REG);
+    for r in spec {
+        out.push(Vocab::reg(r.name()));
+        let v = r.value(regs);
+        for byte in v.to_be_bytes() {
+            out.push(Vocab::byte(byte));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_register_layout() {
+        // R10 = 0x0123_4567_89ab_cdef -> name token + 8 byte tokens MSB-first
+        let mut regs = RegFile::default();
+        regs.gpr[10] = 0x0123_4567_89AB_CDEF;
+        let t = context_tokens(&regs, &[CtxReg::Gpr(10)]);
+        assert_eq!(t.len(), TOKENS_PER_REG);
+        assert_eq!(t[0], Vocab::reg(RegName::Gpr(10)));
+        assert_eq!(t[1], Vocab::byte(0x01));
+        assert_eq!(t[2], Vocab::byte(0x23));
+        assert_eq!(t[8], Vocab::byte(0xEF));
+    }
+
+    #[test]
+    fn default_spec_matches_model_m() {
+        // model_config.json: ctx_regs=10, ctx_value_tokens=8 -> M=90
+        assert_eq!(M_ROWS, 90);
+        let regs = RegFile::default();
+        assert_eq!(context_tokens(&regs, &REGISTER_SPEC).len(), 90);
+    }
+
+    #[test]
+    fn values_flow_into_tokens() {
+        let mut a = RegFile::default();
+        let b = {
+            let mut b = RegFile::default();
+            b.ctr = 500; // a loop counter difference must show in context
+            b
+        };
+        a.ctr = 2;
+        let ta = context_tokens(&a, &REGISTER_SPEC);
+        let tb = context_tokens(&b, &REGISTER_SPEC);
+        assert_ne!(ta, tb);
+        // but only in the CTR row's byte tokens
+        let diff = ta.iter().zip(&tb).filter(|(x, y)| x != y).count();
+        assert!(diff <= 8);
+    }
+
+    #[test]
+    fn fpr_uses_raw_bits() {
+        let mut regs = RegFile::default();
+        regs.fpr[2] = 1.0; // 0x3FF0_0000_0000_0000
+        let t = context_tokens(&regs, &[CtxReg::Fpr(2)]);
+        assert_eq!(t[1], Vocab::byte(0x3F));
+        assert_eq!(t[2], Vocab::byte(0xF0));
+    }
+}

@@ -1,0 +1,215 @@
+//! Golden-label dataset construction (Fig. 2): SimPoint → functional
+//! trace → O3 commit times → Algorithm-1 slicing → Fig.-5 tokenization +
+//! Fig.-6 context annotation.
+
+use crate::config::{PipelineConfig, TrainSlicing};
+use crate::context::{context_tokens, REGISTER_SPEC};
+use crate::dataset::{ClipSample, Dataset};
+use crate::isa::RegFile;
+use crate::o3::O3Core;
+use crate::simpoint::{choose_simpoints, profile, Checkpoint, SelectedInterval};
+use crate::slicer::{slice_fixed_labeled, slice_labeled};
+use crate::tokenizer::standardize::{clip_key, tokenize_clip};
+use crate::workloads::Benchmark;
+
+/// Per-benchmark SimPoint outcome (Table II's row: checkpoint count etc.).
+pub struct BenchProfile {
+    pub name: &'static str,
+    pub set_no: u8,
+    pub tag_string: String,
+    /// Total intervals in the profile.
+    pub n_intervals: usize,
+    /// Selected representative intervals (the "CKP Num" of Table II).
+    pub selected: Vec<SelectedInterval>,
+    /// Whole-program dynamic instruction count.
+    pub total_insts: u64,
+}
+
+/// Model geometry constants the dataset must match (kept in lock-step with
+/// `model_config.json`; the runtime re-validates at load).
+pub const L_TOKEN: usize = 16;
+pub const L_CLIP: usize = 32;
+
+/// Build the labelled dataset for one benchmark. Returns the samples and
+/// the SimPoint profile (reused later by the mode runners).
+pub fn build_bench_dataset(
+    bench_idx: usize,
+    bench: &Benchmark,
+    cfg: &PipelineConfig,
+) -> (Dataset, BenchProfile) {
+    let mut ds = Dataset::new(L_TOKEN, L_CLIP, crate::context::M_ROWS);
+    let prof = profile(&bench.program, &cfg.simpoint);
+    let selected = choose_simpoints(&prof, &cfg.simpoint);
+
+    let mut core = O3Core::new(cfg.o3.clone());
+    for sel in &selected {
+        // functional replay: warmup + interval
+        let mut cpu = sel.checkpoint.restore();
+        let warm = cfg.simpoint.warmup_insts;
+        let total = warm + cfg.simpoint.interval_insts;
+        let trace = cpu.run_trace(total);
+        if trace.len() <= warm as usize {
+            continue; // program ended inside warmup
+        }
+
+        // golden timing (cold microarch state per restore, like gem5)
+        core.reset();
+        let o3 = core.simulate(&trace);
+
+        // slicing over the measured (post-warmup) portion
+        let w = warm as usize;
+        let interval_cc = &o3.commit_cycle[w..];
+        let clips = match cfg.train_slicing {
+            TrainSlicing::Algo1 => {
+                slice_labeled(trace.len() - w, interval_cc, cfg.l_min)
+            }
+            TrainSlicing::Fixed => slice_fixed_labeled(interval_cc, cfg.l_min),
+        };
+
+        // capture context register snapshots at clip starts
+        let starts: Vec<usize> = clips.iter().map(|c| w + c.start).collect();
+        let ctxs = snapshots_at(&sel.checkpoint, &starts);
+
+        for (clip, ctx_regs) in clips.iter().zip(&ctxs) {
+            let recs = &trace[w + clip.start..w + clip.start + clip.len];
+            let tokens = tokenize_clip(recs, L_TOKEN);
+            let key = clip_key(&tokens);
+            ds.push(ClipSample {
+                len: clip.len as u16,
+                tokens,
+                ctx: context_tokens(ctx_regs, &REGISTER_SPEC),
+                time: clip.time as f32,
+                key,
+                bench: bench_idx as u16,
+            });
+        }
+    }
+
+    let bp = BenchProfile {
+        name: bench.name,
+        set_no: bench.set_no,
+        tag_string: bench.tag_string(),
+        n_intervals: prof.intervals.len(),
+        selected,
+        total_insts: prof.total_insts,
+    };
+    (ds, bp)
+}
+
+/// Replay from a checkpoint and snapshot the register file just before
+/// executing the instruction at each (sorted, ascending) dynamic index.
+pub fn snapshots_at(ck: &Checkpoint, starts: &[usize]) -> Vec<RegFile> {
+    let mut cpu = ck.restore();
+    let mut out = Vec::with_capacity(starts.len());
+    let mut executed: usize = 0;
+    for &s in starts {
+        debug_assert!(s >= executed);
+        while executed < s && !cpu.halted {
+            cpu.step();
+            executed += 1;
+        }
+        out.push(cpu.regs.clone());
+    }
+    out
+}
+
+/// Build the full-suite dataset (merging per-benchmark datasets in suite
+/// order) plus the per-benchmark profiles. `threads` parallelizes across
+/// benchmarks.
+pub fn build_dataset(
+    benches: &[Benchmark],
+    cfg: &PipelineConfig,
+    threads: usize,
+) -> (Dataset, Vec<BenchProfile>) {
+    let jobs: Vec<(usize, &Benchmark)> = benches.iter().enumerate().collect();
+    let results = super::pool::parallel_map(jobs, threads, |(i, b)| {
+        build_bench_dataset(i, b, cfg)
+    });
+    let mut all = Dataset::new(L_TOKEN, L_CLIP, crate::context::M_ROWS);
+    let mut profiles = Vec::new();
+    for (ds, bp) in results {
+        all.dropped_long += ds.dropped_long;
+        all.samples.extend(ds.samples);
+        profiles.push(bp);
+    }
+    (all, profiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{suite, Scale};
+
+    fn test_cfg() -> PipelineConfig {
+        let mut c = PipelineConfig::default();
+        c.simpoint.interval_insts = 8_000;
+        c.simpoint.warmup_insts = 1_000;
+        c.simpoint.max_k = 3;
+        c.l_min = 24;
+        c
+    }
+
+    #[test]
+    fn single_bench_dataset_has_valid_samples() {
+        let benches = suite(Scale::Test);
+        let cfg = test_cfg();
+        let (ds, bp) = build_bench_dataset(0, &benches[0], &cfg);
+        assert!(!ds.is_empty(), "perlbench analog must yield clips");
+        assert!(bp.n_intervals >= 1);
+        assert!(!bp.selected.is_empty());
+        for s in &ds.samples {
+            assert!(s.len as usize >= cfg.l_min);
+            assert!(s.len as usize <= L_CLIP);
+            assert!(s.time >= 1.0, "clip time must be positive cycles");
+            assert_eq!(s.ctx.len(), crate::context::M_ROWS);
+            assert_eq!(s.tokens.len(), s.len as usize * L_TOKEN);
+            assert_eq!(s.bench, 0);
+        }
+    }
+
+    #[test]
+    fn snapshots_match_direct_replay() {
+        let benches = suite(Scale::Test);
+        let cfg = test_cfg();
+        let prof = profile(&benches[2].program, &cfg.simpoint);
+        let sel = choose_simpoints(&prof, &cfg.simpoint);
+        let ck = &sel[0].checkpoint;
+        let snaps = snapshots_at(ck, &[0, 10, 50]);
+        assert_eq!(snaps[0], ck.regs);
+        // direct replay to 10
+        let mut cpu = ck.restore();
+        for _ in 0..10 {
+            cpu.step();
+        }
+        assert_eq!(snaps[1], cpu.regs);
+    }
+
+    #[test]
+    fn contexts_differ_across_clips() {
+        let benches = suite(Scale::Test);
+        let cfg = test_cfg();
+        let (ds, _) = build_bench_dataset(3, &benches[3], &cfg);
+        assert!(ds.len() >= 2);
+        // at least some pair of samples must have different contexts
+        // (registers evolve across a real program)
+        let distinct = ds
+            .samples
+            .windows(2)
+            .filter(|w| w[0].ctx != w[1].ctx)
+            .count();
+        assert!(distinct > 0, "contexts should evolve");
+    }
+
+    #[test]
+    fn multi_bench_merge_keeps_indices() {
+        let benches: Vec<_> = suite(Scale::Test).into_iter().take(3).collect();
+        let cfg = test_cfg();
+        let (ds, profiles) = build_dataset(&benches, &cfg, 2);
+        assert_eq!(profiles.len(), 3);
+        let mut seen = std::collections::HashSet::new();
+        for s in &ds.samples {
+            seen.insert(s.bench);
+        }
+        assert!(seen.contains(&0) && seen.contains(&1) && seen.contains(&2));
+    }
+}

@@ -1,0 +1,228 @@
+//! The two simulation modes of Fig. 1 and the Fig.-7 speed comparison.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::context::{context_tokens, REGISTER_SPEC};
+use crate::dataset::{ClipSample, Dataset};
+use crate::o3::O3Core;
+use crate::predictor::predict_all;
+use crate::runtime::ModelHandle;
+use crate::simpoint::SelectedInterval;
+
+use crate::tokenizer::standardize::{fast_clip_key, tokenize_clip};
+
+use super::golden::{L_CLIP, L_TOKEN};
+
+/// gem5-mode result for one benchmark.
+#[derive(Clone, Debug)]
+pub struct Gem5Run {
+    /// Measured cycles per selected interval (post-warmup portion).
+    pub interval_cycles: Vec<u64>,
+    /// SimPoint-extrapolated whole-program cycles.
+    pub total_cycles: f64,
+    /// Wall-clock seconds of the restore+simulate work.
+    pub wall_s: f64,
+}
+
+/// CAPSim-mode result for one benchmark.
+#[derive(Clone, Debug)]
+pub struct CapsimRun {
+    /// Predicted cycles per selected interval.
+    pub interval_cycles: Vec<f64>,
+    /// SimPoint-extrapolated whole-program cycles.
+    pub total_cycles: f64,
+    /// Wall-clock seconds (functional trace + slicing + inference).
+    pub wall_s: f64,
+    /// Total clips vs unique clips actually sent to the model.
+    pub clips_total: usize,
+    pub clips_unique: usize,
+}
+
+fn extrapolate(weights: &[f64], cycles: &[f64], n_intervals: usize) -> f64 {
+    // SimPoint: total ≈ n_intervals * Σ weight_c * cycles(rep_c)
+    n_intervals as f64
+        * weights
+            .iter()
+            .zip(cycles)
+            .map(|(w, c)| w * c)
+            .sum::<f64>()
+}
+
+/// Restore every selected checkpoint into the O3 model (the paper's
+/// conventional flow, Fig. 1 left).
+pub fn gem5_mode(
+    selected: &[SelectedInterval],
+    n_intervals: usize,
+    cfg: &PipelineConfig,
+) -> Gem5Run {
+    let t0 = Instant::now();
+    let mut core = O3Core::new(cfg.o3.clone());
+    let warm = cfg.simpoint.warmup_insts;
+    let mut interval_cycles = Vec::with_capacity(selected.len());
+    for sel in selected {
+        let mut cpu = sel.checkpoint.restore();
+        let trace = cpu.run_trace(warm + cfg.simpoint.interval_insts);
+        core.reset();
+        let r = core.simulate(&trace);
+        // measured portion = everything after the warm-up instructions;
+        // if the program ended inside warm-up, fall back to full cycles
+        let measured = if trace.len() > warm as usize {
+            r.stats.cycles - r.commit_cycle[warm as usize]
+        } else {
+            r.stats.cycles
+        };
+        interval_cycles.push(measured.max(1));
+    }
+    let weights: Vec<f64> = selected.iter().map(|s| s.weight).collect();
+    let cycles: Vec<f64> = interval_cycles.iter().map(|&c| c as f64).collect();
+    Gem5Run {
+        total_cycles: extrapolate(&weights, &cycles, n_intervals),
+        interval_cycles,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// CAPSim mode (Fig. 1 right): ONE functional pass per interval producing
+/// fixed-length clips with register snapshots at their starts; clips are
+/// deduplicated by a raw-field content key so only first-seen clips are
+/// tokenized, then predicted in batches and summed per interval.
+pub fn capsim_mode(
+    selected: &[SelectedInterval],
+    n_intervals: usize,
+    cfg: &PipelineConfig,
+    model: &ModelHandle,
+    time_scale: f32,
+) -> Result<CapsimRun> {
+    let t0 = Instant::now();
+    let warm = cfg.simpoint.warmup_insts;
+    let l_min = cfg.l_min as u64;
+
+    // one dedup space across the whole benchmark: identical loop bodies
+    // recur across intervals, and the predictor only needs each once
+    let mut unique = Dataset::new(L_TOKEN, L_CLIP, crate::context::M_ROWS);
+    let mut key_slot: std::collections::HashMap<u64, usize> = Default::default();
+    // per interval: (slot, occurrence-count) pairs
+    let mut interval_refs: Vec<Vec<(usize, u64)>> = Vec::with_capacity(selected.len());
+    let mut window: Vec<crate::functional::TraceRecord> =
+        Vec::with_capacity(cfg.l_min);
+
+    for sel in selected {
+        let mut cpu = sel.checkpoint.restore();
+        // fast-forward through warm-up (no records kept)
+        cpu.run_with(warm, |_| {});
+
+        let mut counts: std::collections::HashMap<usize, u64> = Default::default();
+        let mut executed = 0u64;
+        window.clear();
+        let mut clip_regs = cpu.regs.clone();
+        while executed < cfg.simpoint.interval_insts && !cpu.halted {
+            if window.is_empty() {
+                clip_regs = cpu.regs.clone(); // context at clip start
+            }
+            window.push(*cpu.step().record());
+            executed += 1;
+            if window.len() as u64 == l_min {
+                let key = fast_clip_key(&window);
+                let slot = match key_slot.entry(key) {
+                    std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        // first sighting: tokenize + context-annotate
+                        let tokens = tokenize_clip(&window, L_TOKEN);
+                        unique.push(ClipSample {
+                            len: window.len() as u16,
+                            tokens,
+                            ctx: context_tokens(&clip_regs, &REGISTER_SPEC),
+                            time: 0.0,
+                            key,
+                            bench: 0,
+                        });
+                        *e.insert(unique.len() - 1)
+                    }
+                };
+                *counts.entry(slot).or_insert(0) += 1;
+                window.clear();
+            }
+        }
+        interval_refs.push(counts.into_iter().collect());
+    }
+
+    // batched inference over unique clips only
+    let idx: Vec<usize> = (0..unique.len()).collect();
+    let preds = predict_all(model, &unique, &idx, time_scale)?;
+
+    let mut interval_cycles = Vec::with_capacity(selected.len());
+    let mut clips_total = 0usize;
+    for refs in &interval_refs {
+        let mut sum = 0.0;
+        for &(slot, count) in refs {
+            sum += preds[slot] * count as f64;
+            clips_total += count as usize;
+        }
+        interval_cycles.push(sum);
+    }
+
+    let weights: Vec<f64> = selected.iter().map(|s| s.weight).collect();
+    Ok(CapsimRun {
+        total_cycles: extrapolate(&weights, &interval_cycles, n_intervals),
+        interval_cycles,
+        wall_s: t0.elapsed().as_secs_f64(),
+        clips_total,
+        clips_unique: unique.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::golden::build_bench_dataset;
+    use crate::workloads::{suite, Scale};
+
+    fn test_cfg() -> PipelineConfig {
+        let mut c = PipelineConfig::default();
+        c.simpoint.interval_insts = 8_000;
+        c.simpoint.warmup_insts = 1_000;
+        c.simpoint.max_k = 3;
+        c.l_min = 24;
+        c
+    }
+
+    #[test]
+    fn gem5_mode_produces_positive_cycles() {
+        let benches = suite(Scale::Test);
+        let cfg = test_cfg();
+        let (_, bp) = build_bench_dataset(0, &benches[0], &cfg);
+        let run = gem5_mode(&bp.selected, bp.n_intervals, &cfg);
+        assert_eq!(run.interval_cycles.len(), bp.selected.len());
+        assert!(run.interval_cycles.iter().all(|&c| c > 0));
+        assert!(run.total_cycles > 0.0);
+        assert!(run.wall_s > 0.0);
+    }
+
+    #[test]
+    fn extrapolation_weights_sum() {
+        // two intervals, equal weights 0.5 -> mean * n
+        let v = extrapolate(&[0.5, 0.5], &[100.0, 300.0], 10);
+        assert_eq!(v, 2000.0);
+    }
+
+    #[test]
+    fn gem5_total_roughly_matches_full_simulation() {
+        // For a small uniform benchmark, the SimPoint extrapolation should
+        // land within ~35% of simulating the entire program.
+        let benches = suite(Scale::Test);
+        let cfg = test_cfg();
+        let b = &benches[23]; // 999.specrand: near-uniform behaviour
+        let (_, bp) = build_bench_dataset(23, b, &cfg);
+        let run = gem5_mode(&bp.selected, bp.n_intervals, &cfg);
+
+        let mut cpu = crate::functional::AtomicCpu::load(&b.program);
+        let full = cpu.run_trace(5_000_000);
+        let mut core = O3Core::new(cfg.o3.clone());
+        let golden = core.simulate(&full).stats.cycles as f64;
+        let rel = (run.total_cycles - golden).abs() / golden;
+        assert!(rel < 0.35, "extrapolation off by {rel:.2}");
+    }
+}

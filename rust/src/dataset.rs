@@ -1,0 +1,305 @@
+//! Clip datasets: the tokenized, context-annotated, time-labelled samples
+//! that train and evaluate the predictor, plus the splits the paper's two
+//! evaluation methods need (§VI-B):
+//!
+//! * **Method 1** — mix all benchmarks, split 80/10/10 train/val/test;
+//! * **Method 2** — group by the six Table-II sets, train on one set and
+//!   test on another (the 6x6 matrix of Fig. 11).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::Rng;
+
+/// One training/evaluation sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClipSample {
+    /// Standardized tokens, `len * l_token`, row-major.
+    pub tokens: Vec<u16>,
+    /// Number of instructions in the clip (<= l_clip).
+    pub len: u16,
+    /// Context-matrix tokens (length M).
+    pub ctx: Vec<u16>,
+    /// Golden execution time in cycles.
+    pub time: f32,
+    /// Content key (dedup / Fig. 8).
+    pub key: u64,
+    /// Benchmark index into the suite.
+    pub bench: u16,
+}
+
+/// A full dataset with fixed model geometry.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub l_token: usize,
+    pub l_clip: usize,
+    pub m_rows: usize,
+    pub samples: Vec<ClipSample>,
+    /// Clips dropped because they exceeded `l_clip` instructions.
+    pub dropped_long: usize,
+}
+
+impl Dataset {
+    pub fn new(l_token: usize, l_clip: usize, m_rows: usize) -> Self {
+        Dataset { l_token, l_clip, m_rows, ..Default::default() }
+    }
+
+    /// Add a sample; drops clips longer than `l_clip` (counted).
+    pub fn push(&mut self, s: ClipSample) {
+        debug_assert_eq!(s.ctx.len(), self.m_rows);
+        if (s.len as usize) > self.l_clip {
+            self.dropped_long += 1;
+            return;
+        }
+        debug_assert_eq!(s.tokens.len(), s.len as usize * self.l_token);
+        self.samples.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Mean golden time — the `time_scale` fed to the AOT model.
+    pub fn mean_time(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().map(|s| s.time as f64).sum::<f64>()
+            / self.samples.len() as f64
+    }
+
+    /// Method-1 split: shuffled 80/10/10 (train, val, test) index sets.
+    pub fn split(&self, seed: u64) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..self.samples.len()).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n = idx.len();
+        let n_train = n * 8 / 10;
+        let n_val = n / 10;
+        let train = idx[..n_train].to_vec();
+        let val = idx[n_train..n_train + n_val].to_vec();
+        let test = idx[n_train + n_val..].to_vec();
+        (train, val, test)
+    }
+
+    /// Method-2 grouping: indices per Table-II set (1..=6), using a
+    /// benchmark-index -> set-number map.
+    pub fn by_set(&self, set_of_bench: &[u8]) -> [Vec<usize>; 6] {
+        let mut out: [Vec<usize>; 6] = Default::default();
+        for (i, s) in self.samples.iter().enumerate() {
+            let set = set_of_bench[s.bench as usize];
+            debug_assert!((1..=6).contains(&set));
+            out[(set - 1) as usize].push(i);
+        }
+        out
+    }
+
+    /// Indices per benchmark (Fig. 10's per-benchmark error bars).
+    pub fn by_bench(&self, num_benches: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); num_benches];
+        for (i, s) in self.samples.iter().enumerate() {
+            out[s.bench as usize].push(i);
+        }
+        out
+    }
+
+    /// Content keys in sample order (sampler / Fig. 8 input).
+    pub fn keys(&self) -> Vec<u64> {
+        self.samples.iter().map(|s| s.key).collect()
+    }
+
+    /// Restrict to a subset of indices (post-sampling dataset).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            l_token: self.l_token,
+            l_clip: self.l_clip,
+            m_rows: self.m_rows,
+            samples: idx.iter().map(|&i| self.samples[i].clone()).collect(),
+            dropped_long: 0,
+        }
+    }
+
+    // ---- binary (de)serialization — caching golden-label generation ----
+
+    const MAGIC: u32 = 0x43415053; // "CAPS"
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        for v in [self.l_token, self.l_clip, self.m_rows, self.samples.len(),
+                  self.dropped_long] {
+            w.write_all(&(v as u64).to_le_bytes())?;
+        }
+        for s in &self.samples {
+            w.write_all(&s.len.to_le_bytes())?;
+            w.write_all(&s.bench.to_le_bytes())?;
+            w.write_all(&s.time.to_le_bytes())?;
+            w.write_all(&s.key.to_le_bytes())?;
+            for t in &s.tokens {
+                w.write_all(&t.to_le_bytes())?;
+            }
+            for t in &s.ctx {
+                w.write_all(&t.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Dataset> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u32b)?;
+        if u32::from_le_bytes(u32b) != Self::MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad dataset magic",
+            ));
+        }
+        let mut next = |r: &mut dyn Read| -> std::io::Result<u64> {
+            r.read_exact(&mut u64b)?;
+            Ok(u64::from_le_bytes(u64b))
+        };
+        let l_token = next(&mut r)? as usize;
+        let l_clip = next(&mut r)? as usize;
+        let m_rows = next(&mut r)? as usize;
+        let count = next(&mut r)? as usize;
+        let dropped_long = next(&mut r)? as usize;
+        let mut samples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut u16b = [0u8; 2];
+            r.read_exact(&mut u16b)?;
+            let len = u16::from_le_bytes(u16b);
+            r.read_exact(&mut u16b)?;
+            let bench = u16::from_le_bytes(u16b);
+            r.read_exact(&mut u32b)?;
+            let time = f32::from_le_bytes(u32b);
+            r.read_exact(&mut u64b)?;
+            let key = u64::from_le_bytes(u64b);
+            let mut tokens = vec![0u16; len as usize * l_token];
+            for t in tokens.iter_mut() {
+                r.read_exact(&mut u16b)?;
+                *t = u16::from_le_bytes(u16b);
+            }
+            let mut ctx = vec![0u16; m_rows];
+            for t in ctx.iter_mut() {
+                r.read_exact(&mut u16b)?;
+                *t = u16::from_le_bytes(u16b);
+            }
+            samples.push(ClipSample { tokens, len, ctx, time, key, bench });
+        }
+        Ok(Dataset { l_token, l_clip, m_rows, samples, dropped_long })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(len: u16, bench: u16, time: f32, key: u64) -> ClipSample {
+        ClipSample {
+            tokens: vec![1; len as usize * 4],
+            len,
+            ctx: vec![7; 9],
+            time,
+            key,
+            bench,
+        }
+    }
+
+    fn dataset(n: usize) -> Dataset {
+        let mut d = Dataset::new(4, 8, 9);
+        for i in 0..n {
+            d.push(sample(
+                4 + (i % 4) as u16,
+                (i % 24) as u16,
+                10.0 + i as f32,
+                (i % 50) as u64,
+            ));
+        }
+        d
+    }
+
+    #[test]
+    fn push_drops_overlong() {
+        let mut d = Dataset::new(4, 8, 9);
+        d.push(sample(8, 0, 5.0, 1));
+        d.push(sample(9, 0, 5.0, 2));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.dropped_long, 1);
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let d = dataset(500);
+        let (tr, va, te) = d.split(3);
+        assert_eq!(tr.len() + va.len() + te.len(), 500);
+        assert_eq!(tr.len(), 400);
+        assert_eq!(va.len(), 50);
+        let mut all: Vec<usize> = tr.iter().chain(&va).chain(&te).copied().collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 500);
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let d = dataset(100);
+        assert_eq!(d.split(1).0, d.split(1).0);
+        assert_ne!(d.split(1).0, d.split(2).0);
+    }
+
+    #[test]
+    fn by_set_covers_all() {
+        let d = dataset(240);
+        // map bench i -> set (i % 6) + 1
+        let set_of: Vec<u8> = (0..24).map(|i| (i % 6 + 1) as u8).collect();
+        let sets = d.by_set(&set_of);
+        let total: usize = sets.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 240);
+        for s in &sets {
+            assert_eq!(s.len(), 40);
+        }
+    }
+
+    #[test]
+    fn mean_time_and_keys() {
+        let mut d = Dataset::new(4, 8, 9);
+        d.push(sample(4, 0, 10.0, 5));
+        d.push(sample(4, 0, 30.0, 5));
+        assert_eq!(d.mean_time(), 20.0);
+        assert_eq!(d.keys(), vec![5, 5]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = dataset(50);
+        let path = std::env::temp_dir().join("capsim_ds_test.bin");
+        d.save(&path).unwrap();
+        let d2 = Dataset::load(&path).unwrap();
+        assert_eq!(d.samples, d2.samples);
+        assert_eq!(d.l_token, d2.l_token);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn subset_picks_exact_rows() {
+        let d = dataset(20);
+        let s = d.subset(&[3, 7]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.samples[0], d.samples[3]);
+        assert_eq!(s.samples[1], d.samples[7]);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("capsim_ds_garbage.bin");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,442 @@
+//! The atomic functional CPU: decode + execute, one instruction per step.
+
+use crate::isa::asm::Program;
+use crate::isa::{decode, Inst, Opcode, RegFile, INST_BYTES};
+use crate::mem::Memory;
+
+use super::trace::TraceRecord;
+
+/// Outcome of one [`AtomicCpu::step`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepOutcome {
+    /// Executed a normal instruction.
+    Ok(TraceRecord),
+    /// Executed `halt`; the program is finished.
+    Halted(TraceRecord),
+}
+
+impl StepOutcome {
+    pub fn record(&self) -> &TraceRecord {
+        match self {
+            StepOutcome::Ok(r) | StepOutcome::Halted(r) => r,
+        }
+    }
+}
+
+/// The functional simulator state.
+#[derive(Clone, Debug)]
+pub struct AtomicCpu {
+    pub regs: RegFile,
+    pub mem: Memory,
+    pub halted: bool,
+    /// Dynamic instruction count.
+    pub icount: u64,
+}
+
+impl AtomicCpu {
+    /// Load a program image (code + data) and point CIA at its entry.
+    pub fn load(program: &Program) -> Self {
+        let mut mem = Memory::new();
+        mem.write_bytes(program.entry, &program.code_bytes());
+        for (addr, bytes) in &program.data {
+            mem.write_bytes(*addr, bytes);
+        }
+        AtomicCpu {
+            regs: RegFile::new(program.entry),
+            mem,
+            halted: false,
+            icount: 0,
+        }
+    }
+
+    /// Construct from an existing architectural state + memory (checkpoint
+    /// restore path).
+    pub fn from_state(regs: RegFile, mem: Memory) -> Self {
+        AtomicCpu { regs, mem, halted: false, icount: 0 }
+    }
+
+    /// Execute one instruction.
+    ///
+    /// Panics on undecodable words — programs come from our assembler, so
+    /// that is a construction bug, not an input condition.
+    pub fn step(&mut self) -> StepOutcome {
+        debug_assert!(!self.halted);
+        let pc = self.regs.cia;
+        let word = self.mem.read_u32(pc);
+        let inst = decode(word).expect("functional sim fetched invalid word");
+        let (mem_addr, taken) = self.execute(&inst, pc);
+        self.icount += 1;
+        let rec = TraceRecord { pc, inst, mem_addr, taken, next_pc: self.regs.nia };
+        self.regs.cia = self.regs.nia;
+        if inst.op == Opcode::Halt {
+            self.halted = true;
+            StepOutcome::Halted(rec)
+        } else {
+            StepOutcome::Ok(rec)
+        }
+    }
+
+    /// Run until halt or `max_insts`, collecting the trace.
+    pub fn run_trace(&mut self, max_insts: u64) -> Vec<TraceRecord> {
+        let mut out = Vec::new();
+        while !self.halted && (out.len() as u64) < max_insts {
+            out.push(*self.step().record());
+        }
+        out
+    }
+
+    /// Run without collecting (profiling / fast-forward), invoking `f` per
+    /// record. Stops at halt or after `max_insts`.
+    pub fn run_with(&mut self, max_insts: u64, mut f: impl FnMut(&TraceRecord)) -> u64 {
+        let mut n = 0;
+        while !self.halted && n < max_insts {
+            let o = self.step();
+            f(o.record());
+            n += 1;
+        }
+        n
+    }
+
+    #[inline]
+    fn ea(&self, inst: &Inst) -> u64 {
+        if inst.is_indexed_mem() {
+            self.regs.gpr[inst.ra as usize].wrapping_add(self.regs.gpr[inst.rb as usize])
+        } else {
+            self.regs.gpr[inst.ra as usize].wrapping_add(inst.imm as i64 as u64)
+        }
+    }
+
+    /// Execute semantics; returns (mem_addr, branch_taken). Sets `nia`.
+    fn execute(&mut self, inst: &Inst, pc: u64) -> (Option<u64>, bool) {
+        use Opcode::*;
+        let g = |r: &RegFile, i: u8| r.gpr[i as usize];
+        let mut mem_addr = None;
+        let mut taken = false;
+        let mut nia = pc.wrapping_add(INST_BYTES);
+        let rd = inst.rd as usize;
+        let ra = inst.ra as usize;
+        let rb = inst.rb as usize;
+        match inst.op {
+            Add => self.regs.gpr[rd] = g(&self.regs, inst.ra).wrapping_add(g(&self.regs, inst.rb)),
+            Sub => self.regs.gpr[rd] = g(&self.regs, inst.ra).wrapping_sub(g(&self.regs, inst.rb)),
+            Mullw => {
+                self.regs.gpr[rd] =
+                    g(&self.regs, inst.ra).wrapping_mul(g(&self.regs, inst.rb))
+            }
+            Divd => {
+                let a = g(&self.regs, inst.ra) as i64;
+                let b = g(&self.regs, inst.rb) as i64;
+                self.regs.gpr[rd] = if b == 0 || (a == i64::MIN && b == -1) {
+                    self.regs.xer |= 1; // overflow/invalid sticky bit
+                    0
+                } else {
+                    (a / b) as u64
+                };
+            }
+            Neg => self.regs.gpr[rd] = (g(&self.regs, inst.ra) as i64).wrapping_neg() as u64,
+            And => self.regs.gpr[rd] = g(&self.regs, inst.ra) & g(&self.regs, inst.rb),
+            Or => self.regs.gpr[rd] = g(&self.regs, inst.ra) | g(&self.regs, inst.rb),
+            Xor => self.regs.gpr[rd] = g(&self.regs, inst.ra) ^ g(&self.regs, inst.rb),
+            Sld => {
+                let sh = g(&self.regs, inst.rb) & 63;
+                self.regs.gpr[rd] = g(&self.regs, inst.ra) << sh;
+            }
+            Srd => {
+                let sh = g(&self.regs, inst.rb) & 63;
+                self.regs.gpr[rd] = g(&self.regs, inst.ra) >> sh;
+            }
+            Srad => {
+                let sh = g(&self.regs, inst.rb) & 63;
+                self.regs.gpr[rd] = ((g(&self.regs, inst.ra) as i64) >> sh) as u64;
+            }
+            Addi => {
+                self.regs.gpr[rd] =
+                    g(&self.regs, inst.ra).wrapping_add(inst.imm as i64 as u64)
+            }
+            Andi => self.regs.gpr[rd] = g(&self.regs, inst.ra) & (inst.imm as i64 as u64),
+            Ori => self.regs.gpr[rd] = g(&self.regs, inst.ra) | (inst.imm as i64 as u64),
+            Xori => self.regs.gpr[rd] = g(&self.regs, inst.ra) ^ (inst.imm as i64 as u64),
+            Sldi => self.regs.gpr[rd] = g(&self.regs, inst.ra) << (inst.imm & 63),
+            Srdi => self.regs.gpr[rd] = g(&self.regs, inst.ra) >> (inst.imm & 63),
+            Sradi => {
+                self.regs.gpr[rd] = ((g(&self.regs, inst.ra) as i64) >> (inst.imm & 63)) as u64
+            }
+            Li => self.regs.gpr[rd] = inst.imm as i64 as u64,
+            Lis => self.regs.gpr[rd] = (inst.imm as i64 as u64) << 16,
+            Cmp => {
+                let (a, b) = (g(&self.regs, inst.ra) as i64, g(&self.regs, inst.rb) as i64);
+                self.regs.cr.compare_signed(a, b);
+            }
+            Cmpl => {
+                let (a, b) = (g(&self.regs, inst.ra), g(&self.regs, inst.rb));
+                self.regs.cr.compare_unsigned(a, b);
+            }
+            Cmpi => {
+                let a = g(&self.regs, inst.ra) as i64;
+                self.regs.cr.compare_signed(a, inst.imm as i64);
+            }
+            Cmpli => {
+                let a = g(&self.regs, inst.ra);
+                self.regs.cr.compare_unsigned(a, inst.imm as i64 as u64);
+            }
+            Lbz | Lhz | Lwz | Ld | Lwzu | Ldx => {
+                let ea = self.ea(inst);
+                mem_addr = Some(ea);
+                let w = inst.mem_width().unwrap() as usize;
+                self.regs.gpr[rd] = self.mem.read_le(ea, w);
+                if inst.is_update_form() {
+                    self.regs.gpr[ra] = ea;
+                }
+            }
+            Lfd | Lfdx => {
+                let ea = self.ea(inst);
+                mem_addr = Some(ea);
+                self.regs.fpr[rd] = self.mem.read_f64(ea);
+            }
+            Stb | Sth | Stw | Std | Stwu | Stdx => {
+                let ea = self.ea(inst);
+                mem_addr = Some(ea);
+                let w = inst.mem_width().unwrap() as usize;
+                self.mem.write_le(ea, w, g(&self.regs, inst.rd));
+                if inst.is_update_form() {
+                    self.regs.gpr[ra] = ea;
+                }
+            }
+            Stfd | Stfdx => {
+                let ea = self.ea(inst);
+                mem_addr = Some(ea);
+                self.mem.write_f64(ea, self.regs.fpr[rd]);
+            }
+            Fadd => self.regs.fpr[rd] = self.regs.fpr[ra] + self.regs.fpr[rb],
+            Fsub => self.regs.fpr[rd] = self.regs.fpr[ra] - self.regs.fpr[rb],
+            Fmul => self.regs.fpr[rd] = self.regs.fpr[ra] * self.regs.fpr[rb],
+            Fdiv => self.regs.fpr[rd] = self.regs.fpr[ra] / self.regs.fpr[rb],
+            Fmadd => {
+                self.regs.fpr[rd] += self.regs.fpr[ra] * self.regs.fpr[rb];
+            }
+            Fneg => self.regs.fpr[rd] = -self.regs.fpr[ra],
+            Fmr => self.regs.fpr[rd] = self.regs.fpr[ra],
+            Fcmp => {
+                let (a, b) = (self.regs.fpr[ra], self.regs.fpr[rb]);
+                if a.is_nan() || b.is_nan() {
+                    self.regs.cr.set_field(0, crate::isa::CR_SO);
+                    self.regs.fpscr |= 1;
+                } else if a < b {
+                    self.regs.cr.set_field(0, crate::isa::CR_LT);
+                } else if a > b {
+                    self.regs.cr.set_field(0, crate::isa::CR_GT);
+                } else {
+                    self.regs.cr.set_field(0, crate::isa::CR_EQ);
+                }
+            }
+            Fcfid => self.regs.fpr[rd] = g(&self.regs, inst.ra) as i64 as f64,
+            Fctid => {
+                let v = self.regs.fpr[ra];
+                self.regs.fpr[rd] = f64::from_bits(if v.is_nan() {
+                    0
+                } else {
+                    (v as i64) as u64
+                });
+            }
+            B => {
+                taken = true;
+                nia = pc.wrapping_add((inst.imm as i64 * INST_BYTES as i64) as u64);
+            }
+            Bl => {
+                taken = true;
+                self.regs.lr = pc.wrapping_add(INST_BYTES);
+                nia = pc.wrapping_add((inst.imm as i64 * INST_BYTES as i64) as u64);
+            }
+            Blr => {
+                taken = true;
+                nia = self.regs.lr;
+            }
+            Bctr => {
+                taken = true;
+                nia = self.regs.ctr;
+            }
+            Beq | Bne | Blt | Bge | Bgt | Ble => {
+                let f = self.regs.cr.field(0);
+                let cond = match inst.op {
+                    Beq => f & crate::isa::CR_EQ != 0,
+                    Bne => f & crate::isa::CR_EQ == 0,
+                    Blt => f & crate::isa::CR_LT != 0,
+                    Bge => f & crate::isa::CR_LT == 0,
+                    Bgt => f & crate::isa::CR_GT != 0,
+                    Ble => f & crate::isa::CR_GT == 0,
+                    _ => unreachable!(),
+                };
+                if cond {
+                    taken = true;
+                    nia = pc.wrapping_add((inst.imm as i64 * INST_BYTES as i64) as u64);
+                }
+            }
+            Bdnz => {
+                self.regs.ctr = self.regs.ctr.wrapping_sub(1);
+                if self.regs.ctr != 0 {
+                    taken = true;
+                    nia = pc.wrapping_add((inst.imm as i64 * INST_BYTES as i64) as u64);
+                }
+            }
+            Mtlr => self.regs.lr = g(&self.regs, inst.ra),
+            Mflr => self.regs.gpr[rd] = self.regs.lr,
+            Mtctr => self.regs.ctr = g(&self.regs, inst.ra),
+            Mfctr => self.regs.gpr[rd] = self.regs.ctr,
+            Nop | Halt => {}
+        }
+        self.regs.nia = nia;
+        (mem_addr, taken)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Assembler;
+
+    fn run(prog: Program, max: u64) -> AtomicCpu {
+        let mut cpu = AtomicCpu::load(&prog);
+        cpu.run_trace(max);
+        cpu
+    }
+
+    #[test]
+    fn arith_basics() {
+        let mut a = Assembler::new(0x1000);
+        a.li(1, 6);
+        a.li(2, 7);
+        a.mullw(3, 1, 2);
+        a.addi(3, 3, 1);
+        a.halt();
+        let cpu = run(a.finish(), 100);
+        assert_eq!(cpu.regs.gpr[3], 43);
+        assert!(cpu.halted);
+        assert_eq!(cpu.icount, 5);
+    }
+
+    #[test]
+    fn division_by_zero_sets_xer() {
+        let mut a = Assembler::new(0x1000);
+        a.li(1, 5);
+        a.li(2, 0);
+        a.divd(3, 1, 2);
+        a.halt();
+        let cpu = run(a.finish(), 10);
+        assert_eq!(cpu.regs.gpr[3], 0);
+        assert_eq!(cpu.regs.xer & 1, 1);
+    }
+
+    #[test]
+    fn loop_with_bdnz() {
+        // sum 1..=10 using CTR loop
+        let mut a = Assembler::new(0x1000);
+        a.li(3, 0); // acc
+        a.li(4, 10); // i
+        a.mtctr(4);
+        let top = a.here();
+        a.add(3, 3, 4);
+        a.addi(4, 4, -1);
+        a.bdnz(top);
+        a.halt();
+        let cpu = run(a.finish(), 1000);
+        assert_eq!(cpu.regs.gpr[3], 55);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_update_form() {
+        let mut a = Assembler::new(0x1000);
+        a.load_imm64(1, 0x10000);
+        a.li(2, 0x1234);
+        a.stw(2, 0, 1);
+        a.lwz(3, 0, 1);
+        a.lwzu(4, 4, 1); // loads from 0x10004, r1 <- 0x10004
+        a.halt();
+        let cpu = run(a.finish(), 100);
+        assert_eq!(cpu.regs.gpr[3], 0x1234);
+        assert_eq!(cpu.regs.gpr[4], 0);
+        assert_eq!(cpu.regs.gpr[1], 0x10004);
+    }
+
+    #[test]
+    fn conditional_branches_follow_cr() {
+        let mut a = Assembler::new(0x1000);
+        a.li(1, 5);
+        a.cmpi(1, 5);
+        let eq = a.label();
+        a.beq(eq);
+        a.li(9, 111); // skipped
+        a.bind(eq);
+        a.li(10, 222);
+        a.halt();
+        let cpu = run(a.finish(), 100);
+        assert_eq!(cpu.regs.gpr[9], 0);
+        assert_eq!(cpu.regs.gpr[10], 222);
+    }
+
+    #[test]
+    fn call_and_return_via_lr() {
+        let mut a = Assembler::new(0x1000);
+        let f = a.label();
+        a.li(3, 1);
+        a.bl(f);
+        a.addi(3, 3, 100); // after return
+        a.halt();
+        a.bind(f);
+        a.addi(3, 3, 10);
+        a.blr();
+        let cpu = run(a.finish(), 100);
+        assert_eq!(cpu.regs.gpr[3], 111);
+    }
+
+    #[test]
+    fn fp_pipeline() {
+        let mut a = Assembler::new(0x1000);
+        a.data_f64(0x20000, &[1.5, 2.5]);
+        a.load_imm64(1, 0x20000);
+        a.lfd(1, 0, 1);
+        a.lfd(2, 8, 1);
+        a.fadd(3, 1, 2); // 4.0
+        a.fmul(4, 3, 2); // 10.0
+        a.fmadd(4, 1, 2); // 10 + 1.5*2.5 = 13.75
+        a.stfd(4, 16, 1);
+        a.halt();
+        let cpu = run(a.finish(), 100);
+        assert_eq!(cpu.mem.read_f64(0x20010), 13.75);
+    }
+
+    #[test]
+    fn trace_records_memory_and_branches() {
+        let mut a = Assembler::new(0x1000);
+        a.load_imm64(1, 0x10000);
+        a.lwz(2, 8, 1);
+        let skip = a.label();
+        a.cmpi(2, 99);
+        a.bne(skip);
+        a.nop();
+        a.bind(skip);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        let trace = cpu.run_trace(100);
+        let load = trace.iter().find(|r| r.inst.is_load()).unwrap();
+        assert_eq!(load.mem_addr, Some(0x10008));
+        let br = trace.iter().find(|r| r.inst.is_cond_branch()).unwrap();
+        assert!(br.taken); // r2==0 != 99
+        assert_eq!(br.next_pc, br.pc + 2 * 4);
+    }
+
+    #[test]
+    fn indexed_and_indirect() {
+        let mut a = Assembler::new(0x1000);
+        a.data_u64(0x30000, &[77]);
+        a.load_imm64(1, 0x30000);
+        a.li(2, 0);
+        a.ldx(3, 1, 2);
+        // computed branch via CTR
+        a.load_imm64(5, 0x1000); // patched below: jump to halt
+        a.halt(); // placeholder to compute addresses easily
+        let p = a.finish();
+        let mut cpu = AtomicCpu::load(&p);
+        cpu.run_trace(100);
+        assert_eq!(cpu.regs.gpr[3], 77);
+    }
+}

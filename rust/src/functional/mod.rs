@@ -1,0 +1,17 @@
+//! The fast functional simulator — CAPSim's analogue of gem5's
+//! `AtomicSimpleCPU` (paper Fig. 1, right side).
+//!
+//! "Atomic" means each instruction executes completely in one step with no
+//! timing model; it is an order of magnitude faster than the O3 model and
+//! produces exactly two things the predictor pipeline needs:
+//!
+//! 1. the dynamic **instruction trace** ([`TraceRecord`]: decoded
+//!    instruction, effective address, branch outcome);
+//! 2. **register snapshots** (the architectural state that becomes the
+//!    Fig.-6 context matrix at clip boundaries).
+
+pub mod cpu;
+pub mod trace;
+
+pub use cpu::{AtomicCpu, StepOutcome};
+pub use trace::TraceRecord;

@@ -1,0 +1,47 @@
+//! Dynamic instruction trace records — the interchange between the
+//! functional simulator, the O3 timing model, and the slicer.
+
+use crate::isa::Inst;
+
+/// One dynamically executed instruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Instruction address.
+    pub pc: u64,
+    /// Decoded instruction.
+    pub inst: Inst,
+    /// Effective address of the memory access, if any.
+    pub mem_addr: Option<u64>,
+    /// Branch outcome (false for non-branches).
+    pub taken: bool,
+    /// Address of the next dynamically executed instruction.
+    pub next_pc: u64,
+}
+
+impl TraceRecord {
+    /// Whether this record ends a basic block (taken or not, control flow
+    /// instructions delimit blocks for BBV profiling).
+    pub fn ends_block(&self) -> bool {
+        self.inst.is_branch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Inst, Opcode};
+
+    #[test]
+    fn branch_ends_block() {
+        let rec = TraceRecord {
+            pc: 0x1000,
+            inst: Inst::new(Opcode::B, 0, 0, 0, -2),
+            mem_addr: None,
+            taken: true,
+            next_pc: 0x0FF8,
+        };
+        assert!(rec.ends_block());
+        let rec2 = TraceRecord { inst: Inst::new(Opcode::Add, 1, 2, 3, 0), ..rec };
+        assert!(!rec2.ends_block());
+    }
+}

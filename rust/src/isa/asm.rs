@@ -1,0 +1,451 @@
+//! A small structured assembler — the workload suite (`workloads/`) writes
+//! its 24 SPEC-analog benchmarks against this builder API.
+//!
+//! Features: forward/backward labels, every PISA opcode as a method, and
+//! `load_imm64` pseudo-expansion for wide constants. `finish()` resolves
+//! labels into instruction-count offsets and encodes the program.
+
+use super::encode::encode;
+use super::inst::{Inst, Opcode};
+use super::INST_BYTES;
+
+/// A label handle; bind with [`Assembler::bind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// An assembled program image.
+#[derive(Clone, Debug)]
+pub struct Program {
+    /// Entry point (address of the first instruction).
+    pub entry: u64,
+    /// Decoded instructions in order.
+    pub insts: Vec<Inst>,
+    /// Encoded 32-bit words (same order).
+    pub words: Vec<u32>,
+    /// Initial data segments: (address, bytes).
+    pub data: Vec<(u64, Vec<u8>)>,
+}
+
+impl Program {
+    pub fn code_bytes(&self) -> Vec<u8> {
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    pub fn end_addr(&self) -> u64 {
+        self.entry + self.insts.len() as u64 * INST_BYTES
+    }
+}
+
+enum Pending {
+    Done(Inst),
+    /// Branch whose imm is an instruction-offset to a label.
+    Branch(Opcode, Label),
+}
+
+/// The builder.
+pub struct Assembler {
+    entry: u64,
+    items: Vec<Pending>,
+    labels: Vec<Option<usize>>, // instruction index
+    data: Vec<(u64, Vec<u8>)>,
+}
+
+impl Assembler {
+    pub fn new(entry: u64) -> Self {
+        Assembler { entry, items: Vec::new(), labels: Vec::new(), data: Vec::new() }
+    }
+
+    /// Create an unbound label.
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `l` to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.items.len());
+    }
+
+    /// Convenience: create and immediately bind.
+    pub fn here(&mut self) -> Label {
+        let l = self.label();
+        self.bind(l);
+        l
+    }
+
+    /// Current instruction index.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Attach an initial data segment.
+    pub fn data(&mut self, addr: u64, bytes: Vec<u8>) {
+        self.data.push((addr, bytes));
+    }
+
+    /// Attach a data segment of little-endian u64 words.
+    pub fn data_u64(&mut self, addr: u64, vals: &[u64]) {
+        self.data
+            .push((addr, vals.iter().flat_map(|v| v.to_le_bytes()).collect()));
+    }
+
+    /// Attach a data segment of f64 values.
+    pub fn data_f64(&mut self, addr: u64, vals: &[f64]) {
+        self.data.push((
+            addr,
+            vals.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect(),
+        ));
+    }
+
+    fn push(&mut self, i: Inst) {
+        self.items.push(Pending::Done(i));
+    }
+
+    // ---- integer reg-reg ---------------------------------------------
+    pub fn add(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Add, rd, ra, rb, 0));
+    }
+    pub fn sub(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Sub, rd, ra, rb, 0));
+    }
+    pub fn mullw(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Mullw, rd, ra, rb, 0));
+    }
+    pub fn divd(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Divd, rd, ra, rb, 0));
+    }
+    pub fn neg(&mut self, rd: u8, ra: u8) {
+        self.push(Inst::new(Opcode::Neg, rd, ra, 0, 0));
+    }
+    pub fn and(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::And, rd, ra, rb, 0));
+    }
+    pub fn or(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Or, rd, ra, rb, 0));
+    }
+    pub fn xor(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Xor, rd, ra, rb, 0));
+    }
+    pub fn sld(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Sld, rd, ra, rb, 0));
+    }
+    pub fn srd(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Srd, rd, ra, rb, 0));
+    }
+    pub fn srad(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Srad, rd, ra, rb, 0));
+    }
+
+    // ---- integer immediate ---------------------------------------------
+    pub fn addi(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Addi, rd, ra, 0, imm));
+    }
+    pub fn andi(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Andi, rd, ra, 0, imm));
+    }
+    pub fn ori(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Ori, rd, ra, 0, imm));
+    }
+    pub fn xori(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Xori, rd, ra, 0, imm));
+    }
+    pub fn sldi(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Sldi, rd, ra, 0, imm));
+    }
+    pub fn srdi(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Srdi, rd, ra, 0, imm));
+    }
+    pub fn sradi(&mut self, rd: u8, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Sradi, rd, ra, 0, imm));
+    }
+    pub fn li(&mut self, rd: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Li, rd, 0, 0, imm));
+    }
+    pub fn lis(&mut self, rd: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Lis, rd, 0, 0, imm));
+    }
+
+    /// Load an arbitrary 64-bit constant (pseudo; expands to up to 9 insts:
+    /// `li` of the top chunk followed by `sldi`+`ori` pairs of 13-bit
+    /// chunks, since `ori`'s immediate is 14-bit signed).
+    pub fn load_imm64(&mut self, rd: u8, val: u64) {
+        // li (19-bit signed) covers small values directly
+        if (val as i64) >= -(1 << 18) && (val as i64) < (1 << 18) {
+            self.li(rd, val as i64 as i32);
+            return;
+        }
+        // choose the fewest 13-bit chunks that cover the value
+        let bits = 64 - val.leading_zeros() as usize;
+        let chunks = bits.div_ceil(13);
+        let top = (chunks - 1) * 13;
+        self.li(rd, (val >> top) as i32); // < 2^13, fits imm19
+        for c in (0..chunks - 1).rev() {
+            self.sldi(rd, rd, 13);
+            let piece = (val >> (c * 13)) & 0x1FFF;
+            if piece != 0 {
+                self.ori(rd, rd, piece as i32);
+            }
+        }
+    }
+
+    // ---- compares --------------------------------------------------------
+    pub fn cmp(&mut self, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Cmp, 0, ra, rb, 0));
+    }
+    pub fn cmpl(&mut self, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Cmpl, 0, ra, rb, 0));
+    }
+    pub fn cmpi(&mut self, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Cmpi, 0, ra, 0, imm));
+    }
+    pub fn cmpli(&mut self, ra: u8, imm: i32) {
+        self.push(Inst::new(Opcode::Cmpli, 0, ra, 0, imm));
+    }
+
+    // ---- memory ------------------------------------------------------
+    pub fn lbz(&mut self, rd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Lbz, rd, ra, 0, disp));
+    }
+    pub fn lhz(&mut self, rd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Lhz, rd, ra, 0, disp));
+    }
+    pub fn lwz(&mut self, rd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Lwz, rd, ra, 0, disp));
+    }
+    pub fn ld(&mut self, rd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Ld, rd, ra, 0, disp));
+    }
+    pub fn lwzu(&mut self, rd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Lwzu, rd, ra, 0, disp));
+    }
+    pub fn ldx(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Ldx, rd, ra, rb, 0));
+    }
+    pub fn lfd(&mut self, fd: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Lfd, fd, ra, 0, disp));
+    }
+    pub fn lfdx(&mut self, fd: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Lfdx, fd, ra, rb, 0));
+    }
+    pub fn stb(&mut self, rs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Stb, rs, ra, 0, disp));
+    }
+    pub fn sth(&mut self, rs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Sth, rs, ra, 0, disp));
+    }
+    pub fn stw(&mut self, rs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Stw, rs, ra, 0, disp));
+    }
+    pub fn std(&mut self, rs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Std, rs, ra, 0, disp));
+    }
+    pub fn stwu(&mut self, rs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Stwu, rs, ra, 0, disp));
+    }
+    pub fn stdx(&mut self, rs: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Stdx, rs, ra, rb, 0));
+    }
+    pub fn stfd(&mut self, fs: u8, disp: i32, ra: u8) {
+        self.push(Inst::new(Opcode::Stfd, fs, ra, 0, disp));
+    }
+    pub fn stfdx(&mut self, fs: u8, ra: u8, rb: u8) {
+        self.push(Inst::new(Opcode::Stfdx, fs, ra, rb, 0));
+    }
+
+    // ---- floating point ------------------------------------------------
+    pub fn fadd(&mut self, fd: u8, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fadd, fd, fa, fb, 0));
+    }
+    pub fn fsub(&mut self, fd: u8, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fsub, fd, fa, fb, 0));
+    }
+    pub fn fmul(&mut self, fd: u8, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fmul, fd, fa, fb, 0));
+    }
+    pub fn fdiv(&mut self, fd: u8, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fdiv, fd, fa, fb, 0));
+    }
+    /// fmadd fd, fa, fb: fd += fa * fb (accumulator form).
+    pub fn fmadd(&mut self, fd: u8, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fmadd, fd, fa, fb, 0));
+    }
+    pub fn fneg(&mut self, fd: u8, fa: u8) {
+        self.push(Inst::new(Opcode::Fneg, fd, fa, 0, 0));
+    }
+    pub fn fmr(&mut self, fd: u8, fa: u8) {
+        self.push(Inst::new(Opcode::Fmr, fd, fa, 0, 0));
+    }
+    pub fn fcmp(&mut self, fa: u8, fb: u8) {
+        self.push(Inst::new(Opcode::Fcmp, 0, fa, fb, 0));
+    }
+    pub fn fcfid(&mut self, fd: u8, ra: u8) {
+        self.push(Inst::new(Opcode::Fcfid, fd, ra, 0, 0));
+    }
+    pub fn fctid(&mut self, fd: u8, fa: u8) {
+        self.push(Inst::new(Opcode::Fctid, fd, fa, 0, 0));
+    }
+
+    // ---- branches --------------------------------------------------------
+    fn branch(&mut self, op: Opcode, l: Label) {
+        self.items.push(Pending::Branch(op, l));
+    }
+    pub fn b(&mut self, l: Label) {
+        self.branch(Opcode::B, l);
+    }
+    pub fn bl(&mut self, l: Label) {
+        self.branch(Opcode::Bl, l);
+    }
+    pub fn blr(&mut self) {
+        self.push(Inst::new(Opcode::Blr, 0, 0, 0, 0));
+    }
+    pub fn bctr(&mut self) {
+        self.push(Inst::new(Opcode::Bctr, 0, 0, 0, 0));
+    }
+    pub fn beq(&mut self, l: Label) {
+        self.branch(Opcode::Beq, l);
+    }
+    pub fn bne(&mut self, l: Label) {
+        self.branch(Opcode::Bne, l);
+    }
+    pub fn blt(&mut self, l: Label) {
+        self.branch(Opcode::Blt, l);
+    }
+    pub fn bge(&mut self, l: Label) {
+        self.branch(Opcode::Bge, l);
+    }
+    pub fn bgt(&mut self, l: Label) {
+        self.branch(Opcode::Bgt, l);
+    }
+    pub fn ble(&mut self, l: Label) {
+        self.branch(Opcode::Ble, l);
+    }
+    pub fn bdnz(&mut self, l: Label) {
+        self.branch(Opcode::Bdnz, l);
+    }
+
+    // ---- SPR moves -------------------------------------------------------
+    pub fn mtlr(&mut self, ra: u8) {
+        self.push(Inst::new(Opcode::Mtlr, 0, ra, 0, 0));
+    }
+    pub fn mflr(&mut self, rd: u8) {
+        self.push(Inst::new(Opcode::Mflr, rd, 0, 0, 0));
+    }
+    pub fn mtctr(&mut self, ra: u8) {
+        self.push(Inst::new(Opcode::Mtctr, 0, ra, 0, 0));
+    }
+    pub fn mfctr(&mut self, rd: u8) {
+        self.push(Inst::new(Opcode::Mfctr, rd, 0, 0, 0));
+    }
+
+    // ---- misc --------------------------------------------------------
+    pub fn nop(&mut self) {
+        self.push(Inst::new(Opcode::Nop, 0, 0, 0, 0));
+    }
+    pub fn halt(&mut self) {
+        self.push(Inst::new(Opcode::Halt, 0, 0, 0, 0));
+    }
+
+    /// Resolve labels and encode.
+    ///
+    /// Panics on unbound labels — a workload construction bug, not a
+    /// runtime condition.
+    pub fn finish(self) -> Program {
+        let insts: Vec<Inst> = self
+            .items
+            .iter()
+            .enumerate()
+            .map(|(idx, it)| match it {
+                Pending::Done(i) => *i,
+                Pending::Branch(op, l) => {
+                    let target = self.labels[l.0]
+                        .unwrap_or_else(|| panic!("unbound label {l:?}"));
+                    let off = target as i64 - idx as i64;
+                    Inst::new(*op, 0, 0, 0, off as i32)
+                }
+            })
+            .collect();
+        let words = insts
+            .iter()
+            .map(|i| encode(i).expect("assembled instruction must encode"))
+            .collect();
+        Program { entry: self.entry, insts, words, data: self.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+
+    #[test]
+    fn label_resolution_forward_and_backward() {
+        let mut a = Assembler::new(0x1000);
+        let top = a.here(); // idx 0
+        a.addi(1, 1, 1); // idx 0 is this addi (here() binds before push)
+        let out = a.label();
+        a.beq(out); // idx 1 -> forward
+        a.b(top); // idx 2 -> backward to 0
+        a.bind(out);
+        a.halt(); // idx 3
+        let p = a.finish();
+        assert_eq!(p.insts[1].imm, 2); // 3 - 1
+        assert_eq!(p.insts[2].imm, -2); // 0 - 2
+    }
+
+    #[test]
+    fn program_words_decode_back() {
+        let mut a = Assembler::new(0x1000);
+        a.li(3, 100);
+        a.addi(3, 3, -1);
+        a.cmpi(3, 0);
+        let top = a.label();
+        a.bind(top);
+        a.halt();
+        let p = a.finish();
+        for (inst, word) in p.insts.iter().zip(&p.words) {
+            assert_eq!(&decode(*word).unwrap(), inst);
+        }
+        assert_eq!(p.end_addr(), 0x1000 + 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut a = Assembler::new(0);
+        let l = a.label();
+        a.b(l);
+        let _ = a.finish();
+    }
+
+    #[test]
+    fn load_imm64_sizes() {
+        for val in [0u64, 5, 0x3_FFFF, 0x4_0000, 0xDEAD_BEEF,
+                    0x1234_5678_9ABC_DEF0, u64::MAX] {
+            let mut a = Assembler::new(0);
+            a.load_imm64(9, val);
+            a.halt();
+            let p = a.finish();
+            assert!(p.insts.len() <= 10);
+            // verify by executing on the functional simulator
+            let mut cpu = crate::functional::AtomicCpu::load(&p);
+            cpu.run_trace(32);
+            assert_eq!(cpu.regs.gpr[9], val, "load_imm64({val:#x})");
+        }
+    }
+
+    #[test]
+    fn data_segments_recorded() {
+        let mut a = Assembler::new(0);
+        a.data_u64(0x10000, &[1, 2, 3]);
+        a.data_f64(0x20000, &[1.5]);
+        a.halt();
+        let p = a.finish();
+        assert_eq!(p.data[0].1.len(), 24);
+        assert_eq!(p.data[1].1, 1.5f64.to_bits().to_le_bytes().to_vec());
+    }
+}

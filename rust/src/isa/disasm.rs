@@ -1,0 +1,79 @@
+//! Textual disassembly, Power-flavoured. This is also documentation-grade
+//! ground truth for the Fig.-5 standardization examples in the tests.
+
+use super::inst::{Inst, Opcode};
+
+/// Render one instruction the way the paper's Fig. 5 shows raw assembly.
+pub fn disasm(i: &Inst) -> String {
+    use Opcode::*;
+    let m = i.op.mnemonic();
+    match i.op {
+        Add | Sub | Mullw | Divd | And | Or | Xor | Sld | Srd | Srad => {
+            format!("{m} r{}, r{}, r{}", i.rd, i.ra, i.rb)
+        }
+        Neg => format!("{m} r{}, r{}", i.rd, i.ra),
+        Addi | Andi | Ori | Xori | Sldi | Srdi | Sradi => {
+            format!("{m} r{}, r{}, {}", i.rd, i.ra, i.imm)
+        }
+        Li | Lis => format!("{m} r{}, {}", i.rd, i.imm),
+        Cmp | Cmpl => format!("{m} r{}, r{}", i.ra, i.rb),
+        Cmpi | Cmpli => format!("{m} r{}, {}", i.ra, i.imm),
+        Lbz | Lhz | Lwz | Ld | Lwzu => {
+            format!("{m} r{}, {}(r{})", i.rd, i.imm, i.ra)
+        }
+        Lfd => format!("{m} f{}, {}(r{})", i.rd, i.imm, i.ra),
+        Ldx => format!("{m} r{}, r{}, r{}", i.rd, i.ra, i.rb),
+        Lfdx => format!("{m} f{}, r{}, r{}", i.rd, i.ra, i.rb),
+        Stb | Sth | Stw | Std | Stwu => {
+            format!("{m} r{}, {}(r{})", i.rd, i.imm, i.ra)
+        }
+        Stfd => format!("{m} f{}, {}(r{})", i.rd, i.imm, i.ra),
+        Stdx => format!("{m} r{}, r{}, r{}", i.rd, i.ra, i.rb),
+        Stfdx => format!("{m} f{}, r{}, r{}", i.rd, i.ra, i.rb),
+        Fadd | Fsub | Fmul | Fdiv => {
+            format!("{m} f{}, f{}, f{}", i.rd, i.ra, i.rb)
+        }
+        Fmadd => format!("{m} f{}, f{}, f{}", i.rd, i.ra, i.rb),
+        Fneg | Fmr | Fctid => format!("{m} f{}, f{}", i.rd, i.ra),
+        Fcfid => format!("{m} f{}, r{}", i.rd, i.ra),
+        Fcmp => format!("{m} f{}, f{}", i.ra, i.rb),
+        B | Bl => format!("{m} {}", i.imm),
+        Blr | Bctr => m.to_string(),
+        Beq | Bne | Blt | Bge | Bgt | Ble | Bdnz => format!("{m} {}", i.imm),
+        Mtlr | Mtctr => format!("{m} r{}", i.ra),
+        Mflr | Mfctr => format!("{m} r{}", i.rd),
+        Nop | Halt => m.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::Inst;
+
+    #[test]
+    fn formats_match_power_style() {
+        assert_eq!(
+            disasm(&Inst::new(Opcode::Addi, 3, 4, 0, 8)),
+            "addi r3, r4, 8"
+        );
+        assert_eq!(
+            disasm(&Inst::new(Opcode::Lwz, 5, 9, 0, -16)),
+            "lwz r5, -16(r9)"
+        );
+        assert_eq!(disasm(&Inst::new(Opcode::Cmpi, 0, 7, 0, 3)), "cmpi r7, 3");
+        assert_eq!(disasm(&Inst::new(Opcode::Blr, 0, 0, 0, 0)), "blr");
+        assert_eq!(
+            disasm(&Inst::new(Opcode::Fmadd, 1, 2, 3, 0)),
+            "fmadd f1, f2, f3"
+        );
+    }
+
+    #[test]
+    fn every_opcode_disassembles() {
+        for op in crate::isa::inst::ALL_OPCODES {
+            let text = disasm(&Inst::new(op, 1, 2, 3, 4));
+            assert!(text.starts_with(op.mnemonic()));
+        }
+    }
+}

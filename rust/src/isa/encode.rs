@@ -1,0 +1,224 @@
+//! PISA binary encoding — 32-bit fixed width.
+//!
+//! Layout (bit 31 = MSB):
+//!
+//! ```text
+//! [31:24] opcode (u8, index into ALL_OPCODES)
+//! [23:19] rd
+//! [18:14] ra
+//! [13:0]  imm14 (signed)  -- immediate / displacement forms
+//! [13:9]  rb              -- register-register forms
+//! ```
+//!
+//! Branches `b`/`bl` use a 24-bit signed offset in [23:0] (in instructions);
+//! conditional branches use imm14. `li`/`lis` use a 19-bit signed immediate
+//! in [18:0] so that 32-bit constants compose as `lis; ori`.
+
+use super::inst::{Inst, Opcode, ALL_OPCODES, NUM_OPCODES};
+
+/// Signed immediate range of imm14 forms.
+pub const IMM14_MIN: i32 = -(1 << 13);
+pub const IMM14_MAX: i32 = (1 << 13) - 1;
+/// Signed immediate range of li/lis (imm19).
+pub const IMM19_MIN: i32 = -(1 << 18);
+pub const IMM19_MAX: i32 = (1 << 18) - 1;
+/// Signed branch offset range of b/bl (off24, in instructions).
+pub const OFF24_MIN: i32 = -(1 << 23);
+pub const OFF24_MAX: i32 = (1 << 23) - 1;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum EncodeError {
+    ImmOutOfRange { op: Opcode, imm: i32 },
+    RegOutOfRange { op: Opcode, reg: u8 },
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::ImmOutOfRange { op, imm } => {
+                write!(f, "immediate {imm} out of range for {op:?}")
+            }
+            EncodeError::RegOutOfRange { op, reg } => {
+                write!(f, "register {reg} out of range for {op:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+fn uses_imm14(op: Opcode) -> bool {
+    use Opcode::*;
+    matches!(
+        op,
+        Addi | Andi | Ori | Xori | Sldi | Srdi | Sradi | Cmpi | Cmpli
+            | Lbz | Lhz | Lwz | Ld | Lwzu | Lfd | Stb | Sth | Stw | Std
+            | Stwu | Stfd | Beq | Bne | Blt | Bge | Bgt | Ble | Bdnz
+    )
+}
+
+fn uses_imm19(op: Opcode) -> bool {
+    matches!(op, Opcode::Li | Opcode::Lis)
+}
+
+fn uses_off24(op: Opcode) -> bool {
+    matches!(op, Opcode::B | Opcode::Bl)
+}
+
+/// Encode one instruction to its 32-bit word.
+pub fn encode(i: &Inst) -> Result<u32, EncodeError> {
+    if i.rd > 31 {
+        return Err(EncodeError::RegOutOfRange { op: i.op, reg: i.rd });
+    }
+    if i.ra > 31 {
+        return Err(EncodeError::RegOutOfRange { op: i.op, reg: i.ra });
+    }
+    if i.rb > 31 {
+        return Err(EncodeError::RegOutOfRange { op: i.op, reg: i.rb });
+    }
+    let opbits = (i.op as u32) << 24;
+    if uses_off24(i.op) {
+        if i.imm < OFF24_MIN || i.imm > OFF24_MAX {
+            return Err(EncodeError::ImmOutOfRange { op: i.op, imm: i.imm });
+        }
+        return Ok(opbits | (i.imm as u32 & 0x00FF_FFFF));
+    }
+    if uses_imm19(i.op) {
+        if i.imm < IMM19_MIN || i.imm > IMM19_MAX {
+            return Err(EncodeError::ImmOutOfRange { op: i.op, imm: i.imm });
+        }
+        return Ok(opbits
+            | ((i.rd as u32) << 19)
+            | (i.imm as u32 & 0x0007_FFFF));
+    }
+    if uses_imm14(i.op) {
+        if i.imm < IMM14_MIN || i.imm > IMM14_MAX {
+            return Err(EncodeError::ImmOutOfRange { op: i.op, imm: i.imm });
+        }
+        return Ok(opbits
+            | ((i.rd as u32) << 19)
+            | ((i.ra as u32) << 14)
+            | (i.imm as u32 & 0x3FFF));
+    }
+    // register-register form (imm must be 0)
+    Ok(opbits
+        | ((i.rd as u32) << 19)
+        | ((i.ra as u32) << 14)
+        | ((i.rb as u32) << 9))
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct DecodeError(pub u32);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid instruction word {:#010x}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[inline]
+fn sext(v: u32, bits: u32) -> i32 {
+    let sh = 32 - bits;
+    ((v << sh) as i32) >> sh
+}
+
+/// Decode one 32-bit word.
+pub fn decode(word: u32) -> Result<Inst, DecodeError> {
+    let idx = (word >> 24) as usize;
+    if idx >= NUM_OPCODES {
+        return Err(DecodeError(word));
+    }
+    let op = ALL_OPCODES[idx];
+    if uses_off24(op) {
+        return Ok(Inst::new(op, 0, 0, 0, sext(word & 0x00FF_FFFF, 24)));
+    }
+    let rd = ((word >> 19) & 0x1F) as u8;
+    if uses_imm19(op) {
+        return Ok(Inst::new(op, rd, 0, 0, sext(word & 0x0007_FFFF, 19)));
+    }
+    let ra = ((word >> 14) & 0x1F) as u8;
+    if uses_imm14(op) {
+        return Ok(Inst::new(op, rd, ra, 0, sext(word & 0x3FFF, 14)));
+    }
+    let rb = ((word >> 9) & 0x1F) as u8;
+    Ok(Inst::new(op, rd, ra, rb, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_inst(r: &mut Rng) -> Inst {
+        let op = ALL_OPCODES[r.range(0, NUM_OPCODES)];
+        let rd = r.range(0, 32) as u8;
+        let ra = r.range(0, 32) as u8;
+        let rb = r.range(0, 32) as u8;
+        let imm = if uses_off24(op) {
+            r.range(0, (OFF24_MAX - OFF24_MIN) as usize) as i32 + OFF24_MIN
+        } else if uses_imm19(op) {
+            r.range(0, (IMM19_MAX - IMM19_MIN) as usize) as i32 + IMM19_MIN
+        } else if uses_imm14(op) {
+            r.range(0, (IMM14_MAX - IMM14_MIN) as usize) as i32 + IMM14_MIN
+        } else {
+            0
+        };
+        // off24/imm19 forms don't carry all regs; normalize unused fields
+        if uses_off24(op) {
+            Inst::new(op, 0, 0, 0, imm)
+        } else if uses_imm19(op) {
+            Inst::new(op, rd, 0, 0, imm)
+        } else if uses_imm14(op) {
+            Inst::new(op, rd, ra, 0, imm)
+        } else {
+            Inst::new(op, rd, ra, rb, 0)
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        prop::check_res("encode/decode roundtrip", 512, random_inst, |i| {
+            let w = encode(i).map_err(|e| e.to_string())?;
+            let back = decode(w).map_err(|e| e.to_string())?;
+            if back == *i {
+                Ok(())
+            } else {
+                Err(format!("{back:?} != {i:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn imm_range_checked() {
+        let i = Inst::new(Opcode::Addi, 1, 2, 0, 40_000);
+        assert!(matches!(encode(&i), Err(EncodeError::ImmOutOfRange { .. })));
+        let i = Inst::new(Opcode::Addi, 1, 2, 0, IMM14_MAX);
+        assert!(encode(&i).is_ok());
+    }
+
+    #[test]
+    fn reg_range_checked() {
+        let i = Inst::new(Opcode::Add, 32, 0, 0, 0);
+        assert!(matches!(encode(&i), Err(EncodeError::RegOutOfRange { .. })));
+    }
+
+    #[test]
+    fn negative_offsets_roundtrip() {
+        for imm in [-1, -100, OFF24_MIN] {
+            let i = Inst::new(Opcode::B, 0, 0, 0, imm);
+            assert_eq!(decode(encode(&i).unwrap()).unwrap().imm, imm);
+        }
+        for imm in [-1, -8000, IMM14_MIN] {
+            let i = Inst::new(Opcode::Bdnz, 0, 0, 0, imm);
+            assert_eq!(decode(encode(&i).unwrap()).unwrap().imm, imm);
+        }
+    }
+
+    #[test]
+    fn invalid_opcode_rejected() {
+        assert!(decode(0xFF00_0000).is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! Decoded PISA instructions + the static metadata every downstream layer
+//! consumes: functional semantics class, O3 functional-unit class, and the
+//! explicit/implicit register reads & writes that drive both dependence
+//! tracking (O3) and the Fig.-5 standardization (tokenizer).
+
+/// Every PISA opcode. Mnemonics follow Power where an analogue exists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Opcode {
+    // ---- integer register-register ----
+    Add,
+    Sub,
+    Mullw,
+    Divd,
+    Neg,
+    And,
+    Or,
+    Xor,
+    Sld,
+    Srd,
+    Srad,
+    // ---- integer immediate ----
+    Addi,
+    Andi,
+    Ori,
+    Xori,
+    Sldi,
+    Srdi,
+    Sradi,
+    Li,
+    Lis,
+    // ---- compares (write CR field 0; paper Fig. 5c) ----
+    Cmp,
+    Cmpl,
+    Cmpi,
+    Cmpli,
+    // ---- loads ----
+    Lbz,
+    Lhz,
+    Lwz,
+    Ld,
+    Lwzu,
+    Ldx,
+    Lfd,
+    Lfdx,
+    // ---- stores ----
+    Stb,
+    Sth,
+    Stw,
+    Std,
+    Stwu,
+    Stdx,
+    Stfd,
+    Stfdx,
+    // ---- floating point ----
+    Fadd,
+    Fsub,
+    Fmul,
+    Fdiv,
+    Fmadd,
+    Fneg,
+    Fmr,
+    Fcmp,
+    Fcfid,
+    Fctid,
+    // ---- branches ----
+    B,
+    Bl,
+    Blr,
+    Bctr,
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bgt,
+    Ble,
+    Bdnz,
+    // ---- SPR moves ----
+    Mtlr,
+    Mflr,
+    Mtctr,
+    Mfctr,
+    // ---- misc ----
+    Nop,
+    Halt,
+}
+
+pub const NUM_OPCODES: usize = Opcode::Halt as usize + 1;
+
+/// All opcodes in declaration order (vocab construction, decode table).
+pub const ALL_OPCODES: [Opcode; NUM_OPCODES] = [
+    Opcode::Add, Opcode::Sub, Opcode::Mullw, Opcode::Divd, Opcode::Neg,
+    Opcode::And, Opcode::Or, Opcode::Xor, Opcode::Sld, Opcode::Srd,
+    Opcode::Srad, Opcode::Addi, Opcode::Andi, Opcode::Ori, Opcode::Xori,
+    Opcode::Sldi, Opcode::Srdi, Opcode::Sradi, Opcode::Li, Opcode::Lis,
+    Opcode::Cmp, Opcode::Cmpl, Opcode::Cmpi, Opcode::Cmpli, Opcode::Lbz,
+    Opcode::Lhz, Opcode::Lwz, Opcode::Ld, Opcode::Lwzu, Opcode::Ldx,
+    Opcode::Lfd, Opcode::Lfdx, Opcode::Stb, Opcode::Sth, Opcode::Stw,
+    Opcode::Std, Opcode::Stwu, Opcode::Stdx, Opcode::Stfd, Opcode::Stfdx,
+    Opcode::Fadd, Opcode::Fsub, Opcode::Fmul, Opcode::Fdiv, Opcode::Fmadd,
+    Opcode::Fneg, Opcode::Fmr, Opcode::Fcmp, Opcode::Fcfid, Opcode::Fctid,
+    Opcode::B, Opcode::Bl, Opcode::Blr, Opcode::Bctr, Opcode::Beq,
+    Opcode::Bne, Opcode::Blt, Opcode::Bge, Opcode::Bgt, Opcode::Ble,
+    Opcode::Bdnz, Opcode::Mtlr, Opcode::Mflr, Opcode::Mtctr, Opcode::Mfctr,
+    Opcode::Nop, Opcode::Halt,
+];
+
+impl Opcode {
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Add => "add", Sub => "sub", Mullw => "mullw", Divd => "divd",
+            Neg => "neg", And => "and", Or => "or", Xor => "xor",
+            Sld => "sld", Srd => "srd", Srad => "srad", Addi => "addi",
+            Andi => "andi", Ori => "ori", Xori => "xori", Sldi => "sldi",
+            Srdi => "srdi", Sradi => "sradi", Li => "li", Lis => "lis",
+            Cmp => "cmp", Cmpl => "cmpl", Cmpi => "cmpi", Cmpli => "cmpli",
+            Lbz => "lbz", Lhz => "lhz", Lwz => "lwz", Ld => "ld",
+            Lwzu => "lwzu", Ldx => "ldx", Lfd => "lfd", Lfdx => "lfdx",
+            Stb => "stb", Sth => "sth", Stw => "stw", Std => "std",
+            Stwu => "stwu", Stdx => "stdx", Stfd => "stfd", Stfdx => "stfdx",
+            Fadd => "fadd", Fsub => "fsub", Fmul => "fmul", Fdiv => "fdiv",
+            Fmadd => "fmadd", Fneg => "fneg", Fmr => "fmr", Fcmp => "fcmp",
+            Fcfid => "fcfid", Fctid => "fctid", B => "b", Bl => "bl",
+            Blr => "blr", Bctr => "bctr", Beq => "beq", Bne => "bne",
+            Blt => "blt", Bge => "bge", Bgt => "bgt", Ble => "ble",
+            Bdnz => "bdnz", Mtlr => "mtlr", Mflr => "mflr", Mtctr => "mtctr",
+            Mfctr => "mfctr", Nop => "nop", Halt => "halt",
+        }
+    }
+}
+
+/// Memory access width in bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemWidth {
+    B1 = 1,
+    B2 = 2,
+    B4 = 4,
+    B8 = 8,
+}
+
+/// Functional-unit class for the O3 model (latency/occupancy per `o3::config`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FuClass {
+    IntAlu,
+    IntMul,
+    IntDiv,
+    Load,
+    Store,
+    FpAdd,
+    FpMul,
+    FpDiv,
+    FpFma,
+    Branch,
+    Nop,
+}
+
+/// An architectural register reference — explicit or implicit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RegRef {
+    Gpr(u8),
+    Fpr(u8),
+    Cr,
+    Lr,
+    Ctr,
+    Xer,
+}
+
+/// A decoded instruction. `imm` meaning depends on the opcode: immediate
+/// operand, memory displacement, or branch offset in *instructions*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Inst {
+    pub op: Opcode,
+    pub rd: u8,
+    pub ra: u8,
+    pub rb: u8,
+    pub imm: i32,
+}
+
+impl Inst {
+    pub fn new(op: Opcode, rd: u8, ra: u8, rb: u8, imm: i32) -> Self {
+        Inst { op, rd, ra, rb, imm }
+    }
+
+    /// Functional-unit class (drives O3 latency and issue-port selection).
+    pub fn fu_class(&self) -> FuClass {
+        use Opcode::*;
+        match self.op {
+            Mullw => FuClass::IntMul,
+            Divd => FuClass::IntDiv,
+            Lbz | Lhz | Lwz | Ld | Lwzu | Ldx | Lfd | Lfdx => FuClass::Load,
+            Stb | Sth | Stw | Std | Stwu | Stdx | Stfd | Stfdx => FuClass::Store,
+            Fadd | Fsub | Fneg | Fmr | Fcmp | Fcfid | Fctid => FuClass::FpAdd,
+            Fmul => FuClass::FpMul,
+            Fdiv => FuClass::FpDiv,
+            Fmadd => FuClass::FpFma,
+            B | Bl | Blr | Bctr | Beq | Bne | Blt | Bge | Bgt | Ble | Bdnz => {
+                FuClass::Branch
+            }
+            Nop | Halt => FuClass::Nop,
+            _ => FuClass::IntAlu,
+        }
+    }
+
+    pub fn is_branch(&self) -> bool {
+        self.fu_class() == FuClass::Branch
+    }
+
+    /// Conditional branches (prediction-relevant; `bdnz` counts: its
+    /// direction depends on CTR).
+    pub fn is_cond_branch(&self) -> bool {
+        use Opcode::*;
+        matches!(self.op, Beq | Bne | Blt | Bge | Bgt | Ble | Bdnz)
+    }
+
+    /// Indirect branches (target from LR/CTR).
+    pub fn is_indirect_branch(&self) -> bool {
+        matches!(self.op, Opcode::Blr | Opcode::Bctr)
+    }
+
+    pub fn is_load(&self) -> bool {
+        self.fu_class() == FuClass::Load
+    }
+
+    pub fn is_store(&self) -> bool {
+        self.fu_class() == FuClass::Store
+    }
+
+    pub fn is_mem(&self) -> bool {
+        self.is_load() || self.is_store()
+    }
+
+    pub fn mem_width(&self) -> Option<MemWidth> {
+        use Opcode::*;
+        Some(match self.op {
+            Lbz | Stb => MemWidth::B1,
+            Lhz | Sth => MemWidth::B2,
+            Lwz | Lwzu | Stw | Stwu => MemWidth::B4,
+            Ld | Ldx | Std | Stdx | Lfd | Lfdx | Stfd | Stfdx => MemWidth::B8,
+            _ => return None,
+        })
+    }
+
+    /// Update-form memory ops also write back the effective address to `ra`.
+    pub fn is_update_form(&self) -> bool {
+        matches!(self.op, Opcode::Lwzu | Opcode::Stwu)
+    }
+
+    /// Indexed-form memory ops compute EA = ra + rb (no displacement).
+    pub fn is_indexed_mem(&self) -> bool {
+        matches!(self.op, Opcode::Ldx | Opcode::Stdx | Opcode::Lfdx | Opcode::Stfdx)
+    }
+
+    /// Destination registers, implicit ones included (Fig. 5c: `cmpi`
+    /// writes CR even though no destination appears in the assembly).
+    pub fn dsts(&self) -> Vec<RegRef> {
+        use Opcode::*;
+        use RegRef::*;
+        let mut v = Vec::with_capacity(2);
+        match self.op {
+            Add | Sub | Mullw | Divd | Neg | And | Or | Xor | Sld | Srd
+            | Srad | Addi | Andi | Ori | Xori | Sldi | Srdi | Sradi | Li
+            | Lis => v.push(Gpr(self.rd)),
+            Cmp | Cmpl | Cmpi | Cmpli | Fcmp => v.push(Cr),
+            Lbz | Lhz | Lwz | Ld | Ldx => v.push(Gpr(self.rd)),
+            Lwzu => {
+                v.push(Gpr(self.rd));
+                v.push(Gpr(self.ra));
+            }
+            Stwu => v.push(Gpr(self.ra)),
+            Lfd | Lfdx => v.push(Fpr(self.rd)),
+            Stb | Sth | Stw | Std | Stdx | Stfd | Stfdx => {}
+            Fadd | Fsub | Fmul | Fdiv | Fmadd | Fneg | Fmr | Fcfid
+            | Fctid => v.push(Fpr(self.rd)),
+            B => {}
+            Bl => v.push(Lr),
+            Blr | Bctr | Beq | Bne | Blt | Bge | Bgt | Ble => {}
+            Bdnz => v.push(Ctr),
+            Mtlr => v.push(Lr),
+            Mflr => v.push(Gpr(self.rd)),
+            Mtctr => v.push(Ctr),
+            Mfctr => v.push(Gpr(self.rd)),
+            Nop | Halt => {}
+        }
+        v
+    }
+
+    /// Source registers, implicit ones included (`beq` reads CR, `blr`
+    /// reads LR, `bdnz` reads CTR).
+    pub fn srcs(&self) -> Vec<RegRef> {
+        use Opcode::*;
+        use RegRef::*;
+        let mut v = Vec::with_capacity(3);
+        match self.op {
+            Add | Sub | Mullw | Divd | And | Or | Xor | Sld | Srd | Srad => {
+                v.push(Gpr(self.ra));
+                v.push(Gpr(self.rb));
+            }
+            Neg => v.push(Gpr(self.ra)),
+            Addi | Andi | Ori | Xori | Sldi | Srdi | Sradi => {
+                v.push(Gpr(self.ra))
+            }
+            Li | Lis => {}
+            Cmp | Cmpl => {
+                v.push(Gpr(self.ra));
+                v.push(Gpr(self.rb));
+            }
+            Cmpi | Cmpli => v.push(Gpr(self.ra)),
+            Lbz | Lhz | Lwz | Ld | Lwzu | Lfd => v.push(Gpr(self.ra)),
+            Ldx | Lfdx => {
+                v.push(Gpr(self.ra));
+                v.push(Gpr(self.rb));
+            }
+            Stb | Sth | Stw | Std | Stwu => {
+                v.push(Gpr(self.rd));
+                v.push(Gpr(self.ra));
+            }
+            Stdx => {
+                v.push(Gpr(self.rd));
+                v.push(Gpr(self.ra));
+                v.push(Gpr(self.rb));
+            }
+            Stfd => {
+                v.push(Fpr(self.rd));
+                v.push(Gpr(self.ra));
+            }
+            Stfdx => {
+                v.push(Fpr(self.rd));
+                v.push(Gpr(self.ra));
+                v.push(Gpr(self.rb));
+            }
+            Fadd | Fsub | Fmul | Fdiv | Fcmp => {
+                v.push(Fpr(self.ra));
+                v.push(Fpr(self.rb));
+            }
+            Fmadd => {
+                v.push(Fpr(self.ra));
+                v.push(Fpr(self.rb));
+                v.push(Fpr(self.rd)); // accumulator convention: rd += ra*rb
+            }
+            Fneg | Fmr | Fctid => v.push(Fpr(self.ra)),
+            Fcfid => v.push(Gpr(self.ra)),
+            B | Bl => {}
+            Blr => v.push(Lr),
+            Bctr => v.push(Ctr),
+            Beq | Bne | Blt | Bge | Bgt | Ble => v.push(Cr),
+            Bdnz => v.push(Ctr),
+            Mtlr | Mtctr => v.push(Gpr(self.ra)),
+            Mflr => v.push(Lr),
+            Mfctr => v.push(Ctr),
+            Nop | Halt => {}
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_opcodes_table_is_consistent() {
+        assert_eq!(ALL_OPCODES.len(), NUM_OPCODES);
+        for (i, op) in ALL_OPCODES.iter().enumerate() {
+            assert_eq!(*op as usize, i, "{op:?} out of order");
+        }
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for op in ALL_OPCODES {
+            assert!(seen.insert(op.mnemonic()), "dup {}", op.mnemonic());
+        }
+    }
+
+    #[test]
+    fn cmpi_writes_cr_implicitly() {
+        // Fig. 5c: the destination is not in the assembly text but must be
+        // tracked (and tokenized) anyway.
+        let i = Inst::new(Opcode::Cmpi, 0, 5, 0, 3);
+        assert_eq!(i.dsts(), vec![RegRef::Cr]);
+        assert_eq!(i.srcs(), vec![RegRef::Gpr(5)]);
+    }
+
+    #[test]
+    fn bl_writes_lr_and_blr_reads_it() {
+        assert_eq!(Inst::new(Opcode::Bl, 0, 0, 0, 4).dsts(), vec![RegRef::Lr]);
+        assert_eq!(Inst::new(Opcode::Blr, 0, 0, 0, 0).srcs(), vec![RegRef::Lr]);
+    }
+
+    #[test]
+    fn bdnz_reads_and_writes_ctr() {
+        let i = Inst::new(Opcode::Bdnz, 0, 0, 0, -4);
+        assert_eq!(i.srcs(), vec![RegRef::Ctr]);
+        assert_eq!(i.dsts(), vec![RegRef::Ctr]);
+        assert!(i.is_cond_branch());
+    }
+
+    #[test]
+    fn update_form_writes_base() {
+        let i = Inst::new(Opcode::Lwzu, 3, 4, 0, 8);
+        assert!(i.dsts().contains(&RegRef::Gpr(4)));
+        assert!(i.dsts().contains(&RegRef::Gpr(3)));
+    }
+
+    #[test]
+    fn store_reads_value_and_base() {
+        let i = Inst::new(Opcode::Std, 7, 1, 0, 16);
+        assert_eq!(i.dsts(), vec![]);
+        assert!(i.srcs().contains(&RegRef::Gpr(7)));
+        assert!(i.srcs().contains(&RegRef::Gpr(1)));
+    }
+
+    #[test]
+    fn fu_classes_cover_mem_and_branch() {
+        assert_eq!(Inst::new(Opcode::Ld, 0, 0, 0, 0).fu_class(), FuClass::Load);
+        assert_eq!(Inst::new(Opcode::Stw, 0, 0, 0, 0).fu_class(), FuClass::Store);
+        assert!(Inst::new(Opcode::Beq, 0, 0, 0, 0).is_cond_branch());
+        assert!(Inst::new(Opcode::Blr, 0, 0, 0, 0).is_indirect_branch());
+        assert!(!Inst::new(Opcode::B, 0, 0, 0, 0).is_cond_branch());
+    }
+
+    #[test]
+    fn mem_width_matches_opcode() {
+        assert_eq!(Inst::new(Opcode::Lbz, 0, 0, 0, 0).mem_width(),
+                   Some(MemWidth::B1));
+        assert_eq!(Inst::new(Opcode::Std, 0, 0, 0, 0).mem_width(),
+                   Some(MemWidth::B8));
+        assert_eq!(Inst::new(Opcode::Add, 0, 0, 0, 0).mem_width(), None);
+    }
+
+    #[test]
+    fn fmadd_reads_accumulator() {
+        let i = Inst::new(Opcode::Fmadd, 2, 3, 4, 0);
+        assert!(i.srcs().contains(&RegRef::Fpr(2)));
+        assert_eq!(i.dsts(), vec![RegRef::Fpr(2)]);
+    }
+}

@@ -1,0 +1,30 @@
+//! **PISA** — a Power-inspired 32-bit fixed-width RISC ISA.
+//!
+//! The paper builds its gem5 model for the Power ISA; PISA reproduces every
+//! feature the CAPSim pipeline actually observes:
+//!
+//! * the Table-I register file — 32 GPRs, 32 FPRs (standing in for the
+//!   VSRs), CR, LR, CTR, XER, FPSCR, CIA/NIA;
+//! * implicit control-register effects (compares write CR, `bl` writes LR,
+//!   `bdnz` decrements CTR) that the Fig.-5 standardization must surface;
+//! * update-form memory accesses and indexed accesses;
+//! * a 32-bit fixed encoding so fetch groups and I-cache behaviour are
+//!   well-defined for the O3 model.
+//!
+//! Submodules: [`inst`] (decoded form + semantics metadata), [`encode`]
+//! (binary encode/decode), [`asm`] (program builder used by `workloads`),
+//! [`disasm`] (textual form, also the tokenizer's ground truth).
+
+pub mod asm;
+pub mod disasm;
+pub mod encode;
+pub mod inst;
+pub mod regs;
+
+pub use asm::Assembler;
+pub use encode::{decode, encode};
+pub use inst::{Inst, MemWidth, Opcode};
+pub use regs::{Cr, RegFile, CR_EQ, CR_GT, CR_LT, CR_SO};
+
+/// Instruction width in bytes (fixed, Power-style).
+pub const INST_BYTES: u64 = 4;

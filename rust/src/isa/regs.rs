@@ -1,0 +1,157 @@
+//! PISA architectural register file — the Table-I set.
+//!
+//! | Class  | Count | Width | Paper role                                  |
+//! |--------|-------|-------|---------------------------------------------|
+//! | GPR    | 32    | 64    | principal integer registers                 |
+//! | FPR    | 32    | 64    | floating point (paper: VSR used as FPR)     |
+//! | CR     | 1     | 32    | condition register (field 0 used: LT/GT/EQ/SO) |
+//! | LR     | 1     | 64    | link register (branch-and-link target)      |
+//! | CTR    | 1     | 64    | count register (`bdnz` loop idiom)          |
+//! | XER    | 1     | 64    | fixed-point exception bits                  |
+//! | FPSCR  | 1     | 32    | FP status/control                           |
+//! | CIA    | 1     | 64    | current instruction address                 |
+//! | NIA    | 1     | 64    | next instruction address                    |
+
+/// CR field-0 bit masks (within the 4-bit field).
+pub const CR_LT: u32 = 0b1000;
+pub const CR_GT: u32 = 0b0100;
+pub const CR_EQ: u32 = 0b0010;
+pub const CR_SO: u32 = 0b0001;
+
+/// Condition register: 8 four-bit fields, field 0 in the top nibble
+/// (Power numbering).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Cr(pub u32);
+
+impl Cr {
+    /// Read field `f` (0..8) as a 4-bit value.
+    #[inline]
+    pub fn field(&self, f: usize) -> u32 {
+        (self.0 >> (28 - 4 * f)) & 0xF
+    }
+
+    /// Write field `f`.
+    #[inline]
+    pub fn set_field(&mut self, f: usize, v: u32) {
+        let sh = 28 - 4 * f;
+        self.0 = (self.0 & !(0xF << sh)) | ((v & 0xF) << sh);
+    }
+
+    /// Set field 0 from a signed comparison result.
+    #[inline]
+    pub fn compare_signed(&mut self, a: i64, b: i64) {
+        let v = if a < b {
+            CR_LT
+        } else if a > b {
+            CR_GT
+        } else {
+            CR_EQ
+        };
+        self.set_field(0, v);
+    }
+
+    /// Set field 0 from an unsigned comparison result.
+    #[inline]
+    pub fn compare_unsigned(&mut self, a: u64, b: u64) {
+        let v = if a < b {
+            CR_LT
+        } else if a > b {
+            CR_GT
+        } else {
+            CR_EQ
+        };
+        self.set_field(0, v);
+    }
+}
+
+/// The full architectural state (excluding memory).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegFile {
+    pub gpr: [u64; 32],
+    pub fpr: [f64; 32],
+    pub cr: Cr,
+    pub lr: u64,
+    pub ctr: u64,
+    pub xer: u64,
+    pub fpscr: u32,
+    /// Current instruction address.
+    pub cia: u64,
+    /// Next instruction address (computed by execute).
+    pub nia: u64,
+}
+
+impl Default for RegFile {
+    fn default() -> Self {
+        RegFile {
+            gpr: [0; 32],
+            fpr: [0.0; 32],
+            cr: Cr(0),
+            lr: 0,
+            ctr: 0,
+            xer: 0,
+            fpscr: 0,
+            cia: 0,
+            nia: 0,
+        }
+    }
+}
+
+impl RegFile {
+    pub fn new(entry: u64) -> Self {
+        RegFile { cia: entry, nia: entry, ..Default::default() }
+    }
+
+    /// Raw 64-bit view of an FPR (for context-matrix byte tokens).
+    #[inline]
+    pub fn fpr_bits(&self, i: usize) -> u64 {
+        self.fpr[i].to_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cr_field_layout_is_power_ordering() {
+        let mut cr = Cr(0);
+        cr.set_field(0, 0xA);
+        assert_eq!(cr.0, 0xA000_0000);
+        cr.set_field(7, 0x5);
+        assert_eq!(cr.field(7), 0x5);
+        assert_eq!(cr.field(0), 0xA);
+    }
+
+    #[test]
+    fn signed_compare_sets_exactly_one_of_lt_gt_eq() {
+        for (a, b) in [(-5i64, 3i64), (3, -5), (7, 7)] {
+            let mut cr = Cr(0);
+            cr.compare_signed(a, b);
+            let f = cr.field(0);
+            let bits = (f & CR_LT != 0) as u32
+                + (f & CR_GT != 0) as u32
+                + (f & CR_EQ != 0) as u32;
+            assert_eq!(bits, 1);
+        }
+        let mut cr = Cr(0);
+        cr.compare_signed(-1, 1);
+        assert_ne!(cr.field(0) & CR_LT, 0);
+    }
+
+    #[test]
+    fn unsigned_compare_differs_from_signed() {
+        let mut s = Cr(0);
+        let mut u = Cr(0);
+        s.compare_signed(-1, 1);
+        u.compare_unsigned(u64::MAX, 1);
+        assert_ne!(s.field(0) & CR_LT, 0);
+        assert_ne!(u.field(0) & CR_GT, 0);
+    }
+
+    #[test]
+    fn fpr_bits_roundtrip() {
+        let mut rf = RegFile::default();
+        rf.fpr[3] = -1.5;
+        assert_eq!(f64::from_bits(rf.fpr_bits(3)), -1.5);
+    }
+}

@@ -1,0 +1,47 @@
+//! # CAPSim — a fast CPU performance simulator using an attention-based predictor
+//!
+//! Rust + JAX + Pallas reproduction of *"CAPSim: A Fast CPU Performance
+//! Simulator Using Attention-based Predictor"* (Xu et al., 2025).
+//!
+//! The crate contains every substrate the paper depends on, bottom-up:
+//!
+//! * [`isa`] — **PISA**, a Power-inspired RISC ISA (Table I register file);
+//! * [`mem`] — flat paged memory + an L1I/L1D/L2 cache hierarchy;
+//! * [`functional`] — the AtomicSimple-style functional simulator that
+//!   produces instruction traces and register snapshots;
+//! * [`o3`] — the cycle-level out-of-order superscalar simulator used as the
+//!   golden label generator and the "gem5 mode" speed baseline;
+//! * [`simpoint`] — BBV profiling + k-means interval selection + checkpoints;
+//! * [`slicer`] — Algorithm 1: code-trace-clip generation;
+//! * [`sampler`] — Fig. 3: occurrence-sorted clip sampling;
+//! * [`tokenizer`] — Fig. 5: standardization transformation into tokens;
+//! * [`context`] — Fig. 6: register-value context matrix;
+//! * [`dataset`] — clip datasets, splits and the six Table-II benchmark sets;
+//! * [`runtime`] — PJRT loading of the AOT-compiled predictor artifacts;
+//! * [`predictor`] — batching, the SGD training driver and evaluation;
+//! * [`coordinator`] — the end-to-end CAPSim and gem5-mode pipelines;
+//! * [`workloads`] — the 24 synthetic SPEC-2017-analog benchmarks;
+//! * [`report`] — table/series emitters used by the benches;
+//! * [`config`], [`util`] — TOML-subset configs and offline-friendly
+//!   utilities (JSON, PRNG, stats, property-testing harness).
+//!
+//! Python/JAX/Pallas run **only at build time** (`make artifacts`); the
+//! simulation path is pure Rust + the PJRT C API.
+
+pub mod config;
+pub mod context;
+pub mod coordinator;
+pub mod dataset;
+pub mod functional;
+pub mod isa;
+pub mod mem;
+pub mod o3;
+pub mod predictor;
+pub mod report;
+pub mod runtime;
+pub mod sampler;
+pub mod simpoint;
+pub mod slicer;
+pub mod tokenizer;
+pub mod util;
+pub mod workloads;

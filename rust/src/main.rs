@@ -1,0 +1,340 @@
+//! `capsim` — the command-line launcher.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline crate set):
+//!
+//! ```text
+//! capsim table1                      print Table I (context registers)
+//! capsim table2 [--config F]        print Table II (suite, checkpoints)
+//! capsim trace  --bench N [--max M] trace a benchmark functionally
+//! capsim o3     --bench N           cycle-level stats for a benchmark
+//! capsim dataset --out F [--config F] build + save the golden dataset
+//! capsim train  [--steps N] [--variant V] train a predictor end-to-end
+//! capsim compare [--config F]       Fig.-7 style gem5 vs CAPSim timing
+//! capsim info                       artifact manifest summary
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use capsim::config::PipelineConfig;
+use capsim::coordinator::{build_dataset, capsim_mode, gem5_mode};
+use capsim::functional::AtomicCpu;
+use capsim::o3::O3Core;
+use capsim::predictor::{train, TrainParams};
+use capsim::report::Table;
+use capsim::runtime::Runtime;
+use capsim::util::stats;
+use capsim::workloads::{suite, Scale};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => PipelineConfig::load(Path::new(path))
+            .map_err(|e| anyhow!("config {path}: {e}"))?,
+        None => PipelineConfig::default(),
+    };
+    if flags.contains_key("full") {
+        cfg.scale = Scale::Full;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+
+    match cmd {
+        "table1" => table1(),
+        "table2" => table2(&flags)?,
+        "trace" => trace_cmd(&flags)?,
+        "o3" => o3_cmd(&flags)?,
+        "dataset" => dataset_cmd(&flags)?,
+        "train" => train_cmd(&flags)?,
+        "compare" => compare_cmd(&flags)?,
+        "info" => info_cmd(&flags)?,
+        _ => help(),
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "capsim — attention-based CPU performance simulator\n\
+         usage: capsim <table1|table2|trace|o3|dataset|train|compare|info> [flags]\n\
+         flags: --config FILE  --bench N  --max M  --steps N  --variant V  --out F  --full"
+    );
+}
+
+fn table1() {
+    let mut t = Table::new(
+        "Table I — registers used in the context matrix",
+        &["Register", "ValueTokens", "Description"],
+    );
+    for r in capsim::context::REGISTER_SPEC {
+        let name = capsim::tokenizer::Vocab::name(capsim::tokenizer::Vocab::reg(r.name()));
+        let desc = match r {
+            capsim::context::CtxReg::Gpr(_) => "general purpose register",
+            capsim::context::CtxReg::Fpr(_) => "floating point register (VSR role)",
+            capsim::context::CtxReg::Cr => "condition register",
+            capsim::context::CtxReg::Lr => "link register",
+            capsim::context::CtxReg::Ctr => "count register",
+            capsim::context::CtxReg::Xer => "fixed point exception register",
+            capsim::context::CtxReg::Cia => "current instruction address",
+            capsim::context::CtxReg::Nia => "next instruction address",
+        };
+        t.row(vec![name, "8".into(), desc.into()]);
+    }
+    t.emit("table1");
+}
+
+fn table2(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let benches = suite(cfg.scale);
+    let (_, profiles) =
+        build_dataset(&benches, &cfg, capsim::coordinator::pool::default_threads());
+    let mut t = Table::new(
+        "Table II — benchmarks, tags, sets, checkpoints",
+        &["Name", "CKP Num", "Tag", "Set No.", "Intervals", "Insts"],
+    );
+    for (b, p) in benches.iter().zip(&profiles) {
+        t.row(vec![
+            b.name.into(),
+            p.selected.len().to_string(),
+            p.tag_string.clone(),
+            b.set_no.to_string(),
+            p.n_intervals.to_string(),
+            p.total_insts.to_string(),
+        ]);
+    }
+    t.emit("table2");
+    Ok(())
+}
+
+fn bench_arg(
+    flags: &HashMap<String, String>,
+    benches: &[capsim::workloads::Benchmark],
+) -> Result<usize> {
+    let sel = flags.get("bench").context("--bench <index|name> required")?;
+    if let Ok(i) = sel.parse::<usize>() {
+        if i < benches.len() {
+            return Ok(i);
+        }
+        bail!("bench index {i} out of range (0..{})", benches.len());
+    }
+    benches
+        .iter()
+        .position(|b| b.name == sel.as_str() || b.name.ends_with(sel.as_str()))
+        .ok_or_else(|| anyhow!("unknown benchmark {sel}"))
+}
+
+fn trace_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let benches = suite(cfg.scale);
+    let i = bench_arg(flags, &benches)?;
+    let max: u64 = flags.get("max").and_then(|v| v.parse().ok()).unwrap_or(20);
+    let mut cpu = AtomicCpu::load(&benches[i].program);
+    let trace = cpu.run_trace(max);
+    println!("# {} — first {} instructions", benches[i].name, trace.len());
+    for r in &trace {
+        println!(
+            "{:#08x}: {:<24}{}",
+            r.pc,
+            capsim::isa::disasm::disasm(&r.inst),
+            r.mem_addr
+                .map(|a| format!(" [mem {a:#x}]"))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn o3_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let benches = suite(cfg.scale);
+    let i = bench_arg(flags, &benches)?;
+    let max: u64 = flags
+        .get("max")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    let mut cpu = AtomicCpu::load(&benches[i].program);
+    let trace = cpu.run_trace(max);
+    let mut core = O3Core::new(cfg.o3.clone());
+    let r = core.simulate(&trace);
+    println!("# {} — O3 timing over {} insts", benches[i].name, trace.len());
+    println!("cycles          {}", r.stats.cycles);
+    println!("IPC             {:.3}", r.stats.ipc());
+    println!("branches        {}", r.stats.branches);
+    println!(
+        "mispredict rate {:.2}%",
+        100.0 * r.stats.mispredicts as f64 / r.stats.branches.max(1) as f64
+    );
+    println!("icache stalls   {}", r.stats.icache_stall_cycles);
+    println!("stl forwards    {}", r.stats.stl_forwards);
+    Ok(())
+}
+
+fn dataset_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let out = flags.get("out").map(String::as_str).unwrap_or("dataset.bin");
+    let benches = suite(cfg.scale);
+    let (ds, profiles) =
+        build_dataset(&benches, &cfg, capsim::coordinator::pool::default_threads());
+    println!(
+        "dataset: {} clips from {} benchmarks ({} dropped long), mean time {:.1} cycles",
+        ds.len(),
+        profiles.len(),
+        ds.dropped_long,
+        ds.mean_time()
+    );
+    ds.save(Path::new(out))?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn train_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let variant = flags.get("variant").map(String::as_str).unwrap_or("capsim");
+    let steps: usize = flags
+        .get("steps")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.train_steps);
+
+    let benches = suite(cfg.scale);
+    let (ds, _) = build_dataset(&benches, &cfg, capsim::coordinator::pool::default_threads());
+    println!("dataset: {} clips", ds.len());
+
+    let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+    let mut model = rt.load_variant(variant)?;
+    model.init_params(cfg.seed as u32)?;
+
+    let (tr, va, te) = ds.split(cfg.seed);
+    let log = train(
+        &mut model,
+        &ds,
+        &tr,
+        &va,
+        &TrainParams { steps, lr: cfg.lr, ..Default::default() },
+    )?;
+    for (step, loss) in log.smoothed_train(25) {
+        println!("step {step:>5}  train-MAPE {loss:.4}");
+    }
+    let ev = capsim::predictor::evaluate(&model, &ds, &te, log.time_scale)?;
+    println!(
+        "test: MAPE {:.4}  accuracy {:.1}%  over {} clips",
+        ev.mape, ev.accuracy_pct, ev.n
+    );
+    Ok(())
+}
+
+fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let variant = flags.get("variant").map(String::as_str).unwrap_or("capsim");
+    let benches = suite(cfg.scale);
+    let (ds, profiles) =
+        build_dataset(&benches, &cfg, capsim::coordinator::pool::default_threads());
+
+    let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+    let mut model = rt.load_variant(variant)?;
+    model.init_params(cfg.seed as u32)?;
+    let (tr, va, _) = ds.split(cfg.seed);
+    let steps = flags
+        .get("steps")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.train_steps);
+    let log = train(
+        &mut model,
+        &ds,
+        &tr,
+        &va,
+        &TrainParams { steps, lr: cfg.lr, ..Default::default() },
+    )?;
+
+    let mut t = Table::new(
+        "Fig. 7 — restore time: gem5 mode vs CAPSim",
+        &["Benchmark", "CKPs", "gem5 s", "CAPSim s", "Speedup", "Err %"],
+    );
+    let mut speedups = Vec::new();
+    for (b, p) in benches.iter().zip(&profiles) {
+        let g = gem5_mode(&p.selected, p.n_intervals, &cfg);
+        let c = capsim_mode(&p.selected, p.n_intervals, &cfg, &model, log.time_scale)?;
+        let speedup = g.wall_s / c.wall_s.max(1e-9);
+        let err = 100.0 * (c.total_cycles - g.total_cycles).abs() / g.total_cycles;
+        speedups.push(speedup);
+        t.row(vec![
+            b.name.into(),
+            p.selected.len().to_string(),
+            format!("{:.3}", g.wall_s),
+            format!("{:.3}", c.wall_s),
+            format!("{:.2}x", speedup),
+            format!("{:.1}", err),
+        ]);
+    }
+    t.emit("fig7");
+    println!(
+        "speedup: mean {:.2}x  max {:.2}x",
+        stats::mean(&speedups),
+        speedups.iter().cloned().fold(0.0, f64::max)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_flags;
+
+    #[test]
+    fn flags_with_values_and_booleans() {
+        let args: Vec<String> = ["--bench", "505.mcf", "--full", "--max", "100"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = parse_flags(&args);
+        assert_eq!(f.get("bench").map(String::as_str), Some("505.mcf"));
+        assert_eq!(f.get("full").map(String::as_str), Some("true"));
+        assert_eq!(f.get("max").map(String::as_str), Some("100"));
+    }
+
+    #[test]
+    fn empty_args() {
+        assert!(parse_flags(&[]).is_empty());
+    }
+}
+
+fn info_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+    let g = &rt.manifest.geometry;
+    println!("artifacts: {}", cfg.artifacts);
+    println!(
+        "geometry: vocab {} embed {} l_token {} l_clip {} M {} train_batch {}",
+        g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch
+    );
+    for (name, v) in &rt.manifest.variants {
+        println!(
+            "variant {name}: {} params, fwd batches {:?}",
+            v.param_size,
+            v.fwd_files.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

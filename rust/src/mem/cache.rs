@@ -1,0 +1,240 @@
+//! Set-associative cache with LRU replacement and write-back/write-allocate
+//! policy — the building block of the L1I/L1D/L2 hierarchy.
+//!
+//! The model is a *timing* cache: it tracks tags and dirty bits (to charge
+//! write-back traffic) but holds no data — the functional simulator owns the
+//! actual bytes. This matches the gem5-classic split the paper relies on.
+
+/// Geometry + latency of one cache level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    /// Hit latency in cycles (charged on every access that hits this level).
+    pub hit_latency: u64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp: larger = more recently used.
+    lru: u64,
+}
+
+/// Result of a cache lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LookupResult {
+    pub hit: bool,
+    /// A dirty line was evicted (charge a write-back to the next level).
+    pub writeback: bool,
+    /// Address of the evicted victim line, if any.
+    pub victim: Option<u64>,
+}
+
+/// Access statistics for one level.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// One set-associative cache level.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    lines: Vec<Line>, // sets * ways
+    set_mask: u64,
+    line_shift: u32,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!(cfg.line_bytes.is_power_of_two());
+        Cache {
+            cfg,
+            lines: vec![Line::default(); sets * cfg.ways],
+            set_mask: sets as u64 - 1,
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let block = addr >> self.line_shift;
+        ((block & self.set_mask) as usize, block >> self.cfg.sets().trailing_zeros())
+    }
+
+    /// Access `addr`; on miss, allocate (write-allocate) and report the
+    /// victim. `is_write` marks the line dirty.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> LookupResult {
+        self.clock += 1;
+        self.stats.accesses += 1;
+        let (set, tag) = self.index(addr);
+        let base = set * self.cfg.ways;
+        let ways = &mut self.lines[base..base + self.cfg.ways];
+
+        // hit?
+        for line in ways.iter_mut() {
+            if line.valid && line.tag == tag {
+                line.lru = self.clock;
+                if is_write {
+                    line.dirty = true;
+                }
+                return LookupResult { hit: true, writeback: false, victim: None };
+            }
+        }
+
+        // miss: pick LRU victim
+        self.stats.misses += 1;
+        let victim_way = ways
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| if l.valid { l.lru } else { 0 })
+            .map(|(i, _)| i)
+            .unwrap();
+        let victim = &mut ways[victim_way];
+        let mut writeback = false;
+        let mut victim_addr = None;
+        if victim.valid {
+            let sets_bits = self.set_mask.count_ones();
+            let block = (victim.tag << sets_bits) | set as u64;
+            victim_addr = Some(block << self.line_shift);
+            if victim.dirty {
+                writeback = true;
+                self.stats.writebacks += 1;
+            }
+        }
+        *victim = Line { tag, valid: true, dirty: is_write, lru: self.clock };
+        LookupResult { hit: false, writeback, victim: victim_addr }
+    }
+
+    /// Non-allocating probe (used by tests and warmup statistics).
+    pub fn probe(&self, addr: u64) -> bool {
+        let (set, tag) = self.index(addr);
+        let base = set * self.cfg.ways;
+        self.lines[base..base + self.cfg.ways]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+    }
+
+    /// Invalidate everything (checkpoint-restore starts cold, like gem5).
+    pub fn flush(&mut self) {
+        for l in &mut self.lines {
+            *l = Line::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 64B = 512B
+        Cache::new(CacheConfig { size_bytes: 512, ways: 2, line_bytes: 64, hit_latency: 2 })
+    }
+
+    #[test]
+    fn geometry() {
+        let c = small();
+        assert_eq!(c.config().sets(), 4);
+    }
+
+    #[test]
+    fn first_access_misses_then_hits() {
+        let mut c = small();
+        assert!(!c.access(0x100, false).hit);
+        assert!(c.access(0x100, false).hit);
+        assert!(c.access(0x13F, false).hit, "same 64B line");
+        assert!(!c.access(0x140, false).hit, "next line");
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = small();
+        // set 0 lines: addresses with block % 4 == 0
+        let a = 0x0000; // set 0
+        let b = 0x0100; // set 0 (block 4)
+        let d = 0x0200; // set 0 (block 8)
+        c.access(a, false);
+        c.access(b, false);
+        c.access(a, false); // a more recent than b
+        let r = c.access(d, false); // evicts b
+        assert!(!r.hit);
+        assert!(c.probe(a));
+        assert!(!c.probe(b));
+        assert!(c.probe(d));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = small();
+        c.access(0x0000, true); // dirty
+        c.access(0x0100, false);
+        let r = c.access(0x0200, false); // evicts 0x0000
+        assert!(r.writeback);
+        assert_eq!(r.victim, Some(0x0000));
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = small();
+        c.access(0x0000, false);
+        c.access(0x0100, false);
+        let r = c.access(0x0200, false);
+        assert!(!r.writeback);
+        assert_eq!(r.victim, Some(0x0000));
+    }
+
+    #[test]
+    fn flush_invalidates() {
+        let mut c = small();
+        c.access(0x40, false);
+        assert!(c.probe(0x40));
+        c.flush();
+        assert!(!c.probe(0x40));
+    }
+
+    #[test]
+    fn stats_track_miss_rate() {
+        let mut c = small();
+        c.access(0, false);
+        c.access(0, false);
+        c.access(0, false);
+        c.access(64, false);
+        assert_eq!(c.stats.accesses, 4);
+        assert_eq!(c.stats.misses, 2);
+        assert!((c.stats.miss_rate() - 0.5).abs() < 1e-12);
+    }
+}

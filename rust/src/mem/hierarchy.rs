@@ -1,0 +1,190 @@
+//! The cache hierarchy the O3 model charges memory latencies against:
+//! split L1I / L1D backed by a unified L2 backed by fixed-latency DRAM —
+//! the classic configuration the paper's gem5 Power8 model uses.
+
+use super::cache::{Cache, CacheConfig, CacheStats};
+
+/// What kind of access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    InstFetch,
+    Load,
+    Store,
+}
+
+/// Full hierarchy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchyConfig {
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    /// DRAM access latency in cycles (charged on L2 miss).
+    pub dram_latency: u64,
+}
+
+impl Default for HierarchyConfig {
+    /// Power8-flavoured defaults (scaled; see DESIGN.md):
+    /// 32 KiB 8-way L1I/L1D (2-cycle), 256 KiB 8-way L2 (12-cycle),
+    /// 80-cycle DRAM.
+    fn default() -> Self {
+        HierarchyConfig {
+            l1i: CacheConfig { size_bytes: 32 * 1024, ways: 8, line_bytes: 64, hit_latency: 2 },
+            l1d: CacheConfig { size_bytes: 32 * 1024, ways: 8, line_bytes: 64, hit_latency: 2 },
+            l2: CacheConfig { size_bytes: 256 * 1024, ways: 8, line_bytes: 64, hit_latency: 12 },
+            dram_latency: 80,
+        }
+    }
+}
+
+/// Per-level statistics snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LevelStats {
+    pub l1i: CacheStats,
+    pub l1d: CacheStats,
+    pub l2: CacheStats,
+    pub dram_accesses: u64,
+}
+
+/// The hierarchy. `access()` returns the total latency of the access and
+/// updates all touched levels.
+#[derive(Clone, Debug)]
+pub struct CacheHierarchy {
+    cfg: HierarchyConfig,
+    l1i: Cache,
+    l1d: Cache,
+    l2: Cache,
+    dram_accesses: u64,
+}
+
+impl CacheHierarchy {
+    pub fn new(cfg: HierarchyConfig) -> Self {
+        CacheHierarchy {
+            cfg,
+            l1i: Cache::new(cfg.l1i),
+            l1d: Cache::new(cfg.l1d),
+            l2: Cache::new(cfg.l2),
+            dram_accesses: 0,
+        }
+    }
+
+    pub fn config(&self) -> &HierarchyConfig {
+        &self.cfg
+    }
+
+    /// Perform a timed access; returns latency in cycles.
+    pub fn access(&mut self, kind: Access, addr: u64) -> u64 {
+        let is_write = kind == Access::Store;
+        let (l1, l1_latency) = match kind {
+            Access::InstFetch => (&mut self.l1i, self.cfg.l1i.hit_latency),
+            _ => (&mut self.l1d, self.cfg.l1d.hit_latency),
+        };
+        let r1 = l1.access(addr, is_write);
+        if r1.hit {
+            return l1_latency;
+        }
+        // L1 miss -> L2 (write-back of the L1 victim also goes to L2 but is
+        // off the critical path; we account its occupancy, not its latency)
+        if let Some(victim) = r1.victim {
+            if r1.writeback {
+                self.l2.access(victim, true);
+            }
+        }
+        let r2 = self.l2.access(addr, is_write && false); // fill is clean; dirtiness tracked in L1
+        let mut latency = l1_latency + self.cfg.l2.hit_latency;
+        if !r2.hit {
+            if r2.writeback {
+                self.dram_accesses += 1; // L2 victim write-back to DRAM
+            }
+            self.dram_accesses += 1;
+            latency += self.cfg.dram_latency;
+        }
+        latency
+    }
+
+    /// Cold-start (checkpoint restore begins with empty caches, as in the
+    /// paper's gem5 restore flow; the warm-up interval re-warms them).
+    pub fn flush(&mut self) {
+        self.l1i.flush();
+        self.l1d.flush();
+        self.l2.flush();
+    }
+
+    pub fn stats(&self) -> LevelStats {
+        LevelStats {
+            l1i: self.l1i.stats,
+            l1d: self.l1d.stats,
+            l2: self.l2.stats,
+            dram_accesses: self.dram_accesses,
+        }
+    }
+}
+
+impl Default for CacheHierarchy {
+    fn default() -> Self {
+        Self::new(HierarchyConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CacheHierarchy {
+        CacheHierarchy::new(HierarchyConfig {
+            l1i: CacheConfig { size_bytes: 256, ways: 2, line_bytes: 64, hit_latency: 1 },
+            l1d: CacheConfig { size_bytes: 256, ways: 2, line_bytes: 64, hit_latency: 2 },
+            l2: CacheConfig { size_bytes: 1024, ways: 4, line_bytes: 64, hit_latency: 10 },
+            dram_latency: 100,
+        })
+    }
+
+    #[test]
+    fn cold_miss_pays_full_path() {
+        let mut h = tiny();
+        assert_eq!(h.access(Access::Load, 0x1000), 2 + 10 + 100);
+        // now L1D-hot
+        assert_eq!(h.access(Access::Load, 0x1000), 2);
+    }
+
+    #[test]
+    fn l2_hit_after_l1_eviction() {
+        let mut h = tiny();
+        h.access(Access::Load, 0x0000);
+        // fill enough L1D set-0 lines to evict 0x0000 (sets=2, ways=2)
+        h.access(Access::Load, 0x0080);
+        h.access(Access::Load, 0x0100);
+        // 0x0000 should now be L1-miss but L2-hit
+        let lat = h.access(Access::Load, 0x0000);
+        assert_eq!(lat, 2 + 10);
+    }
+
+    #[test]
+    fn icache_and_dcache_are_split() {
+        let mut h = tiny();
+        h.access(Access::InstFetch, 0x2000);
+        // same line via data port must still miss L1D (but hit L2)
+        let lat = h.access(Access::Load, 0x2000);
+        assert_eq!(lat, 2 + 10);
+        let s = h.stats();
+        assert_eq!(s.l1i.accesses, 1);
+        assert_eq!(s.l1d.accesses, 1);
+    }
+
+    #[test]
+    fn flush_forces_cold_misses() {
+        let mut h = tiny();
+        h.access(Access::Load, 0x3000);
+        h.flush();
+        assert_eq!(h.access(Access::Load, 0x3000), 2 + 10 + 100);
+    }
+
+    #[test]
+    fn dram_counter_counts_l2_misses() {
+        let mut h = tiny();
+        h.access(Access::Load, 0x0);
+        h.access(Access::Load, 0x10000);
+        assert_eq!(h.stats().dram_accesses, 2);
+        h.access(Access::Load, 0x0);
+        assert_eq!(h.stats().dram_accesses, 2);
+    }
+}

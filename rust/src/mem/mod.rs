@@ -1,0 +1,11 @@
+//! Memory subsystem: sparse paged physical memory ([`Memory`]) plus the
+//! cache hierarchy ([`hierarchy::CacheHierarchy`]) the O3 model queries for
+//! access latencies (L1I / L1D / unified L2 / DRAM).
+
+pub mod cache;
+pub mod hierarchy;
+pub mod paged;
+
+pub use cache::{Cache, CacheConfig};
+pub use hierarchy::{Access, CacheHierarchy, HierarchyConfig, LevelStats};
+pub use paged::Memory;

@@ -1,0 +1,178 @@
+//! Sparse paged memory. Benchmarks touch a few MB scattered across a 64-bit
+//! address space; 4 KiB pages in a hash map keep checkpoints cheap to clone
+//! (the simpoint module snapshots memory by cloning this structure).
+
+use std::collections::HashMap;
+
+pub const PAGE_SHIFT: u32 = 12;
+pub const PAGE_SIZE: usize = 1 << PAGE_SHIFT;
+
+/// Sparse byte-addressable memory; unmapped bytes read as zero.
+#[derive(Clone, Debug, Default)]
+pub struct Memory {
+    pages: HashMap<u64, Box<[u8; PAGE_SIZE]>>,
+}
+
+impl Memory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn page_of(addr: u64) -> (u64, usize) {
+        (addr >> PAGE_SHIFT, (addr & (PAGE_SIZE as u64 - 1)) as usize)
+    }
+
+    #[inline]
+    pub fn read_u8(&self, addr: u64) -> u8 {
+        let (p, off) = Self::page_of(addr);
+        self.pages.get(&p).map_or(0, |pg| pg[off])
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, addr: u64, val: u8) {
+        let (p, off) = Self::page_of(addr);
+        self.pages
+            .entry(p)
+            .or_insert_with(|| Box::new([0u8; PAGE_SIZE]))[off] = val;
+    }
+
+    /// Read `n <= 8` bytes little-endian. The fast path stays within one
+    /// page (the common case — PISA accesses are naturally aligned in the
+    /// workloads, but misaligned crossings are still correct).
+    #[inline]
+    pub fn read_le(&self, addr: u64, n: usize) -> u64 {
+        debug_assert!(n <= 8);
+        let (p, off) = Self::page_of(addr);
+        if off + n <= PAGE_SIZE {
+            if let Some(pg) = self.pages.get(&p) {
+                let mut buf = [0u8; 8];
+                buf[..n].copy_from_slice(&pg[off..off + n]);
+                return u64::from_le_bytes(buf);
+            }
+            return 0;
+        }
+        let mut v: u64 = 0;
+        for i in 0..n {
+            v |= (self.read_u8(addr + i as u64) as u64) << (8 * i);
+        }
+        v
+    }
+
+    /// Write `n <= 8` bytes little-endian.
+    #[inline]
+    pub fn write_le(&mut self, addr: u64, n: usize, val: u64) {
+        debug_assert!(n <= 8);
+        let (p, off) = Self::page_of(addr);
+        if off + n <= PAGE_SIZE {
+            let pg = self
+                .pages
+                .entry(p)
+                .or_insert_with(|| Box::new([0u8; PAGE_SIZE]));
+            pg[off..off + n].copy_from_slice(&val.to_le_bytes()[..n]);
+            return;
+        }
+        for i in 0..n {
+            self.write_u8(addr + i as u64, (val >> (8 * i)) as u8);
+        }
+    }
+
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        self.read_le(addr, 4) as u32
+    }
+    pub fn write_u32(&mut self, addr: u64, val: u32) {
+        self.write_le(addr, 4, val as u64);
+    }
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        self.read_le(addr, 8)
+    }
+    pub fn write_u64(&mut self, addr: u64, val: u64) {
+        self.write_le(addr, 8, val);
+    }
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+    pub fn write_f64(&mut self, addr: u64, val: f64) {
+        self.write_u64(addr, val.to_bits());
+    }
+
+    /// Bulk write (program loading).
+    pub fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        for (i, b) in bytes.iter().enumerate() {
+            self.write_u8(addr + i as u64, *b);
+        }
+    }
+
+    /// Number of mapped pages (footprint metric).
+    pub fn mapped_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn zero_initialized() {
+        let m = Memory::new();
+        assert_eq!(m.read_u64(0xDEAD_BEEF), 0);
+        assert_eq!(m.read_u8(u64::MAX), 0);
+    }
+
+    #[test]
+    fn rw_roundtrip_widths() {
+        let mut m = Memory::new();
+        m.write_u8(10, 0xAB);
+        assert_eq!(m.read_u8(10), 0xAB);
+        m.write_u32(100, 0xDEADBEEF);
+        assert_eq!(m.read_u32(100), 0xDEADBEEF);
+        m.write_u64(200, 0x0123_4567_89AB_CDEF);
+        assert_eq!(m.read_u64(200), 0x0123_4567_89AB_CDEF);
+        m.write_f64(300, -2.75);
+        assert_eq!(m.read_f64(300), -2.75);
+    }
+
+    #[test]
+    fn little_endian_layout() {
+        let mut m = Memory::new();
+        m.write_u32(0, 0x0403_0201);
+        assert_eq!(m.read_u8(0), 1);
+        assert_eq!(m.read_u8(3), 4);
+    }
+
+    #[test]
+    fn cross_page_access() {
+        let mut m = Memory::new();
+        let addr = PAGE_SIZE as u64 - 3;
+        m.write_u64(addr, 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u64(addr), 0x1122_3344_5566_7788);
+        assert_eq!(m.mapped_pages(), 2);
+    }
+
+    #[test]
+    fn prop_rw_roundtrip_random() {
+        prop::check(
+            "memory rw roundtrip",
+            128,
+            |r| (r.next_u64() >> 20, r.next_u64(), 1 + r.range(0, 8)),
+            |(addr, val, n)| {
+                let mut m = Memory::new();
+                m.write_le(*addr, *n, *val);
+                let mask = if *n == 8 { u64::MAX } else { (1u64 << (8 * n)) - 1 };
+                m.read_le(*addr, *n) == val & mask
+            },
+        );
+    }
+
+    #[test]
+    fn clone_is_snapshot() {
+        let mut m = Memory::new();
+        m.write_u64(64, 7);
+        let snap = m.clone();
+        m.write_u64(64, 9);
+        assert_eq!(snap.read_u64(64), 7);
+        assert_eq!(m.read_u64(64), 9);
+    }
+}

@@ -1,0 +1,235 @@
+//! Branch prediction for the O3 front end: gshare direction predictor,
+//! branch target buffer, and a return-address stack (Power's `bl`/`blr`
+//! idiom makes the RAS essential).
+
+use crate::isa::{Inst, Opcode};
+
+/// Predictor configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BpConfig {
+    /// Global-history bits (gshare table is `1 << bits` 2-bit counters).
+    pub ghist_bits: u32,
+    /// BTB entries (direct-mapped, tagged).
+    pub btb_entries: usize,
+    /// Return-address stack depth.
+    pub ras_entries: usize,
+}
+
+impl Default for BpConfig {
+    fn default() -> Self {
+        BpConfig { ghist_bits: 12, btb_entries: 2048, ras_entries: 16 }
+    }
+}
+
+/// Aggregate prediction statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BpStats {
+    pub branches: u64,
+    pub mispredicts: u64,
+    pub direction_mispredicts: u64,
+    pub target_mispredicts: u64,
+}
+
+impl BpStats {
+    pub fn mispredict_rate(&self) -> f64 {
+        if self.branches == 0 {
+            0.0
+        } else {
+            self.mispredicts as f64 / self.branches as f64
+        }
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct BtbEntry {
+    tag: u64,
+    target: u64,
+    valid: bool,
+}
+
+/// gshare + BTB + RAS.
+#[derive(Clone)]
+pub struct BranchPredictor {
+    cfg: BpConfig,
+    counters: Vec<u8>, // 2-bit saturating
+    ghist: u64,
+    btb: Vec<BtbEntry>,
+    ras: Vec<u64>,
+    pub stats: BpStats,
+}
+
+impl BranchPredictor {
+    pub fn new(cfg: BpConfig) -> Self {
+        BranchPredictor {
+            cfg,
+            counters: vec![1; 1 << cfg.ghist_bits], // weakly not-taken
+            ghist: 0,
+            btb: vec![BtbEntry::default(); cfg.btb_entries],
+            ras: Vec::new(),
+            stats: BpStats::default(),
+        }
+    }
+
+    #[inline]
+    fn gidx(&self, pc: u64) -> usize {
+        let mask = (1u64 << self.cfg.ghist_bits) - 1;
+        (((pc >> 2) ^ self.ghist) & mask) as usize
+    }
+
+    #[inline]
+    fn bidx(&self, pc: u64) -> usize {
+        ((pc >> 2) as usize) % self.btb.len()
+    }
+
+    /// Predict and immediately train on the actual outcome; returns
+    /// whether the branch was **mispredicted** (direction or target).
+    ///
+    /// `inst` must be a branch; `taken`/`target` are the true outcome from
+    /// the functional trace.
+    pub fn predict_and_update(&mut self, pc: u64, inst: &Inst, taken: bool, target: u64) -> bool {
+        self.stats.branches += 1;
+
+        // ---- direction ----
+        let (pred_taken, gi) = if inst.is_cond_branch() {
+            let gi = self.gidx(pc);
+            (self.counters[gi] >= 2, Some(gi))
+        } else {
+            (true, None) // unconditional / indirect always "taken"
+        };
+
+        // ---- target ----
+        let pred_target = match inst.op {
+            Opcode::Blr => self.ras.last().copied(),
+            _ => {
+                let e = &self.btb[self.bidx(pc)];
+                if e.valid && e.tag == pc {
+                    Some(e.target)
+                } else {
+                    None
+                }
+            }
+        };
+
+        let dir_wrong = pred_taken != taken;
+        // target only matters if the branch is (and is predicted) taken
+        let target_wrong = taken && !dir_wrong && pred_target != Some(target);
+        let mispredict = dir_wrong || target_wrong;
+
+        if dir_wrong {
+            self.stats.direction_mispredicts += 1;
+        } else if target_wrong {
+            self.stats.target_mispredicts += 1;
+        }
+        if mispredict {
+            self.stats.mispredicts += 1;
+        }
+
+        // ---- train ----
+        if let Some(gi) = gi {
+            let c = &mut self.counters[gi];
+            if taken {
+                *c = (*c + 1).min(3);
+            } else {
+                *c = c.saturating_sub(1);
+            }
+            self.ghist = (self.ghist << 1) | taken as u64;
+        }
+        if taken {
+            let bi = self.bidx(pc);
+            self.btb[bi] = BtbEntry { tag: pc, target, valid: true };
+        }
+        match inst.op {
+            Opcode::Bl => {
+                if self.ras.len() == self.cfg.ras_entries {
+                    self.ras.remove(0);
+                }
+                self.ras.push(pc + 4);
+            }
+            Opcode::Blr => {
+                self.ras.pop();
+            }
+            _ => {}
+        }
+
+        mispredict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Inst, Opcode};
+
+    fn bp() -> BranchPredictor {
+        BranchPredictor::new(BpConfig { ghist_bits: 8, btb_entries: 64, ras_entries: 8 })
+    }
+
+    #[test]
+    fn learns_always_taken_loop() {
+        let mut p = bp();
+        let i = Inst::new(Opcode::Bdnz, 0, 0, 0, -4);
+        let mut wrong = 0;
+        for _ in 0..100 {
+            if p.predict_and_update(0x1000, &i, true, 0x0FF0) {
+                wrong += 1;
+            }
+        }
+        // gshare needs ~ghist_bits iterations to fill its history with the
+        // loop pattern before every indexed counter saturates
+        assert!(wrong <= 12, "should converge within warmup, got {wrong}");
+        let mut late_wrong = 0;
+        for _ in 0..100 {
+            if p.predict_and_update(0x1000, &i, true, 0x0FF0) {
+                late_wrong += 1;
+            }
+        }
+        assert_eq!(late_wrong, 0, "must be perfect once warm");
+    }
+
+    #[test]
+    fn learns_alternating_pattern_via_history() {
+        let mut p = bp();
+        let i = Inst::new(Opcode::Beq, 0, 0, 0, 8);
+        let mut wrong_late = 0;
+        for n in 0..200 {
+            let taken = n % 2 == 0;
+            let w = p.predict_and_update(0x2000, &i, taken, 0x2020);
+            if n >= 100 && w {
+                wrong_late += 1;
+            }
+        }
+        assert!(wrong_late <= 5, "gshare should capture T/NT alternation, got {wrong_late}");
+    }
+
+    #[test]
+    fn unconditional_needs_btb_warmup_only() {
+        let mut p = bp();
+        let i = Inst::new(Opcode::B, 0, 0, 0, 16);
+        assert!(p.predict_and_update(0x3000, &i, true, 0x3040)); // cold BTB
+        assert!(!p.predict_and_update(0x3000, &i, true, 0x3040)); // warm
+    }
+
+    #[test]
+    fn ras_predicts_returns() {
+        let mut p = bp();
+        let bl = Inst::new(Opcode::Bl, 0, 0, 0, 100);
+        let blr = Inst::new(Opcode::Blr, 0, 0, 0, 0);
+        // call from two sites; returns must be predicted by RAS, not BTB
+        p.predict_and_update(0x1000, &bl, true, 0x2000);
+        assert!(!p.predict_and_update(0x2000, &blr, true, 0x1004));
+        p.predict_and_update(0x1100, &bl, true, 0x2000);
+        assert!(!p.predict_and_update(0x2000, &blr, true, 0x1104));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut p = bp();
+        let i = Inst::new(Opcode::Beq, 0, 0, 0, 4);
+        for n in 0..10 {
+            p.predict_and_update(0x10, &i, n % 3 == 0, 0x20);
+        }
+        assert_eq!(p.stats.branches, 10);
+        assert!(p.stats.mispredicts > 0);
+        assert!(p.stats.mispredict_rate() <= 1.0);
+    }
+}

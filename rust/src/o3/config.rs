@@ -1,0 +1,191 @@
+//! O3 core configuration. The four Table-III parameters are the headline
+//! knobs; the rest fills in a Power8-flavoured mid-2010s superscalar.
+
+use crate::isa::inst::FuClass;
+use crate::mem::HierarchyConfig;
+
+use super::branch_pred::BpConfig;
+
+/// Functional-unit pool sizes.
+#[derive(Clone, Copy, Debug)]
+pub struct FuPool {
+    pub int_alu: usize,
+    pub int_mul: usize,
+    pub int_div: usize,
+    pub fp: usize,
+    /// Load/store ports (shared by loads and stores).
+    pub mem_ports: usize,
+    pub branch: usize,
+}
+
+impl Default for FuPool {
+    fn default() -> Self {
+        FuPool { int_alu: 4, int_mul: 1, int_div: 1, fp: 2, mem_ports: 2, branch: 1 }
+    }
+}
+
+/// Execution latencies per FU class (cycles). Memory classes are the
+/// *post-cache* part; cache latency is added from the hierarchy.
+#[derive(Clone, Copy, Debug)]
+pub struct Latencies {
+    pub int_alu: u64,
+    pub int_mul: u64,
+    pub int_div: u64,
+    pub fp_add: u64,
+    pub fp_mul: u64,
+    pub fp_div: u64,
+    pub fp_fma: u64,
+    pub branch: u64,
+    /// Store-to-load forward latency.
+    pub stl_forward: u64,
+}
+
+impl Default for Latencies {
+    fn default() -> Self {
+        Latencies {
+            int_alu: 1,
+            int_mul: 4,
+            int_div: 16,
+            fp_add: 4,
+            fp_mul: 4,
+            fp_div: 24,
+            fp_fma: 5,
+            branch: 1,
+            stl_forward: 2,
+        }
+    }
+}
+
+impl Latencies {
+    pub fn of(&self, class: FuClass) -> u64 {
+        match class {
+            FuClass::IntAlu => self.int_alu,
+            FuClass::IntMul => self.int_mul,
+            FuClass::IntDiv => self.int_div,
+            FuClass::FpAdd => self.fp_add,
+            FuClass::FpMul => self.fp_mul,
+            FuClass::FpDiv => self.fp_div,
+            FuClass::FpFma => self.fp_fma,
+            FuClass::Branch => self.branch,
+            // loads/stores: execute-side latency beyond the cache access
+            FuClass::Load | FuClass::Store => 1,
+            FuClass::Nop => 1,
+        }
+    }
+}
+
+/// The full O3 configuration.
+#[derive(Clone, Debug)]
+pub struct O3Config {
+    // ---- Table III knobs ----
+    pub fetch_width: usize,
+    pub issue_width: usize,
+    pub commit_width: usize,
+    pub rob_entries: usize,
+    // ---- window ----
+    pub iq_entries: usize,
+    pub lsq_entries: usize,
+    /// Front-end depth: cycles from fetch to dispatch (decode+rename).
+    pub frontend_depth: u64,
+    /// Miss-status holding registers: max overlapping D-cache misses.
+    pub mshrs: usize,
+    /// Extra redirect cycles after a mispredicted branch resolves.
+    pub mispredict_penalty: u64,
+    pub fu: FuPool,
+    pub lat: Latencies,
+    pub bp: BpConfig,
+    pub hierarchy: HierarchyConfig,
+}
+
+impl Default for O3Config {
+    /// The paper's baseline row of Table III:
+    /// FetchWidth 8, IssueWidth 8, CommitWidth 8, ROBEntry 192.
+    fn default() -> Self {
+        O3Config {
+            fetch_width: 8,
+            issue_width: 8,
+            commit_width: 8,
+            rob_entries: 192,
+            iq_entries: 64,
+            lsq_entries: 48,
+            frontend_depth: 5,
+            mshrs: 8,
+            mispredict_penalty: 8,
+            fu: FuPool::default(),
+            lat: Latencies::default(),
+            bp: BpConfig::default(),
+            hierarchy: HierarchyConfig::default(),
+        }
+    }
+}
+
+impl O3Config {
+    /// The five Table-III rows, in paper order (baseline first).
+    pub fn table3_rows() -> Vec<(String, O3Config)> {
+        let base = O3Config::default();
+        let mut rows = vec![("8/8/8/192".to_string(), base.clone())];
+        let mut v = base.clone();
+        v.fetch_width = 4;
+        rows.push(("4/8/8/192".to_string(), v));
+        let mut v = base.clone();
+        v.issue_width = 4;
+        rows.push(("8/4/8/192".to_string(), v));
+        let mut v = base.clone();
+        v.commit_width = 4;
+        rows.push(("8/8/4/192".to_string(), v));
+        let mut v = base;
+        v.rob_entries = 128;
+        rows.push(("8/8/8/128".to_string(), v));
+        rows
+    }
+
+    pub fn units_of(&self, class: FuClass) -> usize {
+        match class {
+            FuClass::IntAlu => self.fu.int_alu,
+            FuClass::IntMul => self.fu.int_mul,
+            FuClass::IntDiv => self.fu.int_div,
+            FuClass::FpAdd | FuClass::FpMul | FuClass::FpDiv | FuClass::FpFma => self.fu.fp,
+            FuClass::Load | FuClass::Store => self.fu.mem_ports,
+            FuClass::Branch => self.fu.branch,
+            FuClass::Nop => self.fu.int_alu,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_baseline() {
+        let c = O3Config::default();
+        assert_eq!(c.fetch_width, 8);
+        assert_eq!(c.issue_width, 8);
+        assert_eq!(c.commit_width, 8);
+        assert_eq!(c.rob_entries, 192);
+    }
+
+    #[test]
+    fn table3_has_five_rows_varying_one_knob() {
+        let rows = O3Config::table3_rows();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[1].1.fetch_width, 4);
+        assert_eq!(rows[2].1.issue_width, 4);
+        assert_eq!(rows[3].1.commit_width, 4);
+        assert_eq!(rows[4].1.rob_entries, 128);
+        // everything else stays at baseline
+        assert_eq!(rows[4].1.fetch_width, 8);
+    }
+
+    #[test]
+    fn latencies_cover_all_classes() {
+        let l = Latencies::default();
+        for class in [FuClass::IntAlu, FuClass::IntMul, FuClass::IntDiv,
+                      FuClass::FpAdd, FuClass::FpMul, FuClass::FpDiv,
+                      FuClass::FpFma, FuClass::Branch, FuClass::Load,
+                      FuClass::Store, FuClass::Nop] {
+            assert!(l.of(class) >= 1);
+        }
+        assert!(l.of(FuClass::IntDiv) > l.of(FuClass::IntMul));
+    }
+}

@@ -1,0 +1,731 @@
+//! The O3 timing core: a trace-driven out-of-order superscalar model.
+//!
+//! One pass over the dynamic trace computes, per instruction, the cycle at
+//! which it fetches, dispatches, issues, completes and **commits**. The
+//! out-of-order window emerges from the dependence/structural constraints
+//! rather than an explicit per-cycle event loop, which keeps the golden
+//! label generator fast while modelling:
+//!
+//! * fetch groups bounded by FetchWidth, taken branches and I-cache lines
+//!   (with I-cache miss stalls);
+//! * gshare+BTB+RAS prediction; mispredicted branches stall re-fetch until
+//!   resolution + redirect penalty;
+//! * ROB / IQ / LSQ occupancy back-pressure (entries free at commit, issue
+//!   and completion respectively);
+//! * register RAW dependences through the full Table-I register file
+//!   (including CR/LR/CTR serialization);
+//! * IssueWidth plus per-class FU structural hazards (divider unpipelined);
+//! * D-cache access latency from the shared hierarchy, store-to-load
+//!   forwarding, loads stalling on older unresolved overlapping stores;
+//! * in-order commit bounded by CommitWidth.
+
+use crate::functional::TraceRecord;
+use crate::isa::inst::{FuClass, RegRef};
+use crate::mem::{Access, CacheHierarchy};
+
+use super::branch_pred::BranchPredictor;
+use super::config::O3Config;
+
+/// Aggregate statistics of one simulation.
+#[derive(Clone, Debug, Default)]
+pub struct O3Stats {
+    pub insts: u64,
+    pub cycles: u64,
+    pub branches: u64,
+    pub mispredicts: u64,
+    pub icache_stall_cycles: u64,
+    pub rob_stall_events: u64,
+    pub iq_stall_events: u64,
+    pub lsq_stall_events: u64,
+    pub stl_forwards: u64,
+}
+
+impl O3Stats {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.insts as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Result: per-instruction commit cycles (aligned with the input trace)
+/// plus aggregate stats.
+#[derive(Clone, Debug)]
+pub struct O3Result {
+    pub commit_cycle: Vec<u64>,
+    pub stats: O3Stats,
+}
+
+/// Sliding per-cycle slot counters (issue and commit bandwidth).
+/// The in-flight window never spans more than a few thousand cycles, so a
+/// power-of-two ring indexed by cycle works; entries are lazily reset.
+struct SlotRing {
+    used: Vec<u32>,
+    stamp: Vec<u64>,
+}
+
+const RING: usize = 1 << 15;
+
+impl SlotRing {
+    fn new() -> Self {
+        SlotRing { used: vec![0; RING], stamp: vec![u64::MAX; RING] }
+    }
+
+    #[inline]
+    fn get(&mut self, cycle: u64) -> u32 {
+        let i = (cycle as usize) & (RING - 1);
+        if self.stamp[i] != cycle {
+            self.stamp[i] = cycle;
+            self.used[i] = 0;
+        }
+        self.used[i]
+    }
+
+    #[inline]
+    fn bump(&mut self, cycle: u64) {
+        let i = (cycle as usize) & (RING - 1);
+        if self.stamp[i] != cycle {
+            self.stamp[i] = cycle;
+            self.used[i] = 0;
+        }
+        self.used[i] += 1;
+    }
+}
+
+/// Completion-time scoreboard over the architectural register file.
+#[derive(Clone, Default)]
+struct Scoreboard {
+    gpr: [u64; 32],
+    fpr: [u64; 32],
+    cr: u64,
+    lr: u64,
+    ctr: u64,
+    xer: u64,
+}
+
+impl Scoreboard {
+    #[inline]
+    fn get(&self, r: RegRef) -> u64 {
+        match r {
+            RegRef::Gpr(i) => self.gpr[i as usize],
+            RegRef::Fpr(i) => self.fpr[i as usize],
+            RegRef::Cr => self.cr,
+            RegRef::Lr => self.lr,
+            RegRef::Ctr => self.ctr,
+            RegRef::Xer => self.xer,
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, r: RegRef, cycle: u64) {
+        match r {
+            RegRef::Gpr(i) => self.gpr[i as usize] = cycle,
+            RegRef::Fpr(i) => self.fpr[i as usize] = cycle,
+            RegRef::Cr => self.cr = cycle,
+            RegRef::Lr => self.lr = cycle,
+            RegRef::Ctr => self.ctr = cycle,
+            RegRef::Xer => self.xer = cycle,
+        }
+    }
+}
+
+/// An in-flight store (for store-to-load forwarding / memory ordering).
+#[derive(Clone, Copy)]
+struct PendingStore {
+    addr: u64,
+    bytes: u64,
+    /// Cycle the store's data+address are available for forwarding.
+    ready: u64,
+    /// Trace index (to know program order).
+    idx: usize,
+}
+
+/// The O3 core. Owns the branch predictor and cache hierarchy so repeated
+/// intervals share warm-up state exactly like a restored gem5 checkpoint.
+pub struct O3Core {
+    pub cfg: O3Config,
+    pub bp: BranchPredictor,
+    pub caches: CacheHierarchy,
+}
+
+impl O3Core {
+    pub fn new(cfg: O3Config) -> Self {
+        let bp = BranchPredictor::new(cfg.bp);
+        let caches = CacheHierarchy::new(cfg.hierarchy);
+        O3Core { cfg, bp, caches }
+    }
+
+    /// Reset microarchitectural state (checkpoint restore starts cold).
+    pub fn reset(&mut self) {
+        self.bp = BranchPredictor::new(self.cfg.bp);
+        self.caches = CacheHierarchy::new(self.cfg.hierarchy);
+    }
+
+    /// Simulate the timing of `trace`; returns per-instruction commit
+    /// cycles (monotone nondecreasing) and stats.
+    pub fn simulate(&mut self, trace: &[TraceRecord]) -> O3Result {
+        let cfg = &self.cfg;
+        let n = trace.len();
+        let mut commit_cycle = vec![0u64; n];
+        let mut stats = O3Stats { insts: n as u64, ..Default::default() };
+
+        let mut sb = Scoreboard::default();
+        let mut issue_slots = SlotRing::new();
+        let mut commit_slots = SlotRing::new();
+        // per-FU-class unit busy-until times
+        let mut fu_busy: Vec<Vec<u64>> = FU_CLASSES
+            .iter()
+            .map(|c| vec![0u64; cfg.units_of(*c)])
+            .collect();
+
+        // occupancy rings: cycle at which the (i - CAP)-th entry frees
+        let mut rob_free_at: Vec<u64> = vec![0; n]; // commit cycle of i
+        let mut iq_free_at: Vec<u64> = vec![0; n]; // issue cycle of i
+        let mut lsq_free_at: Vec<u64> = Vec::new(); // per mem-op release
+        let mut mem_op_of_idx: Vec<usize> = Vec::new(); // trace idx per mem op
+
+        let mut pending_stores: Vec<PendingStore> = Vec::new();
+        // MSHR slots: completion time of each outstanding D-cache miss.
+        let mut mshr_busy: Vec<u64> = vec![0; cfg.mshrs.max(1)];
+        let l1d_hit = cfg.hierarchy.l1d.hit_latency;
+
+        // ---- front-end cursor ----
+        let mut fetch_cycle: u64 = 1;
+        let mut fetched_in_group: usize = 0;
+        let mut cur_line: u64 = u64::MAX;
+        let line_mask = !(cfg.hierarchy.l1i.line_bytes as u64 - 1);
+        let l1i_hit = cfg.hierarchy.l1i.hit_latency;
+        // cycle before which fetch is blocked (mispredict redirect)
+        let mut fetch_blocked_until: u64 = 0;
+
+        let mut last_commit: u64 = 0;
+        let mut mem_ops: usize = 0;
+
+        for (i, rec) in trace.iter().enumerate() {
+            // ================= FETCH =================
+            if fetch_cycle < fetch_blocked_until {
+                fetch_cycle = fetch_blocked_until;
+                fetched_in_group = 0;
+            }
+            let line = rec.pc & line_mask;
+            let new_group = fetched_in_group >= cfg.fetch_width || line != cur_line;
+            if new_group {
+                if fetched_in_group > 0 {
+                    fetch_cycle += 1;
+                }
+                fetched_in_group = 0;
+                if line != cur_line {
+                    cur_line = line;
+                    let lat = self.caches.access(Access::InstFetch, rec.pc);
+                    if lat > l1i_hit {
+                        stats.icache_stall_cycles += lat - l1i_hit;
+                        fetch_cycle += lat - l1i_hit;
+                    }
+                }
+            }
+            fetched_in_group += 1;
+            let my_fetch = fetch_cycle;
+
+            // ================= DISPATCH (rename) =================
+            let mut dispatch = my_fetch + cfg.frontend_depth;
+            // ROB back-pressure: entry (i - rob_entries) must have committed
+            if i >= cfg.rob_entries {
+                let free = rob_free_at[i - cfg.rob_entries];
+                if free + 1 > dispatch {
+                    dispatch = free + 1;
+                    stats.rob_stall_events += 1;
+                }
+            }
+            // IQ back-pressure: entry (i - iq_entries) must have issued
+            if i >= cfg.iq_entries {
+                let free = iq_free_at[i - cfg.iq_entries];
+                if free + 1 > dispatch {
+                    dispatch = free + 1;
+                    stats.iq_stall_events += 1;
+                }
+            }
+            // LSQ back-pressure for memory ops
+            if rec.inst.is_mem() && mem_ops >= cfg.lsq_entries {
+                let free = lsq_free_at[mem_ops - cfg.lsq_entries];
+                if free + 1 > dispatch {
+                    dispatch = free + 1;
+                    stats.lsq_stall_events += 1;
+                }
+            }
+
+            // ================= ISSUE =================
+            // operands ready?
+            let mut ready = dispatch + 1;
+            for src in rec.inst.srcs() {
+                ready = ready.max(sb.get(src));
+            }
+            // loads: wait until older overlapping stores can forward or
+            // have released; conservatively also wait for older store
+            // addresses (they are computed at their `ready`)
+            let class = rec.inst.fu_class();
+            let width = rec.inst.mem_width().map_or(0, |w| w as u64);
+            let mut forwarded = false;
+            if rec.inst.is_load() {
+                if let Some(addr) = rec.mem_addr {
+                    for st in pending_stores.iter().rev() {
+                        if st.idx < i
+                            && addr < st.addr + st.bytes
+                            && st.addr < addr + width
+                        {
+                            ready = ready.max(st.ready);
+                            forwarded = true;
+                            stats.stl_forwards += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // find an issue cycle with a free slot and a free FU unit
+            let units = &mut fu_busy[fu_index(class)];
+            let mut c = ready;
+            let issue = loop {
+                if issue_slots.get(c) < cfg.issue_width as u32 {
+                    if let Some(u) = units.iter_mut().find(|b| **b <= c) {
+                        // unpipelined divider occupies until completion
+                        let occupy = match class {
+                            FuClass::IntDiv => cfg.lat.int_div,
+                            FuClass::FpDiv => cfg.lat.fp_div,
+                            _ => 1,
+                        };
+                        *u = c + occupy;
+                        break c;
+                    }
+                }
+                c += 1;
+            };
+            issue_slots.bump(issue);
+            iq_free_at[i] = issue;
+
+            // ================= EXECUTE / COMPLETE =================
+            let complete = match class {
+                FuClass::Load if !forwarded => {
+                    let lat = self.caches.access(Access::Load, rec.mem_addr.unwrap_or(0));
+                    if lat > l1d_hit {
+                        // miss: needs an MSHR slot — bounds memory-level
+                        // parallelism like a real L1D
+                        let slot =
+                            mshr_busy.iter_mut().min_by_key(|t| **t).unwrap();
+                        let start = issue.max(*slot);
+                        *slot = start + lat;
+                        start + lat
+                    } else {
+                        issue + lat
+                    }
+                }
+                FuClass::Load => issue + cfg.lat.stl_forward,
+                _ => issue + cfg.lat.of(class),
+            };
+
+            // branch resolution
+            if rec.inst.is_branch() {
+                stats.branches += 1;
+                let miss =
+                    self.bp
+                        .predict_and_update(rec.pc, &rec.inst, rec.taken, rec.next_pc);
+                if miss {
+                    stats.mispredicts += 1;
+                    fetch_blocked_until =
+                        fetch_blocked_until.max(complete + cfg.mispredict_penalty);
+                } else if rec.taken {
+                    // correctly-predicted taken branch still ends the group
+                    fetched_in_group = cfg.fetch_width;
+                    cur_line = u64::MAX;
+                }
+            }
+
+            // ================= COMMIT =================
+            let mut cc = (complete + 1).max(last_commit);
+            while commit_slots.get(cc) >= cfg.commit_width as u32 {
+                cc += 1;
+            }
+            commit_slots.bump(cc);
+            commit_cycle[i] = cc;
+            last_commit = cc;
+            rob_free_at[i] = cc;
+
+            // memory bookkeeping
+            if rec.inst.is_mem() {
+                mem_op_of_idx.push(i);
+                if rec.inst.is_store() {
+                    // store releases LSQ at commit; cache written at retire
+                    lsq_free_at.push(cc);
+                    if let Some(addr) = rec.mem_addr {
+                        self.caches.access(Access::Store, addr);
+                        pending_stores.push(PendingStore {
+                            addr,
+                            bytes: width,
+                            ready: complete,
+                            idx: i,
+                        });
+                        // keep the window small: drop stores older than ROB
+                        if pending_stores.len() > cfg.rob_entries {
+                            pending_stores.remove(0);
+                        }
+                    }
+                } else {
+                    lsq_free_at.push(complete);
+                }
+                mem_ops += 1;
+            }
+
+            sb_update(&mut sb, rec, complete);
+        }
+
+        stats.cycles = last_commit;
+        O3Result { commit_cycle, stats }
+    }
+}
+
+const FU_CLASSES: [FuClass; 11] = [
+    FuClass::IntAlu,
+    FuClass::IntMul,
+    FuClass::IntDiv,
+    FuClass::Load,
+    FuClass::Store,
+    FuClass::FpAdd,
+    FuClass::FpMul,
+    FuClass::FpDiv,
+    FuClass::FpFma,
+    FuClass::Branch,
+    FuClass::Nop,
+];
+
+#[inline]
+fn fu_index(c: FuClass) -> usize {
+    FU_CLASSES.iter().position(|x| *x == c).unwrap()
+}
+
+#[inline]
+fn sb_update(sb: &mut Scoreboard, rec: &TraceRecord, complete: u64) {
+    for dst in rec.inst.dsts() {
+        sb.set(dst, complete);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::AtomicCpu;
+    use crate::isa::Assembler;
+
+    fn trace_of(build: impl FnOnce(&mut Assembler)) -> Vec<TraceRecord> {
+        let mut a = Assembler::new(0x1000);
+        build(&mut a);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        cpu.run_trace(1_000_000)
+    }
+
+    fn simulate(trace: &[TraceRecord]) -> O3Result {
+        O3Core::new(O3Config::default()).simulate(trace)
+    }
+
+    #[test]
+    fn commit_cycles_monotone() {
+        let t = trace_of(|a| {
+            a.li(1, 100);
+            a.mtctr(1);
+            let top = a.here();
+            a.addi(2, 2, 1);
+            a.mullw(3, 2, 2);
+            a.bdnz(top);
+        });
+        let r = simulate(&t);
+        for w in r.commit_cycle.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert_eq!(r.stats.insts, t.len() as u64);
+        assert_eq!(r.stats.cycles, *r.commit_cycle.last().unwrap());
+    }
+
+    /// A hot loop repeating `body` `iters` times (keeps the I-cache warm so
+    /// the back-end property under test dominates).
+    fn loop_trace(iters: i32, body: impl Fn(&mut Assembler)) -> Vec<TraceRecord> {
+        trace_of(|a| {
+            a.li(31, iters);
+            a.mtctr(31);
+            let top = a.here();
+            body(a);
+            a.bdnz(top);
+        })
+    }
+
+    #[test]
+    fn commit_width_bounds_throughput() {
+        // independent ALU work: wide core reaches high IPC, 1-wide commits 1/cycle
+        let t = loop_trace(300, |a| {
+            for k in 0..7u8 {
+                a.addi(1 + k, 1 + k, 1);
+            }
+        });
+        let base = simulate(&t);
+        let mut narrow_cfg = O3Config::default();
+        narrow_cfg.commit_width = 1;
+        let narrow = O3Core::new(narrow_cfg).simulate(&t);
+        assert!(base.stats.ipc() > 2.0, "wide core should exceed IPC 2, got {}", base.stats.ipc());
+        assert!(narrow.stats.ipc() <= 1.01, "1-wide IPC {}", narrow.stats.ipc());
+        assert!(narrow.stats.cycles > base.stats.cycles);
+    }
+
+    #[test]
+    fn dependence_chain_serializes() {
+        // chained adds: each depends on the previous -> IPC ~1
+        let t = loop_trace(100, |a| {
+            for _ in 0..8 {
+                a.add(1, 1, 1);
+            }
+        });
+        let r = simulate(&t);
+        assert!(r.stats.ipc() < 1.5, "dependent chain IPC {}", r.stats.ipc());
+
+        // independent adds across 8 registers -> much higher IPC
+        let t2 = loop_trace(100, |a| {
+            for k in 0..8u8 {
+                a.addi(1 + k, 1 + k, 1);
+            }
+        });
+        let r2 = simulate(&t2);
+        assert!(
+            r2.stats.ipc() > 1.8 * r.stats.ipc(),
+            "ILP should raise IPC: {} vs {}",
+            r2.stats.ipc(),
+            r.stats.ipc()
+        );
+    }
+
+    #[test]
+    fn divider_is_unpipelined_structural_hazard() {
+        let t = trace_of(|a| {
+            a.li(1, 1000);
+            a.li(2, 3);
+            for k in 0..50u8 {
+                a.divd(10 + (k % 8), 1, 2);
+            }
+        });
+        let r = simulate(&t);
+        // 50 divides on 1 unpipelined unit at 16 cycles each >= 800 cycles
+        assert!(r.stats.cycles >= 700, "cycles {}", r.stats.cycles);
+    }
+
+    #[test]
+    fn dcache_miss_costs_show_up() {
+        // pointer-stride loads over a range far larger than L2
+        let t = trace_of(|a| {
+            a.load_imm64(1, 0x100000);
+            a.li(2, 0);
+            a.li(3, 2000);
+            a.mtctr(3);
+            let top = a.here();
+            a.ldx(4, 1, 2);
+            a.addi(2, 2, 4096); // new page every time: all misses
+            a.bdnz(top);
+        });
+        let r_cold = simulate(&t);
+
+        // same count of L1-hitting loads
+        let t2 = trace_of(|a| {
+            a.load_imm64(1, 0x100000);
+            a.li(3, 2000);
+            a.mtctr(3);
+            let top = a.here();
+            a.ld(4, 0, 1);
+            a.bdnz(top);
+        });
+        let r_hot = simulate(&t2);
+        assert!(
+            r_cold.stats.cycles > 5 * r_hot.stats.cycles,
+            "misses {} vs hits {}",
+            r_cold.stats.cycles,
+            r_hot.stats.cycles
+        );
+    }
+
+    #[test]
+    fn mispredicts_cost_cycles() {
+        // data-dependent unpredictable branches (xorshift parity)
+        let t = trace_of(|a| {
+            a.li(1, 12345);
+            a.li(5, 0);
+            a.li(3, 400);
+            a.mtctr(3);
+            let top = a.here();
+            // xorshift step
+            a.sldi(2, 1, 13);
+            a.xor(1, 1, 2);
+            a.srdi(2, 1, 7);
+            a.xor(1, 1, 2);
+            a.andi(4, 1, 1);
+            a.cmpi(4, 0);
+            let skip = a.label();
+            a.beq(skip);
+            a.addi(5, 5, 1);
+            a.bind(skip);
+            a.bdnz(top);
+        });
+        let r = simulate(&t);
+        assert!(r.stats.branches > 400);
+        let rate = r.stats.mispredicts as f64 / r.stats.branches as f64;
+        assert!(rate > 0.1, "unpredictable branch rate {rate}");
+
+        // perfectly-biased loop branch: low mispredict rate
+        let t2 = trace_of(|a| {
+            a.li(3, 800);
+            a.mtctr(3);
+            let top = a.here();
+            a.addi(1, 1, 1);
+            a.bdnz(top);
+        });
+        let mut core = O3Core::new(O3Config::default());
+        let r2 = core.simulate(&t2);
+        let rate2 = r2.stats.mispredicts as f64 / r2.stats.branches as f64;
+        assert!(rate2 < 0.05, "biased branch rate {rate2}");
+        assert!(r.stats.cycles as f64 / t.len() as f64
+                > r2.stats.cycles as f64 / t2.len() as f64);
+    }
+
+    #[test]
+    fn store_load_forwarding_beats_cache() {
+        let t = trace_of(|a| {
+            a.load_imm64(1, 0x50000);
+            a.li(3, 300);
+            a.mtctr(3);
+            let top = a.here();
+            a.std(2, 0, 1);
+            a.ld(4, 0, 1); // same address: forward
+            a.addi(2, 4, 1);
+            a.bdnz(top);
+        });
+        let r = simulate(&t);
+        assert!(r.stats.stl_forwards >= 300);
+    }
+
+    #[test]
+    fn smaller_rob_never_faster() {
+        let t = trace_of(|a| {
+            a.load_imm64(1, 0x80000);
+            a.li(3, 500);
+            a.mtctr(3);
+            let top = a.here();
+            a.ldx(4, 1, 2);
+            a.addi(2, 2, 4096);
+            a.fadd(1, 1, 1);
+            a.fadd(2, 2, 2);
+            a.bdnz(top);
+        });
+        let base = simulate(&t);
+        let mut small = O3Config::default();
+        small.rob_entries = 16;
+        let r_small = O3Core::new(small).simulate(&t);
+        assert!(r_small.stats.cycles >= base.stats.cycles);
+        assert!(r_small.stats.rob_stall_events > 0);
+    }
+
+    #[test]
+    fn table3_configs_all_run_and_differ() {
+        let t = trace_of(|a| {
+            a.li(3, 200);
+            a.mtctr(3);
+            let top = a.here();
+            for k in 0..6u8 {
+                a.addi(10 + k, 10 + k, 1);
+            }
+            a.mullw(20, 10, 11);
+            a.bdnz(top);
+        });
+        let mut cycles = Vec::new();
+        for (_, cfg) in O3Config::table3_rows() {
+            cycles.push(O3Core::new(cfg).simulate(&t).stats.cycles);
+        }
+        // narrower fetch must not be faster than baseline
+        assert!(cycles[1] >= cycles[0]);
+        assert!(cycles[2] >= cycles[0]);
+        assert!(cycles[3] >= cycles[0]);
+    }
+
+    #[test]
+    fn iq_pressure_stalls_small_queue() {
+        // long-latency divides pile up in the IQ; a tiny IQ must stall
+        let t = loop_trace(100, |a| {
+            a.divd(10, 1, 2);
+            for k in 0..6u8 {
+                a.addi(11 + k, 11 + k, 1);
+            }
+        });
+        let mut small = O3Config::default();
+        small.iq_entries = 4;
+        let r_small = O3Core::new(small).simulate(&t);
+        let r_base = simulate(&t);
+        assert!(r_small.stats.iq_stall_events > 0);
+        assert!(r_small.stats.cycles >= r_base.stats.cycles);
+    }
+
+    #[test]
+    fn lsq_pressure_stalls_memory_streams() {
+        let t = loop_trace(200, |a| {
+            for k in 0..6 {
+                a.ld(4, k * 8, 1);
+            }
+            a.std(4, 128, 1);
+        });
+        let mut small = O3Config::default();
+        small.lsq_entries = 2;
+        let r_small = O3Core::new(small).simulate(&t);
+        assert!(r_small.stats.lsq_stall_events > 0);
+    }
+
+    #[test]
+    fn mshr_limit_serializes_misses() {
+        // independent misses to fresh pages: 1 MSHR must be much slower
+        // than the default 8
+        let t = loop_trace(400, |a| {
+            a.ldx(4, 1, 2);
+            a.addi(2, 2, 4096);
+        });
+        let mut one = O3Config::default();
+        one.mshrs = 1;
+        let r_one = O3Core::new(one).simulate(&t);
+        let r_eight = simulate(&t);
+        assert!(
+            r_one.stats.cycles as f64 > 1.5 * r_eight.stats.cycles as f64,
+            "1 MSHR {} vs 8 MSHRs {}",
+            r_one.stats.cycles,
+            r_eight.stats.cycles
+        );
+    }
+
+    #[test]
+    fn icache_stalls_counted_on_cold_code() {
+        let t = trace_of(|a| {
+            for _ in 0..200 {
+                a.nop();
+            }
+        });
+        let r = simulate(&t);
+        assert!(r.stats.icache_stall_cycles > 0, "cold straight-line code");
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let t = trace_of(|a| {
+            a.load_imm64(1, 0x90000);
+            for _ in 0..50 {
+                a.ld(2, 0, 1);
+            }
+        });
+        let mut core = O3Core::new(O3Config::default());
+        let cold = core.simulate(&t).stats.cycles;
+        let warm = core.simulate(&t).stats.cycles;
+        core.reset();
+        let cold2 = core.simulate(&t).stats.cycles;
+        assert!(warm <= cold);
+        assert_eq!(cold, cold2);
+    }
+}

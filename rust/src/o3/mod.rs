@@ -1,0 +1,27 @@
+//! The cycle-level out-of-order superscalar timing model — CAPSim's
+//! analogue of the paper's gem5-built O3 Power8 simulator (Fig. 1, left).
+//!
+//! Two roles, exactly as in the paper:
+//!
+//! 1. **golden label generator** — per-instruction *commit cycles* feed
+//!    Algorithm 1 (the slicer) as clip execution times;
+//! 2. **speed baseline** — "gem5 mode" restores every SimPoint checkpoint
+//!    through this model, which is what CAPSim's Fig.-7 speedup is measured
+//!    against.
+//!
+//! The model is trace-driven: the functional simulator supplies the dynamic
+//! instruction stream (so there is no wrong-path fetch); timing honesty
+//! comes from modelling the front end (fetch groups, I-cache, gshare+BTB+RAS
+//! prediction with mispredict redirect), the out-of-order window (ROB / IQ /
+//! LSQ occupancy, register dependences, FU structural hazards, issue width)
+//! and the in-order back end (commit width, store release at retire).
+//! Table III's four knobs — FetchWidth, IssueWidth, CommitWidth, ROBEntry —
+//! are first-class [`O3Config`] fields.
+
+pub mod branch_pred;
+pub mod config;
+pub mod core;
+
+pub use branch_pred::{BranchPredictor, BpConfig, BpStats};
+pub use config::{FuPool, Latencies, O3Config};
+pub use core::{O3Core, O3Result, O3Stats};

@@ -1,0 +1,124 @@
+//! Padding clip samples into the fixed-shape batches the AOT model expects.
+
+use crate::dataset::{ClipSample, Dataset};
+use crate::runtime::{Batch, ModelGeometry};
+
+/// Assemble one batch of capacity `b` from `samples` (at most `b` of them).
+/// Rows beyond `samples.len()` stay zero-masked padding.
+pub fn build_batch(samples: &[&ClipSample], b: usize, g: &ModelGeometry) -> Batch {
+    assert!(samples.len() <= b);
+    let mut batch = Batch::zeroed(b, g);
+    batch.live = samples.len();
+    let row_tokens = g.l_clip * g.l_token;
+    for (r, s) in samples.iter().enumerate() {
+        let n = s.len as usize;
+        debug_assert!(n <= g.l_clip);
+        // tokens + token mask (a token is live unless it's <PAD>=0)
+        for i in 0..n {
+            for t in 0..g.l_token {
+                let tok = s.tokens[i * g.l_token + t];
+                batch.tokens[r * row_tokens + i * g.l_token + t] = tok as i32;
+                if t == 0 || tok != 0 {
+                    batch.tok_mask[r * row_tokens + i * g.l_token + t] = 1.0;
+                }
+            }
+            batch.clip_mask[r * g.l_clip + i] = 1.0;
+        }
+        for (m, &t) in s.ctx.iter().enumerate() {
+            batch.ctx[r * g.m_rows + m] = t as i32;
+        }
+        batch.target[r] = s.time.max(1.0);
+    }
+    batch
+}
+
+/// Split `idx` (indices into `ds`) into batches of capacity `b`.
+pub fn build_batches(ds: &Dataset, idx: &[usize], b: usize, g: &ModelGeometry) -> Vec<Batch> {
+    idx.chunks(b)
+        .map(|chunk| {
+            let refs: Vec<&ClipSample> = chunk.iter().map(|&i| &ds.samples[i]).collect();
+            build_batch(&refs, b, g)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geometry() -> ModelGeometry {
+        ModelGeometry {
+            vocab_size: 512,
+            embed_dim: 64,
+            l_token: 4,
+            l_clip: 8,
+            m_rows: 9,
+            train_batch: 4,
+            fwd_batch_sizes: vec![1, 4],
+        }
+    }
+
+    fn sample(len: u16, fill: u16) -> ClipSample {
+        ClipSample {
+            tokens: (0..len as usize * 4)
+                .map(|i| if i % 4 == 3 { 0 } else { fill })
+                .collect(),
+            len,
+            ctx: vec![9; 9],
+            time: 42.0,
+            key: 1,
+            bench: 0,
+        }
+    }
+
+    #[test]
+    fn masks_follow_shape() {
+        let g = geometry();
+        let s = sample(3, 5);
+        let b = build_batch(&[&s], 4, &g);
+        assert_eq!(b.live, 1);
+        // 3 live instructions
+        let cm: f32 = b.clip_mask[..8].iter().sum();
+        assert_eq!(cm, 3.0);
+        // row 0 inst 0: tokens [5,5,5,0] -> mask [1,1,1,0]... except t==0 always 1
+        assert_eq!(&b.tok_mask[..4], &[1.0, 1.0, 1.0, 0.0]);
+        // padding rows all zero
+        assert!(b.clip_mask[8..].iter().all(|&x| x == 0.0));
+        assert!(b.tokens[3 * 8 * 4..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn rep_position_always_live() {
+        let g = geometry();
+        // token 0 at position 0 should still be masked-in (it's <REP>'s slot;
+        // standardize always puts <REP>=1 there, but the mask rule protects
+        // even degenerate rows)
+        let mut s = sample(1, 0);
+        s.tokens = vec![0, 0, 0, 0];
+        let b = build_batch(&[&s], 1, &g);
+        assert_eq!(b.tok_mask[0], 1.0);
+    }
+
+    #[test]
+    fn target_clamped_positive() {
+        let g = geometry();
+        let mut s = sample(2, 3);
+        s.time = 0.0;
+        let b = build_batch(&[&s], 1, &g);
+        assert_eq!(b.target[0], 1.0);
+    }
+
+    #[test]
+    fn batches_cover_all_indices() {
+        let g = geometry();
+        let mut ds = Dataset::new(4, 8, 9);
+        for i in 0..10 {
+            ds.push(sample(2 + (i % 3) as u16, i as u16 + 1));
+        }
+        let idx: Vec<usize> = (0..10).collect();
+        let bs = build_batches(&ds, &idx, 4, &g);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].live, 4);
+        assert_eq!(bs[2].live, 2);
+    }
+}

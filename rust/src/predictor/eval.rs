@@ -1,0 +1,59 @@
+//! Evaluation: batched inference over a dataset subset, MAPE / accuracy
+//! (paper Eq. 11 and the "accuracy = 1 − MAPE" convention of §VI-D).
+
+use anyhow::Result;
+
+use crate::dataset::{ClipSample, Dataset};
+use crate::runtime::ModelHandle;
+use crate::util::stats;
+
+use super::batcher::build_batch;
+
+/// Evaluation result over a subset.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub mape: f64,
+    pub accuracy_pct: f64,
+    pub n: usize,
+    pub predictions: Vec<f64>,
+    pub targets: Vec<f64>,
+}
+
+/// Predict every sample in `idx` (batched with the largest compiled fwd).
+pub fn predict_all(
+    model: &ModelHandle,
+    ds: &Dataset,
+    idx: &[usize],
+    time_scale: f32,
+) -> Result<Vec<f64>> {
+    let g = model.geometry.clone();
+    let b = model.max_fwd_batch();
+    let mut out = Vec::with_capacity(idx.len());
+    for chunk in idx.chunks(b) {
+        let refs: Vec<&ClipSample> = chunk.iter().map(|&i| &ds.samples[i]).collect();
+        let cap = model.pick_fwd_batch(refs.len());
+        let batch = build_batch(&refs, cap, &g);
+        let pred = model.forward(&batch, time_scale)?;
+        out.extend(pred.iter().map(|&p| p as f64));
+    }
+    Ok(out)
+}
+
+/// Evaluate MAPE/accuracy of `model` over `idx`.
+pub fn evaluate(
+    model: &ModelHandle,
+    ds: &Dataset,
+    idx: &[usize],
+    time_scale: f32,
+) -> Result<EvalResult> {
+    let predictions = predict_all(model, ds, idx, time_scale)?;
+    let targets: Vec<f64> = idx.iter().map(|&i| ds.samples[i].time as f64).collect();
+    let mape = stats::mape(&predictions, &targets);
+    Ok(EvalResult {
+        mape,
+        accuracy_pct: 100.0 * (1.0 - mape),
+        n: idx.len(),
+        predictions,
+        targets,
+    })
+}

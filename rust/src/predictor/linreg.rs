@@ -1,0 +1,229 @@
+//! The traditional-ML baseline: linear regression over hand-crafted clip
+//! features (paper §II-C cites regression CPI models [20][21][22]; this is
+//! the natively-implemented comparator for the Fig. 10 discussion).
+//!
+//! Features per clip: instruction-class mix (share of loads, stores, FP,
+//! branches, mul/div), clip length, and distinct-register pressure — the
+//! classic ingredients of regression CPI models. Fit by ridge-regularized
+//! normal equations (Gaussian elimination; no LAPACK offline).
+
+use crate::dataset::{ClipSample, Dataset};
+use crate::isa::inst::FuClass;
+use crate::tokenizer::Vocab;
+
+const NUM_FEATURES: usize = 9;
+
+/// Extract the feature vector of one clip from its *tokens* (the baseline
+/// sees exactly the same standardized input as the neural predictors).
+fn features(s: &ClipSample, l_token: usize) -> [f64; NUM_FEATURES] {
+    let n = s.len as usize;
+    let mut loads = 0.0;
+    let mut stores = 0.0;
+    let mut fp = 0.0;
+    let mut branches = 0.0;
+    let mut muldiv = 0.0;
+    let mut regs = std::collections::HashSet::new();
+    for i in 0..n {
+        // token 2 of each standardized row is the opcode token
+        let op_tok = s.tokens[i * l_token + 2];
+        if let Some(op) = opcode_of_token(op_tok) {
+            let inst = crate::isa::Inst::new(op, 0, 0, 0, 0);
+            match inst.fu_class() {
+                FuClass::Load => loads += 1.0,
+                FuClass::Store => stores += 1.0,
+                FuClass::FpAdd | FuClass::FpMul | FuClass::FpDiv | FuClass::FpFma => {
+                    fp += 1.0
+                }
+                FuClass::Branch => branches += 1.0,
+                FuClass::IntMul | FuClass::IntDiv => muldiv += 1.0,
+                _ => {}
+            }
+        }
+        for t in 0..l_token {
+            let tok = s.tokens[i * l_token + t];
+            // register tokens sit between the opcodes and the byte values
+            if !Vocab::name(tok).starts_with('<') {
+                regs.insert(tok);
+            }
+        }
+    }
+    let nf = n as f64;
+    [
+        1.0, // intercept
+        nf,
+        loads / nf,
+        stores / nf,
+        fp / nf,
+        branches / nf,
+        muldiv / nf,
+        regs.len() as f64 / 16.0,
+        (loads + stores) / nf * branches / nf, // mem-control interaction
+    ]
+}
+
+fn opcode_of_token(tok: u16) -> Option<crate::isa::Opcode> {
+    use crate::isa::inst::ALL_OPCODES;
+    for op in ALL_OPCODES {
+        if Vocab::opcode(op) == tok {
+            return Some(op);
+        }
+    }
+    None
+}
+
+/// The fitted model.
+#[derive(Clone, Debug)]
+pub struct LinRegBaseline {
+    pub weights: [f64; NUM_FEATURES],
+    l_token: usize,
+}
+
+impl LinRegBaseline {
+    /// Fit on `idx` of `ds` with ridge parameter `lambda`.
+    pub fn fit(ds: &Dataset, idx: &[usize], lambda: f64) -> LinRegBaseline {
+        let mut xtx = [[0.0f64; NUM_FEATURES]; NUM_FEATURES];
+        let mut xty = [0.0f64; NUM_FEATURES];
+        for &i in idx {
+            let x = features(&ds.samples[i], ds.l_token);
+            let y = ds.samples[i].time as f64;
+            for a in 0..NUM_FEATURES {
+                for b in 0..NUM_FEATURES {
+                    xtx[a][b] += x[a] * x[b];
+                }
+                xty[a] += x[a] * y;
+            }
+        }
+        for (a, row) in xtx.iter_mut().enumerate() {
+            row[a] += lambda;
+        }
+        let weights = solve(xtx, xty);
+        LinRegBaseline { weights, l_token: ds.l_token }
+    }
+
+    pub fn predict(&self, s: &ClipSample) -> f64 {
+        let x = features(s, self.l_token);
+        let y: f64 = x.iter().zip(&self.weights).map(|(a, b)| a * b).sum();
+        y.max(1.0)
+    }
+
+    pub fn mape(&self, ds: &Dataset, idx: &[usize]) -> f64 {
+        let pred: Vec<f64> = idx.iter().map(|&i| self.predict(&ds.samples[i])).collect();
+        let fact: Vec<f64> = idx.iter().map(|&i| ds.samples[i].time as f64).collect();
+        crate::util::stats::mape(&pred, &fact)
+    }
+}
+
+/// Gaussian elimination with partial pivoting for the small normal system.
+fn solve(
+    mut a: [[f64; NUM_FEATURES]; NUM_FEATURES],
+    mut b: [f64; NUM_FEATURES],
+) -> [f64; NUM_FEATURES] {
+    let n = NUM_FEATURES;
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-12 {
+            continue; // singular direction; ridge term normally prevents this
+        }
+        for r in col + 1..n {
+            let f = a[r][col] / d;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; NUM_FEATURES];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for c in col + 1..n {
+            s -= a[col][c] * x[c];
+        }
+        x[col] = if a[col][col].abs() < 1e-12 { 0.0 } else { s / a[col][col] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ClipSample;
+    use crate::isa::{Inst, Opcode};
+    use crate::tokenizer::standardize::{has_const, standardize};
+
+    const LT: usize = 16;
+
+    fn clip_of(ops: &[Opcode], time: f32) -> ClipSample {
+        let mut tokens = Vec::new();
+        for &op in ops {
+            let inst = Inst::new(op, 1, 2, 3, 0);
+            tokens.extend(standardize(&inst, has_const(&inst), LT));
+        }
+        ClipSample {
+            len: ops.len() as u16,
+            tokens,
+            ctx: vec![0; 90],
+            time,
+            key: 0,
+            bench: 0,
+        }
+    }
+
+    fn toy_dataset() -> Dataset {
+        // ground truth: time = 5 + 3*loads + 1*alu (learnable linearly)
+        let mut ds = Dataset::new(LT, 32, 90);
+        for loads in 0..6u32 {
+            for alus in 1..6u32 {
+                let mut ops = vec![Opcode::Ld; loads as usize];
+                ops.extend(vec![Opcode::Add; alus as usize]);
+                let t = 5.0 + 3.0 * loads as f32 + alus as f32;
+                ds.push(clip_of(&ops, t));
+            }
+        }
+        ds
+    }
+
+    #[test]
+    fn fits_linear_ground_truth() {
+        let ds = toy_dataset();
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let m = LinRegBaseline::fit(&ds, &idx, 1e-6);
+        let mape = m.mape(&ds, &idx);
+        assert!(mape < 0.08, "linear target should fit well, MAPE {mape}");
+    }
+
+    #[test]
+    fn predicts_monotone_in_loads() {
+        let ds = toy_dataset();
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let m = LinRegBaseline::fit(&ds, &idx, 1e-6);
+        let few = m.predict(&clip_of(&[Opcode::Ld, Opcode::Add, Opcode::Add], 0.0));
+        let many = m.predict(&clip_of(
+            &[Opcode::Ld, Opcode::Ld, Opcode::Ld, Opcode::Ld, Opcode::Add, Opcode::Add],
+            0.0,
+        ));
+        assert!(many > few);
+    }
+
+    #[test]
+    fn solver_handles_identity() {
+        let mut a = [[0.0; NUM_FEATURES]; NUM_FEATURES];
+        let mut b = [0.0; NUM_FEATURES];
+        for i in 0..NUM_FEATURES {
+            a[i][i] = 2.0;
+            b[i] = 4.0 * i as f64;
+        }
+        let x = solve(a, b);
+        for (i, v) in x.iter().enumerate() {
+            assert!((v - 2.0 * i as f64).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The predictor driver: batching clips into the AOT entry points, the
+//! SGD training loop (paper §VI-B), evaluation (MAPE / accuracy), and a
+//! native linear-regression CPI baseline (the "traditional ML" comparison
+//! the related-work section describes [20][21]).
+
+pub mod batcher;
+pub mod eval;
+pub mod linreg;
+pub mod train;
+
+pub use batcher::{build_batch, build_batches};
+pub use eval::{evaluate, predict_all, EvalResult};
+pub use linreg::LinRegBaseline;
+pub use train::{train, TrainLog, TrainParams};

@@ -1,0 +1,132 @@
+//! The training driver: Rust orchestrates SGD through the AOT train step
+//! (paper §VI-B: SGD, lr 1e-3, momentum 0.9, MAPE loss; the Fig. 9 loss
+//! curves come straight out of [`TrainLog`]).
+
+use anyhow::Result;
+
+use crate::dataset::Dataset;
+use crate::runtime::ModelHandle;
+use crate::util::Rng;
+
+use super::batcher::build_batches;
+use super::eval::evaluate;
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainParams {
+    /// Total SGD steps (minibatches, not epochs).
+    pub steps: usize,
+    pub lr: f32,
+    /// Evaluate on the validation split every this many steps.
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Stop early if validation MAPE fails to improve this many evals.
+    pub patience: usize,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        TrainParams { steps: 300, lr: 1e-3, eval_every: 25, seed: 7, patience: 1_000 }
+    }
+}
+
+/// The Fig.-9 record: training and validation loss over steps.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// (step, minibatch training loss)
+    pub train_loss: Vec<(usize, f32)>,
+    /// (step, validation MAPE)
+    pub val_loss: Vec<(usize, f64)>,
+    pub time_scale: f32,
+    pub steps_run: usize,
+}
+
+impl TrainLog {
+    /// Smoothed (windowed mean) training loss — the plotted Fig. 9 curve.
+    pub fn smoothed_train(&self, window: usize) -> Vec<(usize, f64)> {
+        let w = window.max(1);
+        self.train_loss
+            .chunks(w)
+            .map(|c| {
+                let step = c.last().unwrap().0;
+                let mean = c.iter().map(|p| p.1 as f64).sum::<f64>() / c.len() as f64;
+                (step, mean)
+            })
+            .collect()
+    }
+}
+
+/// Train `model` on `train_idx` of `ds`, validating on `val_idx`.
+pub fn train(
+    model: &mut ModelHandle,
+    ds: &Dataset,
+    train_idx: &[usize],
+    val_idx: &[usize],
+    p: &TrainParams,
+) -> Result<TrainLog> {
+    let tb = model
+        .train_batch()
+        .ok_or_else(|| anyhow::anyhow!("variant has no train step"))?;
+    let g = model.geometry.clone();
+    let time_scale = ds.subset(train_idx).mean_time() as f32;
+
+    anyhow::ensure!(!train_idx.is_empty(), "empty training split");
+    let mut log = TrainLog { time_scale, ..Default::default() };
+    let mut rng = Rng::new(p.seed);
+    let mut order: Vec<usize> = train_idx.to_vec();
+    let mut cursor = order.len(); // force initial shuffle
+    let mut best_val = f64::INFINITY;
+    let mut bad_evals = 0usize;
+
+    for step in 0..p.steps {
+        // draw exactly `tb` indices, reshuffling at epoch boundaries so
+        // every batch is full (partial batches would let the zero-padding
+        // rows pollute the MAPE gradient)
+        let mut chunk = Vec::with_capacity(tb);
+        while chunk.len() < tb {
+            if cursor >= order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let take = (tb - chunk.len()).min(order.len() - cursor);
+            chunk.extend_from_slice(&order[cursor..cursor + take]);
+            cursor += take;
+        }
+        let batch = build_batches(ds, &chunk, tb, &g).pop().unwrap();
+        let loss = model.train_step(&batch, p.lr, time_scale)?;
+        log.train_loss.push((step, loss));
+        log.steps_run = step + 1;
+
+        if !val_idx.is_empty() && (step + 1) % p.eval_every == 0 {
+            let ev = evaluate(model, ds, val_idx, time_scale)?;
+            log.val_loss.push((step, ev.mape));
+            if ev.mape < best_val - 1e-4 {
+                best_val = ev.mape;
+                bad_evals = 0;
+            } else {
+                bad_evals += 1;
+                if bad_evals >= p.patience {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_windows() {
+        let log = TrainLog {
+            train_loss: (0..10).map(|i| (i, i as f32)).collect(),
+            ..Default::default()
+        };
+        let s = log.smoothed_train(5);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], (4, 2.0));
+        assert_eq!(s[1], (9, 7.0));
+    }
+}

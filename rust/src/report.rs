@@ -1,0 +1,189 @@
+//! Table and series emitters: every bench prints the paper's rows through
+//! these (ASCII for the console, CSV next to it for plotting).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {:<w$} |", c, w = w);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers, &widths);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep, &widths);
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    /// Render as CSV (quoted only when needed).
+    pub fn csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(esc).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(esc).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and also save CSV under `reports/<name>.csv`.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.ascii());
+        let dir = Path::new("reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{name}.csv")), self.csv());
+        }
+    }
+}
+
+/// A named (x, y) series — figure data (loss curves, distributions).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// CSV with `x,<name>` header.
+    pub fn csv(&self) -> String {
+        let mut out = format!("x,{}\n", self.name);
+        for (x, y) in &self.points {
+            let _ = writeln!(out, "{x},{y}");
+        }
+        out
+    }
+
+    /// A crude console sparkline (log-friendly visualization of a curve).
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let ys: Vec<f64> = self.points.iter().map(|p| p.1).collect();
+        let (lo, hi) = ys
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &y| {
+                (l.min(y), h.max(y))
+            });
+        let n = ys.len();
+        let step = (n as f64 / width as f64).max(1.0);
+        let mut s = String::new();
+        let mut i = 0.0;
+        while (i as usize) < n && s.chars().count() < width {
+            let y = ys[i as usize];
+            let t = if hi > lo { (y - lo) / (hi - lo) } else { 0.5 };
+            s.push(BARS[((t * 7.0).round() as usize).min(7)]);
+            i += step;
+        }
+        s
+    }
+
+    pub fn emit(&self, name: &str) {
+        println!("{}: {}", self.name, self.sparkline(60));
+        let dir = Path::new("reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{name}.csv")), self.csv());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_aligns_columns() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(vec!["short".into(), "1".into()]);
+        t.row(vec!["a-much-longer-name".into(), "22".into()]);
+        let s = t.ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].contains("name"));
+        // all body lines same width
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn series_sparkline_monotone() {
+        let mut s = Series::new("loss");
+        for i in 0..100 {
+            s.push(i as f64, 100.0 - i as f64);
+        }
+        let sl = s.sparkline(20);
+        assert_eq!(sl.chars().count(), 20);
+        assert!(sl.starts_with('█'));
+        assert!(sl.ends_with('▁'));
+    }
+}

@@ -1,0 +1,173 @@
+//! `artifacts/manifest.json` — the AOT contract written by `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Model geometry shared by every variant (from `model_config.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelGeometry {
+    pub vocab_size: usize,
+    pub embed_dim: usize,
+    pub l_token: usize,
+    pub l_clip: usize,
+    pub m_rows: usize,
+    pub train_batch: usize,
+    pub fwd_batch_sizes: Vec<usize>,
+}
+
+/// One exported predictor variant.
+#[derive(Clone, Debug)]
+pub struct VariantManifest {
+    pub param_size: usize,
+    pub init_file: String,
+    /// batch size -> fwd HLO file.
+    pub fwd_files: BTreeMap<usize, String>,
+    /// batch size -> train HLO file.
+    pub train_files: BTreeMap<usize, String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub geometry: ModelGeometry,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Manifest> {
+        let cfg = doc.get("config");
+        let need = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing config.{k}"))
+        };
+        let geometry = ModelGeometry {
+            vocab_size: need(cfg, "vocab_size")?,
+            embed_dim: need(cfg, "embed_dim")?,
+            l_token: need(cfg, "l_token")?,
+            l_clip: need(cfg, "l_clip")?,
+            m_rows: doc
+                .get("m_rows")
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing m_rows"))?,
+            train_batch: need(cfg, "train_batch")?,
+            fwd_batch_sizes: cfg
+                .get("fwd_batch_sizes")
+                .as_arr()
+                .ok_or_else(|| anyhow!("missing fwd_batch_sizes"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+        };
+
+        let mut variants = BTreeMap::new();
+        let vs = doc
+            .get("variants")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing variants"))?;
+        for (name, v) in vs {
+            let files = v.get("files");
+            let mut fwd_files = BTreeMap::new();
+            if let Some(o) = files.get("fwd").as_obj() {
+                for (b, f) in o {
+                    fwd_files.insert(
+                        b.parse::<usize>().context("fwd batch key")?,
+                        f.as_str().unwrap_or_default().to_string(),
+                    );
+                }
+            }
+            let mut train_files = BTreeMap::new();
+            if let Some(o) = files.get("train").as_obj() {
+                for (b, f) in o {
+                    train_files.insert(
+                        b.parse::<usize>().context("train batch key")?,
+                        f.as_str().unwrap_or_default().to_string(),
+                    );
+                }
+            }
+            let init_file = files
+                .get("init")
+                .as_str()
+                .ok_or_else(|| anyhow!("variant {name} missing init"))?
+                .to_string();
+            let param_size = v
+                .get("param_size")
+                .as_usize()
+                .ok_or_else(|| anyhow!("variant {name} missing param_size"))?;
+            if fwd_files.is_empty() {
+                bail!("variant {name} has no fwd entry points");
+            }
+            variants.insert(
+                name.clone(),
+                VariantManifest { param_size, init_file, fwd_files, train_files },
+            );
+        }
+        Ok(Manifest { geometry, variants })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        json::parse(
+            r#"{
+              "config": {"vocab_size": 512, "embed_dim": 64, "l_token": 16,
+                         "l_clip": 32, "train_batch": 32,
+                         "fwd_batch_sizes": [1, 8, 32]},
+              "m_rows": 90,
+              "variants": {
+                "capsim": {
+                  "param_size": 190721,
+                  "files": {"init": "capsim_init.hlo.txt",
+                            "fwd": {"1": "f1", "8": "f8", "32": "f32"},
+                            "train": {"32": "t32"}}
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_geometry_and_variants() {
+        let m = Manifest::from_json(&doc()).unwrap();
+        assert_eq!(m.geometry.l_clip, 32);
+        assert_eq!(m.geometry.m_rows, 90);
+        assert_eq!(m.geometry.fwd_batch_sizes, vec![1, 8, 32]);
+        let v = &m.variants["capsim"];
+        assert_eq!(v.param_size, 190721);
+        assert_eq!(v.fwd_files[&8], "f8");
+        assert_eq!(v.train_files[&32], "t32");
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let bad = json::parse(r#"{"config": {}, "variants": {}}"#).unwrap();
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn geometry_matches_rust_side_constants() {
+        let m = Manifest::from_json(&doc()).unwrap();
+        // context module must agree with the exported M
+        assert_eq!(m.geometry.m_rows, crate::context::M_ROWS);
+        // tokenizer vocabulary must fit the embedding table
+        assert!(
+            (crate::tokenizer::vocab::VOCAB_USED as usize) <= m.geometry.vocab_size
+        );
+    }
+}

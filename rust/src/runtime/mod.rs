@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs here — the artifacts directory (HLO text +
+//! `manifest.json`) is the entire contract between the layers (see
+//! DESIGN.md §4 and `/opt/xla-example/load_hlo` for the interchange
+//! rationale: HLO *text*, not serialized protos).
+
+pub mod manifest;
+pub mod model;
+
+pub use manifest::{Manifest, ModelGeometry, VariantManifest};
+pub use model::{Batch, ModelHandle, Runtime};

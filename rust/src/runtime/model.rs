@@ -1,0 +1,244 @@
+//! Compiled model handles: PJRT client + per-variant executables + the
+//! resident parameter state the training driver mutates.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Manifest, ModelGeometry, VariantManifest};
+
+/// A host-side minibatch in the exact layout the AOT entry points expect.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Batch capacity (the compiled batch size this buffer is padded to).
+    pub b: usize,
+    /// Rows actually carrying data (predictions beyond this are padding).
+    pub live: usize,
+    pub tokens: Vec<i32>,    // [b, l_clip, l_token]
+    pub tok_mask: Vec<f32>,  // [b, l_clip, l_token]
+    pub clip_mask: Vec<f32>, // [b, l_clip]
+    pub ctx: Vec<i32>,       // [b, m]
+    pub target: Vec<f32>,    // [b]
+}
+
+impl Batch {
+    pub fn zeroed(b: usize, g: &ModelGeometry) -> Batch {
+        Batch {
+            b,
+            live: 0,
+            tokens: vec![0; b * g.l_clip * g.l_token],
+            tok_mask: vec![0.0; b * g.l_clip * g.l_token],
+            clip_mask: vec![0.0; b * g.l_clip],
+            ctx: vec![0; b * g.m_rows],
+            target: vec![1.0; b],
+        }
+    }
+
+    /// The four tensor arguments shared by fwd and train entry points:
+    /// tokens, tok_mask, clip_mask, ctx (see aot.py's `batch_specs`).
+    fn literals(&self, g: &ModelGeometry) -> Result<Vec<Literal>> {
+        let b = self.b as i64;
+        let lc = g.l_clip as i64;
+        let lt = g.l_token as i64;
+        let m = g.m_rows as i64;
+        Ok(vec![
+            Literal::vec1(self.tokens.as_slice()).reshape(&[b, lc, lt])?,
+            Literal::vec1(self.tok_mask.as_slice()).reshape(&[b, lc, lt])?,
+            Literal::vec1(self.clip_mask.as_slice()).reshape(&[b, lc])?,
+            Literal::vec1(self.ctx.as_slice()).reshape(&[b, m])?,
+        ])
+    }
+}
+
+/// The PJRT runtime: one CPU client + the manifest.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU client and read the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf() })
+    }
+
+    /// Compile one HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e}"))
+    }
+
+    /// Load a predictor variant: compiles init + all fwd sizes + train.
+    pub fn load_variant(&self, name: &str) -> Result<ModelHandle> {
+        let vm: &VariantManifest = self
+            .manifest
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {name} not in manifest"))?;
+        let init = self.compile(&vm.init_file)?;
+        let mut fwd = Vec::new();
+        for (&b, f) in &vm.fwd_files {
+            fwd.push((b, self.compile(f)?));
+        }
+        let mut train = None;
+        if let Some((&b, f)) = vm.train_files.iter().next() {
+            train = Some((b, self.compile(f)?));
+        }
+        Ok(ModelHandle {
+            name: name.to_string(),
+            geometry: self.manifest.geometry.clone(),
+            param_size: vm.param_size,
+            init,
+            fwd,
+            train,
+            params: None,
+            momentum: None,
+        })
+    }
+}
+
+/// A loaded predictor with resident parameters.
+pub struct ModelHandle {
+    pub name: String,
+    pub geometry: ModelGeometry,
+    pub param_size: usize,
+    init: PjRtLoadedExecutable,
+    /// (batch size, executable), ascending.
+    fwd: Vec<(usize, PjRtLoadedExecutable)>,
+    train: Option<(usize, PjRtLoadedExecutable)>,
+    /// Current parameters (host literal; the CPU PJRT "device" is host
+    /// memory, so literal round-trips are memcpys, not transfers).
+    pub params: Option<Literal>,
+    pub momentum: Option<Literal>,
+}
+
+impl ModelHandle {
+    /// Initialize parameters from the AOT init computation.
+    pub fn init_params(&mut self, seed: u32) -> Result<()> {
+        let out = self
+            .init
+            .execute::<Literal>(&[Literal::scalar(seed)])
+            .map_err(|e| anyhow!("init: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("init fetch: {e}"))?;
+        let params = lit.to_tuple1().map_err(|e| anyhow!("init tuple: {e}"))?;
+        assert_eq!(params.element_count(), self.param_size);
+        self.momentum = Some(
+            Literal::vec1(vec![0f32; self.param_size].as_slice())
+                .reshape(&[self.param_size as i64])?,
+        );
+        self.params = Some(params);
+        Ok(())
+    }
+
+    /// Copy parameters out (checkpointing / transfer-learning).
+    pub fn params_vec(&self) -> Result<Vec<f32>> {
+        self.params
+            .as_ref()
+            .ok_or_else(|| anyhow!("params not initialized"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("params read: {e}"))
+    }
+
+    /// Load parameters from a host vector (e.g. a fine-tuning base).
+    pub fn set_params(&mut self, p: &[f32]) -> Result<()> {
+        anyhow::ensure!(p.len() == self.param_size, "param size mismatch");
+        self.params = Some(Literal::vec1(p).reshape(&[self.param_size as i64])?);
+        self.momentum = Some(
+            Literal::vec1(vec![0f32; self.param_size].as_slice())
+                .reshape(&[self.param_size as i64])?,
+        );
+        Ok(())
+    }
+
+    /// Largest compiled forward batch size.
+    pub fn max_fwd_batch(&self) -> usize {
+        self.fwd.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    /// The compiled batch the runtime will use for `n` live rows.
+    pub fn pick_fwd_batch(&self, n: usize) -> usize {
+        for (b, _) in &self.fwd {
+            if *b >= n {
+                return *b;
+            }
+        }
+        self.max_fwd_batch()
+    }
+
+    /// Training batch size.
+    pub fn train_batch(&self) -> Option<usize> {
+        self.train.as_ref().map(|(b, _)| *b)
+    }
+
+    /// Run the forward pass on a batch whose `b` matches a compiled size.
+    pub fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        let exe = &self
+            .fwd
+            .iter()
+            .find(|(b, _)| *b == batch.b)
+            .ok_or_else(|| anyhow!("no fwd executable for batch {}", batch.b))?
+            .1;
+        let params = self
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow!("params not initialized"))?;
+        // (params, tokens, tok_mask, clip_mask, ctx, time_scale)
+        let mut args = vec![params.clone()];
+        args.extend(batch.literals(&self.geometry)?);
+        args.push(Literal::scalar(time_scale));
+        let out = exe
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow!("fwd: {e}"))?;
+        let pred = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fwd fetch: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("fwd tuple: {e}"))?;
+        let mut v = pred.to_vec::<f32>().map_err(|e| anyhow!("fwd read: {e}"))?;
+        v.truncate(batch.live);
+        Ok(v)
+    }
+
+    /// One SGD step; updates resident params/momentum, returns the loss.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32, time_scale: f32) -> Result<f32> {
+        let (tb, exe) = self
+            .train
+            .as_ref()
+            .ok_or_else(|| anyhow!("variant {} has no train entry", self.name))?;
+        anyhow::ensure!(batch.b == *tb, "train batch {} != compiled {tb}", batch.b);
+        let params = self.params.take().ok_or_else(|| anyhow!("params not init"))?;
+        let momentum = self.momentum.take().unwrap();
+        // (params, mom, tokens, tok_mask, clip_mask, ctx, target, lr, scale)
+        let mut args = vec![params, momentum];
+        args.extend(batch.literals(&self.geometry)?);
+        args.push(Literal::vec1(batch.target.as_slice()).reshape(&[batch.b as i64])?);
+        args.push(Literal::scalar(lr));
+        args.push(Literal::scalar(time_scale));
+        let out = exe
+            .execute::<Literal>(&args)
+            .map_err(|e| anyhow!("train: {e}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train fetch: {e}"))?;
+        let (p, m, loss) = tuple
+            .to_tuple3()
+            .map_err(|e| anyhow!("train tuple: {e}"))?;
+        self.params = Some(p);
+        self.momentum = Some(m);
+        loss.get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss read: {e}"))
+    }
+}

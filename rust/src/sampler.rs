@@ -1,0 +1,230 @@
+//! The trace-clip sampler (paper §IV-B, Fig. 3).
+//!
+//! Clips are grouped by unique code content and split at an occurrence
+//! `threshold` into two populations:
+//!
+//! * **frequent** clips (occurrences > threshold): sampled *within* each
+//!   category — the occurrence count is scaled down by the sampling
+//!   `coefficient`, preserving the category distribution;
+//! * **rare** clips (occurrences <= threshold): sampled *across*
+//!   categories — a `coefficient` fraction of the categories is kept
+//!   (periodically, after sorting), each keeping its full occurrence count.
+//!
+//! The paper's configuration (threshold 200, coefficient 0.02) turns a
+//! 30M-clip corpus into a tractable training set (300 h -> 10 h).
+
+use std::collections::HashMap;
+
+/// Sampler parameters (paper §VI-A).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    pub threshold: u64,
+    pub coefficient: f64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { threshold: 200, coefficient: 0.02 }
+    }
+}
+
+/// Occurrence statistics for one unique clip content.
+#[derive(Clone, Debug)]
+pub struct Category {
+    pub key: u64,
+    /// Indices of all clips with this content, in appearance order.
+    pub members: Vec<usize>,
+}
+
+impl Category {
+    pub fn count(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Group clip indices by content key, in order of first appearance
+/// (the x-axis of Fig. 8a).
+pub fn categorize(keys: &[u64]) -> Vec<Category> {
+    let mut order: Vec<u64> = Vec::new();
+    let mut map: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, &k) in keys.iter().enumerate() {
+        let e = map.entry(k).or_default();
+        if e.is_empty() {
+            order.push(k);
+        }
+        e.push(i);
+    }
+    order
+        .into_iter()
+        .map(|k| Category { key: k, members: map.remove(&k).unwrap() })
+        .collect()
+}
+
+/// Periodic selection of `ceil(frac * n)` items out of `n`.
+fn periodic_pick(n: usize, frac: f64) -> Vec<usize> {
+    if n == 0 || frac <= 0.0 {
+        return Vec::new();
+    }
+    let keep = ((n as f64 * frac).ceil() as usize).clamp(1, n);
+    let stride = n as f64 / keep as f64;
+    (0..keep).map(|i| (i as f64 * stride) as usize).collect()
+}
+
+/// Apply Fig. 3: returns the selected clip indices (sorted ascending).
+pub fn sample(keys: &[u64], cfg: &SamplerConfig) -> Vec<usize> {
+    let cats = categorize(keys);
+    let mut selected = Vec::new();
+
+    // split populations
+    let (frequent, rare): (Vec<&Category>, Vec<&Category>) = cats
+        .iter()
+        .partition(|c| c.count() as u64 > cfg.threshold);
+
+    // frequent: sample within each category (scale occurrences down)
+    for c in frequent {
+        for pick in periodic_pick(c.count(), cfg.coefficient) {
+            selected.push(c.members[pick]);
+        }
+    }
+
+    // rare: sample across categories (keep a fraction of categories whole),
+    // sorted by descending count (the Fig. 8b ordering)
+    let mut rare_sorted = rare;
+    rare_sorted.sort_by(|a, b| b.count().cmp(&a.count()).then(a.key.cmp(&b.key)));
+    for pick in periodic_pick(rare_sorted.len(), cfg.coefficient) {
+        selected.extend_from_slice(&rare_sorted[pick].members);
+    }
+
+    selected.sort_unstable();
+    selected
+}
+
+/// The Fig.-8 distributions: (a) occurrences in first-appearance order and
+/// (b) sorted descending.
+pub fn occurrence_distribution(keys: &[u64]) -> (Vec<u64>, Vec<u64>) {
+    let cats = categorize(keys);
+    let original: Vec<u64> = cats.iter().map(|c| c.count() as u64).collect();
+    let mut sorted = original.clone();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    (original, sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Synthetic key stream: a few hot clips (loop bodies) + a tail of
+    /// rare unique clips — the Fig. 8 shape.
+    fn synthetic_keys(rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(0.8) {
+                    rng.below(5) // 5 hot categories
+                } else {
+                    1000 + rng.below(500) // long tail
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn categorize_preserves_appearance_order_and_counts() {
+        let keys = vec![7, 7, 3, 7, 3, 9];
+        let cats = categorize(&keys);
+        assert_eq!(cats.len(), 3);
+        assert_eq!(cats[0].key, 7);
+        assert_eq!(cats[0].members, vec![0, 1, 3]);
+        assert_eq!(cats[1].key, 3);
+        assert_eq!(cats[2].key, 9);
+    }
+
+    #[test]
+    fn frequent_categories_survive_with_reduced_count() {
+        let mut rng = Rng::new(5);
+        let keys = synthetic_keys(&mut rng, 20_000);
+        let cfg = SamplerConfig { threshold: 200, coefficient: 0.02 };
+        let sel = sample(&keys, &cfg);
+        assert!(!sel.is_empty());
+        // every hot category must still be represented
+        let sel_keys: std::collections::HashSet<u64> =
+            sel.iter().map(|&i| keys[i]).collect();
+        for hot in 0..5u64 {
+            assert!(sel_keys.contains(&hot), "hot clip {hot} lost");
+        }
+        // and the selection must be much smaller than the input
+        assert!(sel.len() < keys.len() / 10, "{} of {}", sel.len(), keys.len());
+    }
+
+    #[test]
+    fn category_distribution_roughly_preserved() {
+        let mut rng = Rng::new(6);
+        let keys = synthetic_keys(&mut rng, 50_000);
+        let cfg = SamplerConfig::default();
+        let sel = sample(&keys, &cfg);
+        let cats = categorize(&keys);
+        let hot: Vec<&Category> =
+            cats.iter().filter(|c| c.count() as u64 > cfg.threshold).collect();
+        // within the frequent population, the selected share per category
+        // should track the original share within ~3x
+        let total_hot: usize = hot.iter().map(|c| c.count()).sum();
+        let sel_hot: Vec<usize> = hot
+            .iter()
+            .map(|c| sel.iter().filter(|&&i| keys[i] == c.key).count())
+            .collect();
+        let total_sel_hot: usize = sel_hot.iter().sum();
+        for (c, &s) in hot.iter().zip(&sel_hot) {
+            let orig_share = c.count() as f64 / total_hot as f64;
+            let sel_share = s as f64 / total_sel_hot as f64;
+            assert!(
+                sel_share > orig_share / 3.0 && sel_share < orig_share * 3.0,
+                "share drift: {orig_share} -> {sel_share}"
+            );
+        }
+    }
+
+    #[test]
+    fn rare_clips_sampled_across_categories() {
+        // 100 singleton categories, none above threshold
+        let keys: Vec<u64> = (0..100).collect();
+        let cfg = SamplerConfig { threshold: 10, coefficient: 0.1 };
+        let sel = sample(&keys, &cfg);
+        assert_eq!(sel.len(), 10, "10% of 100 categories");
+        // occurrences within kept categories are preserved (1 each)
+        let mut dedup = sel.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), sel.len());
+    }
+
+    #[test]
+    fn periodic_pick_bounds() {
+        assert!(periodic_pick(0, 0.5).is_empty());
+        assert_eq!(periodic_pick(10, 1.0).len(), 10);
+        assert_eq!(periodic_pick(10, 0.2), vec![0, 5]);
+        assert_eq!(periodic_pick(3, 0.01).len(), 1, "at least one survives");
+    }
+
+    #[test]
+    fn distribution_shapes() {
+        let mut rng = Rng::new(8);
+        let keys = synthetic_keys(&mut rng, 5_000);
+        let (orig, sorted) = occurrence_distribution(&keys);
+        assert_eq!(orig.len(), sorted.len());
+        assert_eq!(orig.iter().sum::<u64>(), 5_000);
+        for w in sorted.windows(2) {
+            assert!(w[0] >= w[1], "sorted descending");
+        }
+        // the Fig. 8 two-population shape: head >> tail
+        assert!(sorted[0] > 500);
+        assert_eq!(*sorted.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(9);
+        let keys = synthetic_keys(&mut rng, 10_000);
+        let a = sample(&keys, &SamplerConfig::default());
+        let b = sample(&keys, &SamplerConfig::default());
+        assert_eq!(a, b);
+    }
+}

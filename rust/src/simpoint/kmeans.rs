@@ -1,0 +1,201 @@
+//! k-means over interval BBVs (Lloyd's algorithm, k-means++ seeding) with
+//! an elbow-style automatic k — the SimPoint paper uses BIC; the effect is
+//! the same: few checkpoints for phase-stable benchmarks, more for phasey
+//! ones (that is where Table II's per-benchmark checkpoint counts come from).
+
+use crate::util::Rng;
+
+/// Clustering result.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub k: usize,
+    /// Cluster assignment per point.
+    pub assign: Vec<usize>,
+    /// Centroids (k x dim).
+    pub centroids: Vec<Vec<f64>>,
+    /// Total within-cluster sum of squared distances.
+    pub sse: f64,
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Lloyd's algorithm with k-means++ seeding. Deterministic per seed.
+pub fn kmeans(points: &[Vec<f64>], k: usize, iters: usize, seed: u64) -> KmeansResult {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let mut rng = Rng::new(seed);
+
+    // ---- k-means++ seeding ----
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.range(0, points.len())].clone());
+    while centroids.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // all points identical to a centroid; duplicate one
+            centroids.push(points[rng.range(0, points.len())].clone());
+            continue;
+        }
+        let mut target = rng.f64() * total;
+        let mut pick = 0;
+        for (i, d) in d2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(points[pick].clone());
+    }
+
+    // ---- Lloyd iterations ----
+    let dim = points[0].len();
+    let mut assign = vec![0usize; points.len()];
+    for _ in 0..iters {
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centroids[a])
+                        .partial_cmp(&dist2(p, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, v) in sums[assign[i]].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centroids[c] = sums[c].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let sse = points
+        .iter()
+        .zip(&assign)
+        .map(|(p, &a)| dist2(p, &centroids[a]))
+        .sum();
+    KmeansResult { k, assign, centroids, sse }
+}
+
+/// Pick k with an elbow criterion: grow k while each extra cluster still
+/// halves the SSE (real phase structure), stopping early once the SSE falls
+/// below `frac` of the 1-cluster SSE or the marginal gain fades — Gaussian
+/// "no structure" data only ever shaves ~36% per split, so it stays at k=1.
+pub fn auto_k(points: &[Vec<f64>], max_k: usize, frac: f64, seed: u64) -> KmeansResult {
+    let base = kmeans(points, 1, 20, seed);
+    if base.sse <= 1e-12 {
+        return base;
+    }
+    let mut best = base.clone();
+    for k in 2..=max_k.min(points.len()) {
+        let r = kmeans(points, k, 40, seed);
+        if r.sse > 0.5 * best.sse {
+            break; // diminishing returns: no real phase boundary left
+        }
+        best = r;
+        if best.sse <= frac * base.sse {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(center: f64, n: usize, spread: f64, rng: &mut Rng) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| vec![center + spread * rng.normal(), center + spread * rng.normal()])
+            .collect()
+    }
+
+    #[test]
+    fn separates_two_obvious_blobs() {
+        let mut rng = Rng::new(1);
+        let mut pts = blob(0.0, 30, 0.1, &mut rng);
+        pts.extend(blob(10.0, 30, 0.1, &mut rng));
+        let r = kmeans(&pts, 2, 50, 7);
+        // all of blob A in one cluster, all of blob B in the other
+        let a0 = r.assign[0];
+        assert!(r.assign[..30].iter().all(|&a| a == a0));
+        assert!(r.assign[30..].iter().all(|&a| a != a0));
+        assert!(r.sse < 5.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut rng = Rng::new(2);
+        let pts = blob(0.0, 40, 1.0, &mut rng);
+        let r1 = kmeans(&pts, 3, 30, 11);
+        let r2 = kmeans(&pts, 3, 30, 11);
+        assert_eq!(r1.assign, r2.assign);
+    }
+
+    #[test]
+    fn k_capped_by_points() {
+        let pts = vec![vec![1.0], vec![2.0]];
+        let r = kmeans(&pts, 10, 10, 3);
+        assert_eq!(r.k, 2);
+    }
+
+    #[test]
+    fn identical_points_one_effective_cluster() {
+        let pts = vec![vec![5.0, 5.0]; 8];
+        let r = kmeans(&pts, 3, 10, 5);
+        assert!(r.sse < 1e-12);
+    }
+
+    #[test]
+    fn auto_k_grows_with_structure() {
+        let mut rng = Rng::new(3);
+        let mut pts = blob(0.0, 20, 0.05, &mut rng);
+        pts.extend(blob(5.0, 20, 0.05, &mut rng));
+        pts.extend(blob(10.0, 20, 0.05, &mut rng));
+        let r = auto_k(&pts, 8, 0.05, 13);
+        assert!(r.k >= 3, "needs >=3 clusters, got {}", r.k);
+        let flat = blob(1.0, 30, 0.01, &mut rng);
+        let r2 = auto_k(&flat, 8, 0.05, 13);
+        assert!(r2.k <= 2, "flat data needs few clusters, got {}", r2.k);
+    }
+
+    #[test]
+    fn sse_nonincreasing_in_k() {
+        let mut rng = Rng::new(4);
+        let pts = blob(0.0, 50, 2.0, &mut rng);
+        let mut prev = f64::INFINITY;
+        for k in 1..6 {
+            let r = kmeans(&pts, k, 50, 9);
+            assert!(r.sse <= prev * 1.05, "k={k}: {} > {prev}", r.sse);
+            prev = r.sse.min(prev);
+        }
+    }
+}

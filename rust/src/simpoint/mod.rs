@@ -1,0 +1,16 @@
+//! SimPoint-style targeted sampling (paper §II, Fig. 1/2): profile the
+//! benchmark's basic-block vectors per interval, cluster them with k-means,
+//! and keep one representative (checkpointed) interval per cluster with a
+//! weight equal to its cluster's share of the program.
+//!
+//! This is the substrate the paper takes from the SimPoint tool [27]; both
+//! the gem5-mode baseline and CAPSim restore the same checkpoints, exactly
+//! as in Fig. 1.
+
+pub mod checkpoint;
+pub mod kmeans;
+pub mod profile;
+
+pub use checkpoint::Checkpoint;
+pub use kmeans::{kmeans, KmeansResult};
+pub use profile::{choose_simpoints, profile, Profile, SelectedInterval, SimpointConfig};

@@ -1,0 +1,276 @@
+//! BBV profiling + representative-interval selection (the SimPoint flow).
+
+use std::collections::HashMap;
+
+use crate::functional::AtomicCpu;
+use crate::isa::asm::Program;
+use crate::util::Rng;
+
+use super::checkpoint::Checkpoint;
+use super::kmeans::auto_k;
+
+/// SimPoint configuration (scaled defaults; see DESIGN.md §1).
+#[derive(Clone, Copy, Debug)]
+pub struct SimpointConfig {
+    /// Instructions per interval (paper: 5,000,000; scaled default 200k).
+    pub interval_insts: u64,
+    /// Warm-up instructions simulated before the measured interval
+    /// (paper: 1,000,000; scaled default 20k).
+    pub warmup_insts: u64,
+    /// Maximum number of representative intervals (checkpoints).
+    pub max_k: usize,
+    /// Random-projection dimension for BBVs (SimPoint uses 15).
+    pub bbv_dim: usize,
+    /// Elbow threshold for automatic k (fraction of 1-cluster SSE).
+    pub elbow_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for SimpointConfig {
+    fn default() -> Self {
+        SimpointConfig {
+            interval_insts: 200_000,
+            warmup_insts: 20_000,
+            max_k: 8,
+            bbv_dim: 16,
+            elbow_frac: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-interval profile data.
+#[derive(Clone, Debug)]
+pub struct IntervalProfile {
+    /// Projected, L1-normalized basic-block vector.
+    pub bbv: Vec<f64>,
+    /// Checkpoint at the interval start.
+    pub checkpoint: Checkpoint,
+}
+
+/// Whole-program profile.
+#[derive(Debug)]
+pub struct Profile {
+    pub intervals: Vec<IntervalProfile>,
+    pub total_insts: u64,
+}
+
+/// A chosen representative interval.
+#[derive(Clone, Debug)]
+pub struct SelectedInterval {
+    /// Index into the interval sequence.
+    pub index: usize,
+    /// Fraction of all intervals this representative stands for.
+    pub weight: f64,
+    pub checkpoint: Checkpoint,
+}
+
+/// Random projection of block-id counts into `dim` dimensions — the same
+/// trick SimPoint uses to make k-means tractable over huge BBVs. The
+/// projection is a deterministic hash of the block id, so it needs no
+/// global dictionary.
+fn project_bbv(counts: &HashMap<u64, u64>, dim: usize) -> Vec<f64> {
+    let mut v = vec![0.0f64; dim];
+    let total: u64 = counts.values().sum();
+    if total == 0 {
+        return v;
+    }
+    for (&block, &cnt) in counts {
+        let mut h = block.wrapping_mul(0x9E3779B97F4A7C15);
+        for slot in v.iter_mut() {
+            h ^= h >> 29;
+            h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+            // signed +-1 projection per dimension
+            let sign = if h & 1 == 0 { 1.0 } else { -1.0 };
+            *slot += sign * cnt as f64;
+        }
+    }
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for slot in v.iter_mut() {
+            *slot /= norm;
+        }
+    }
+    v
+}
+
+/// Run the functional simulator over the whole program, recording one
+/// BBV + checkpoint per interval.
+pub fn profile(program: &Program, cfg: &SimpointConfig) -> Profile {
+    let mut cpu = AtomicCpu::load(program);
+    let mut intervals = Vec::new();
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    let mut block_start = program.entry;
+    let mut block_len: u64 = 0;
+
+    loop {
+        let ck = Checkpoint::capture(&cpu);
+        let executed = cpu.run_with(cfg.interval_insts, |rec| {
+            block_len += 1;
+            if rec.ends_block() {
+                // weight blocks by their length, like SimPoint
+                *counts.entry(block_start).or_insert(0) += block_len;
+                block_start = rec.next_pc;
+                block_len = 0;
+            }
+        });
+        if executed == 0 {
+            break;
+        }
+        if block_len > 0 {
+            *counts.entry(block_start).or_insert(0) += block_len;
+            block_len = 0;
+        }
+        intervals.push(IntervalProfile {
+            bbv: project_bbv(&counts, cfg.bbv_dim),
+            checkpoint: ck,
+        });
+        counts.clear();
+        if cpu.halted {
+            break;
+        }
+    }
+    Profile { intervals, total_insts: cpu.icount }
+}
+
+/// Cluster the profile and pick one representative per cluster
+/// (closest to the centroid), weighted by cluster population.
+pub fn choose_simpoints(profile: &Profile, cfg: &SimpointConfig) -> Vec<SelectedInterval> {
+    if profile.intervals.is_empty() {
+        return Vec::new();
+    }
+    let pts: Vec<Vec<f64>> = profile.intervals.iter().map(|i| i.bbv.clone()).collect();
+    let km = auto_k(&pts, cfg.max_k, cfg.elbow_frac, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0xABCD);
+
+    let mut selected = Vec::new();
+    for c in 0..km.k {
+        let members: Vec<usize> = (0..pts.len()).filter(|&i| km.assign[i] == c).collect();
+        if members.is_empty() {
+            continue;
+        }
+        // representative: closest member to the centroid
+        let cent = &km.centroids[c];
+        let rep = *members
+            .iter()
+            .min_by(|&&a, &&b| {
+                let da: f64 = pts[a].iter().zip(cent).map(|(x, y)| (x - y) * (x - y)).sum();
+                let db: f64 = pts[b].iter().zip(cent).map(|(x, y)| (x - y) * (x - y)).sum();
+                da.partial_cmp(&db).unwrap_or_else(|| {
+                    // NaN-free data; tie-break randomly but deterministically
+                    if rng.chance(0.5) { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater }
+                })
+            })
+            .unwrap();
+        selected.push(SelectedInterval {
+            index: rep,
+            weight: members.len() as f64 / pts.len() as f64,
+            checkpoint: profile.intervals[rep].checkpoint.clone(),
+        });
+    }
+    selected.sort_by_key(|s| s.index);
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Assembler;
+
+    /// Two-phase program: phase A (tight add loop), phase B (memory loop).
+    fn two_phase_program() -> Program {
+        let mut a = Assembler::new(0x1000);
+        // phase A: 60k instructions of ALU loop
+        a.li(1, 20_000);
+        a.mtctr(1);
+        let top_a = a.here();
+        a.addi(2, 2, 1);
+        a.addi(3, 3, 1);
+        a.bdnz(top_a);
+        // phase B: 60k instructions of store loop
+        a.load_imm64(4, 0x100000);
+        a.li(1, 15_000);
+        a.mtctr(1);
+        let top_b = a.here();
+        a.std(2, 0, 4);
+        a.addi(4, 4, 8);
+        a.ld(5, -8, 4);
+        a.bdnz(top_b);
+        a.halt();
+        a.finish()
+    }
+
+    fn small_cfg() -> SimpointConfig {
+        SimpointConfig {
+            interval_insts: 10_000,
+            warmup_insts: 1_000,
+            max_k: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn profile_covers_whole_program() {
+        let p = two_phase_program();
+        let cfg = small_cfg();
+        let prof = profile(&p, &cfg);
+        assert!(prof.total_insts > 100_000);
+        let expected = prof.total_insts.div_ceil(cfg.interval_insts);
+        assert_eq!(prof.intervals.len() as u64, expected);
+        // checkpoints are ordered by start instruction
+        for w in prof.intervals.windows(2) {
+            assert!(w[1].checkpoint.start_inst > w[0].checkpoint.start_inst);
+        }
+    }
+
+    #[test]
+    fn two_phases_get_at_least_two_clusters() {
+        let p = two_phase_program();
+        let cfg = small_cfg();
+        let prof = profile(&p, &cfg);
+        let sel = choose_simpoints(&prof, &cfg);
+        assert!(sel.len() >= 2, "expected phases to be separated, got {}", sel.len());
+        let wsum: f64 = sel.iter().map(|s| s.weight).sum();
+        assert!((wsum - 1.0).abs() < 1e-9, "weights must sum to 1, got {wsum}");
+    }
+
+    #[test]
+    fn restored_checkpoint_replays_interval() {
+        let p = two_phase_program();
+        let cfg = small_cfg();
+        let prof = profile(&p, &cfg);
+        let sel = choose_simpoints(&prof, &cfg);
+        let s = &sel[0];
+        let mut cpu = s.checkpoint.restore();
+        let trace = cpu.run_trace(cfg.interval_insts);
+        assert!(!trace.is_empty());
+        // the first fetched pc must be the checkpointed CIA
+        assert_eq!(trace[0].pc, s.checkpoint.regs.cia);
+    }
+
+    #[test]
+    fn uniform_program_needs_one_checkpoint() {
+        let mut a = Assembler::new(0x1000);
+        a.li(1, 30_000);
+        a.mtctr(1);
+        let top = a.here();
+        a.addi(2, 2, 1);
+        a.bdnz(top);
+        a.halt();
+        let prof = profile(&a.finish(), &small_cfg());
+        let sel = choose_simpoints(&prof, &small_cfg());
+        assert!(sel.len() <= 2, "uniform phase should need few checkpoints, got {}", sel.len());
+    }
+
+    #[test]
+    fn projection_is_deterministic_and_normalized() {
+        let mut counts = HashMap::new();
+        counts.insert(0x1000u64, 500u64);
+        counts.insert(0x2000u64, 300u64);
+        let a = project_bbv(&counts, 8);
+        let b = project_bbv(&counts, 8);
+        assert_eq!(a, b);
+        let norm: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-9, "unit L2 norm, got {norm}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Algorithm 1 — generating the code-trace-clip set from an instruction
+//! trace (paper §IV-A).
+//!
+//! A clip boundary requires (1) at least `l_min` instructions in the clip
+//! and (2) a *change in commit time* between consecutive instructions, so
+//! that instructions retiring in the same cycle are never split and every
+//! clip has a well-defined runtime (`TimePrev − TimeBegin`).
+//!
+//! At inference time no commit times exist (that is the whole point of
+//! CAPSim); [`slice_fixed`] produces fixed-length fragments instead — the
+//! training-time boundary rule exists only to make labels exact.
+
+use crate::functional::TraceRecord;
+
+/// A clip: `records[start .. start+len]` with its golden runtime in cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Clip {
+    pub start: usize,
+    pub len: usize,
+    /// Golden execution time (cycles); 0 when unknown (inference slicing).
+    pub time: u64,
+}
+
+impl Clip {
+    pub fn records<'a>(&self, trace: &'a [TraceRecord]) -> &'a [TraceRecord] {
+        &trace[self.start..self.start + self.len]
+    }
+}
+
+/// Algorithm 1, faithfully: returns the clip set with commit-time labels.
+///
+/// `commit_cycle[i]` is the O3 commit cycle of `trace[i]` (monotone
+/// nondecreasing). The trailing partial clip is dropped, exactly as the
+/// pseudocode's final `InstNow` never lands in an emitted clip.
+pub fn slice_labeled(trace_len: usize, commit_cycle: &[u64], l_min: usize) -> Vec<Clip> {
+    assert_eq!(trace_len, commit_cycle.len());
+    let mut clips = Vec::new();
+    if trace_len == 0 {
+        return clips;
+    }
+
+    let mut start = 0usize; // first record of the current clip
+    let mut block_length = 0usize;
+    let mut time_prev: u64 = commit_cycle[0];
+    let mut time_begin: u64 = 0;
+
+    // The pseudocode appends InstPrev (= trace[i-1]) on iteration i and
+    // tests the boundary with TimeNow = trace[i].CommitTime. Equivalent
+    // index form: clip gains record i-1; boundary closes the clip at i-1.
+    for i in 1..trace_len {
+        let time_now = commit_cycle[i];
+        block_length += 1;
+        if block_length >= l_min && time_now != time_prev {
+            clips.push(Clip { start, len: block_length, time: time_prev - time_begin });
+            time_begin = time_prev;
+            start = i;
+            block_length = 0;
+        }
+        time_prev = time_now;
+    }
+    clips
+}
+
+/// Inference-time slicing: fixed `l_min`-sized fragments (no labels).
+/// The trailing fragment shorter than `l_min` is dropped to mirror the
+/// training distribution.
+pub fn slice_fixed(trace_len: usize, l_min: usize) -> Vec<Clip> {
+    (0..trace_len / l_min)
+        .map(|k| Clip { start: k * l_min, len: l_min, time: 0 })
+        .collect()
+}
+
+/// Fixed-length slicing WITH labels: clip `k`'s time is the telescoping
+/// commit-cycle delta across its boundary, so per-interval sums are exact
+/// just like Algorithm 1's. Used when the training distribution must match
+/// the inference-time fixed slicing (`TrainSlicing::Fixed` in the config);
+/// the trade-off vs Algorithm 1 is boundary noise from same-cycle commit
+/// groups being split.
+pub fn slice_fixed_labeled(commit_cycle: &[u64], l_min: usize) -> Vec<Clip> {
+    let n = commit_cycle.len() / l_min;
+    let mut clips = Vec::with_capacity(n);
+    let mut time_begin = 0u64;
+    for k in 0..n {
+        let end = (k + 1) * l_min - 1;
+        let t = commit_cycle[end];
+        clips.push(Clip { start: k * l_min, len: l_min, time: t.saturating_sub(time_begin).max(1) });
+        time_begin = t;
+    }
+    clips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    /// Synthetic monotone commit times with plateaus (same-cycle commits).
+    fn commit_times(rng: &mut Rng, n: usize) -> Vec<u64> {
+        let mut t = 10u64;
+        (0..n)
+            .map(|_| {
+                if rng.chance(0.6) {
+                    t += rng.below(4) + 1;
+                }
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clips_cover_prefix_without_overlap() {
+        let mut rng = Rng::new(1);
+        let cc = commit_times(&mut rng, 5_000);
+        let clips = slice_labeled(cc.len(), &cc, 100);
+        assert!(!clips.is_empty());
+        let mut expect_start = 0;
+        for c in &clips {
+            assert_eq!(c.start, expect_start, "clips must tile the trace");
+            assert!(c.len >= 100, "min length violated: {}", c.len);
+            expect_start = c.start + c.len;
+        }
+        assert!(expect_start <= cc.len());
+    }
+
+    #[test]
+    fn clip_times_are_commit_deltas() {
+        let mut rng = Rng::new(2);
+        let cc = commit_times(&mut rng, 3_000);
+        let clips = slice_labeled(cc.len(), &cc, 50);
+        // sum of clip times telescopes to (last boundary - first boundary)
+        let total: u64 = clips.iter().map(|c| c.time).sum();
+        let last = clips.last().unwrap();
+        let boundary = cc[last.start + last.len - 1];
+        assert_eq!(total, boundary - 0, "telescoping sum");
+        for c in &clips {
+            assert!(c.time > 0, "boundary rule guarantees nonzero time");
+        }
+    }
+
+    #[test]
+    fn never_splits_same_cycle_commits() {
+        let mut rng = Rng::new(3);
+        let cc = commit_times(&mut rng, 2_000);
+        for c in slice_labeled(cc.len(), &cc, 20) {
+            let boundary_idx = c.start + c.len; // first record of next clip
+            if boundary_idx < cc.len() {
+                assert_ne!(
+                    cc[boundary_idx], cc[boundary_idx - 1],
+                    "boundary must sit on a commit-time change"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l_min_one_splits_at_every_time_change() {
+        let cc = vec![1, 1, 2, 2, 2, 5, 7];
+        let clips = slice_labeled(cc.len(), &cc, 1);
+        // boundaries after indices 1 (1->2), 4 (2->5), 5 (5->7)
+        assert_eq!(clips.len(), 3);
+        assert_eq!(clips[0], Clip { start: 0, len: 2, time: 1 });
+        assert_eq!(clips[1], Clip { start: 2, len: 3, time: 1 });
+        assert_eq!(clips[2], Clip { start: 5, len: 1, time: 3 });
+    }
+
+    #[test]
+    fn empty_and_short_traces() {
+        assert!(slice_labeled(0, &[], 10).is_empty());
+        let cc = vec![1, 2, 3];
+        assert!(slice_labeled(3, &cc, 100).is_empty(), "too short for l_min");
+    }
+
+    #[test]
+    fn fixed_slicing_uniform() {
+        let clips = slice_fixed(105, 32);
+        assert_eq!(clips.len(), 3);
+        for (k, c) in clips.iter().enumerate() {
+            assert_eq!(c.start, k * 32);
+            assert_eq!(c.len, 32);
+            assert_eq!(c.time, 0);
+        }
+    }
+
+    #[test]
+    fn fixed_labeled_telescopes() {
+        let mut rng = Rng::new(4);
+        let cc = commit_times(&mut rng, 1_000);
+        let clips = slice_fixed_labeled(&cc, 32);
+        assert_eq!(clips.len(), 1_000 / 32);
+        let total: u64 = clips.iter().map(|c| c.time).sum();
+        let last = clips.last().unwrap();
+        assert_eq!(total, cc[last.start + last.len - 1]);
+        for c in &clips {
+            assert_eq!(c.len, 32);
+            assert!(c.time >= 1);
+        }
+    }
+
+    #[test]
+    fn prop_clip_invariants_hold() {
+        prop::check_res(
+            "slicer invariants",
+            64,
+            |r| {
+                let n = 200 + r.range(0, 3000);
+                let lm = 1 + r.range(0, 64);
+                let mut rng = Rng::new(r.next_u64());
+                (commit_times(&mut rng, n), lm)
+            },
+            |(cc, lm)| {
+                let clips = slice_labeled(cc.len(), cc, *lm);
+                let mut pos = 0;
+                for c in &clips {
+                    if c.start != pos {
+                        return Err(format!("gap at {}", c.start));
+                    }
+                    if c.len < *lm {
+                        return Err(format!("short clip {}", c.len));
+                    }
+                    pos += c.len;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! The standardization transformation (paper §V-A, Fig. 5) and its
+//! vocabulary.
+//!
+//! Each raw instruction becomes a fixed-order token sequence:
+//!
+//! ```text
+//! <REP> <OPCODE> op <DSTS> d… </DSTS> <SRCS> s… </SRCS> [<MEM> base </MEM>] <END>
+//! ```
+//!
+//! * the leading `<REP>` is the learnable representative token whose
+//!   attention output row becomes the instruction's ideal-execution-time
+//!   vector (paper Eq. 7);
+//! * implicit registers appear even when absent from the assembly text —
+//!   e.g. `cmpi` destinations include `CR`, `bl` writes `LR` (Fig. 5c);
+//! * immediates and displacements collapse to `<CONST>` (Fig. 5a);
+//! * memory operands are wrapped in `<MEM>…</MEM>` with their base (and
+//!   index) registers (Fig. 5b).
+//!
+//! The same vocabulary also encodes the context matrix's value-byte tokens
+//! (Fig. 6) — see [`vocab::Vocab`].
+
+pub mod standardize;
+pub mod vocab;
+
+pub use standardize::{standardize, tokenize_clip};
+pub use vocab::{RegName, Vocab};

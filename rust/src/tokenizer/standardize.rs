@@ -1,0 +1,254 @@
+//! The Fig.-5 standardization transformation proper.
+
+use crate::functional::TraceRecord;
+use crate::isa::Inst;
+
+use super::vocab::{self, Vocab};
+
+/// Standardize one instruction into at most `l_token` tokens (padded with
+/// `<PAD>`, truncated if over — the `<END>` token survives truncation).
+pub fn standardize(inst: &Inst, has_imm: bool, l_token: usize) -> Vec<u16> {
+    let mut t = Vec::with_capacity(l_token);
+    t.push(vocab::REP);
+    t.push(vocab::OPCODE);
+    t.push(Vocab::opcode(inst.op));
+
+    let dsts = inst.dsts();
+    if !dsts.is_empty() {
+        t.push(vocab::DSTS_OPEN);
+        for d in &dsts {
+            t.push(Vocab::reg_ref(*d));
+        }
+        t.push(vocab::DSTS_CLOSE);
+    }
+
+    let srcs = inst.srcs();
+    if !srcs.is_empty() || has_imm {
+        t.push(vocab::SRCS_OPEN);
+        for s in &srcs {
+            t.push(Vocab::reg_ref(*s));
+        }
+        if has_imm {
+            t.push(vocab::CONST);
+        }
+        t.push(vocab::SRCS_CLOSE);
+    }
+
+    if inst.is_mem() {
+        t.push(vocab::MEM_OPEN);
+        t.push(Vocab::reg_ref(crate::isa::inst::RegRef::Gpr(inst.ra)));
+        if inst.is_indexed_mem() {
+            t.push(Vocab::reg_ref(crate::isa::inst::RegRef::Gpr(inst.rb)));
+        }
+        t.push(vocab::MEM_CLOSE);
+    }
+
+    t.push(vocab::END);
+    if t.len() > l_token {
+        t.truncate(l_token);
+        t[l_token - 1] = vocab::END;
+    }
+    while t.len() < l_token {
+        t.push(vocab::PAD);
+    }
+    t
+}
+
+/// Whether the instruction carries an immediate that standardizes to
+/// `<CONST>` (Fig. 5a). Branch offsets count: the constant is part of the
+/// instruction's identity the same way Fig. 5 treats literal operands.
+pub fn has_const(inst: &Inst) -> bool {
+    use crate::isa::Opcode::*;
+    matches!(
+        inst.op,
+        Addi | Andi | Ori | Xori | Sldi | Srdi | Sradi | Li | Lis | Cmpi
+            | Cmpli | B | Bl | Beq | Bne | Blt | Bge | Bgt | Ble | Bdnz
+    ) || (inst.is_mem() && !inst.is_indexed_mem())
+}
+
+/// Tokenize a whole clip of trace records into an `(n x l_token)` matrix
+/// (row-major), padding/truncating each instruction independently.
+pub fn tokenize_clip(records: &[TraceRecord], l_token: usize) -> Vec<u16> {
+    let mut out = Vec::with_capacity(records.len() * l_token);
+    for r in records {
+        out.extend(standardize(&r.inst, has_const(&r.inst), l_token));
+    }
+    out
+}
+
+/// Content key for clip deduplication (paper §IV-B "unique code sequence
+/// content"): FNV-1a over the token stream.
+pub fn clip_key(tokens: &[u16]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in tokens {
+        h ^= *t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fast content key computed directly from decoded instruction fields —
+/// by construction it induces the same equivalence classes as hashing the
+/// standardized tokens (the tokens are a pure function of `(op, rd, ra,
+/// rb, has_const)`), but skips tokenization entirely. This is the hot-path
+/// dedup key in `coordinator::capsim_mode`: only clips whose key is new
+/// ever get tokenized.
+pub fn fast_clip_key(records: &[TraceRecord]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for r in records {
+        let i = &r.inst;
+        mix(i.op as u64);
+        mix(i.rd as u64 | ((i.ra as u64) << 8) | ((i.rb as u64) << 16)
+            | ((has_const(i) as u64) << 24));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Inst, Opcode};
+    use crate::tokenizer::vocab as v;
+    use crate::tokenizer::vocab::Vocab;
+
+    const LT: usize = 16;
+
+    fn toks(i: Inst) -> Vec<u16> {
+        standardize(&i, has_const(&i), LT)
+    }
+
+    fn names(ts: &[u16]) -> Vec<String> {
+        ts.iter()
+            .take_while(|&&t| t != v::PAD)
+            .map(|&t| Vocab::name(t))
+            .collect()
+    }
+
+    #[test]
+    fn fig5a_constant_becomes_const_token() {
+        // addi r3, r4, 8  ->  <REP><OPCODE>addi<DSTS>r3</DSTS><SRCS>r4<CONST></SRCS><END>
+        let t = toks(Inst::new(Opcode::Addi, 3, 4, 0, 8));
+        assert_eq!(
+            names(&t),
+            ["<REP>", "<OPCODE>", "addi", "<DSTS>", "r3", "</DSTS>",
+             "<SRCS>", "r4", "<CONST>", "</SRCS>", "<END>"]
+        );
+        // the immediate VALUE must not influence tokens (8 vs 100)
+        let t2 = toks(Inst::new(Opcode::Addi, 3, 4, 0, 100));
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn fig5b_load_gets_mem_segment() {
+        // lwz r5, 8(r9)
+        let t = toks(Inst::new(Opcode::Lwz, 5, 9, 0, 8));
+        let n = names(&t);
+        assert!(n.contains(&"<MEM>".to_string()));
+        let mpos = n.iter().position(|x| x == "<MEM>").unwrap();
+        assert_eq!(n[mpos + 1], "r9");
+        assert_eq!(n[mpos + 2], "</MEM>");
+    }
+
+    #[test]
+    fn fig5c_cmpi_has_implicit_cr_destination() {
+        let t = toks(Inst::new(Opcode::Cmpi, 0, 7, 0, 3));
+        let n = names(&t);
+        let d = n.iter().position(|x| x == "<DSTS>").unwrap();
+        assert_eq!(n[d + 1], "CR");
+    }
+
+    #[test]
+    fn rep_first_end_last() {
+        for op in crate::isa::inst::ALL_OPCODES {
+            let i = Inst::new(op, 1, 2, 3, 4);
+            let t = toks(i);
+            assert_eq!(t[0], v::REP, "{op:?}");
+            assert_eq!(t.len(), LT);
+            let last = t.iter().rposition(|&x| x != v::PAD).unwrap();
+            assert_eq!(t[last], v::END, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn indexed_mem_includes_both_regs() {
+        let t = toks(Inst::new(Opcode::Ldx, 3, 1, 2, 0));
+        let n = names(&t);
+        let m = n.iter().position(|x| x == "<MEM>").unwrap();
+        assert_eq!(&n[m + 1..m + 3], ["r1", "r2"]);
+    }
+
+    #[test]
+    fn blr_reads_lr_implicitly() {
+        let t = toks(Inst::new(Opcode::Blr, 0, 0, 0, 0));
+        let n = names(&t);
+        let s = n.iter().position(|x| x == "<SRCS>").unwrap();
+        assert_eq!(n[s + 1], "LR");
+    }
+
+    #[test]
+    fn clip_tokenization_shape_and_key() {
+        use crate::functional::AtomicCpu;
+        use crate::isa::Assembler;
+        let mut a = Assembler::new(0x1000);
+        a.li(1, 5);
+        a.addi(1, 1, 1);
+        a.cmpi(1, 6);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        let tr = cpu.run_trace(10);
+        let toks = tokenize_clip(&tr, LT);
+        assert_eq!(toks.len(), tr.len() * LT);
+        let k1 = clip_key(&toks);
+        let k2 = clip_key(&toks);
+        assert_eq!(k1, k2);
+        let toks2 = &toks[LT..];
+        assert_ne!(clip_key(toks2), k1);
+    }
+
+    #[test]
+    fn fast_key_equivalent_to_token_key() {
+        use crate::functional::AtomicCpu;
+        use crate::isa::Assembler;
+        use crate::util::Rng;
+        // random programs: fast keys must agree with token keys on
+        // equality/inequality across sliding windows
+        let mut rng = Rng::new(3);
+        let mut a = Assembler::new(0x1000);
+        a.li(31, 40);
+        a.mtctr(31);
+        let top = a.here();
+        a.addi(1, 1, 3);
+        a.lwz(2, 8, 1);
+        a.cmpi(2, 0);
+        let sk = a.label();
+        a.beq(sk);
+        a.mullw(3, 2, 2);
+        a.bind(sk);
+        a.bdnz(top);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        let tr = cpu.run_trace(10_000);
+        let mut seen: std::collections::HashMap<u64, u64> = Default::default();
+        for w in tr.windows(8).step_by(3).take(100) {
+            let fk = fast_clip_key(w);
+            let tk = clip_key(&tokenize_clip(w, LT));
+            if let Some(prev) = seen.insert(fk, tk) {
+                assert_eq!(prev, tk, "fast key collided across token classes");
+            }
+            let _ = rng.next_u64();
+        }
+        assert!(seen.len() > 1);
+    }
+
+    #[test]
+    fn all_instructions_fit_l_token() {
+        // worst case (stdx: 3 srcs + mem segment) must fit in 16 tokens
+        let t = toks(Inst::new(Opcode::Stdx, 7, 8, 9, 0));
+        assert_eq!(t.len(), LT);
+        assert!(names(&t).last().unwrap() == "<END>");
+    }
+}

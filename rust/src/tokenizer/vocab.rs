@@ -1,0 +1,175 @@
+//! The token vocabulary shared by the tokenizer (Fig. 5), the context
+//! matrix (Fig. 6) and the AOT-compiled embedding table.
+//!
+//! Ids are stable by construction: specials, then opcodes in
+//! `ALL_OPCODES` order, then register names, then the 256 byte-value
+//! tokens. The total must stay within `model_config.json`'s `vocab_size`
+//! (checked by the runtime at artifact-load time and by tests here).
+
+use crate::isa::inst::{RegRef, ALL_OPCODES, NUM_OPCODES};
+use crate::isa::Opcode;
+
+/// Special token ids (fixed positions).
+pub const PAD: u16 = 0;
+pub const REP: u16 = 1;
+pub const END: u16 = 2;
+pub const OPCODE: u16 = 3;
+pub const DSTS_OPEN: u16 = 4;
+pub const DSTS_CLOSE: u16 = 5;
+pub const SRCS_OPEN: u16 = 6;
+pub const SRCS_CLOSE: u16 = 7;
+pub const MEM_OPEN: u16 = 8;
+pub const MEM_CLOSE: u16 = 9;
+pub const CONST: u16 = 10;
+
+const NUM_SPECIALS: u16 = 11;
+const OPCODE_BASE: u16 = NUM_SPECIALS;
+const REG_BASE: u16 = OPCODE_BASE + NUM_OPCODES as u16;
+
+/// Architectural register names, Table-I order (GPRs, FPRs-as-VSRs, then
+/// the special registers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegName {
+    Gpr(u8),
+    Fpr(u8),
+    Cr,
+    Lr,
+    Ctr,
+    Xer,
+    Fpscr,
+    Cia,
+    Nia,
+}
+
+const NUM_REGS: u16 = 32 + 32 + 7;
+const BYTE_BASE: u16 = REG_BASE + NUM_REGS;
+
+/// Total number of tokens in use.
+pub const VOCAB_USED: u16 = BYTE_BASE + 256;
+
+/// Token vocabulary (stateless; all ids are computed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Vocab;
+
+impl Vocab {
+    pub fn opcode(op: Opcode) -> u16 {
+        OPCODE_BASE + op as u16
+    }
+
+    pub fn reg(r: RegName) -> u16 {
+        REG_BASE
+            + match r {
+                RegName::Gpr(i) => i as u16,
+                RegName::Fpr(i) => 32 + i as u16,
+                RegName::Cr => 64,
+                RegName::Lr => 65,
+                RegName::Ctr => 66,
+                RegName::Xer => 67,
+                RegName::Fpscr => 68,
+                RegName::Cia => 69,
+                RegName::Nia => 70,
+            }
+    }
+
+    pub fn reg_ref(r: RegRef) -> u16 {
+        Self::reg(match r {
+            RegRef::Gpr(i) => RegName::Gpr(i),
+            RegRef::Fpr(i) => RegName::Fpr(i),
+            RegRef::Cr => RegName::Cr,
+            RegRef::Lr => RegName::Lr,
+            RegRef::Ctr => RegName::Ctr,
+            RegRef::Xer => RegName::Xer,
+        })
+    }
+
+    /// Byte-value token (context matrix values, Fig. 6).
+    pub fn byte(b: u8) -> u16 {
+        BYTE_BASE + b as u16
+    }
+
+    /// Human-readable token name (debugging / docs).
+    pub fn name(tok: u16) -> String {
+        match tok {
+            PAD => "<PAD>".into(),
+            REP => "<REP>".into(),
+            END => "<END>".into(),
+            OPCODE => "<OPCODE>".into(),
+            DSTS_OPEN => "<DSTS>".into(),
+            DSTS_CLOSE => "</DSTS>".into(),
+            SRCS_OPEN => "<SRCS>".into(),
+            SRCS_CLOSE => "</SRCS>".into(),
+            MEM_OPEN => "<MEM>".into(),
+            MEM_CLOSE => "</MEM>".into(),
+            CONST => "<CONST>".into(),
+            t if t >= BYTE_BASE && t < BYTE_BASE + 256 => {
+                format!("B{:02X}", t - BYTE_BASE)
+            }
+            t if t >= REG_BASE && t < BYTE_BASE => {
+                let i = t - REG_BASE;
+                match i {
+                    0..=31 => format!("r{i}"),
+                    32..=63 => format!("f{}", i - 32),
+                    64 => "CR".into(),
+                    65 => "LR".into(),
+                    66 => "CTR".into(),
+                    67 => "XER".into(),
+                    68 => "FPSCR".into(),
+                    69 => "CIA".into(),
+                    _ => "NIA".into(),
+                }
+            }
+            t if t >= OPCODE_BASE && t < REG_BASE => {
+                ALL_OPCODES[(t - OPCODE_BASE) as usize].mnemonic().into()
+            }
+            t => format!("<UNK:{t}>"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model_config() {
+        // model_config.json declares 512; everything must fit below it
+        assert!(VOCAB_USED <= 512, "vocab {VOCAB_USED} exceeds embedding table");
+    }
+
+    #[test]
+    fn id_ranges_disjoint() {
+        let ids = [
+            Vocab::opcode(Opcode::Add),
+            Vocab::opcode(Opcode::Halt),
+            Vocab::reg(RegName::Gpr(0)),
+            Vocab::reg(RegName::Nia),
+            Vocab::byte(0),
+            Vocab::byte(255),
+        ];
+        for w in ids.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(ids[0] >= NUM_SPECIALS);
+        assert_eq!(ids[5] + 1, VOCAB_USED);
+    }
+
+    #[test]
+    fn names_roundtrip_distinct() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for t in 0..VOCAB_USED {
+            assert!(seen.insert(Vocab::name(t)), "dup name for {t}");
+        }
+    }
+
+    #[test]
+    fn table1_registers_have_tokens() {
+        // every Table-I register class must be representable
+        for r in [RegName::Gpr(31), RegName::Fpr(63 - 32), RegName::Cr,
+                  RegName::Lr, RegName::Ctr, RegName::Xer, RegName::Fpscr,
+                  RegName::Cia, RegName::Nia] {
+            let t = Vocab::reg(r);
+            assert!(t >= REG_BASE && t < BYTE_BASE);
+        }
+    }
+}

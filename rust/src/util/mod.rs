@@ -1,0 +1,11 @@
+//! Offline-friendly utilities: the vendored crate set has no serde / rand /
+//! criterion / proptest, so the small pieces we need live here, tested.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

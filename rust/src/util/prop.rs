@@ -1,0 +1,80 @@
+//! Miniature property-testing harness (proptest is not in the offline crate
+//! set). A property runs over `N` random cases generated from a seeded
+//! [`Rng`]; on failure the failing seed is reported so the case replays
+//! deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept modest; properties run in `cargo test`).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random inputs produced by `gen`. Panics with the
+/// failing case seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a reason.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {reason}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 32, |r| (r.below(100), r.below(100)),
+              |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics() {
+        check("always-false", 4, |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen1 = Vec::new();
+        check("collect1", 8, |r| r.next_u64(), |x| {
+            seen1.push(*x);
+            true
+        });
+        let mut seen2 = Vec::new();
+        check("collect2", 8, |r| r.next_u64(), |x| {
+            seen2.push(*x);
+            true
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

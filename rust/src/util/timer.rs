@@ -1,0 +1,144 @@
+//! Wall-clock measurement used by the Fig.-7 speed comparison and the bench
+//! harness (criterion is not in the offline crate set, so `bench_fn`
+//! implements the warmup + repeated-measurement loop itself).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named phases.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start timing a named phase (ends any running phase first).
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Stop the running phase, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.phases.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Total accumulated time of all phases with this name.
+    pub fn total(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    pub fn total_secs(&self, name: &str) -> f64 {
+        self.total(name).as_secs_f64()
+    }
+
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+}
+
+/// Result of a [`bench_fn`] run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  min {:>12}  max {:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.min_s),
+            fmt_duration(self.max_s)
+        )
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Criterion-lite: warm up, then measure `f` repeatedly until `budget`
+/// wall time or `max_iters` is spent, and report mean/min/max.
+pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup: one call (also triggers lazy init / JIT caches)
+    f();
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && times.len() < 10_000 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= 3 && start.elapsed() > budget {
+            break;
+        }
+    }
+    let n = times.len().max(1);
+    let mean = times.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.start("b");
+        std::thread::sleep(Duration::from_millis(1));
+        sw.stop();
+        assert!(sw.total("a") >= Duration::from_millis(2));
+        assert!(sw.total("b") >= Duration::from_millis(1));
+        assert_eq!(sw.total("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn bench_fn_runs() {
+        let mut count = 0usize;
+        let r = bench_fn("noop", Duration::from_millis(5), || count += 1);
+        assert!(r.iters >= 1);
+        assert!(count >= r.iters); // warmup adds one
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5e-6).ends_with("µs"));
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+    }
+}

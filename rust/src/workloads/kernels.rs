@@ -1,0 +1,608 @@
+//! Parameterized assembly kernels — the building blocks of the 24
+//! Table-II-analog benchmarks.
+//!
+//! Register conventions used throughout:
+//! * `r1`  — stack pointer for call/return kernels (stack at `STACK_TOP`,
+//!   grows down);
+//! * `r20..r31` — loop bounds / base addresses (long-lived);
+//! * `r2..r15` — scratch;
+//! * `f0..f31` — FP work.
+//!
+//! Every kernel appends to a caller-provided [`Assembler`] and leaves the
+//! machine in a state where further kernels can run (no dangling stack).
+
+use crate::isa::Assembler;
+use crate::util::Rng;
+
+/// Data-segment base addresses (spread across pages so kernels don't alias).
+pub const HEAP0: u64 = 0x0010_0000;
+pub const HEAP1: u64 = 0x0040_0000;
+pub const HEAP2: u64 = 0x0080_0000;
+pub const STACK_TOP: u64 = 0x0070_0000;
+
+/// Tight ALU dependency loop (`iters` iterations, ~4 insts each):
+/// pure compute, no memory.
+pub fn alu_chain(a: &mut Assembler, iters: i32) {
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let top = a.here();
+    a.addi(2, 2, 3);
+    a.mullw(3, 2, 2);
+    a.xor(4, 3, 2);
+    a.bdnz(top);
+}
+
+/// Independent ALU work across 8 registers — high-ILP integer compute.
+pub fn alu_parallel(a: &mut Assembler, iters: i32) {
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let top = a.here();
+    for k in 0..8u8 {
+        a.addi(2 + k, 2 + k, (k as i32) + 1);
+    }
+    a.bdnz(top);
+}
+
+/// Sequential streaming over `n` doubles at `base`: triad-style
+/// `y[i] = a*x[i] + y[i]` (memory bandwidth + FP).
+pub fn stream_triad(a: &mut Assembler, base: u64, n: i32, iters: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(22, base + 8 * n as u64);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    a.or(5, 21, 21); // x cursor
+    a.or(6, 22, 22); // y cursor
+    a.li(7, n);
+    let inner_top = a.here();
+    a.lfd(1, 0, 5);
+    a.lfd(2, 0, 6);
+    a.fmadd(2, 1, 3); // y += x * f3
+    a.stfd(2, 0, 6);
+    a.addi(5, 5, 8);
+    a.addi(6, 6, 8);
+    a.addi(7, 7, -1);
+    a.cmpi(7, 0);
+    a.bgt(inner_top);
+    a.bdnz(outer);
+}
+
+/// Pointer chase through a pseudo-random cycle of `n` 64-byte nodes at
+/// `base` — latency-bound memory (mcf/xalancbmk flavour). Requires the
+/// ring to be written by [`pointer_ring_data`] first.
+pub fn pointer_chase(a: &mut Assembler, base: u64, steps: i32) {
+    a.load_imm64(21, base);
+    a.or(5, 21, 21);
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    a.ld(5, 0, 5); // follow next pointer
+    a.addi(6, 6, 1);
+    a.bdnz(top);
+}
+
+/// Build the pointer ring data for [`pointer_chase`]: a random permutation
+/// cycle over `n` nodes spaced 64 B apart.
+pub fn pointer_ring_data(a: &mut Assembler, base: u64, n: usize, rng: &mut Rng) {
+    let mut order: Vec<usize> = (1..n).collect();
+    rng.shuffle(&mut order);
+    let mut cycle = vec![0usize];
+    cycle.extend(order);
+    for (i, &node) in cycle.iter().enumerate() {
+        let next = cycle[(i + 1) % n];
+        a.data_u64(base + (node as u64) * 64, &[base + (next as u64) * 64]);
+    }
+}
+
+/// 2D 5-point stencil over an `nx` x `ny` f64 grid at `base`, `iters`
+/// sweeps (bwaves/cactuBSSN/fotonik3d flavour).
+pub fn stencil2d(a: &mut Assembler, base: u64, nx: i32, ny: i32, iters: i32) {
+    let row = 8 * nx;
+    a.load_imm64(21, base);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    // cursor starts at interior row 1, col 1
+    a.addi(5, 21, (row + 8) as i32);
+    a.li(6, ny - 2); // rows remaining
+    let row_top = a.here();
+    a.li(7, nx - 2); // cols remaining
+    let col_top = a.here();
+    a.lfd(1, 0, 5); // center
+    a.lfd(2, -8, 5); // west
+    a.lfd(3, 8, 5); // east
+    a.lfd(4, -(row as i32), 5); // north
+    a.lfd(5, row as i32, 5); // south
+    a.fadd(2, 2, 3);
+    a.fadd(4, 4, 5);
+    a.fadd(2, 2, 4);
+    a.fmadd(2, 1, 6); // += c*f6
+    a.fmul(2, 2, 7); // *= 0.2-ish in f7
+    a.stfd(2, 0, 5);
+    a.addi(5, 5, 8);
+    a.addi(7, 7, -1);
+    a.cmpi(7, 0);
+    a.bgt(col_top);
+    a.addi(5, 5, 16); // skip boundary cols
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(row_top);
+    a.bdnz(outer);
+}
+
+/// Bytecode interpreter (perlbench/gcc flavour): fetch opcode byte from a
+/// random program at `base`, dispatch through a chain of compares — heavy
+/// data-dependent control flow.
+pub fn interpreter(a: &mut Assembler, base: u64, prog_len: i32, steps: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(22, prog_len as u64 * 8); // wrap bound (may exceed imm14)
+    a.li(6, 0); // vm accumulator
+    a.li(8, 0); // pc
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    a.ldx(2, 21, 8); // fetch 8 "bytecodes" at once; use low byte
+    a.andi(3, 2, 0x7);
+    // dispatch: chain of cmpi/beq (unpredictable)
+    let done = a.label();
+    let c1 = a.label();
+    let c2 = a.label();
+    let c3 = a.label();
+    a.cmpi(3, 0);
+    a.bne(c1);
+    a.addi(6, 6, 1);
+    a.b(done);
+    a.bind(c1);
+    a.cmpi(3, 1);
+    a.bne(c2);
+    a.sub(6, 6, 3);
+    a.b(done);
+    a.bind(c2);
+    a.cmpi(3, 2);
+    a.bne(c3);
+    a.mullw(6, 6, 2);
+    a.b(done);
+    a.bind(c3);
+    a.xor(6, 6, 2);
+    a.bind(done);
+    // advance vm pc pseudo-randomly within the bytecode array
+    a.addi(8, 8, 8);
+    a.cmp(8, 22);
+    let nowrap = a.label();
+    a.blt(nowrap);
+    a.li(8, 0);
+    a.bind(nowrap);
+    a.bdnz(top);
+}
+
+/// Recursive search (deepsjeng/exchange2 flavour): depth-first walk with
+/// data-dependent pruning, exercising bl/blr + the RAS + stack memory.
+/// Recursion depth is bounded by `depth`; `width` children per node.
+pub fn recursive_search(a: &mut Assembler, depth: i32, width: i32, reps: i32) {
+    // r1 = sp; f(depth): if depth==0 return; loop width times: recurse
+    a.load_imm64(1, STACK_TOP);
+    a.load_imm64(20, reps as u64);
+    a.mtctr(20);
+    let rep_top = a.here();
+    let func = a.label();
+    let after = a.label();
+    a.li(25, depth);
+    a.bl(func);
+    a.b(after);
+
+    a.bind(func);
+    // prologue: push lr, r25, r26
+    a.mflr(9);
+    a.std(9, -8, 1);
+    a.std(25, -16, 1);
+    a.std(26, -24, 1);
+    a.addi(1, 1, -32);
+    let ret = a.label();
+    a.cmpi(25, 0);
+    a.ble(ret);
+    a.li(26, width);
+    let child_top = a.here();
+    // prune on a cheap hash of (depth, child): skip some subtrees
+    a.xor(10, 25, 26);
+    a.andi(10, 10, 0x3);
+    a.cmpi(10, 0);
+    let skip = a.label();
+    a.beq(skip);
+    a.addi(25, 25, -1);
+    a.bl(func);
+    a.addi(25, 25, 1);
+    a.bind(skip);
+    a.addi(26, 26, -1);
+    a.cmpi(26, 0);
+    a.bgt(child_top);
+    a.bind(ret);
+    // epilogue
+    a.addi(1, 1, 32);
+    a.ld(26, -24, 1);
+    a.ld(25, -16, 1);
+    a.ld(9, -8, 1);
+    a.mtlr(9);
+    a.blr();
+
+    a.bind(after);
+    a.bdnz(rep_top);
+}
+
+/// Hash-table probe loop (xalancbmk/leela flavour): hash a counter,
+/// load a bucket, compare, branch — mixes MEM and CTRL.
+pub fn hash_probe(a: &mut Assembler, base: u64, mask: i32, steps: i32) {
+    a.load_imm64(21, base);
+    a.li(5, 12345);
+    a.li(11, 0);
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    // xorshift hash
+    a.sldi(6, 5, 13);
+    a.xor(5, 5, 6);
+    a.srdi(6, 5, 7);
+    a.xor(5, 5, 6);
+    a.sldi(6, 5, 17);
+    a.xor(5, 5, 6);
+    a.andi(7, 5, mask);
+    a.sldi(7, 7, 3);
+    a.ldx(8, 21, 7); // bucket
+    a.cmp(8, 5);
+    let miss = a.label();
+    a.bne(miss);
+    a.addi(11, 11, 1); // hit counter (rare)
+    a.bind(miss);
+    a.stdx(5, 21, 7); // insert
+    a.bdnz(top);
+}
+
+/// Dense FP multi-array loops (wrf/cam4/roms flavour): `arrays` interleaved
+/// f64 arrays of length `n`, combined with mixed fmadd/fdiv work.
+pub fn fp_arrays(a: &mut Assembler, base: u64, arrays: i32, n: i32, iters: i32, with_div: bool) {
+    a.load_imm64(21, base);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    a.or(5, 21, 21);
+    a.li(6, n);
+    let inner = a.here();
+    for k in 0..arrays.min(4) {
+        a.lfd(1 + k as u8, (k * 8) as i32, 5);
+    }
+    a.fadd(10, 1, 2);
+    a.fmadd(10, 1, 2);
+    if arrays >= 3 {
+        a.fmul(11, 3, 10);
+    } else {
+        a.fmul(11, 10, 10);
+    }
+    if with_div {
+        a.fdiv(12, 10, 11);
+        a.stfd(12, 0, 5);
+    } else {
+        a.stfd(11, 0, 5);
+    }
+    a.addi(5, 5, arrays.min(4) * 8);
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(inner);
+    a.bdnz(outer);
+}
+
+/// Integer block ops (x264 SAD flavour): absolute-difference accumulation
+/// over byte blocks, mostly ALU with regular loads.
+pub fn sad_blocks(a: &mut Assembler, base: u64, blocks: i32, iters: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(22, base + 0x8000);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    a.li(6, blocks);
+    a.li(12, 0); // sad accumulator
+    a.or(5, 21, 21);
+    a.or(7, 22, 22);
+    let inner = a.here();
+    a.ld(2, 0, 5);
+    a.ld(3, 0, 7);
+    a.sub(4, 2, 3);
+    a.sradi(8, 4, 63); // sign mask
+    a.xor(4, 4, 8);
+    a.sub(4, 4, 8); // |diff|
+    a.add(12, 12, 4);
+    a.addi(5, 5, 8);
+    a.addi(7, 7, 8);
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(inner);
+    a.bdnz(outer);
+}
+
+/// LZ-style match finder (xz flavour): scan a byte window comparing
+/// against a lagged copy, with data-dependent match-extension loops.
+pub fn match_finder(a: &mut Assembler, base: u64, window: i32, steps: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(22, window as u64 * 8); // wrap bound
+    a.li(9, 0); // position
+    a.li(11, 0); // match count
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    a.ldx(2, 21, 9); // current
+    a.addi(10, 9, 256); // lag offset
+    a.ldx(3, 21, 10);
+    a.cmp(2, 3);
+    let nomatch = a.label();
+    a.bne(nomatch);
+    // extend match (bounded short loop)
+    a.li(6, 4);
+    let ext = a.here();
+    a.addi(9, 9, 8);
+    a.ldx(2, 21, 9);
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(ext);
+    a.addi(11, 11, 1);
+    a.bind(nomatch);
+    a.addi(9, 9, 8);
+    // wrap window
+    a.cmp(9, 22);
+    let nowrap = a.label();
+    a.blt(nowrap);
+    a.li(9, 0);
+    a.bind(nowrap);
+    a.bdnz(top);
+}
+
+/// Lattice-update kernel (lbm flavour): structured grid, load a
+/// neighbourhood of 4, weighted combine, store back with stride.
+pub fn lattice_update(a: &mut Assembler, base: u64, cells: i32, iters: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    a.or(5, 21, 21);
+    a.li(6, cells);
+    let inner = a.here();
+    a.lfd(1, 0, 5);
+    a.lfd(2, 8, 5);
+    a.lfd(3, 16, 5);
+    a.lfd(4, 24, 5);
+    a.fadd(10, 1, 2);
+    a.fadd(11, 3, 4);
+    a.fadd(10, 10, 11);
+    a.fmul(10, 10, 8); // f8 = 0.25
+    a.stfd(10, 0, 5);
+    a.stfd(10, 32, 5);
+    a.addi(5, 5, 40);
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(inner);
+    a.bdnz(outer);
+}
+
+/// Event-queue simulation (omnetpp flavour): binary-heap sift operations
+/// driven by a PRNG — pointer arithmetic + hard-to-predict compares.
+pub fn event_heap(a: &mut Assembler, base: u64, heap_elems: i32, steps: i32) {
+    a.load_imm64(21, base);
+    a.li(5, 98765); // prng state
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    // prng
+    a.sldi(6, 5, 13);
+    a.xor(5, 5, 6);
+    a.srdi(6, 5, 7);
+    a.xor(5, 5, 6);
+    // i = prng % heap_elems (approx via mask)
+    a.andi(7, 5, heap_elems - 1);
+    // sift: while i>0 { parent=(i-1)/2; if h[p] <= h[i] break; swap }
+    let sift = a.here();
+    a.cmpi(7, 0);
+    let done = a.label();
+    a.ble(done);
+    a.addi(8, 7, -1);
+    a.srdi(8, 8, 1); // parent
+    a.sldi(9, 7, 3);
+    a.sldi(10, 8, 3);
+    a.ldx(2, 21, 9);
+    a.ldx(3, 21, 10);
+    a.cmp(3, 2);
+    a.ble(done);
+    a.stdx(2, 21, 10); // swap
+    a.stdx(3, 21, 9);
+    a.or(7, 8, 8); // i = parent
+    a.b(sift);
+    a.bind(done);
+    // push new key = prng at random slot
+    a.andi(7, 5, heap_elems - 1);
+    a.sldi(9, 7, 3);
+    a.stdx(5, 21, 9);
+    a.bdnz(top);
+}
+
+/// N-body-ish force loop (namd/nab flavour): inner loop of FP with
+/// divides (softened inverse square).
+pub fn nbody_forces(a: &mut Assembler, base: u64, n: i32, iters: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(20, iters as u64);
+    a.mtctr(20);
+    let outer = a.here();
+    a.or(5, 21, 21);
+    a.li(6, n);
+    let inner = a.here();
+    a.lfd(1, 0, 5); // xi
+    a.lfd(2, 8, 5); // xj
+    a.fsub(3, 1, 2); // dx
+    a.fmul(4, 3, 3); // dx^2
+    a.fadd(4, 4, 9); // + eps  (f9)
+    a.fdiv(10, 3, 4); // force ~ dx / (dx^2+eps)
+    a.lfd(11, 16, 5);
+    a.fadd(11, 11, 10);
+    a.stfd(11, 16, 5);
+    a.addi(5, 5, 24);
+    a.addi(6, 6, -1);
+    a.cmpi(6, 0);
+    a.bgt(inner);
+    a.bdnz(outer);
+}
+
+/// PRNG + scatter stores (specrand flavour).
+pub fn prng_scatter(a: &mut Assembler, base: u64, mask: i32, steps: i32) {
+    a.load_imm64(21, base);
+    a.load_imm64(5, 424242);
+    a.load_imm64(20, steps as u64);
+    a.mtctr(20);
+    let top = a.here();
+    a.sldi(6, 5, 13);
+    a.xor(5, 5, 6);
+    a.srdi(6, 5, 7);
+    a.xor(5, 5, 6);
+    a.sldi(6, 5, 17);
+    a.xor(5, 5, 6);
+    a.andi(7, 5, mask);
+    a.sldi(7, 7, 3);
+    a.stdx(5, 21, 7);
+    a.bdnz(top);
+}
+
+/// Fill a data region with pseudo-random u64s (initial heap contents).
+pub fn random_data(a: &mut Assembler, base: u64, words: usize, rng: &mut Rng) {
+    let vals: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    a.data_u64(base, &vals);
+}
+
+/// Fill a data region with pseudo-random f64s in [0.5, 1.5).
+pub fn random_f64_data(a: &mut Assembler, base: u64, count: usize, rng: &mut Rng) {
+    let vals: Vec<f64> = (0..count).map(|_| 0.5 + rng.f64()).collect();
+    a.data_f64(base, &vals);
+}
+
+/// Set up the commonly-used FP constants f3=1.5, f6=0.3, f7=0.2, f8=0.25,
+/// f9=1e-3 from a constant pool.
+pub fn fp_constants(a: &mut Assembler, pool: u64) {
+    a.data_f64(pool, &[1.5, 0.3, 0.2, 0.25, 1e-3]);
+    a.load_imm64(15, pool);
+    a.lfd(3, 0, 15);
+    a.lfd(6, 8, 15);
+    a.lfd(7, 16, 15);
+    a.lfd(8, 24, 15);
+    a.lfd(9, 32, 15);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::AtomicCpu;
+
+    fn run_kernel(build: impl FnOnce(&mut Assembler, &mut Rng)) -> AtomicCpu {
+        let mut a = Assembler::new(0x1000);
+        let mut rng = Rng::new(7);
+        fp_constants(&mut a, HEAP2 + 0x10000);
+        build(&mut a, &mut rng);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        let n = cpu.run_with(5_000_000, |_| {});
+        assert!(cpu.halted, "kernel must halt (ran {n} insts)");
+        cpu
+    }
+
+    #[test]
+    fn alu_kernels_halt() {
+        run_kernel(|a, _| alu_chain(a, 500));
+        run_kernel(|a, _| alu_parallel(a, 500));
+    }
+
+    #[test]
+    fn stream_triad_touches_memory() {
+        let cpu = run_kernel(|a, r| {
+            random_f64_data(a, HEAP0, 256, r);
+            random_f64_data(a, HEAP0 + 8 * 256, 256, r);
+            stream_triad(a, HEAP0, 256, 3);
+        });
+        assert!(cpu.mem.read_f64(HEAP0 + 8 * 256) != 0.0);
+    }
+
+    #[test]
+    fn pointer_chase_visits_ring() {
+        let cpu = run_kernel(|a, r| {
+            pointer_ring_data(a, HEAP0, 64, r);
+            pointer_chase(a, HEAP0, 500);
+        });
+        assert_eq!(cpu.regs.gpr[6], 500);
+        // cursor must still be inside the ring
+        let p = cpu.regs.gpr[5];
+        assert!(p >= HEAP0 && p < HEAP0 + 64 * 64);
+    }
+
+    #[test]
+    fn stencil_and_lattice_halt_and_write() {
+        let cpu = run_kernel(|a, r| {
+            random_f64_data(a, HEAP0, 32 * 32, r);
+            stencil2d(a, HEAP0, 32, 32, 2);
+        });
+        assert!(cpu.icount > 5_000);
+        run_kernel(|a, r| {
+            random_f64_data(a, HEAP1, 600, r);
+            lattice_update(a, HEAP1, 100, 3);
+        });
+    }
+
+    #[test]
+    fn interpreter_exercises_branches() {
+        let mut a = Assembler::new(0x1000);
+        let mut rng = Rng::new(9);
+        random_data(&mut a, HEAP0, 128, &mut rng);
+        interpreter(&mut a, HEAP0, 128, 2_000);
+        a.halt();
+        let mut cpu = AtomicCpu::load(&a.finish());
+        let trace = cpu.run_trace(5_000_000);
+        assert!(cpu.halted);
+        let branches = trace.iter().filter(|r| r.inst.is_cond_branch()).count();
+        assert!(branches as f64 / trace.len() as f64 > 0.15,
+                "interpreter should be branch-heavy");
+    }
+
+    #[test]
+    fn recursive_search_balances_stack() {
+        let cpu = run_kernel(|a, _| recursive_search(a, 5, 3, 2));
+        assert_eq!(cpu.regs.gpr[1], STACK_TOP, "stack must be balanced");
+    }
+
+    #[test]
+    fn hash_and_heap_and_match_halt() {
+        run_kernel(|a, r| {
+            random_data(a, HEAP0, 1024, r);
+            hash_probe(a, HEAP0, 1023, 2_000);
+        });
+        run_kernel(|a, r| {
+            random_data(a, HEAP1, 256, r);
+            event_heap(a, HEAP1, 256, 1_000);
+        });
+        run_kernel(|a, r| {
+            random_data(a, HEAP0, 4096, r);
+            match_finder(a, HEAP0, 2048, 1_500);
+        });
+    }
+
+    #[test]
+    fn fp_kernels_halt_with_finite_results() {
+        let cpu = run_kernel(|a, r| {
+            random_f64_data(a, HEAP0, 1024, r);
+            fp_arrays(a, HEAP0, 4, 128, 3, true);
+        });
+        assert!(cpu.regs.fpr[12].is_finite());
+        run_kernel(|a, r| {
+            random_f64_data(a, HEAP1, 512, r);
+            nbody_forces(a, HEAP1, 128, 3);
+        });
+    }
+
+    #[test]
+    fn sad_and_prng_halt() {
+        run_kernel(|a, r| {
+            random_data(a, HEAP0, 8192, r);
+            sad_blocks(a, HEAP0, 256, 4);
+        });
+        run_kernel(|a, _| prng_scatter(a, HEAP1, 4095, 3_000));
+    }
+}

@@ -1,0 +1,369 @@
+//! The 24 benchmarks of Table II, as synthetic PISA analogues.
+//!
+//! Name, tags (CTRL / COMP / MEM) and set number (1..6) are copied from the
+//! paper's Table II; the program behind each name is a seeded composition of
+//! the kernels in [`super::kernels`] chosen to realize that benchmark's
+//! behavioural mix (e.g. `500.perlbench` = bytecode interpreter = CTRL;
+//! `503.bwaves` = FP stencil = COMP+MEM). Most benchmarks are multi-phase so
+//! SimPoint has real cluster structure to find.
+
+use crate::isa::asm::Program;
+use crate::isa::Assembler;
+use crate::util::Rng;
+
+use super::kernels::*;
+
+/// Behaviour tags from Table II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tag {
+    Ctrl,
+    Comp,
+    Mem,
+}
+
+impl Tag {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Tag::Ctrl => "CTRL",
+            Tag::Comp => "COMP",
+            Tag::Mem => "MEM",
+        }
+    }
+}
+
+/// Workload scale: `Test` keeps unit tests fast; `Full` is the
+/// EXPERIMENTS.md configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// ~30-80k dynamic instructions per benchmark.
+    Test,
+    /// ~0.5-1.5M dynamic instructions per benchmark.
+    Full,
+}
+
+/// Extra multiplier on full-scale iteration counts, calibrated so each
+/// benchmark runs ~5-20M dynamic instructions — enough for several
+/// 1M-instruction SimPoint intervals (the EXPERIMENTS.md geometry).
+const FULL_BOOST: i32 = 10;
+
+impl Scale {
+    /// Multiplier applied to iteration counts.
+    fn x(&self, test: i32, full: i32) -> i32 {
+        match self {
+            Scale::Test => test,
+            Scale::Full => full.saturating_mul(FULL_BOOST),
+        }
+    }
+}
+
+/// One Table-II benchmark.
+pub struct Benchmark {
+    pub name: &'static str,
+    pub tags: &'static [Tag],
+    /// Cross-generalization set (1..=6), from Table II.
+    pub set_no: u8,
+    pub program: Program,
+}
+
+impl Benchmark {
+    pub fn tag_string(&self) -> String {
+        self.tags
+            .iter()
+            .map(|t| t.short())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    pub fn has_tag(&self, t: Tag) -> bool {
+        self.tags.contains(&t)
+    }
+}
+
+struct Builder {
+    a: Assembler,
+    rng: Rng,
+}
+
+impl Builder {
+    fn new(seed: u64) -> Self {
+        let mut a = Assembler::new(0x1000);
+        let rng = Rng::new(seed);
+        fp_constants(&mut a, HEAP2 + 0x20000);
+        Builder { a, rng }
+    }
+
+    fn finish(mut self) -> Program {
+        self.a.halt();
+        self.a.finish()
+    }
+}
+
+macro_rules! bench {
+    ($name:literal, $tags:expr, $set:literal, $seed:literal, $s:ident, $body:expr) => {{
+        #[allow(unused_mut)]
+        let mut b = Builder::new($seed);
+        {
+            let a = &mut b.a;
+            let rng = &mut b.rng;
+            let _ = rng;
+            let f: &dyn Fn(&mut Assembler, &mut Rng, Scale) = &$body;
+            f(a, rng, $s);
+        }
+        Benchmark { name: $name, tags: $tags, set_no: $set, program: b.finish() }
+    }};
+}
+
+/// Build the full 24-benchmark suite (Table II order).
+pub fn suite(s: Scale) -> Vec<Benchmark> {
+    use Tag::*;
+    const CTRL: &[Tag] = &[Tag::Ctrl];
+    const COMP: &[Tag] = &[Tag::Comp];
+    const COMP_MEM: &[Tag] = &[Tag::Comp, Tag::Mem];
+    const CTRL_MEM: &[Tag] = &[Tag::Ctrl, Tag::Mem];
+    let _ = (Ctrl, Comp, Mem);
+
+    vec![
+        // 500.perlbench — bytecode interpreter, CTRL, set 1
+        bench!("500.perlbench", CTRL, 1, 500, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 256, r);
+            interpreter(a, HEAP0, 256, s.x(2_000, 60_000));
+            recursive_search(a, 4, 3, s.x(2, 40));
+            interpreter(a, HEAP0, 256, s.x(1_000, 40_000));
+        }),
+        // 502.gcc — tree walking + interpretation, CTRL, set 2
+        bench!("502.gcc", CTRL, 2, 502, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 512, r);
+            recursive_search(a, 6, 3, s.x(2, 60));
+            interpreter(a, HEAP0, 512, s.x(1_500, 50_000));
+        }),
+        // 503.bwaves — FP stencil, COMP+MEM, set 1
+        bench!("503.bwaves", COMP_MEM, 1, 503, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 48 * 48, r);
+            stencil2d(a, HEAP0, 48, 48, s.x(2, 60));
+            stream_triad(a, HEAP1, 512, s.x(2, 40));
+        }),
+        // 505.mcf — pointer chasing + relaxation, COMP+MEM, set 2
+        bench!("505.mcf", COMP_MEM, 2, 505, s, |a, r, s: Scale| {
+            pointer_ring_data(a, HEAP0, 1024, r);
+            pointer_chase(a, HEAP0, s.x(5_000, 250_000));
+            random_data(a, HEAP1, 2048, r);
+            hash_probe(a, HEAP1, 2047, s.x(2_000, 80_000));
+        }),
+        // 507.cactuBSSN — big-stencil FP, COMP+MEM, set 3
+        bench!("507.cactuBSSN", COMP_MEM, 3, 507, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 64 * 64, r);
+            stencil2d(a, HEAP0, 64, 64, s.x(2, 40));
+            fp_arrays(a, HEAP1, 4, 256, s.x(2, 60), false);
+        }),
+        // 508.namd — n-body forces, COMP+MEM, set 4
+        bench!("508.namd", COMP_MEM, 4, 508, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 3 * 512, r);
+            nbody_forces(a, HEAP0, 512, s.x(4, 140));
+        }),
+        // 510.parest — sparse solver flavour, COMP+MEM, set 5
+        bench!("510.parest", COMP_MEM, 5, 510, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 2048, r);
+            fp_arrays(a, HEAP0, 3, 512, s.x(3, 70), true);
+            stream_triad(a, HEAP1, 512, s.x(2, 50));
+        }),
+        // 511.povray — FP + branches, COMP+MEM, set 6
+        bench!("511.povray", COMP_MEM, 6, 511, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 1024, r);
+            nbody_forces(a, HEAP0, 256, s.x(3, 60));
+            random_data(a, HEAP1, 512, r);
+            interpreter(a, HEAP1, 512, s.x(1_000, 30_000));
+            fp_arrays(a, HEAP0, 2, 256, s.x(2, 40), true);
+        }),
+        // 519.lbm — lattice update, COMP+MEM, set 1
+        bench!("519.lbm", COMP_MEM, 1, 519, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 5 * 1200, r);
+            lattice_update(a, HEAP0, 1000, s.x(3, 90));
+        }),
+        // 520.omnetpp — event simulation, CTRL, set 3
+        bench!("520.omnetpp", CTRL, 3, 520, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 1024, r);
+            event_heap(a, HEAP0, 1024, s.x(3_000, 120_000));
+        }),
+        // 521.wrf — multi-array FP, COMP+MEM, set 2
+        bench!("521.wrf", COMP_MEM, 2, 521, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 4096, r);
+            fp_arrays(a, HEAP0, 4, 768, s.x(2, 50), false);
+            stencil2d(a, HEAP1, 40, 40, s.x(2, 30));
+        }),
+        // 523.xalancbmk — tree/hash traversal, CTRL+MEM, set 4
+        bench!("523.xalancbmk", CTRL_MEM, 4, 523, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 4096, r);
+            hash_probe(a, HEAP0, 4095, s.x(3_000, 100_000));
+            pointer_ring_data(a, HEAP1, 512, r);
+            pointer_chase(a, HEAP1, s.x(2_000, 60_000));
+        }),
+        // 525.x264 — integer block ops, COMP, set 3
+        bench!("525.x264", COMP, 3, 525, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 8192, r);
+            sad_blocks(a, HEAP0, 512, s.x(4, 120));
+            alu_parallel(a, s.x(2_000, 60_000));
+        }),
+        // 526.blender — FP transform, COMP+MEM, set 4
+        bench!("526.blender", COMP_MEM, 4, 526, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 3072, r);
+            fp_arrays(a, HEAP0, 4, 512, s.x(3, 70), false);
+            lattice_update(a, HEAP1, 400, s.x(2, 40));
+        }),
+        // 527.cam4 — physics loops, COMP+MEM, set 5
+        bench!("527.cam4", COMP_MEM, 5, 527, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 4096, r);
+            fp_arrays(a, HEAP0, 4, 640, s.x(2, 45), true);
+            stencil2d(a, HEAP1, 32, 32, s.x(2, 40));
+            stream_triad(a, HEAP2, 256, s.x(2, 30));
+        }),
+        // 531.deepsjeng — recursive search, CTRL, set 5
+        bench!("531.deepsjeng", CTRL, 5, 531, s, |a, r, s: Scale| {
+            recursive_search(a, 7, 3, s.x(2, 50));
+            random_data(a, HEAP0, 512, r);
+            interpreter(a, HEAP0, 512, s.x(800, 25_000));
+        }),
+        // 538.imagick — convolution, COMP+MEM, set 6
+        bench!("538.imagick", COMP_MEM, 6, 538, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 48 * 48, r);
+            stencil2d(a, HEAP0, 48, 48, s.x(2, 50));
+            sad_blocks(a, HEAP1, 256, s.x(3, 80));
+        }),
+        // 541.leela — MCTS-ish walks, CTRL+MEM, set 1
+        bench!("541.leela", CTRL_MEM, 1, 541, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 2048, r);
+            event_heap(a, HEAP0, 2048, s.x(1_500, 50_000));
+            recursive_search(a, 5, 3, s.x(2, 35));
+            hash_probe(a, HEAP1, 1023, s.x(1_000, 40_000));
+        }),
+        // 544.nab — molecular FP, COMP+MEM, set 2
+        bench!("544.nab", COMP_MEM, 2, 544, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 3 * 640, r);
+            nbody_forces(a, HEAP0, 640, s.x(3, 80));
+            fp_arrays(a, HEAP1, 2, 256, s.x(2, 40), false);
+        }),
+        // 548.exchange2 — backtracking, CTRL+MEM, set 6
+        bench!("548.exchange2", CTRL_MEM, 6, 548, s, |a, r, s: Scale| {
+            recursive_search(a, 8, 2, s.x(3, 70));
+            random_data(a, HEAP0, 1024, r);
+            event_heap(a, HEAP0, 1024, s.x(1_000, 40_000));
+        }),
+        // 549.fotonik3d — FDTD stencil, COMP+MEM, set 3
+        bench!("549.fotonik3d", COMP_MEM, 3, 549, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 56 * 56, r);
+            stencil2d(a, HEAP0, 56, 56, s.x(2, 45));
+            lattice_update(a, HEAP1, 600, s.x(2, 40));
+        }),
+        // 554.roms — ocean model, COMP+MEM, set 4
+        bench!("554.roms", COMP_MEM, 4, 554, s, |a, r, s: Scale| {
+            random_f64_data(a, HEAP0, 4096, r);
+            fp_arrays(a, HEAP0, 4, 512, s.x(2, 40), true);
+            stream_triad(a, HEAP1, 768, s.x(2, 45));
+            stencil2d(a, HEAP2, 32, 32, s.x(1, 25));
+        }),
+        // 557.xz — match finder, COMP+MEM, set 5
+        bench!("557.xz", COMP_MEM, 5, 557, s, |a, r, s: Scale| {
+            random_data(a, HEAP0, 8192, r);
+            match_finder(a, HEAP0, 4096, s.x(3_000, 110_000));
+            sad_blocks(a, HEAP1, 256, s.x(2, 40));
+        }),
+        // 999.specrand — PRNG scatter, COMP+MEM, set 6
+        bench!("999.specrand", COMP_MEM, 6, 999, s, |a, _r, s: Scale| {
+            prng_scatter(a, HEAP0, 8191, s.x(4_000, 150_000));
+            alu_chain(a, s.x(1_000, 30_000));
+        }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::AtomicCpu;
+
+    #[test]
+    fn suite_matches_table2_shape() {
+        let s = suite(Scale::Test);
+        assert_eq!(s.len(), 24);
+        // six sets, each with 4 benchmarks (Table II)
+        for set in 1..=6u8 {
+            let n = s.iter().filter(|b| b.set_no == set).count();
+            assert_eq!(n, 4, "set {set} must have 4 benchmarks");
+        }
+        // names unique
+        let mut names: Vec<_> = s.iter().map(|b| b.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 24);
+    }
+
+    #[test]
+    fn every_benchmark_halts_at_test_scale() {
+        for b in suite(Scale::Test) {
+            let mut cpu = AtomicCpu::load(&b.program);
+            cpu.run_with(3_000_000, |_| {});
+            assert!(cpu.halted, "{} did not halt", b.name);
+            assert!(cpu.icount > 5_000, "{} too short: {}", b.name, cpu.icount);
+        }
+    }
+
+    #[test]
+    fn tags_predict_behaviour() {
+        // CTRL-tagged benchmarks should have a clearly higher conditional
+        // branch share than pure COMP+MEM ones.
+        let mut ctrl_rate = Vec::new();
+        let mut comp_rate = Vec::new();
+        for b in suite(Scale::Test) {
+            let mut cpu = AtomicCpu::load(&b.program);
+            let mut branches = 0u64;
+            let n = cpu.run_with(200_000, |r| {
+                if r.inst.is_cond_branch() {
+                    branches += 1;
+                }
+            });
+            let rate = branches as f64 / n as f64;
+            if b.has_tag(Tag::Ctrl) {
+                ctrl_rate.push(rate);
+            } else if !b.has_tag(Tag::Ctrl) {
+                comp_rate.push(rate);
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            avg(&ctrl_rate) > avg(&comp_rate),
+            "CTRL {:.3} should exceed COMP {:.3}",
+            avg(&ctrl_rate),
+            avg(&comp_rate)
+        );
+    }
+
+    #[test]
+    fn mem_benchmarks_touch_more_memory() {
+        let mut mem_rate = Vec::new();
+        let mut nonmem_rate = Vec::new();
+        for b in suite(Scale::Test) {
+            let mut cpu = AtomicCpu::load(&b.program);
+            let mut mems = 0u64;
+            let n = cpu.run_with(200_000, |r| {
+                if r.inst.is_mem() {
+                    mems += 1;
+                }
+            });
+            let rate = mems as f64 / n as f64;
+            if b.has_tag(Tag::Mem) {
+                mem_rate.push(rate);
+            } else {
+                nonmem_rate.push(rate);
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(avg(&mem_rate) > avg(&nonmem_rate));
+    }
+
+    #[test]
+    fn deterministic_programs() {
+        let a = suite(Scale::Test);
+        let b = suite(Scale::Test);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.program.words, y.program.words, "{}", x.name);
+        }
+    }
+}

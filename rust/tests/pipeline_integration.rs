@@ -1,0 +1,106 @@
+//! Integration across the simulator stack *without* PJRT: workload suite →
+//! simpoint → functional + O3 → slicer → sampler → tokenizer → dataset.
+
+use capsim::config::PipelineConfig;
+use capsim::coordinator::{build_bench_dataset, build_dataset, gem5_mode};
+use capsim::predictor::LinRegBaseline;
+use capsim::sampler::{occurrence_distribution, sample, SamplerConfig};
+use capsim::workloads::{suite, Scale};
+
+fn cfg() -> PipelineConfig {
+    let mut c = PipelineConfig::default();
+    c.simpoint.interval_insts = 8_000;
+    c.simpoint.warmup_insts = 1_000;
+    c.simpoint.max_k = 3;
+    c.l_min = 24;
+    c
+}
+
+#[test]
+fn full_golden_pipeline_over_a_few_benchmarks() {
+    let benches: Vec<_> = suite(Scale::Test).into_iter().take(4).collect();
+    let cfg = cfg();
+    let (ds, profiles) = build_dataset(&benches, &cfg, 2);
+    assert!(ds.len() > 50, "expected a real clip corpus, got {}", ds.len());
+    assert_eq!(profiles.len(), 4);
+
+    // every benchmark contributed
+    let by_bench = ds.by_bench(4);
+    for (i, idx) in by_bench.iter().enumerate() {
+        assert!(!idx.is_empty(), "bench {i} contributed no clips");
+    }
+
+    // golden label sanity: distribution has positive spread
+    let times: Vec<f64> = ds.samples.iter().map(|s| s.time as f64).collect();
+    let mean = capsim::util::stats::mean(&times);
+    let sd = capsim::util::stats::stddev(&times);
+    assert!(mean > 1.0);
+    assert!(sd > 0.0, "labels must vary across clips");
+}
+
+#[test]
+fn sampler_compresses_the_clip_corpus() {
+    let benches: Vec<_> = suite(Scale::Test).into_iter().take(3).collect();
+    let cfg = cfg();
+    let (ds, _) = build_dataset(&benches, &cfg, 2);
+    let keys = ds.keys();
+    let (orig, sorted) = occurrence_distribution(&keys);
+    assert_eq!(orig.iter().sum::<u64>() as usize, ds.len());
+    assert!(sorted[0] >= sorted[sorted.len() - 1]);
+
+    let sel = sample(&keys, &SamplerConfig { threshold: 10, coefficient: 0.2 });
+    assert!(!sel.is_empty());
+    assert!(sel.len() < ds.len());
+    let sub = ds.subset(&sel);
+    assert_eq!(sub.len(), sel.len());
+}
+
+#[test]
+fn linreg_baseline_learns_something_on_real_clips() {
+    let benches: Vec<_> = suite(Scale::Test).into_iter().take(3).collect();
+    let cfg = cfg();
+    let (ds, _) = build_dataset(&benches, &cfg, 2);
+    let (tr, _, te) = ds.split(11);
+    let m = LinRegBaseline::fit(&ds, &tr, 1e-3);
+    let mape_fit = m.mape(&ds, &te);
+    // against the trivial always-predict-train-mean baseline
+    let mean = ds.subset(&tr).mean_time();
+    let naive: Vec<f64> = te.iter().map(|_| mean).collect();
+    let fact: Vec<f64> = te.iter().map(|&i| ds.samples[i].time as f64).collect();
+    let mape_naive = capsim::util::stats::mape(&naive, &fact);
+    assert!(
+        mape_fit < mape_naive,
+        "features must beat the mean: {mape_fit} vs {mape_naive}"
+    );
+}
+
+#[test]
+fn table3_configs_change_golden_labels() {
+    let benches: Vec<_> = suite(Scale::Test).into_iter().take(1).collect();
+    let base_cfg = cfg();
+    let (_, p) = build_bench_dataset(0, &benches[0], &base_cfg);
+
+    let base = gem5_mode(&p.selected, p.n_intervals, &base_cfg);
+    let mut narrow_cfg = base_cfg.clone();
+    narrow_cfg.o3.issue_width = 2;
+    let narrow = gem5_mode(&p.selected, p.n_intervals, &narrow_cfg);
+    assert!(
+        narrow.total_cycles >= base.total_cycles,
+        "narrower issue cannot be faster: {} vs {}",
+        narrow.total_cycles,
+        base.total_cycles
+    );
+}
+
+#[test]
+fn checkpoint_count_varies_across_suite() {
+    // Table II: different benchmarks need different checkpoint counts
+    let benches: Vec<_> = suite(Scale::Test).into_iter().collect();
+    let cfg = cfg();
+    let mut counts = std::collections::HashSet::new();
+    for (i, b) in benches.iter().enumerate().take(8) {
+        let (_, p) = build_bench_dataset(i, b, &cfg);
+        counts.insert(p.selected.len());
+    }
+    assert!(counts.len() >= 2, "phase structure should differ: {counts:?}");
+}

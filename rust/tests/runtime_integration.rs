@@ -1,0 +1,172 @@
+//! Integration: the Rust PJRT runtime against the real AOT artifacts.
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use std::path::Path;
+
+use capsim::dataset::{ClipSample, Dataset};
+use capsim::predictor::{build_batch, evaluate, train, TrainParams};
+use capsim::runtime::Runtime;
+use capsim::util::Rng;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+/// A synthetic dataset in model geometry: clip time correlates with the
+/// number of "expensive" rows, learnable from tokens alone.
+fn synthetic_dataset(rt: &Runtime, n: usize, seed: u64) -> Dataset {
+    let g = &rt.manifest.geometry;
+    let mut ds = Dataset::new(g.l_token, g.l_clip, g.m_rows);
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        let len = (g.l_clip / 2 + rng.range(0, g.l_clip / 2)) as u16;
+        let mut tokens = Vec::with_capacity(len as usize * g.l_token);
+        let mut cost = 5.0f32;
+        for _ in 0..len {
+            let expensive = rng.chance(0.3);
+            cost += if expensive { 3.0 } else { 0.7 };
+            // row: <REP>=1, then a marker token, <END>=2, padding
+            let marker = if expensive { 20 } else { 30 };
+            let mut row = vec![1u16, marker, 2];
+            row.resize(g.l_token, 0);
+            tokens.extend(row);
+        }
+        let ctx: Vec<u16> = (0..g.m_rows).map(|_| rng.range(150, 300) as u16).collect();
+        let key = tokens.iter().map(|&t| t as u64).sum::<u64>();
+        ds.push(ClipSample { tokens, len, ctx, time: cost, key, bench: 0 });
+    }
+    ds
+}
+
+#[test]
+fn manifest_and_variants_load() {
+    let Some(rt) = artifacts() else { return };
+    assert_eq!(rt.manifest.geometry.m_rows, capsim::context::M_ROWS);
+    for v in ["capsim", "nocontext", "ithemal"] {
+        assert!(rt.manifest.variants.contains_key(v), "missing {v}");
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_sized() {
+    let Some(rt) = artifacts() else { return };
+    let mut m = rt.load_variant("capsim").expect("load capsim");
+    m.init_params(123).unwrap();
+    let a = m.params_vec().unwrap();
+    assert_eq!(a.len(), m.param_size);
+    m.init_params(123).unwrap();
+    let b = m.params_vec().unwrap();
+    assert_eq!(a, b, "same seed, same params");
+    m.init_params(124).unwrap();
+    let c = m.params_vec().unwrap();
+    assert_ne!(a, c, "different seed, different params");
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn forward_shapes_and_padding_invariance() {
+    let Some(rt) = artifacts() else { return };
+    let g = rt.manifest.geometry.clone();
+    let mut m = rt.load_variant("capsim").expect("load");
+    m.init_params(7).unwrap();
+    let ds = synthetic_dataset(&rt, 8, 1);
+
+    // batch of 8 in the b=8 executable
+    let refs: Vec<&ClipSample> = ds.samples.iter().collect();
+    let batch = build_batch(&refs, 8, &g);
+    let pred8 = m.forward(&batch, 50.0).unwrap();
+    assert_eq!(pred8.len(), 8);
+    assert!(pred8.iter().all(|p| p.is_finite() && *p > 0.0));
+
+    // the same clips one-at-a-time in the b=1 executable must agree
+    for (i, s) in ds.samples.iter().enumerate().take(3) {
+        let b1 = build_batch(&[s], 1, &g);
+        let p1 = m.forward(&b1, 50.0).unwrap();
+        let rel = (p1[0] - pred8[i]).abs() / pred8[i].max(1e-6);
+        assert!(rel < 1e-3, "batch-size invariance: {} vs {}", p1[0], pred8[i]);
+    }
+
+    // padding rows must not affect live predictions
+    let refs3: Vec<&ClipSample> = ds.samples.iter().take(3).collect();
+    let b_pad = build_batch(&refs3, 8, &g);
+    let p_pad = m.forward(&b_pad, 50.0).unwrap();
+    assert_eq!(p_pad.len(), 3);
+    for i in 0..3 {
+        let rel = (p_pad[i] - pred8[i]).abs() / pred8[i].max(1e-6);
+        assert!(rel < 1e-3, "padding invariance row {i}");
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_learnable_synthetic_data() {
+    let Some(rt) = artifacts() else { return };
+    let mut m = rt.load_variant("capsim").expect("load");
+    m.init_params(11).unwrap();
+    let ds = synthetic_dataset(&rt, 256, 3);
+    let (tr, va, _) = ds.split(5);
+
+    let p = TrainParams { steps: 60, lr: 2e-3, eval_every: 20, seed: 1, patience: 100 };
+    let ts0 = ds.subset(&tr).mean_time() as f32;
+    let before = evaluate(&m, &ds, &va, ts0).unwrap();
+    let log = train(&mut m, &ds, &tr, &va, &p).unwrap();
+    let after = evaluate(&m, &ds, &va, log.time_scale).unwrap();
+    assert!(
+        after.mape < before.mape,
+        "training must improve: {} -> {}",
+        before.mape,
+        after.mape
+    );
+    assert!(log.train_loss.len() == 60);
+}
+
+#[test]
+fn capsim_mode_end_to_end_over_checkpoints() {
+    let Some(rt) = artifacts() else { return };
+    use capsim::config::PipelineConfig;
+    use capsim::coordinator::{build_bench_dataset, capsim_mode, gem5_mode};
+    use capsim::workloads::{suite, Scale};
+
+    let mut cfg = PipelineConfig::default();
+    cfg.simpoint.interval_insts = 8_000;
+    cfg.simpoint.warmup_insts = 1_000;
+    cfg.simpoint.max_k = 2;
+
+    let benches = suite(Scale::Test);
+    let (_, bp) = build_bench_dataset(23, &benches[23], &cfg); // specrand
+    let mut model = rt.load_variant("capsim").unwrap();
+    model.init_params(5).unwrap();
+
+    let c = capsim_mode(&bp.selected, bp.n_intervals, &cfg, &model, 60.0).unwrap();
+    assert_eq!(c.interval_cycles.len(), bp.selected.len());
+    assert!(c.interval_cycles.iter().all(|&x| x > 0.0));
+    assert!(c.clips_unique <= c.clips_total);
+    assert!(c.clips_unique > 0);
+    assert!(c.total_cycles > 0.0);
+
+    // the two modes must at least agree on order of magnitude even with
+    // untrained weights scaled by a plausible time_scale
+    let g = gem5_mode(&bp.selected, bp.n_intervals, &cfg);
+    let ratio = c.total_cycles / g.total_cycles;
+    assert!(ratio > 0.05 && ratio < 20.0, "ratio {ratio}");
+}
+
+#[test]
+fn all_three_variants_run_forward() {
+    let Some(rt) = artifacts() else { return };
+    let ds = synthetic_dataset(&rt, 4, 9);
+    let g = rt.manifest.geometry.clone();
+    for name in ["capsim", "nocontext", "ithemal"] {
+        let mut m = rt.load_variant(name).expect(name);
+        m.init_params(3).unwrap();
+        let refs: Vec<&ClipSample> = ds.samples.iter().collect();
+        let batch = build_batch(&refs, g.fwd_batch_sizes[1], &g);
+        let pred = m.forward(&batch, 40.0).unwrap();
+        assert_eq!(pred.len(), 4, "{name}");
+        assert!(pred.iter().all(|p| p.is_finite() && *p > 0.0), "{name}");
+    }
+}

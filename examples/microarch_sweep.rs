@@ -10,7 +10,7 @@
 use std::path::Path;
 
 use capsim::config::PipelineConfig;
-use capsim::coordinator::{build_dataset, pool};
+use capsim::coordinator::build_dataset;
 use capsim::o3::O3Config;
 use capsim::predictor::{evaluate, train, TrainParams};
 use capsim::report::Table;
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         let mut run_cfg = cfg.clone();
         run_cfg.o3 = o3.clone();
         // golden labels for THIS configuration
-        let (ds, _) = build_dataset(&benches, &run_cfg, pool::default_threads());
+        let (ds, _) = build_dataset(&benches, &run_cfg, run_cfg.effective_threads());
         let (tr, va, te) = ds.split(run_cfg.seed);
 
         let mut model = rt.load_variant("capsim")?;

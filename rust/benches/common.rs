@@ -9,10 +9,10 @@
 use std::path::Path;
 
 use capsim::config::PipelineConfig;
-use capsim::coordinator::{build_dataset, pool, BenchProfile};
+use capsim::coordinator::{build_dataset, BenchProfile};
 use capsim::dataset::Dataset;
 use capsim::predictor::{train, TrainLog, TrainParams};
-use capsim::runtime::{ModelHandle, Runtime};
+use capsim::runtime::{ModelHandle, NativePredictor, Predictor, Runtime};
 use capsim::workloads::{suite, Benchmark, Scale};
 
 pub fn is_full() -> bool {
@@ -50,7 +50,7 @@ pub fn train_steps(default_small: usize, default_full: usize) -> usize {
 /// Suite + golden dataset + profiles under the bench config.
 pub fn golden(cfg: &PipelineConfig) -> (Vec<Benchmark>, Dataset, Vec<BenchProfile>) {
     let benches = suite(cfg.scale);
-    let (ds, profiles) = build_dataset(&benches, cfg, pool::default_threads());
+    let (ds, profiles) = build_dataset(&benches, cfg, cfg.effective_threads());
     (benches, ds, profiles)
 }
 
@@ -67,7 +67,7 @@ pub fn golden_cached(cfg: &PipelineConfig) -> (Vec<Benchmark>, Dataset) {
         eprintln!("[common] using cached dataset {path:?} ({} clips)", ds.len());
         return (benches, ds);
     }
-    let (ds, _) = build_dataset(&benches, cfg, pool::default_threads());
+    let (ds, _) = build_dataset(&benches, cfg, cfg.effective_threads());
     let _ = ds.save(&path);
     (benches, ds)
 }
@@ -80,6 +80,31 @@ pub fn runtime(cfg: &PipelineConfig) -> Runtime {
         Err(e) => {
             eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
             std::process::exit(0); // don't fail `cargo bench` on a clean tree
+        }
+    }
+}
+
+/// A trained PJRT predictor when artifacts exist, else the native
+/// analytic backend — so speed benches run end-to-end on a clean tree.
+/// Returns the boxed backend, its time scale and a label for reports.
+pub fn predictor_or_native(
+    cfg: &PipelineConfig,
+    ds: &Dataset,
+    steps: usize,
+) -> anyhow::Result<(Box<dyn Predictor>, f32, &'static str)> {
+    match Runtime::load(Path::new(&cfg.artifacts)) {
+        Ok(rt) => {
+            let (model, log, _) = train_variant(&rt, "capsim", ds, steps, cfg.seed)?;
+            let ts = log.time_scale;
+            Ok((Box::new(model), ts, "pjrt-attention"))
+        }
+        Err(e) => {
+            eprintln!("[common] artifacts unavailable ({e}); using the native backend");
+            Ok((
+                Box::new(NativePredictor::with_defaults()),
+                ds.mean_time() as f32,
+                "native-analytic",
+            ))
         }
     }
 }

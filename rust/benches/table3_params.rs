@@ -6,7 +6,7 @@
 #[path = "common.rs"]
 mod common;
 
-use capsim::coordinator::{build_dataset, pool};
+use capsim::coordinator::build_dataset;
 use capsim::o3::O3Config;
 use capsim::predictor::{evaluate, train, TrainParams};
 use capsim::report::Table;
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     for ((label, o3), paper_err) in O3Config::table3_rows().into_iter().zip(paper) {
         let mut run_cfg = cfg.clone();
         run_cfg.o3 = o3;
-        let (ds, _) = build_dataset(&benches, &run_cfg, pool::default_threads());
+        let (ds, _) = build_dataset(&benches, &run_cfg, run_cfg.effective_threads());
         let (tr, va, te) = ds.split(run_cfg.seed);
 
         let mut model = rt.load_variant("capsim")?;

@@ -173,6 +173,10 @@ pub struct PipelineConfig {
     pub simpoint: SimpointConfig,
     pub o3: O3Config,
     pub sampler: SamplerConfig,
+    /// Worker threads for the sharded engine (per-interval and
+    /// per-benchmark fan-out). `0` means auto (one per available core);
+    /// results are bit-identical for every value.
+    pub threads: usize,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -192,6 +196,7 @@ impl Default for PipelineConfig {
             simpoint: SimpointConfig::default(),
             o3: O3Config::default(),
             sampler: SamplerConfig::default(),
+            threads: 0,
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -210,6 +215,8 @@ impl PipelineConfig {
             "full" => Scale::Full,
             _ => Scale::Test,
         };
+        // negative values mean "auto" rather than wrapping to usize::MAX
+        c.threads = t.int("pipeline.threads", c.threads as i64).max(0) as usize;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -240,6 +247,16 @@ impl PipelineConfig {
     pub fn load(path: &Path) -> Result<Self, String> {
         let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Ok(Self::from_toml(&parse_toml(&src)?))
+    }
+
+    /// The worker-thread count the engine should actually use
+    /// (resolves the `0 = auto` convention).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::coordinator::pool::default_threads()
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -296,6 +313,7 @@ mod tests {
             [pipeline]
             scale = "full"
             l_min = 48
+            threads = 4
             [o3]
             rob_entries = 128
             [train]
@@ -309,6 +327,8 @@ mod tests {
         let c = PipelineConfig::from_toml(&t);
         assert_eq!(c.scale, Scale::Full);
         assert_eq!(c.l_min, 48);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.effective_threads(), 4);
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -317,9 +337,18 @@ mod tests {
     }
 
     #[test]
+    fn negative_threads_means_auto() {
+        let t = parse_toml("[pipeline]\nthreads = -1").unwrap();
+        let c = PipelineConfig::from_toml(&t);
+        assert_eq!(c.threads, 0, "negative clamps to auto");
+    }
+
+    #[test]
     fn defaults_without_file() {
         let c = PipelineConfig::default();
         assert_eq!(c.l_min, 24);
         assert_eq!(c.o3.fetch_width, 8);
+        assert_eq!(c.threads, 0, "0 = auto");
+        assert!(c.effective_threads() >= 1);
     }
 }

@@ -1,0 +1,203 @@
+//! Cross-benchmark clip cache — a sharded concurrent map from
+//! [`fast_clip_key`](crate::tokenizer::standardize::fast_clip_key) to the
+//! predicted clip time.
+//!
+//! The 24 workloads are compositions of a shared kernel library, so
+//! identical `l_min`-instruction clips recur *across* benchmarks, not just
+//! across the intervals of one benchmark. Holding one [`ClipCache`] across
+//! a whole suite run means each unique clip is sent through the predictor
+//! once per suite instead of once per benchmark (and its tokenization is
+//! skipped wherever the scan can already see the key — in the cache, or
+//! in the suite engine's pending set).
+//!
+//! Concurrency/determinism contract (what makes `threads=N` bit-identical
+//! to `threads=1`): the parallel interval-scan stage only *reads* the
+//! cache ([`ClipCache::contains`]); all inserts happen in the sequential
+//! resolve stage of `coordinator::modes`, in deterministic first-appearance
+//! order. Shards are plain `RwLock`s, so concurrent readers never block
+//! each other on disjoint shards and the scan stage stays lock-cheap.
+//!
+//! Cached values are predictions, so a cache is only meaningful for one
+//! `(backend, parameters, time_scale)` combination — callers hold one
+//! cache per trained model, exactly like an inference-server result cache.
+//! Dedup is content-keyed (paper §IV-B): `fast_clip_key` hashes decoded
+//! instruction fields, not register values, so a cached prediction
+//! carries the register context of the key's first sighting. Repeating a
+//! run of the same composition is bit-identical cold vs. warm; changing
+//! the composition (a benchmark alone vs. after a sibling sharing clips)
+//! may canonicalize a shared key to a different first context.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Hit/miss counters observed so far (monotone; see [`ClipCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded concurrent `fast_clip_key -> predicted cycles` map.
+pub struct ClipCache {
+    shards: Vec<RwLock<HashMap<u64, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ClipCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClipCache {
+    /// A cache with the default shard count.
+    pub fn new() -> ClipCache {
+        ClipCache::with_shards(16)
+    }
+
+    /// A cache with `n` shards (rounded up to a power of two, min 1).
+    pub fn with_shards(n: usize) -> ClipCache {
+        let n = n.max(1).next_power_of_two();
+        ClipCache {
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, f64>> {
+        // Fibonacci-hash the key so shard choice is independent of any
+        // structure in the FNV clip keys; shards.len() is a power of two.
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let i = (h >> 32) as usize & (self.shards.len() - 1);
+        &self.shards[i]
+    }
+
+    /// Read-only membership probe (no stats side effects) — safe to call
+    /// from the parallel scan stage.
+    pub fn contains(&self, key: u64) -> bool {
+        self.shard(key).read().unwrap().contains_key(&key)
+    }
+
+    /// Look up a predicted time; counts a hit or a miss.
+    pub fn get(&self, key: u64) -> Option<f64> {
+        let v = self.shard(key).read().unwrap().get(&key).copied();
+        match v {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        v
+    }
+
+    /// Insert (or overwrite) a predicted time.
+    pub fn insert(&self, key: u64, time: f64) {
+        self.shard(key).write().unwrap().insert(key, time);
+    }
+
+    /// Number of cached unique clips.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss counters accumulated so far.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop all entries (counters are kept; they describe lookups, not
+    /// contents).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let c = ClipCache::new();
+        assert!(!c.contains(42));
+        assert_eq!(c.get(42), None);
+        c.insert(42, 123.5);
+        assert!(c.contains(42));
+        assert_eq!(c.get(42), Some(123.5));
+        assert_eq!(c.len(), 1);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+    }
+
+    #[test]
+    fn shards_cover_key_space() {
+        let c = ClipCache::with_shards(4);
+        for k in 0..1000u64 {
+            c.insert(k.wrapping_mul(0x1234_5678_9ABC_DEF1), k as f64);
+        }
+        assert_eq!(c.len(), 1000);
+        // every shard should have received a share
+        for s in &c.shards {
+            assert!(!s.read().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn concurrent_reads_while_inserting_elsewhere() {
+        let c = ClipCache::new();
+        for k in 0..64u64 {
+            c.insert(k, k as f64);
+        }
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for k in 0..64u64 {
+                        assert!(c.contains(k));
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 64);
+    }
+
+    #[test]
+    fn clear_resets_contents_not_counters() {
+        let c = ClipCache::new();
+        c.insert(1, 2.0);
+        let _ = c.get(1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let c = ClipCache::new();
+        c.insert(7, 1.0);
+        let _ = c.get(7);
+        let _ = c.get(8);
+        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

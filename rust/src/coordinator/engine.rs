@@ -1,0 +1,234 @@
+//! Suite-level drivers for the sharded engine: run all benchmarks through
+//! one shared [`ClipCache`] so clip dedup — and, in
+//! [`SuiteBatching::CrossBench`] mode, inference batch assembly — spans
+//! benchmark boundaries.
+//!
+//! The Fig.-7 accounting this enables: with per-benchmark dedup only
+//! (`cache = None` per run), each benchmark re-predicts every clip it
+//! shares with its siblings; with the shared cache the suite-wide
+//! `clips_unique` drops to the number of *globally* unique clips, which is
+//! strictly smaller whenever workloads share kernels.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::runtime::Predictor;
+
+use super::cache::ClipCache;
+use super::golden::BenchProfile;
+use super::modes::{
+    capsim_mode, extrapolate, gem5_mode, scan_intervals, CapsimRun, DedupState, Gem5Run,
+};
+
+/// How inference batches are assembled across the suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuiteBatching {
+    /// Each benchmark predicts its own new unique clips as soon as it is
+    /// scanned (per-benchmark wall times stay meaningful; the final batch
+    /// of each benchmark may be partial).
+    PerBench,
+    /// Scan every benchmark first, then predict all new unique clips in
+    /// one accumulator pass — batches fill across benchmark boundaries,
+    /// so only the suite's single final batch can be partial. Per-run
+    /// `wall_s` then covers the scan stage only; inference time is
+    /// reported once in [`SuiteRun::wall_s`].
+    CrossBench,
+}
+
+/// Aggregate result of a suite run.
+#[derive(Clone, Debug)]
+pub struct SuiteRun {
+    /// Per-benchmark results, suite order.
+    pub runs: Vec<CapsimRun>,
+    /// Total clip occurrences across the suite.
+    pub clips_total: usize,
+    /// Unique clips sent to the model across the whole suite.
+    pub clips_unique: usize,
+    /// Distinct per-benchmark clips served by dedup instead of inference.
+    pub cache_hits: usize,
+    /// Whole-suite wall-clock seconds (scan + inference).
+    pub wall_s: f64,
+}
+
+/// gem5 mode over a whole suite (no clip pipeline, so no cache; listed
+/// here for symmetry and for the Fig.-7 thread sweeps).
+pub fn gem5_suite(profiles: &[BenchProfile], cfg: &PipelineConfig) -> Vec<Gem5Run> {
+    profiles
+        .iter()
+        .map(|p| gem5_mode(&p.selected, p.n_intervals, cfg))
+        .collect()
+}
+
+/// CAPSim mode over a whole suite with cross-benchmark clip dedup.
+pub fn capsim_suite<P: Predictor + ?Sized>(
+    profiles: &[BenchProfile],
+    cfg: &PipelineConfig,
+    model: &P,
+    time_scale: f32,
+    cache: &ClipCache,
+    batching: SuiteBatching,
+) -> Result<SuiteRun> {
+    let t0 = Instant::now();
+    let mut runs: Vec<CapsimRun> = Vec::with_capacity(profiles.len());
+    match batching {
+        SuiteBatching::PerBench => {
+            for p in profiles {
+                runs.push(capsim_mode(
+                    &p.selected,
+                    p.n_intervals,
+                    cfg,
+                    model,
+                    time_scale,
+                    Some(cache),
+                )?);
+            }
+        }
+        SuiteBatching::CrossBench => {
+            anyhow::ensure!(
+                cfg.l_min <= super::golden::L_CLIP,
+                "l_min {} exceeds the model's clip capacity {}",
+                cfg.l_min,
+                super::golden::L_CLIP
+            );
+            let mut state = DedupState::new();
+            let mut scanned = Vec::with_capacity(profiles.len());
+            for p in profiles {
+                let s0 = Instant::now();
+                // hand each scan the keys already pending from earlier
+                // benchmarks so it skips rebuilding their payloads
+                let mut scans =
+                    scan_intervals(&p.selected, cfg, Some(cache), Some(state.pending_keys()));
+                let stats = state.collect(&mut scans, Some(cache));
+                scanned.push((scans, stats, s0.elapsed().as_secs_f64()));
+            }
+            // one accumulator pass over every new unique clip in the suite
+            state.predict(model, time_scale, Some(cache))?;
+            for (p, (scans, stats, scan_s)) in profiles.iter().zip(scanned) {
+                let interval_cycles = state.interval_cycles(&scans);
+                let weights: Vec<f64> = p.selected.iter().map(|s| s.weight).collect();
+                runs.push(CapsimRun {
+                    total_cycles: extrapolate(&weights, &interval_cycles, p.n_intervals),
+                    interval_cycles,
+                    wall_s: scan_s,
+                    clips_total: stats.clips_total,
+                    clips_unique: stats.clips_unique,
+                    cache_hits: stats.cache_hits,
+                });
+            }
+        }
+    }
+    Ok(SuiteRun {
+        clips_total: runs.iter().map(|r| r.clips_total).sum(),
+        clips_unique: runs.iter().map(|r| r.clips_unique).sum(),
+        cache_hits: runs.iter().map(|r| r.cache_hits).sum(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativePredictor;
+    use crate::simpoint::{choose_simpoints, profile};
+    use crate::workloads::{suite, Scale};
+
+    fn test_cfg() -> PipelineConfig {
+        let mut c = PipelineConfig::default();
+        c.simpoint.interval_insts = 8_000;
+        c.simpoint.warmup_insts = 1_000;
+        c.simpoint.max_k = 2;
+        c.l_min = 24;
+        c
+    }
+
+    fn profiles_for(indices: &[usize], cfg: &PipelineConfig) -> Vec<BenchProfile> {
+        let benches = suite(Scale::Test);
+        indices
+            .iter()
+            .map(|&i| {
+                let prof = profile(&benches[i].program, &cfg.simpoint);
+                let selected = choose_simpoints(&prof, &cfg.simpoint);
+                BenchProfile {
+                    name: benches[i].name,
+                    set_no: benches[i].set_no,
+                    tag_string: benches[i].tag_string(),
+                    n_intervals: prof.intervals.len(),
+                    selected,
+                    total_insts: prof.total_insts,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn per_bench_and_cross_bench_agree_on_cycles() {
+        let cfg = test_cfg();
+        let profiles = profiles_for(&[0, 1, 2], &cfg);
+        let model = NativePredictor::with_defaults();
+        let a = capsim_suite(
+            &profiles,
+            &cfg,
+            &model,
+            40.0,
+            &ClipCache::new(),
+            SuiteBatching::PerBench,
+        )
+        .unwrap();
+        let b = capsim_suite(
+            &profiles,
+            &cfg,
+            &model,
+            40.0,
+            &ClipCache::new(),
+            SuiteBatching::CrossBench,
+        )
+        .unwrap();
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (ra, rb) in a.runs.iter().zip(&b.runs) {
+            let abits: Vec<u64> = ra.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            let bbits: Vec<u64> = rb.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(abits, bbits, "batching strategy must not change results");
+            assert_eq!(ra.total_cycles.to_bits(), rb.total_cycles.to_bits());
+        }
+        assert_eq!(a.clips_unique, b.clips_unique);
+        assert_eq!(a.clips_total, b.clips_total);
+    }
+
+    #[test]
+    fn duplicate_benchmarks_dedup_across_the_suite() {
+        let cfg = test_cfg();
+        // the same benchmark twice: the second contributes zero new clips
+        let profiles = profiles_for(&[5, 5], &cfg);
+        let model = NativePredictor::with_defaults();
+        let run = capsim_suite(
+            &profiles,
+            &cfg,
+            &model,
+            40.0,
+            &ClipCache::new(),
+            SuiteBatching::PerBench,
+        )
+        .unwrap();
+        assert!(run.runs[0].clips_unique > 0);
+        assert_eq!(run.runs[1].clips_unique, 0);
+        assert_eq!(run.runs[1].cache_hits, run.runs[0].clips_unique);
+        let a: Vec<u64> = run.runs[0].interval_cycles.iter().map(|c| c.to_bits()).collect();
+        let b: Vec<u64> = run.runs[1].interval_cycles.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(a, b, "identical program, identical predictions");
+    }
+
+    #[test]
+    fn gem5_suite_matches_individual_runs() {
+        let cfg = test_cfg();
+        let profiles = profiles_for(&[3, 7], &cfg);
+        let all = gem5_suite(&profiles, &cfg);
+        assert_eq!(all.len(), 2);
+        for (run, p) in all.iter().zip(&profiles) {
+            let solo = gem5_mode(&p.selected, p.n_intervals, &cfg);
+            assert_eq!(run.interval_cycles, solo.interval_cycles);
+        }
+    }
+}

@@ -1,22 +1,31 @@
-//! The CAPSim coordinator — the paper's Fig.-1 workflow, both sides:
+//! The CAPSim coordinator — the paper's Fig.-1 workflow, both sides, run
+//! by a sharded parallel engine:
 //!
 //! * **gem5 mode** (left): restore every SimPoint checkpoint into the O3
 //!   cycle-level model and measure interval cycles — slow but golden;
 //! * **CAPSim mode** (right): restore the same checkpoints into the fast
 //!   functional simulator, slice the trace into clips, annotate with the
-//!   register context, and predict clip times with the AOT-compiled
-//!   attention model, summing to interval estimates.
+//!   register context, and predict clip times with the attention model,
+//!   summing to interval estimates.
 //!
+//! Both modes fan per-interval work out over [`pool`] (the `threads` knob
+//! of `PipelineConfig`) with a deterministic input-order merge, so
+//! multi-threaded results are bit-identical to `threads = 1`. [`cache`]
+//! holds the cross-benchmark clip cache that dedups identical clips across
+//! the whole suite; [`engine`] drives entire suites through one shared
+//! cache (and can fill inference batches across benchmark boundaries);
 //! [`golden`] builds the labelled training dataset (functional trace + O3
 //! commit times + Algorithm-1 slicing + Fig.-5/6 tokenization);
-//! [`modes`] runs the two modes and the Fig.-7 wall-clock comparison;
-//! [`pool`] is the std-thread worker pool used to parallelize independent
-//! per-benchmark work (the offline crate set has no rayon).
+//! [`modes`] implements the two modes themselves.
 
+pub mod cache;
+pub mod engine;
 pub mod golden;
 pub mod modes;
 pub mod pool;
 
-pub use golden::{build_dataset, build_bench_dataset, BenchProfile};
+pub use cache::{CacheStats, ClipCache};
+pub use engine::{capsim_suite, gem5_suite, SuiteBatching, SuiteRun};
+pub use golden::{build_bench_dataset, build_dataset, BenchProfile};
 pub use modes::{capsim_mode, gem5_mode, CapsimRun, Gem5Run};
 pub use pool::parallel_map;

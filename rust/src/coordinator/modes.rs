@@ -1,20 +1,47 @@
-//! The two simulation modes of Fig. 1 and the Fig.-7 speed comparison.
+//! The two simulation modes of Fig. 1 and the Fig.-7 speed comparison —
+//! reworked as a **sharded parallel engine**.
+//!
+//! Both modes fan their per-interval work (checkpoint restore → functional
+//! trace → O3 simulate / slice+tokenize) out over
+//! [`pool::parallel_map`](super::pool::parallel_map) using the
+//! `threads` knob of [`PipelineConfig`]. Determinism is a hard contract:
+//!
+//! * the parallel stage produces one [`IntervalScan`] per interval,
+//!   returned in **input order** regardless of scheduling;
+//! * every stateful step — clip dedup, canonical-context selection, batch
+//!   assembly, cache insertion — happens in a **sequential merge** over
+//!   those ordered scans;
+//!
+//! so `threads = N` is bit-identical to `threads = 1`.
+//!
+//! Clip dedup is layered: each interval scan dedups locally, the merge
+//! dedups across intervals, and an optional cross-benchmark
+//! [`ClipCache`](super::cache::ClipCache) dedups across the whole suite so
+//! a clip shared by several workloads is tokenized and predicted once.
+//! New unique clips are pooled through a
+//! [`BatchAccumulator`](crate::predictor::BatchAccumulator), so inference
+//! runs on full batches accumulated across intervals (and, via
+//! [`engine`](super::engine), across benchmarks).
 
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::PipelineConfig;
 use crate::context::{context_tokens, REGISTER_SPEC};
-use crate::dataset::{ClipSample, Dataset};
+use crate::dataset::ClipSample;
+use crate::functional::TraceRecord;
 use crate::o3::O3Core;
-use crate::predictor::predict_all;
-use crate::runtime::ModelHandle;
+use crate::predictor::BatchAccumulator;
+use crate::runtime::Predictor;
 use crate::simpoint::SelectedInterval;
-
 use crate::tokenizer::standardize::{fast_clip_key, tokenize_clip};
 
+use super::cache::ClipCache;
 use super::golden::{L_CLIP, L_TOKEN};
+use super::pool;
 
 /// gem5-mode result for one benchmark.
 #[derive(Clone, Debug)]
@@ -34,14 +61,23 @@ pub struct CapsimRun {
     pub interval_cycles: Vec<f64>,
     /// SimPoint-extrapolated whole-program cycles.
     pub total_cycles: f64,
-    /// Wall-clock seconds (functional trace + slicing + inference).
+    /// Wall-clock seconds. For [`capsim_mode`] runs this covers the whole
+    /// pipeline (functional trace + slicing + inference); for runs
+    /// produced by `engine::capsim_suite` with `SuiteBatching::CrossBench`
+    /// it covers the scan stage only — inference is deferred suite-wide
+    /// and reported once in `SuiteRun::wall_s`.
     pub wall_s: f64,
-    /// Total clips vs unique clips actually sent to the model.
+    /// Total clip occurrences across the intervals.
     pub clips_total: usize,
+    /// Unique clips actually tokenized + sent to the model by this run
+    /// (clips already resolved by the cross-benchmark cache don't count).
     pub clips_unique: usize,
+    /// Distinct clips this run resolved from the shared cache (or from an
+    /// earlier benchmark in the same suite run) instead of predicting.
+    pub cache_hits: usize,
 }
 
-fn extrapolate(weights: &[f64], cycles: &[f64], n_intervals: usize) -> f64 {
+pub(crate) fn extrapolate(weights: &[f64], cycles: &[f64], n_intervals: usize) -> f64 {
     // SimPoint: total ≈ n_intervals * Σ weight_c * cycles(rep_c)
     n_intervals as f64
         * weights
@@ -52,20 +88,21 @@ fn extrapolate(weights: &[f64], cycles: &[f64], n_intervals: usize) -> f64 {
 }
 
 /// Restore every selected checkpoint into the O3 model (the paper's
-/// conventional flow, Fig. 1 left).
+/// conventional flow, Fig. 1 left). Intervals are independent, so they
+/// fan out over the worker pool; each job gets a fresh (cold) core,
+/// exactly like the sequential flow's `reset()` before each restore.
 pub fn gem5_mode(
     selected: &[SelectedInterval],
     n_intervals: usize,
     cfg: &PipelineConfig,
 ) -> Gem5Run {
     let t0 = Instant::now();
-    let mut core = O3Core::new(cfg.o3.clone());
     let warm = cfg.simpoint.warmup_insts;
-    let mut interval_cycles = Vec::with_capacity(selected.len());
-    for sel in selected {
+    let jobs: Vec<&SelectedInterval> = selected.iter().collect();
+    let interval_cycles = pool::parallel_map(jobs, cfg.effective_threads(), |sel| {
+        let mut core = O3Core::new(cfg.o3.clone());
         let mut cpu = sel.checkpoint.restore();
         let trace = cpu.run_trace(warm + cfg.simpoint.interval_insts);
-        core.reset();
         let r = core.simulate(&trace);
         // measured portion = everything after the warm-up instructions;
         // if the program ended inside warm-up, fall back to full cycles
@@ -74,8 +111,8 @@ pub fn gem5_mode(
         } else {
             r.stats.cycles
         };
-        interval_cycles.push(measured.max(1));
-    }
+        measured.max(1)
+    });
     let weights: Vec<f64> = selected.iter().map(|s| s.weight).collect();
     let cycles: Vec<f64> = interval_cycles.iter().map(|&c| c as f64).collect();
     Gem5Run {
@@ -85,92 +122,317 @@ pub fn gem5_mode(
     }
 }
 
-/// CAPSim mode (Fig. 1 right): ONE functional pass per interval producing
-/// fixed-length clips with register snapshots at their starts; clips are
-/// deduplicated by a raw-field content key so only first-seen clips are
-/// tokenized, then predicted in batches and summed per interval.
-pub fn capsim_mode(
+/// One interval's scan output: clip keys with occurrence counts in
+/// first-appearance order, plus payloads (tokens + context) for keys that
+/// were absent from the shared cache at scan time.
+pub(crate) struct IntervalScan {
+    /// `(fast_clip_key, occurrences)`, first-appearance order.
+    pub refs: Vec<(u64, u64)>,
+    /// Tokenized payloads for locally-first-seen, uncached keys,
+    /// first-appearance order.
+    pub fresh: Vec<(u64, ClipSample)>,
+}
+
+/// The parallel stage: restore + warm-up + slice one interval into
+/// `l_min`-instruction clips. Reads the cache (and the optional
+/// `known` key set — clips already pending elsewhere in the suite),
+/// never writes either. `bench_seen` is the sequential fast path's
+/// cross-interval seen-set: a key an *earlier* interval already carries
+/// a payload for needs no second tokenization (only valid when
+/// intervals run in order — with parallel workers it would make the
+/// canonical context schedule-dependent).
+fn scan_one(
+    sel: &SelectedInterval,
+    cfg: &PipelineConfig,
+    cache: Option<&ClipCache>,
+    known: Option<&HashSet<u64>>,
+    mut bench_seen: Option<&mut HashSet<u64>>,
+) -> IntervalScan {
+    let warm = cfg.simpoint.warmup_insts;
+    // capsim_mode/capsim_suite validate l_min <= L_CLIP before fanning out
+    let l_min = cfg.l_min as u64;
+
+    let mut cpu = sel.checkpoint.restore();
+    // fast-forward through warm-up (no records kept)
+    cpu.run_with(warm, |_| {});
+
+    let mut order: Vec<u64> = Vec::new();
+    let mut counts: HashMap<u64, u64> = HashMap::new();
+    let mut fresh: Vec<(u64, ClipSample)> = Vec::new();
+    let mut window: Vec<TraceRecord> = Vec::with_capacity(l_min as usize);
+    let mut clip_regs = cpu.regs.clone();
+    let mut executed = 0u64;
+
+    while executed < cfg.simpoint.interval_insts && !cpu.halted {
+        if window.is_empty() {
+            clip_regs = cpu.regs.clone(); // context at clip start
+        }
+        window.push(*cpu.step().record());
+        executed += 1;
+        if window.len() as u64 == l_min {
+            let key = fast_clip_key(&window);
+            match counts.entry(key) {
+                Entry::Occupied(mut e) => *e.get_mut() += 1,
+                Entry::Vacant(e) => {
+                    e.insert(1);
+                    order.push(key);
+                    // tokenize only on local first sight of a key that is
+                    // neither cached, pending in the suite, nor already
+                    // carried by an earlier interval of this benchmark
+                    let resolved_elsewhere = cache.map_or(false, |c| c.contains(key))
+                        || known.map_or(false, |k| k.contains(&key))
+                        || bench_seen.as_deref().map_or(false, |s| s.contains(&key));
+                    if !resolved_elsewhere {
+                        if let Some(seen) = bench_seen.as_deref_mut() {
+                            seen.insert(key);
+                        }
+                        fresh.push((
+                            key,
+                            ClipSample {
+                                len: window.len() as u16,
+                                tokens: tokenize_clip(&window, L_TOKEN),
+                                ctx: context_tokens(&clip_regs, &REGISTER_SPEC),
+                                time: 0.0,
+                                key,
+                                bench: 0,
+                            },
+                        ));
+                    }
+                }
+            }
+            window.clear();
+        }
+    }
+
+    IntervalScan {
+        refs: order.into_iter().map(|k| (k, counts[&k])).collect(),
+        fresh,
+    }
+}
+
+/// Fan the interval scans out over the worker pool; results come back in
+/// input order, so everything downstream is schedule-independent.
+/// `known` is a read-only snapshot of keys already pending elsewhere
+/// (the suite engine's cross-benchmark accumulator) whose payloads need
+/// not be rebuilt.
+pub(crate) fn scan_intervals(
+    selected: &[SelectedInterval],
+    cfg: &PipelineConfig,
+    cache: Option<&ClipCache>,
+    known: Option<&HashSet<u64>>,
+) -> Vec<IntervalScan> {
+    let threads = cfg.effective_threads();
+    if threads <= 1 {
+        // sequential fast path: intervals run in order, so later intervals
+        // can skip tokenizing keys an earlier one already carries — the
+        // same cross-interval dedup the pre-sharding code did. Results are
+        // identical to the parallel path (collect() drops the duplicate
+        // payloads the parallel scans would have produced).
+        let mut seen: HashSet<u64> = HashSet::new();
+        return selected
+            .iter()
+            .map(|sel| scan_one(sel, cfg, cache, known, Some(&mut seen)))
+            .collect();
+    }
+    let jobs: Vec<&SelectedInterval> = selected.iter().collect();
+    pool::parallel_map(jobs, threads, |sel| {
+        scan_one(sel, cfg, cache, known, None)
+    })
+}
+
+/// Sequential dedup + prediction state. One instance spans a single
+/// benchmark in [`capsim_mode`], or a whole suite in
+/// [`engine::capsim_suite`](super::engine::capsim_suite) (which is what
+/// amortizes shared clips across benchmarks).
+pub(crate) struct DedupState {
+    /// key -> resolved predicted cycles.
+    pred: HashMap<u64, f64>,
+    /// New unique clips awaiting inference, in deterministic merge order.
+    pending: Vec<(u64, ClipSample)>,
+    pending_keys: HashSet<u64>,
+}
+
+/// Per-benchmark dedup accounting from [`DedupState::collect`].
+pub(crate) struct CollectStats {
+    pub clips_total: usize,
+    pub clips_unique: usize,
+    pub cache_hits: usize,
+}
+
+impl DedupState {
+    pub(crate) fn new() -> DedupState {
+        DedupState {
+            pred: HashMap::new(),
+            pending: Vec::new(),
+            pending_keys: HashSet::new(),
+        }
+    }
+
+    /// Keys currently awaiting inference — handed to later scans as the
+    /// `known` set so they skip rebuilding payloads for them.
+    pub(crate) fn pending_keys(&self) -> &HashSet<u64> {
+        &self.pending_keys
+    }
+
+    /// Fold one benchmark's ordered interval scans into the dedup state.
+    /// Strictly sequential and deterministic: the canonical payload (and
+    /// therefore the context matrix) for a key is its first appearance in
+    /// (interval order, position order).
+    pub(crate) fn collect(
+        &mut self,
+        scans: &mut [IntervalScan],
+        cache: Option<&ClipCache>,
+    ) -> CollectStats {
+        // move payloads out of the scans (first interval wins; duplicate
+        // payloads from concurrently-scanned intervals are dropped here,
+        // freeing their token buffers immediately)
+        let mut payload: HashMap<u64, ClipSample> = HashMap::new();
+        for scan in scans.iter_mut() {
+            for (key, sample) in scan.fresh.drain(..) {
+                payload.entry(key).or_insert(sample);
+            }
+        }
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut stats = CollectStats {
+            clips_total: 0,
+            clips_unique: 0,
+            cache_hits: 0,
+        };
+        for scan in scans.iter() {
+            for &(key, count) in &scan.refs {
+                stats.clips_total += count as usize;
+                if !seen.insert(key) {
+                    continue; // earlier interval of this benchmark owns it
+                }
+                if self.pred.contains_key(&key) || self.pending_keys.contains(&key) {
+                    stats.cache_hits += 1; // earlier benchmark owns it
+                    continue;
+                }
+                if let Some(c) = cache {
+                    if let Some(v) = c.get(key) {
+                        self.pred.insert(key, v);
+                        stats.cache_hits += 1;
+                        continue;
+                    }
+                }
+                let sample = payload
+                    .remove(&key)
+                    .expect("uncached key must carry a scan payload");
+                self.pending.push((key, sample));
+                self.pending_keys.insert(key);
+                stats.clips_unique += 1;
+            }
+        }
+        stats
+    }
+
+    /// Predict all pending unique clips in full accumulator batches,
+    /// resolving them into the state (and the shared cache, if any).
+    pub(crate) fn predict<P: Predictor + ?Sized>(
+        &mut self,
+        model: &P,
+        time_scale: f32,
+        cache: Option<&ClipCache>,
+    ) -> Result<()> {
+        let pending = std::mem::take(&mut self.pending);
+        self.pending_keys.clear();
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let mut acc = BatchAccumulator::new(model.max_fwd_batch(), model.geometry().clone());
+        for (key, sample) in pending {
+            if let Some((keys, batch)) = acc.push(key, sample) {
+                let preds = model.forward(&batch, time_scale)?;
+                self.resolve(&keys, &preds, cache);
+            }
+        }
+        // tail batch: the smallest compiled size that fits, not full cap
+        let tail_cap = model.pick_fwd_batch(acc.pending());
+        if let Some((keys, batch)) = acc.flush(tail_cap) {
+            let preds = model.forward(&batch, time_scale)?;
+            self.resolve(&keys, &preds, cache);
+        }
+        Ok(())
+    }
+
+    fn resolve(&mut self, keys: &[u64], preds: &[f32], cache: Option<&ClipCache>) {
+        debug_assert_eq!(keys.len(), preds.len());
+        for (&key, &p) in keys.iter().zip(preds) {
+            let v = p as f64;
+            self.pred.insert(key, v);
+            if let Some(c) = cache {
+                c.insert(key, v);
+            }
+        }
+    }
+
+    /// Sum resolved clip times per interval (occurrence-weighted).
+    pub(crate) fn interval_cycles(&self, scans: &[IntervalScan]) -> Vec<f64> {
+        scans
+            .iter()
+            .map(|scan| {
+                scan.refs
+                    .iter()
+                    .map(|&(key, count)| {
+                        let p = self
+                            .pred
+                            .get(&key)
+                            .copied()
+                            .expect("every referenced clip is resolved");
+                        p * count as f64
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// CAPSim mode (Fig. 1 right), sharded: the per-interval functional pass
+/// (restore → trace → slice → tokenize-on-first-sight) fans out over the
+/// pool, then a sequential merge dedups clips — against earlier intervals
+/// and, through `cache`, against every benchmark processed before this
+/// one — and predicts only the new unique clips in full batches.
+///
+/// Dedup is **content-keyed** (paper §IV-B): clips with the same
+/// `fast_clip_key` share one prediction, computed from the context of the
+/// key's *first sighting* — first in (interval, position) order within a
+/// run, and suite-global when a shared cache spans benchmarks. With a
+/// row-local backend (e.g. `runtime::NativePredictor`) results are
+/// bit-identical across `threads` settings, and repeating a run of the
+/// same composition against a warm cache is bit-identical to its cold
+/// run; runs of *different* compositions (a benchmark alone vs. after a
+/// sibling that shares clips) may canonicalize a shared key to a
+/// different first-sighting context, exactly as content-keyed dedup
+/// prescribes. With the PJRT attention model, thread counts are still
+/// bit-identical and batch composition is padding-invariant (≈1e-3
+/// relative).
+pub fn capsim_mode<P: Predictor + ?Sized>(
     selected: &[SelectedInterval],
     n_intervals: usize,
     cfg: &PipelineConfig,
-    model: &ModelHandle,
+    model: &P,
     time_scale: f32,
+    cache: Option<&ClipCache>,
 ) -> Result<CapsimRun> {
+    anyhow::ensure!(
+        cfg.l_min <= L_CLIP,
+        "l_min {} exceeds the model's clip capacity {L_CLIP}",
+        cfg.l_min
+    );
     let t0 = Instant::now();
-    let warm = cfg.simpoint.warmup_insts;
-    let l_min = cfg.l_min as u64;
-
-    // one dedup space across the whole benchmark: identical loop bodies
-    // recur across intervals, and the predictor only needs each once
-    let mut unique = Dataset::new(L_TOKEN, L_CLIP, crate::context::M_ROWS);
-    let mut key_slot: std::collections::HashMap<u64, usize> = Default::default();
-    // per interval: (slot, occurrence-count) pairs
-    let mut interval_refs: Vec<Vec<(usize, u64)>> = Vec::with_capacity(selected.len());
-    let mut window: Vec<crate::functional::TraceRecord> =
-        Vec::with_capacity(cfg.l_min);
-
-    for sel in selected {
-        let mut cpu = sel.checkpoint.restore();
-        // fast-forward through warm-up (no records kept)
-        cpu.run_with(warm, |_| {});
-
-        let mut counts: std::collections::HashMap<usize, u64> = Default::default();
-        let mut executed = 0u64;
-        window.clear();
-        let mut clip_regs = cpu.regs.clone();
-        while executed < cfg.simpoint.interval_insts && !cpu.halted {
-            if window.is_empty() {
-                clip_regs = cpu.regs.clone(); // context at clip start
-            }
-            window.push(*cpu.step().record());
-            executed += 1;
-            if window.len() as u64 == l_min {
-                let key = fast_clip_key(&window);
-                let slot = match key_slot.entry(key) {
-                    std::collections::hash_map::Entry::Occupied(e) => *e.get(),
-                    std::collections::hash_map::Entry::Vacant(e) => {
-                        // first sighting: tokenize + context-annotate
-                        let tokens = tokenize_clip(&window, L_TOKEN);
-                        unique.push(ClipSample {
-                            len: window.len() as u16,
-                            tokens,
-                            ctx: context_tokens(&clip_regs, &REGISTER_SPEC),
-                            time: 0.0,
-                            key,
-                            bench: 0,
-                        });
-                        *e.insert(unique.len() - 1)
-                    }
-                };
-                *counts.entry(slot).or_insert(0) += 1;
-                window.clear();
-            }
-        }
-        interval_refs.push(counts.into_iter().collect());
-    }
-
-    // batched inference over unique clips only
-    let idx: Vec<usize> = (0..unique.len()).collect();
-    let preds = predict_all(model, &unique, &idx, time_scale)?;
-
-    let mut interval_cycles = Vec::with_capacity(selected.len());
-    let mut clips_total = 0usize;
-    for refs in &interval_refs {
-        let mut sum = 0.0;
-        for &(slot, count) in refs {
-            sum += preds[slot] * count as f64;
-            clips_total += count as usize;
-        }
-        interval_cycles.push(sum);
-    }
-
+    let mut scans = scan_intervals(selected, cfg, cache, None);
+    let mut state = DedupState::new();
+    let stats = state.collect(&mut scans, cache);
+    state.predict(model, time_scale, cache)?;
+    let interval_cycles = state.interval_cycles(&scans);
     let weights: Vec<f64> = selected.iter().map(|s| s.weight).collect();
     Ok(CapsimRun {
         total_cycles: extrapolate(&weights, &interval_cycles, n_intervals),
         interval_cycles,
         wall_s: t0.elapsed().as_secs_f64(),
-        clips_total,
-        clips_unique: unique.len(),
+        clips_total: stats.clips_total,
+        clips_unique: stats.clips_unique,
+        cache_hits: stats.cache_hits,
     })
 }
 
@@ -178,6 +440,8 @@ pub fn capsim_mode(
 mod tests {
     use super::*;
     use crate::coordinator::golden::build_bench_dataset;
+    use crate::runtime::NativePredictor;
+    use crate::simpoint::{choose_simpoints, profile};
     use crate::workloads::{suite, Scale};
 
     fn test_cfg() -> PipelineConfig {
@@ -187,6 +451,14 @@ mod tests {
         c.simpoint.max_k = 3;
         c.l_min = 24;
         c
+    }
+
+    fn selected_for(bench_idx: usize, cfg: &PipelineConfig) -> (Vec<SelectedInterval>, usize) {
+        let benches = suite(Scale::Test);
+        let prof = profile(&benches[bench_idx].program, &cfg.simpoint);
+        let sel = choose_simpoints(&prof, &cfg.simpoint);
+        let n = prof.intervals.len();
+        (sel, n)
     }
 
     #[test]
@@ -224,5 +496,64 @@ mod tests {
         let golden = core.simulate(&full).stats.cycles as f64;
         let rel = (run.total_cycles - golden).abs() / golden;
         assert!(rel < 0.35, "extrapolation off by {rel:.2}");
+    }
+
+    #[test]
+    fn gem5_mode_thread_count_is_bit_identical() {
+        let mut cfg = test_cfg();
+        let (sel, n) = selected_for(2, &cfg);
+        cfg.threads = 1;
+        let a = gem5_mode(&sel, n, &cfg);
+        cfg.threads = 4;
+        let b = gem5_mode(&sel, n, &cfg);
+        assert_eq!(a.interval_cycles, b.interval_cycles);
+        assert_eq!(a.total_cycles.to_bits(), b.total_cycles.to_bits());
+    }
+
+    #[test]
+    fn capsim_mode_native_runs_and_dedups() {
+        let cfg = test_cfg();
+        let (sel, n) = selected_for(0, &cfg);
+        let model = NativePredictor::with_defaults();
+        let run = capsim_mode(&sel, n, &cfg, &model, 40.0, None).unwrap();
+        assert_eq!(run.interval_cycles.len(), sel.len());
+        assert!(run.interval_cycles.iter().all(|&c| c > 0.0));
+        assert!(run.total_cycles > 0.0);
+        assert!(run.clips_unique > 0);
+        assert!(run.clips_unique <= run.clips_total);
+        assert_eq!(run.cache_hits, 0, "no cache was supplied");
+    }
+
+    #[test]
+    fn capsim_mode_thread_count_is_bit_identical() {
+        let mut cfg = test_cfg();
+        let (sel, n) = selected_for(3, &cfg);
+        let model = NativePredictor::with_defaults();
+        cfg.threads = 1;
+        let a = capsim_mode(&sel, n, &cfg, &model, 40.0, None).unwrap();
+        cfg.threads = 4;
+        let b = capsim_mode(&sel, n, &cfg, &model, 40.0, None).unwrap();
+        let abits: Vec<u64> = a.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        let bbits: Vec<u64> = b.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(abits, bbits);
+        assert_eq!(a.total_cycles.to_bits(), b.total_cycles.to_bits());
+        assert_eq!(a.clips_unique, b.clips_unique);
+    }
+
+    #[test]
+    fn warm_cache_reuses_every_clip_and_matches_cold() {
+        let cfg = test_cfg();
+        let (sel, n) = selected_for(1, &cfg);
+        let model = NativePredictor::with_defaults();
+        let cache = ClipCache::new();
+        let cold = capsim_mode(&sel, n, &cfg, &model, 40.0, Some(&cache)).unwrap();
+        assert!(cold.clips_unique > 0);
+        assert_eq!(cache.len(), cold.clips_unique);
+        let warm = capsim_mode(&sel, n, &cfg, &model, 40.0, Some(&cache)).unwrap();
+        assert_eq!(warm.clips_unique, 0, "warm run predicts nothing new");
+        assert_eq!(warm.cache_hits, cold.clips_unique + cold.cache_hits);
+        let cbits: Vec<u64> = cold.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        let wbits: Vec<u64> = warm.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(cbits, wbits, "cache must never change predictions");
     }
 }

@@ -17,9 +17,21 @@
 //! * [`tokenizer`] — Fig. 5: standardization transformation into tokens;
 //! * [`context`] — Fig. 6: register-value context matrix;
 //! * [`dataset`] — clip datasets, splits and the six Table-II benchmark sets;
-//! * [`runtime`] — PJRT loading of the AOT-compiled predictor artifacts;
-//! * [`predictor`] — batching, the SGD training driver and evaluation;
-//! * [`coordinator`] — the end-to-end CAPSim and gem5-mode pipelines;
+//! * [`runtime`] — predictor backends behind one `Predictor` trait: PJRT
+//!   loading of the AOT-compiled artifacts, plus a dependency-free native
+//!   analytic backend;
+//! * [`predictor`] — batching (including the cross-interval/benchmark
+//!   `BatchAccumulator`), the SGD training driver and evaluation;
+//! * [`coordinator`] — the end-to-end CAPSim and gem5-mode pipelines, run
+//!   by a **sharded parallel engine**: per-interval work (checkpoint
+//!   restore → functional trace → O3 simulate / slice+tokenize) fans out
+//!   over a worker pool governed by the `threads` knob of
+//!   `config::PipelineConfig` (`0` = one worker per core; set it from the
+//!   CLI with `--threads N` or `pipeline.threads` in TOML), with a
+//!   deterministic input-order merge so `threads = N` is bit-identical to
+//!   `threads = 1`. A cross-benchmark `ClipCache` dedups identical clips
+//!   across the whole suite, and `coordinator::engine` drives entire
+//!   suites through one shared cache with full inference batches;
 //! * [`workloads`] — the 24 synthetic SPEC-2017-analog benchmarks;
 //! * [`report`] — table/series emitters used by the benches;
 //! * [`config`], [`util`] — TOML-subset configs and offline-friendly

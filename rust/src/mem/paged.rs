@@ -107,6 +107,35 @@ impl Memory {
     pub fn mapped_pages(&self) -> usize {
         self.pages.len()
     }
+
+    /// Deterministic digest of the *logical* memory contents (FNV-1a over
+    /// mapped pages in ascending address order). All-zero pages are
+    /// skipped, so two memories that read identically digest identically
+    /// even if one mapped a page it only ever wrote zeroes to. Used by the
+    /// differential tests to compare architectural state across execution
+    /// paths without materializing byte-level diffs.
+    pub fn digest(&self) -> u64 {
+        let mut ids: Vec<u64> = self.pages.keys().copied().collect();
+        ids.sort_unstable();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for id in ids {
+            let pg = &self.pages[&id];
+            if pg.iter().all(|&b| b == 0) {
+                continue;
+            }
+            mix(id);
+            for chunk in pg.chunks(8) {
+                let mut word = [0u8; 8];
+                word[..chunk.len()].copy_from_slice(chunk);
+                mix(u64::from_le_bytes(word));
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +193,22 @@ mod tests {
                 m.read_le(*addr, *n) == val & mask
             },
         );
+    }
+
+    #[test]
+    fn digest_tracks_logical_contents() {
+        let mut a = Memory::new();
+        let mut b = Memory::new();
+        assert_eq!(a.digest(), b.digest(), "two empty memories");
+        a.write_u64(0x1000, 7);
+        assert_ne!(a.digest(), b.digest());
+        b.write_u64(0x1000, 7);
+        assert_eq!(a.digest(), b.digest(), "identical contents");
+        // an all-zero mapped page is logically empty
+        a.write_u64(0x9000, 0);
+        assert_eq!(a.digest(), b.digest(), "zero page ignored");
+        a.write_u8(0x1000, 8);
+        assert_ne!(a.digest(), b.digest());
     }
 
     #[test]

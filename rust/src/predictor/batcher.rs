@@ -1,4 +1,7 @@
-//! Padding clip samples into the fixed-shape batches the AOT model expects.
+//! Padding clip samples into the fixed-shape batches the AOT model expects,
+//! plus the [`BatchAccumulator`] the sharded engine uses to fill batches
+//! *across* intervals and benchmarks instead of flushing ragged
+//! per-interval remainders.
 
 use crate::dataset::{ClipSample, Dataset};
 use crate::runtime::{Batch, ModelGeometry};
@@ -40,6 +43,79 @@ pub fn build_batches(ds: &Dataset, idx: &[usize], b: usize, g: &ModelGeometry) -
             build_batch(&refs, b, g)
         })
         .collect()
+}
+
+/// Accumulates keyed clips until a full batch of capacity `cap` is ready.
+///
+/// The engine feeds every *new unique* clip it discovers — across all
+/// intervals of a benchmark, and across benchmarks when driven by
+/// `coordinator::engine::capsim_suite` — into one accumulator, so the
+/// predictor almost always sees full batches; only the final
+/// [`flush`](BatchAccumulator::flush) can be partial (and is still padded
+/// to `cap`, which must be a compiled batch size).
+///
+/// Emission order is exactly push order, which is what keeps the engine
+/// deterministic across thread counts.
+pub struct BatchAccumulator {
+    cap: usize,
+    g: ModelGeometry,
+    keys: Vec<u64>,
+    samples: Vec<ClipSample>,
+}
+
+impl BatchAccumulator {
+    pub fn new(cap: usize, g: ModelGeometry) -> BatchAccumulator {
+        assert!(cap > 0, "batch capacity must be positive");
+        BatchAccumulator {
+            cap,
+            g,
+            keys: Vec::with_capacity(cap),
+            samples: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Clips pushed but not yet emitted.
+    pub fn pending(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Add one clip; returns a full `(keys, batch)` pair once `cap` clips
+    /// have accumulated.
+    pub fn push(&mut self, key: u64, sample: ClipSample) -> Option<(Vec<u64>, Batch)> {
+        self.keys.push(key);
+        self.samples.push(sample);
+        if self.samples.len() == self.cap {
+            self.emit(self.cap)
+        } else {
+            None
+        }
+    }
+
+    /// Emit whatever is pending as a final (possibly partial) batch,
+    /// padded to `tail_cap` — pass the smallest *compiled* batch size
+    /// that fits `pending()` (i.e. `model.pick_fwd_batch(pending())`) so
+    /// the tail doesn't burn a full-capacity forward on a few rows.
+    pub fn flush(&mut self, tail_cap: usize) -> Option<(Vec<u64>, Batch)> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            assert!(
+                tail_cap >= self.samples.len(),
+                "tail capacity {} below {} pending clips",
+                tail_cap,
+                self.samples.len()
+            );
+            self.emit(tail_cap)
+        }
+    }
+
+    fn emit(&mut self, cap: usize) -> Option<(Vec<u64>, Batch)> {
+        let keys = std::mem::take(&mut self.keys);
+        let samples = std::mem::take(&mut self.samples);
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let batch = build_batch(&refs, cap, &self.g);
+        Some((keys, batch))
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +182,29 @@ mod tests {
         s.time = 0.0;
         let b = build_batch(&[&s], 1, &g);
         assert_eq!(b.target[0], 1.0);
+    }
+
+    #[test]
+    fn accumulator_emits_full_batches_in_push_order() {
+        let g = geometry();
+        let mut acc = BatchAccumulator::new(4, g.clone());
+        let mut emitted: Vec<Vec<u64>> = Vec::new();
+        for i in 0..10u64 {
+            if let Some((keys, batch)) = acc.push(i, sample(2, i as u16 + 1)) {
+                assert_eq!(batch.live, 4);
+                assert_eq!(batch.b, 4);
+                emitted.push(keys);
+            }
+        }
+        assert_eq!(emitted, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(acc.pending(), 2);
+        // the tail flushes into a smaller compiled capacity
+        let (keys, batch) = acc.flush(2).unwrap();
+        assert_eq!(keys, vec![8, 9]);
+        assert_eq!(batch.live, 2);
+        assert_eq!(batch.b, 2, "tail uses the caller-picked capacity");
+        assert!(acc.flush(4).is_none());
+        assert_eq!(acc.pending(), 0);
     }
 
     #[test]

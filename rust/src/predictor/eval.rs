@@ -1,10 +1,13 @@
 //! Evaluation: batched inference over a dataset subset, MAPE / accuracy
 //! (paper Eq. 11 and the "accuracy = 1 − MAPE" convention of §VI-D).
+//!
+//! Both entry points are generic over [`Predictor`], so they run
+//! identically against the PJRT backend and the native analytic backend.
 
 use anyhow::Result;
 
 use crate::dataset::{ClipSample, Dataset};
-use crate::runtime::ModelHandle;
+use crate::runtime::Predictor;
 use crate::util::stats;
 
 use super::batcher::build_batch;
@@ -20,13 +23,13 @@ pub struct EvalResult {
 }
 
 /// Predict every sample in `idx` (batched with the largest compiled fwd).
-pub fn predict_all(
-    model: &ModelHandle,
+pub fn predict_all<P: Predictor + ?Sized>(
+    model: &P,
     ds: &Dataset,
     idx: &[usize],
     time_scale: f32,
 ) -> Result<Vec<f64>> {
-    let g = model.geometry.clone();
+    let g = model.geometry().clone();
     let b = model.max_fwd_batch();
     let mut out = Vec::with_capacity(idx.len());
     for chunk in idx.chunks(b) {
@@ -40,8 +43,8 @@ pub fn predict_all(
 }
 
 /// Evaluate MAPE/accuracy of `model` over `idx`.
-pub fn evaluate(
-    model: &ModelHandle,
+pub fn evaluate<P: Predictor + ?Sized>(
+    model: &P,
     ds: &Dataset,
     idx: &[usize],
     time_scale: f32,

@@ -98,7 +98,7 @@ pub fn train(
         log.steps_run = step + 1;
 
         if !val_idx.is_empty() && (step + 1) % p.eval_every == 0 {
-            let ev = evaluate(model, ds, val_idx, time_scale)?;
+            let ev = evaluate(&*model, ds, val_idx, time_scale)?;
             log.val_loss.push((step, ev.mape));
             if ev.mape < best_val - 1e-4 {
                 best_val = ev.mape;

@@ -1,13 +1,47 @@
-//! The PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! The predictor runtime: backends that turn padded clip [`Batch`]es into
+//! predicted clip times.
 //!
-//! Python never runs here — the artifacts directory (HLO text +
-//! `manifest.json`) is the entire contract between the layers (see
-//! DESIGN.md §4 and `/opt/xla-example/load_hlo` for the interchange
-//! rationale: HLO *text*, not serialized protos).
+//! Two backends implement the [`Predictor`] trait:
+//!
+//! * [`ModelHandle`] — the PJRT path: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them from
+//!   the Rust hot path. Python never runs here — the artifacts directory
+//!   (HLO text + `manifest.json`) is the entire contract between the
+//!   layers (see DESIGN.md §4 and `/opt/xla-example/load_hlo` for the
+//!   interchange rationale: HLO *text*, not serialized protos);
+//! * [`NativePredictor`] — a dependency-free analytic backend whose
+//!   predictions are exact row-local functions of the batch row; used by
+//!   the engine equivalence tests and as the `--native` fallback when no
+//!   artifacts are built.
+//!
+//! Everything above this layer (`predictor::eval`, `coordinator`) is
+//! generic over [`Predictor`], so backends are interchangeable.
 
 pub mod manifest;
 pub mod model;
+pub mod native;
 
 pub use manifest::{Manifest, ModelGeometry, VariantManifest};
 pub use model::{Batch, ModelHandle, Runtime};
+pub use native::NativePredictor;
+
+use anyhow::Result;
+
+/// A forward-only predictor backend.
+///
+/// Object-safe on purpose: engine code and benches hold `&dyn Predictor` /
+/// `Box<dyn Predictor>` so the PJRT and native backends swap freely.
+pub trait Predictor {
+    /// Model geometry (batch shapes the backend expects).
+    fn geometry(&self) -> &ModelGeometry;
+
+    /// Largest supported forward batch capacity.
+    fn max_fwd_batch(&self) -> usize;
+
+    /// The batch capacity the backend will use for `live` rows.
+    fn pick_fwd_batch(&self, live: usize) -> usize;
+
+    /// Predict clip times for the live rows of `batch` (length
+    /// `batch.live`; padding rows are never returned).
+    fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>>;
+}

@@ -7,6 +7,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 use super::manifest::{Manifest, ModelGeometry, VariantManifest};
+use super::Predictor;
 
 /// A host-side minibatch in the exact layout the AOT entry points expect.
 #[derive(Clone, Debug)]
@@ -213,6 +214,8 @@ impl ModelHandle {
     }
 
     /// One SGD step; updates resident params/momentum, returns the loss.
+    // (kept below the forward path: training is ModelHandle-specific and
+    // not part of the backend-agnostic `Predictor` trait)
     pub fn train_step(&mut self, batch: &Batch, lr: f32, time_scale: f32) -> Result<f32> {
         let (tb, exe) = self
             .train
@@ -240,5 +243,23 @@ impl ModelHandle {
         self.momentum = Some(m);
         loss.get_first_element::<f32>()
             .map_err(|e| anyhow!("loss read: {e}"))
+    }
+}
+
+impl Predictor for ModelHandle {
+    fn geometry(&self) -> &ModelGeometry {
+        &self.geometry
+    }
+
+    fn max_fwd_batch(&self) -> usize {
+        ModelHandle::max_fwd_batch(self)
+    }
+
+    fn pick_fwd_batch(&self, live: usize) -> usize {
+        ModelHandle::pick_fwd_batch(self, live)
+    }
+
+    fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        ModelHandle::forward(self, batch, time_scale)
     }
 }

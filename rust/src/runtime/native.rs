@@ -1,0 +1,193 @@
+//! A pure-Rust analytic predictor backend.
+//!
+//! The PJRT backend ([`super::ModelHandle`]) needs AOT-compiled artifacts
+//! and an XLA runtime; this backend needs neither. It prices a clip with a
+//! deterministic, **row-local** analytic function of the batch row — every
+//! prediction depends only on that row's tokens and context, never on the
+//! batch composition — which gives it two properties the attention model
+//! only approximates:
+//!
+//! * **padding/batch invariance is exact**: a clip predicts the same value
+//!   in a batch of 1 or 256, cold or warm — which is what lets the engine
+//!   equivalence tests assert *bit-identical* results across thread counts
+//!   and cache states;
+//! * **no load-time dependencies**: `capsim compare --native` and the
+//!   Fig.-7 bench work on a clean tree with no `make artifacts`.
+//!
+//! The analytic cost is a stand-in, not a trained model: each instruction
+//! contributes a hash-derived pseudo-latency, the clip's register context
+//! modulates the total a few percent, and `time_scale` sets the output
+//! magnitude (as it does for the compiled model).
+
+use anyhow::Result;
+
+use super::manifest::ModelGeometry;
+use super::model::Batch;
+use super::Predictor;
+
+/// Deterministic analytic predictor; see the module docs.
+#[derive(Clone, Debug)]
+pub struct NativePredictor {
+    geometry: ModelGeometry,
+}
+
+impl NativePredictor {
+    pub fn new(geometry: ModelGeometry) -> NativePredictor {
+        NativePredictor { geometry }
+    }
+
+    /// Geometry matching the AOT `model_config.json` defaults (and the
+    /// `coordinator::golden` dataset constants).
+    pub fn with_defaults() -> NativePredictor {
+        NativePredictor::new(ModelGeometry {
+            vocab_size: 512,
+            embed_dim: 64,
+            l_token: crate::coordinator::golden::L_TOKEN,
+            l_clip: crate::coordinator::golden::L_CLIP,
+            m_rows: crate::context::M_ROWS,
+            train_batch: 32,
+            fwd_batch_sizes: vec![1, 8, 32, 128],
+        })
+    }
+
+    /// Price one live row. Pure function of the row's tokens + context.
+    fn row_cost(&self, batch: &Batch, r: usize, time_scale: f32) -> f32 {
+        let g = &self.geometry;
+        let row_tokens = g.l_clip * g.l_token;
+        let mut cost: f32 = 1.0;
+        let mut insts: f32 = 0.0;
+        for i in 0..g.l_clip {
+            if batch.clip_mask[r * g.l_clip + i] == 0.0 {
+                continue;
+            }
+            insts += 1.0;
+            let mut inst_cost: f32 = 0.25;
+            for t in 0..g.l_token {
+                let tok = batch.tokens[r * row_tokens + i * g.l_token + t] as u32;
+                if tok == 0 {
+                    continue;
+                }
+                // hash-derived pseudo-latency in [0, 0.5) per token
+                let h = tok.wrapping_mul(0x9E37_79B9) >> 24;
+                inst_cost += h as f32 * (1.0 / 512.0);
+            }
+            cost += inst_cost;
+        }
+        // context modulation: +/-10% from an FNV hash of the context row
+        let mut seed: u32 = 0x811C_9DC5;
+        for m in 0..g.m_rows {
+            seed = (seed ^ batch.ctx[r * g.m_rows + m] as u32).wrapping_mul(16_777_619);
+        }
+        let modulation = 0.9 + (seed >> 24) as f32 * (0.2 / 256.0);
+        // normalize so a typical clip lands near time_scale
+        let norm = insts.max(1.0) * 0.75 + 1.0;
+        (cost / norm * modulation * time_scale).max(1e-3)
+    }
+}
+
+impl Predictor for NativePredictor {
+    fn geometry(&self) -> &ModelGeometry {
+        &self.geometry
+    }
+
+    fn max_fwd_batch(&self) -> usize {
+        self.geometry.fwd_batch_sizes.last().copied().unwrap_or(1)
+    }
+
+    fn pick_fwd_batch(&self, live: usize) -> usize {
+        for &b in &self.geometry.fwd_batch_sizes {
+            if b >= live {
+                return b;
+            }
+        }
+        self.max_fwd_batch()
+    }
+
+    fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch.live <= batch.b,
+            "live rows {} exceed batch capacity {}",
+            batch.live,
+            batch.b
+        );
+        Ok((0..batch.live)
+            .map(|r| self.row_cost(batch, r, time_scale))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ClipSample;
+    use crate::predictor::build_batch;
+
+    fn sample(fill: u16, len: u16, ctx_fill: u16) -> ClipSample {
+        let g = NativePredictor::with_defaults().geometry.clone();
+        ClipSample {
+            tokens: (0..len as usize * g.l_token)
+                .map(|i| if i % g.l_token == 0 { 1 } else { fill })
+                .collect(),
+            len,
+            ctx: vec![ctx_fill; g.m_rows],
+            time: 10.0,
+            key: 1,
+            bench: 0,
+        }
+    }
+
+    #[test]
+    fn predictions_positive_finite_and_scaled() {
+        let p = NativePredictor::with_defaults();
+        let g = p.geometry.clone();
+        let s = sample(20, 8, 200);
+        let b = build_batch(&[&s], 1, &g);
+        let out = p.forward(&b, 50.0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_finite() && out[0] > 0.0);
+        // doubling time_scale doubles the prediction (pure scale factor)
+        let out2 = p.forward(&b, 100.0).unwrap();
+        assert!((out2[0] - 2.0 * out[0]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn batch_and_padding_invariance_is_exact() {
+        let p = NativePredictor::with_defaults();
+        let g = p.geometry.clone();
+        let samples: Vec<ClipSample> =
+            (0..5).map(|i| sample(15 + i as u16, 4 + i as u16, 150 + i as u16)).collect();
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let full = p.forward(&build_batch(&refs, 8, &g), 40.0).unwrap();
+        assert_eq!(full.len(), 5);
+        for (i, s) in samples.iter().enumerate() {
+            let one = p.forward(&build_batch(&[s], 1, &g), 40.0).unwrap();
+            assert_eq!(one[0].to_bits(), full[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn tokens_and_context_both_matter() {
+        let p = NativePredictor::with_defaults();
+        let g = p.geometry.clone();
+        let base = p
+            .forward(&build_batch(&[&sample(20, 6, 200)], 1, &g), 30.0)
+            .unwrap()[0];
+        let diff_tok = p
+            .forward(&build_batch(&[&sample(21, 6, 200)], 1, &g), 30.0)
+            .unwrap()[0];
+        let diff_ctx = p
+            .forward(&build_batch(&[&sample(20, 6, 201)], 1, &g), 30.0)
+            .unwrap()[0];
+        assert_ne!(base.to_bits(), diff_tok.to_bits());
+        assert_ne!(base.to_bits(), diff_ctx.to_bits());
+    }
+
+    #[test]
+    fn geometry_matches_dataset_constants() {
+        let g = NativePredictor::with_defaults().geometry.clone();
+        assert_eq!(g.l_token, crate::coordinator::golden::L_TOKEN);
+        assert_eq!(g.l_clip, crate::coordinator::golden::L_CLIP);
+        assert_eq!(g.m_rows, crate::context::M_ROWS);
+        assert!(g.vocab_size >= crate::tokenizer::vocab::VOCAB_USED as usize);
+    }
+}

@@ -1,0 +1,177 @@
+//! Differential tests between the two execution paths of Fig. 1: the
+//! functional CPU (`AtomicCpu`) and the cycle-level O3 core.
+//!
+//! For every workload in the Table-II suite:
+//!
+//! * two independent functional executions (the `run_trace` collector vs
+//!   the `run_with` streaming path, plus a mid-trace checkpoint restore)
+//!   must agree on the trace, the committed instruction count and the
+//!   architectural register/memory state at trace end;
+//! * the O3 core must commit exactly the instructions the functional
+//!   trace supplies, with monotone commit cycles, and must be fully
+//!   deterministic — a fresh core and a `reset()` core produce identical
+//!   timing, which is the invariant the sharded `gem5_mode` (one fresh
+//!   core per interval job) relies on.
+
+use capsim::functional::AtomicCpu;
+use capsim::isa::RegFile;
+use capsim::o3::{O3Config, O3Core};
+use capsim::simpoint::Checkpoint;
+use capsim::workloads::{suite, Scale};
+
+/// Cap per-benchmark dynamic instructions so the whole suite stays fast.
+const CAP: u64 = 30_000;
+
+/// Bit-exact image of the architectural register file (FPRs as raw bits,
+/// so NaN payloads compare reliably).
+fn reg_bits(r: &RegFile) -> Vec<u64> {
+    let mut v = Vec::with_capacity(32 + 32 + 7);
+    v.extend_from_slice(&r.gpr);
+    v.extend(r.fpr.iter().map(|f| f.to_bits()));
+    v.push(r.cr.0 as u64);
+    v.push(r.lr);
+    v.push(r.ctr);
+    v.push(r.xer);
+    v.push(r.fpscr as u64);
+    v.push(r.cia);
+    v.push(r.nia);
+    v
+}
+
+#[test]
+fn functional_paths_agree_on_trace_and_architectural_state() {
+    for b in suite(Scale::Test) {
+        // path A: collect the trace
+        let mut cpu_a = AtomicCpu::load(&b.program);
+        let trace_a = cpu_a.run_trace(CAP);
+
+        // path B: stream records without collecting them in the CPU
+        let mut cpu_b = AtomicCpu::load(&b.program);
+        let mut trace_b = Vec::new();
+        let executed = cpu_b.run_with(CAP, |r| trace_b.push(*r));
+
+        assert_eq!(trace_a.len() as u64, executed, "{}", b.name);
+        assert_eq!(cpu_a.icount, cpu_b.icount, "{}", b.name);
+        assert_eq!(trace_a, trace_b, "{}: traces diverge", b.name);
+        assert_eq!(cpu_a.halted, cpu_b.halted, "{}", b.name);
+        assert_eq!(
+            reg_bits(&cpu_a.regs),
+            reg_bits(&cpu_b.regs),
+            "{}: register state diverges",
+            b.name
+        );
+        assert_eq!(
+            cpu_a.mem.digest(),
+            cpu_b.mem.digest(),
+            "{}: memory state diverges",
+            b.name
+        );
+    }
+}
+
+#[test]
+fn trace_records_are_internally_consistent() {
+    for b in suite(Scale::Test) {
+        let mut cpu = AtomicCpu::load(&b.program);
+        let trace = cpu.run_trace(CAP);
+        assert!(!trace.is_empty(), "{}", b.name);
+        for w in trace.windows(2) {
+            assert_eq!(
+                w[0].next_pc, w[1].pc,
+                "{}: next_pc chain broken at {:#x}",
+                b.name, w[0].pc
+            );
+        }
+        for r in &trace {
+            assert_eq!(
+                r.mem_addr.is_some(),
+                r.inst.is_mem(),
+                "{}: mem_addr flag mismatch at {:#x}",
+                b.name,
+                r.pc
+            );
+            if r.taken {
+                assert!(r.inst.is_branch(), "{}: non-branch taken at {:#x}", b.name, r.pc);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_restore_replays_the_exact_tail() {
+    for b in suite(Scale::Test) {
+        let mut cpu = AtomicCpu::load(&b.program);
+        // execute half the cap, checkpoint, finish
+        let mut head = Vec::new();
+        cpu.run_with(CAP / 2, |r| head.push(*r));
+        if cpu.halted {
+            continue; // program shorter than CAP/2: nothing to restore into
+        }
+        let ck = Checkpoint::capture(&cpu);
+        let tail_a = cpu.run_trace(CAP / 2);
+
+        let mut restored = ck.restore();
+        let tail_b = restored.run_trace(CAP / 2);
+
+        assert_eq!(tail_a, tail_b, "{}: restored tail diverges", b.name);
+        assert_eq!(reg_bits(&cpu.regs), reg_bits(&restored.regs), "{}", b.name);
+        assert_eq!(cpu.mem.digest(), restored.mem.digest(), "{}", b.name);
+    }
+}
+
+#[test]
+fn o3_commits_exactly_the_functional_trace() {
+    let cfg = O3Config::default();
+    for b in suite(Scale::Test) {
+        let mut cpu = AtomicCpu::load(&b.program);
+        let trace = cpu.run_trace(CAP);
+        let mut core = O3Core::new(cfg.clone());
+        let r = core.simulate(&trace);
+
+        // committed instruction count must agree with the functional path
+        assert_eq!(r.stats.insts, trace.len() as u64, "{}", b.name);
+        assert_eq!(r.commit_cycle.len(), trace.len(), "{}", b.name);
+
+        // commit cycles are monotone and end at the total cycle count
+        for w in r.commit_cycle.windows(2) {
+            assert!(w[0] <= w[1], "{}: commit cycles regress", b.name);
+        }
+        assert_eq!(
+            r.stats.cycles,
+            *r.commit_cycle.last().unwrap(),
+            "{}: total cycles != last commit",
+            b.name
+        );
+        // an in-order-commit machine can't beat 1 inst/cycle per commit
+        // port, and can't commit in fewer cycles than instructions/width
+        let floor = trace.len() as u64 / cfg.commit_width.max(1) as u64;
+        assert!(r.stats.cycles >= floor, "{}: cycles below commit floor", b.name);
+    }
+}
+
+#[test]
+fn o3_is_deterministic_fresh_vs_reset() {
+    // the sharded gem5_mode gives every interval job a fresh core; the
+    // sequential flow reused one core with reset() — both must time
+    // identically for the parallel engine to be bit-identical
+    let cfg = O3Config::default();
+    let benches = suite(Scale::Test);
+    for b in benches.iter().take(6) {
+        let mut cpu = AtomicCpu::load(&b.program);
+        let trace = cpu.run_trace(CAP / 2);
+
+        let mut fresh = O3Core::new(cfg.clone());
+        let a = fresh.simulate(&trace);
+
+        let mut reused = O3Core::new(cfg.clone());
+        let mut warmup_cpu = AtomicCpu::load(&b.program);
+        let warmup = warmup_cpu.run_trace(2_000);
+        let _ = reused.simulate(&warmup); // dirty the caches + predictor
+        reused.reset();
+        let c = reused.simulate(&trace);
+
+        assert_eq!(a.commit_cycle, c.commit_cycle, "{}: reset() != fresh core", b.name);
+        assert_eq!(a.stats.cycles, c.stats.cycles, "{}", b.name);
+        assert_eq!(a.stats.mispredicts, c.stats.mispredicts, "{}", b.name);
+    }
+}

@@ -1,0 +1,230 @@
+//! Equivalence tests for the sharded parallel engine over the full
+//! Table-II workload suite:
+//!
+//! * `gem5_mode` and `capsim_mode` with `threads = 4` are **bit-identical**
+//!   to `threads = 1` (interval cycles and extrapolated totals);
+//! * the cross-benchmark clip cache never changes predictions: cold and
+//!   warm runs match bitwise, and a warm run predicts zero new clips;
+//! * cross-benchmark dedup never predicts more than the per-benchmark
+//!   baseline, and strictly fewer once workloads share clips.
+//!
+//! Uses the native analytic backend, whose row-local predictions make
+//! "bit-identical" a meaningful contract (no batch-composition effects).
+
+use capsim::config::PipelineConfig;
+use capsim::coordinator::{
+    capsim_mode, capsim_suite, gem5_mode, BenchProfile, ClipCache, SuiteBatching,
+};
+use capsim::runtime::NativePredictor;
+use capsim::simpoint::{choose_simpoints, profile};
+use capsim::workloads::{suite, Benchmark, Scale};
+
+const TIME_SCALE: f32 = 40.0;
+
+fn test_cfg() -> PipelineConfig {
+    let mut c = PipelineConfig::default();
+    c.simpoint.interval_insts = 8_000;
+    c.simpoint.warmup_insts = 1_000;
+    c.simpoint.max_k = 2;
+    c.l_min = 24;
+    c
+}
+
+fn profile_bench(b: &Benchmark, cfg: &PipelineConfig) -> BenchProfile {
+    let prof = profile(&b.program, &cfg.simpoint);
+    let selected = choose_simpoints(&prof, &cfg.simpoint);
+    BenchProfile {
+        name: b.name,
+        set_no: b.set_no,
+        tag_string: b.tag_string(),
+        n_intervals: prof.intervals.len(),
+        selected,
+        total_insts: prof.total_insts,
+    }
+}
+
+fn all_profiles(cfg: &PipelineConfig) -> Vec<BenchProfile> {
+    suite(Scale::Test).iter().map(|b| profile_bench(b, cfg)).collect()
+}
+
+fn f64_bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn gem5_mode_threads4_bit_identical_to_threads1_full_suite() {
+    let mut cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    for p in &profiles {
+        cfg.threads = 1;
+        let a = gem5_mode(&p.selected, p.n_intervals, &cfg);
+        cfg.threads = 4;
+        let b = gem5_mode(&p.selected, p.n_intervals, &cfg);
+        assert_eq!(a.interval_cycles, b.interval_cycles, "{}", p.name);
+        assert_eq!(
+            a.total_cycles.to_bits(),
+            b.total_cycles.to_bits(),
+            "{}",
+            p.name
+        );
+    }
+}
+
+#[test]
+fn capsim_mode_threads4_bit_identical_to_threads1_full_suite() {
+    let mut cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    let model = NativePredictor::with_defaults();
+
+    cfg.threads = 1;
+    let cache1 = ClipCache::new();
+    let a = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &cache1,
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+
+    cfg.threads = 4;
+    let cache4 = ClipCache::new();
+    let b = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &cache4,
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+
+    assert_eq!(a.runs.len(), b.runs.len());
+    for ((ra, rb), p) in a.runs.iter().zip(&b.runs).zip(&profiles) {
+        assert_eq!(
+            f64_bits(&ra.interval_cycles),
+            f64_bits(&rb.interval_cycles),
+            "{}: interval cycles depend on thread count",
+            p.name
+        );
+        assert_eq!(
+            ra.total_cycles.to_bits(),
+            rb.total_cycles.to_bits(),
+            "{}",
+            p.name
+        );
+        assert_eq!(ra.clips_total, rb.clips_total, "{}", p.name);
+        assert_eq!(ra.clips_unique, rb.clips_unique, "{}", p.name);
+        assert_eq!(ra.cache_hits, rb.cache_hits, "{}", p.name);
+    }
+    assert_eq!(a.clips_unique, b.clips_unique);
+    assert_eq!(cache1.len(), cache4.len());
+}
+
+#[test]
+fn warm_cache_never_changes_predictions_full_suite() {
+    let cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    let model = NativePredictor::with_defaults();
+    let cache = ClipCache::new();
+
+    let cold = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &cache,
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+    assert!(cold.clips_unique > 0);
+    assert_eq!(cache.len(), cold.clips_unique, "cache holds every predicted clip");
+
+    let warm = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &cache,
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+    assert_eq!(warm.clips_unique, 0, "warm suite run predicts nothing new");
+    for ((rc, rw), p) in cold.runs.iter().zip(&warm.runs).zip(&profiles) {
+        assert_eq!(
+            f64_bits(&rc.interval_cycles),
+            f64_bits(&rw.interval_cycles),
+            "{}: cache changed a prediction",
+            p.name
+        );
+        assert_eq!(rc.total_cycles.to_bits(), rw.total_cycles.to_bits(), "{}", p.name);
+    }
+}
+
+#[test]
+fn cross_benchmark_dedup_never_exceeds_per_benchmark_baseline() {
+    let cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    let model = NativePredictor::with_defaults();
+
+    // baseline: each benchmark dedups only against itself
+    let mut isolated_unique = 0usize;
+    for p in &profiles {
+        let solo =
+            capsim_mode(&p.selected, p.n_intervals, &cfg, &model, TIME_SCALE, None)
+                .unwrap();
+        isolated_unique += solo.clips_unique;
+    }
+
+    // shared cache across the suite
+    let shared = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &ClipCache::new(),
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+    assert!(
+        shared.clips_unique <= isolated_unique,
+        "cross-benchmark dedup predicted more ({}) than the baseline ({})",
+        shared.clips_unique,
+        isolated_unique
+    );
+    // cross-benchmark hits are exactly the clips the cache saved
+    assert_eq!(shared.clips_unique + shared.cache_hits, isolated_unique);
+
+    // once workloads demonstrably share clips, the reduction is strict:
+    // append a sibling built from an existing benchmark's program
+    let benches = suite(Scale::Test);
+    let mut extended = all_profiles(&cfg);
+    extended.push(profile_bench(&benches[0], &cfg));
+    let ext_isolated = isolated_unique
+        + capsim_mode(
+            &extended[extended.len() - 1].selected,
+            extended[extended.len() - 1].n_intervals,
+            &cfg,
+            &model,
+            TIME_SCALE,
+            None,
+        )
+        .unwrap()
+        .clips_unique;
+    let ext_shared = capsim_suite(
+        &extended,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &ClipCache::new(),
+        SuiteBatching::PerBench,
+    )
+    .unwrap();
+    assert!(
+        ext_shared.clips_unique < ext_isolated,
+        "shared kernels must reduce predicted clips strictly ({} vs {})",
+        ext_shared.clips_unique,
+        ext_isolated
+    );
+}

@@ -1,0 +1,234 @@
+//! Property tests (via the in-crate `util::prop` harness) for the Fig.-5
+//! standardization transformation and the Fig.-3 sampler:
+//!
+//! * tokenization is deterministic and every emitted id stays inside the
+//!   vocabulary, with the `<REP>`/`<END>` row structure intact;
+//! * `fast_clip_key` equality implies identical token streams on
+//!   generated clips (the invariant the engine's dedup layers rest on);
+//! * occurrence sorting is conserved (counts sum to the stream length),
+//!   descending, stable under permutation of the stream, and its
+//!   normalized weights sum to ~1.0.
+
+use std::collections::HashMap;
+
+use capsim::functional::TraceRecord;
+use capsim::isa::inst::ALL_OPCODES;
+use capsim::isa::{Inst, Opcode};
+use capsim::sampler::{categorize, occurrence_distribution, sample, SamplerConfig};
+use capsim::tokenizer::standardize::{clip_key, fast_clip_key, tokenize_clip};
+use capsim::tokenizer::vocab;
+use capsim::util::{prop, Rng};
+
+const L_TOKEN: usize = 16;
+
+/// A synthetic trace record: tokenization only reads the decoded fields.
+fn record(inst: Inst) -> TraceRecord {
+    TraceRecord {
+        pc: 0x1000,
+        inst,
+        mem_addr: None,
+        taken: false,
+        next_pc: 0x1004,
+    }
+}
+
+/// A random instruction over the full opcode/register space.
+fn any_inst(rng: &mut Rng) -> Inst {
+    let op = ALL_OPCODES[rng.range(0, ALL_OPCODES.len())];
+    Inst::new(
+        op,
+        rng.range(0, 32) as u8,
+        rng.range(0, 32) as u8,
+        rng.range(0, 32) as u8,
+        rng.below(1 << 15) as i32 - (1 << 14),
+    )
+}
+
+/// A random clip of 1..=12 instructions.
+fn any_clip(rng: &mut Rng) -> Vec<TraceRecord> {
+    let n = rng.range(1, 13);
+    (0..n).map(|_| record(any_inst(rng))).collect()
+}
+
+/// A clip drawn from a deliberately tiny alphabet (2 opcodes, 2 register
+/// names, 1-2 instructions: a few hundred distinct clips at most) so that
+/// 512 generated cases repeatedly produce *identical* clips — exercising
+/// fast-key collisions for real.
+fn small_alphabet_clip(rng: &mut Rng) -> Vec<TraceRecord> {
+    const OPS: [Opcode; 2] = [Opcode::Add, Opcode::Addi];
+    let n = rng.range(1, 3);
+    (0..n)
+        .map(|_| {
+            let op = OPS[rng.range(0, OPS.len())];
+            record(Inst::new(
+                op,
+                rng.range(0, 2) as u8,
+                rng.range(0, 2) as u8,
+                rng.range(0, 2) as u8,
+                rng.range(0, 2) as i32,
+            ))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_tokenize_is_deterministic() {
+    prop::check("tokenize deterministic", 128, any_clip, |clip| {
+        tokenize_clip(clip, L_TOKEN) == tokenize_clip(clip, L_TOKEN)
+    });
+}
+
+#[test]
+fn prop_tokens_stay_in_vocab_with_row_structure() {
+    prop::check_res("vocab range + row structure", 128, any_clip, |clip| {
+        let toks = tokenize_clip(clip, L_TOKEN);
+        if toks.len() != clip.len() * L_TOKEN {
+            return Err(format!("shape {} != {}", toks.len(), clip.len() * L_TOKEN));
+        }
+        for (i, row) in toks.chunks(L_TOKEN).enumerate() {
+            if row[0] != vocab::REP {
+                return Err(format!("row {i} does not start with <REP>"));
+            }
+            if !row.contains(&vocab::END) {
+                return Err(format!("row {i} lost its <END>"));
+            }
+            for &t in row {
+                if t >= vocab::VOCAB_USED {
+                    return Err(format!("row {i}: token {t} outside vocabulary"));
+                }
+            }
+            // padding is a suffix: nothing follows the last non-PAD token
+            let last = row.iter().rposition(|&t| t != vocab::PAD).unwrap();
+            if row[last] != vocab::END {
+                return Err(format!("row {i}: <END> is not the last live token"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fast_key_collisions_imply_identical_token_streams() {
+    // across many generated clips from a tiny alphabet, every repeated
+    // fast key must carry the exact token stream seen before
+    let mut seen: HashMap<u64, Vec<u16>> = HashMap::new();
+    let mut collisions = 0usize;
+    prop::check_res(
+        "fast_clip_key collision soundness",
+        512,
+        small_alphabet_clip,
+        |clip| {
+            let fast = fast_clip_key(clip);
+            let toks = tokenize_clip(clip, L_TOKEN);
+            if let Some(prev) = seen.get(&fast) {
+                collisions += 1;
+                if *prev != toks {
+                    return Err("fast key collided across token classes".into());
+                }
+                // and the token-level key must agree too
+                if clip_key(prev) != clip_key(&toks) {
+                    return Err("token keys disagree on identical streams".into());
+                }
+            } else {
+                seen.insert(fast, toks);
+            }
+            Ok(())
+        },
+    );
+    assert!(collisions > 20, "alphabet too wide to exercise collisions ({collisions})");
+}
+
+/// A random key stream with hot and cold populations (the Fig.-8 shape).
+fn key_stream(rng: &mut Rng) -> Vec<u64> {
+    let n = rng.range(50, 2_000);
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.7) {
+                rng.below(8)
+            } else {
+                100 + rng.below(300)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_occurrence_sorting_conserves_and_sorts() {
+    prop::check_res("occurrence sorting", 64, key_stream, |keys| {
+        let (orig, sorted) = occurrence_distribution(keys);
+        if orig.len() != sorted.len() {
+            return Err("category count changed by sorting".into());
+        }
+        if orig.iter().sum::<u64>() != keys.len() as u64 {
+            return Err("occurrences don't sum to the stream length".into());
+        }
+        if sorted.iter().sum::<u64>() != keys.len() as u64 {
+            return Err("sorting changed the total".into());
+        }
+        for w in sorted.windows(2) {
+            if w[0] < w[1] {
+                return Err("sorted distribution not descending".into());
+            }
+        }
+        // normalized weights sum to ~1.0
+        let total: u64 = sorted.iter().sum();
+        let weight_sum: f64 = sorted.iter().map(|&c| c as f64 / total as f64).sum();
+        if (weight_sum - 1.0).abs() > 1e-9 {
+            return Err(format!("weights sum to {weight_sum}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sorted_distribution_stable_under_permutation() {
+    prop::check_res("permutation stability", 64, key_stream, |keys| {
+        let (_, sorted) = occurrence_distribution(keys);
+        // permute the stream with a seed derived from its content
+        let mut permuted = keys.clone();
+        let seed = keys.iter().fold(0u64, |h, &k| {
+            h.wrapping_mul(0x100000001b3) ^ k
+        });
+        Rng::new(seed).shuffle(&mut permuted);
+        let (_, sorted_p) = occurrence_distribution(&permuted);
+        if sorted != sorted_p {
+            return Err("sorted occurrence distribution depends on stream order".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_selection_is_valid_and_deterministic() {
+    let cfg = SamplerConfig { threshold: 20, coefficient: 0.1 };
+    prop::check_res("sampler selection", 64, key_stream, |keys| {
+        let sel = sample(keys, &cfg);
+        if sel.is_empty() {
+            return Err("selection must not be empty for a non-empty stream".into());
+        }
+        if sel.len() > keys.len() {
+            return Err("selected more than the stream".into());
+        }
+        for w in sel.windows(2) {
+            if w[0] >= w[1] {
+                return Err("selection not strictly ascending".into());
+            }
+        }
+        if let Some(&last) = sel.last() {
+            if last >= keys.len() {
+                return Err("selected index out of range".into());
+            }
+        }
+        if sample(keys, &cfg) != sel {
+            return Err("sampler is nondeterministic".into());
+        }
+        // every surviving category must have existed in the stream
+        let cats = categorize(keys);
+        let n_cats = cats.len();
+        let picked: std::collections::HashSet<u64> = sel.iter().map(|&i| keys[i]).collect();
+        if picked.len() > n_cats {
+            return Err("more selected categories than exist".into());
+        }
+        Ok(())
+    });
+}

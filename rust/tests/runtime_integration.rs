@@ -141,7 +141,7 @@ fn capsim_mode_end_to_end_over_checkpoints() {
     let mut model = rt.load_variant("capsim").unwrap();
     model.init_params(5).unwrap();
 
-    let c = capsim_mode(&bp.selected, bp.n_intervals, &cfg, &model, 60.0).unwrap();
+    let c = capsim_mode(&bp.selected, bp.n_intervals, &cfg, &model, 60.0, None).unwrap();
     assert_eq!(c.interval_cycles.len(), bp.selected.len());
     assert!(c.interval_cycles.iter().all(|&x| x > 0.0));
     assert!(c.clips_unique <= c.clips_total);

@@ -7,9 +7,15 @@
 //! * **cross-benchmark clip dedup** — unique clips sent to the model with
 //!   one shared `ClipCache` across the suite vs the per-benchmark dedup
 //!   baseline (strictly fewer whenever workloads share kernels);
-//! * **thread scaling** — whole-suite wall seconds for both modes at
-//!   `threads = 1, 2, 4, 8` (results are bit-identical across counts; only
-//!   the wall clock moves).
+//! * **pipeline overlap / thread scaling** — the streaming
+//!   stage-pipelined engine per thread count (`threads = 1, 2, 4, 8`):
+//!   scan-wall (summed worker busy seconds) vs predict-wall (inference
+//!   busy seconds) vs total-wall, plus the overlap factor
+//!   `(scan + predict) / wall` — results are bit-identical across
+//!   counts; only the wall clock moves;
+//! * **persistent clip cache** — a second run warm-started from the
+//!   on-disk cache must resolve every clip without inference
+//!   (warm-start hit rate > 0, zero new predictions).
 //!
 //! Runs against the trained PJRT model when `make artifacts` has been
 //! run, else against the deterministic native analytic backend.
@@ -18,9 +24,10 @@
 mod common;
 
 use capsim::coordinator::{
-    capsim_mode, capsim_suite, gem5_mode, gem5_suite, ClipCache, SuiteBatching,
+    capsim_mode, capsim_suite, gem5_mode, gem5_suite_streamed, ClipCache, SuiteBatching,
 };
 use capsim::report::Table;
+use capsim::runtime::Predictor;
 use capsim::util::stats;
 
 fn main() -> anyhow::Result<()> {
@@ -87,16 +94,21 @@ fn main() -> anyhow::Result<()> {
         shared.clips_unique, shared.cache_hits
     );
 
-    // ---- engine thread scaling (whole suite, cold cache per row) ----
+    // ---- streaming engine: overlap + thread scaling (cold cache per
+    // row). scan s / predict s are stage busy times; overlap > 1 means
+    // the stages genuinely ran concurrently ----
     let mut scaling = Table::new(
-        "Engine scaling — whole-suite wall seconds per thread count",
-        &["Threads", "gem5 s", "CAPSim s", "Speedup", "uniq clips"],
+        "Engine scaling — streamed suite, scan/predict/total wall per thread count",
+        &[
+            "Threads", "gem5 s", "CAPSim s", "scan s", "predict s", "overlap", "Speedup",
+            "uniq clips",
+        ],
     );
     for threads in [1usize, 2, 4, 8] {
         let mut run_cfg = cfg.clone();
         run_cfg.threads = threads;
         let t0 = std::time::Instant::now();
-        let _g = gem5_suite(&profiles, &run_cfg);
+        let _g = gem5_suite_streamed(&profiles, &run_cfg);
         let gem5_s = t0.elapsed().as_secs_f64();
         let c = capsim_suite(
             &profiles,
@@ -104,16 +116,57 @@ fn main() -> anyhow::Result<()> {
             model.as_ref(),
             time_scale,
             &ClipCache::new(),
-            SuiteBatching::CrossBench,
+            SuiteBatching::Streamed,
         )?;
+        let st = c.stages.unwrap_or_default();
         scaling.row(vec![
             threads.to_string(),
             format!("{gem5_s:.3}"),
             format!("{:.3}", c.wall_s),
+            format!("{:.3}", st.scan_busy_s),
+            format!("{:.3}", st.predict_busy_s),
+            format!("{:.2}x", st.overlap()),
             format!("{:.2}x", gem5_s / c.wall_s.max(1e-9)),
             c.clips_unique.to_string(),
         ]);
     }
     scaling.emit("fig7_engine_scaling");
+
+    // ---- persistent clip cache: cold run -> save -> load -> warm run ----
+    let cache_path = std::path::PathBuf::from("target/capsim_fig7_clip_cache.bin");
+    let fp = model.fingerprint();
+    let cold_cache = ClipCache::new();
+    let cold = capsim_suite(
+        &profiles,
+        &cfg,
+        model.as_ref(),
+        time_scale,
+        &cold_cache,
+        SuiteBatching::Streamed,
+    )?;
+    cold_cache.save(&cache_path, fp, time_scale)?;
+    let (warm_cache, warm_loaded) = ClipCache::load_or_cold(&cache_path, fp, time_scale);
+    let warm = capsim_suite(
+        &profiles,
+        &cfg,
+        model.as_ref(),
+        time_scale,
+        &warm_cache,
+        SuiteBatching::Streamed,
+    )?;
+    let wst = warm_cache.stats();
+    println!(
+        "persistent cache [{backend}]: {} clips saved; warm start loaded={warm_loaded}, \
+         hit rate {:.1}% ({} hits), {} new clips predicted (cold run predicted {})",
+        cold_cache.len(),
+        100.0 * wst.hit_rate(),
+        wst.hits,
+        warm.clips_unique,
+        cold.clips_unique,
+    );
+    assert!(warm_loaded, "persisted cache must reload under the same key");
+    assert!(wst.hit_rate() > 0.0, "warm start must report cache hits");
+    assert_eq!(warm.clips_unique, 0, "warm start predicts nothing new");
+    let _ = std::fs::remove_file(&cache_path);
     Ok(())
 }

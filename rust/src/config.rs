@@ -174,9 +174,24 @@ pub struct PipelineConfig {
     pub o3: O3Config,
     pub sampler: SamplerConfig,
     /// Worker threads for the sharded engine (per-interval and
-    /// per-benchmark fan-out). `0` means auto (one per available core);
-    /// results are bit-identical for every value.
+    /// per-benchmark fan-out). `0` means auto — the `CAPSIM_THREADS`
+    /// env var if set, else one per available core (precedence:
+    /// `--threads` CLI > `pipeline.threads` TOML > `CAPSIM_THREADS` >
+    /// autodetect; see `coordinator::pool::default_threads`). Results
+    /// are bit-identical for every value.
     pub threads: usize,
+    /// Capacity of the bounded scan→merge channel of the streaming
+    /// engine (`coordinator::stream`): how many finished interval scans
+    /// may wait, unmerged, before scan workers block. `0` = auto
+    /// (2 × worker threads).
+    pub queue_depth: usize,
+    /// Capacity of the bounded merge→predict channel: how many ready
+    /// inference batches may wait before the merge stage blocks. `0` =
+    /// auto (2).
+    pub batch_depth: usize,
+    /// Directory holding the persistent clip cache (`--cache-dir` /
+    /// `pipeline.cache_dir`); empty = no persistence.
+    pub cache_dir: String,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -197,6 +212,9 @@ impl Default for PipelineConfig {
             o3: O3Config::default(),
             sampler: SamplerConfig::default(),
             threads: 0,
+            queue_depth: 0,
+            batch_depth: 0,
+            cache_dir: String::new(),
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -217,6 +235,9 @@ impl PipelineConfig {
         };
         // negative values mean "auto" rather than wrapping to usize::MAX
         c.threads = t.int("pipeline.threads", c.threads as i64).max(0) as usize;
+        c.queue_depth = t.int("pipeline.queue_depth", c.queue_depth as i64).max(0) as usize;
+        c.batch_depth = t.int("pipeline.batch_depth", c.batch_depth as i64).max(0) as usize;
+        c.cache_dir = t.str("pipeline.cache_dir", &c.cache_dir);
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -256,6 +277,28 @@ impl PipelineConfig {
             crate::coordinator::pool::default_threads()
         } else {
             self.threads
+        }
+    }
+
+    /// Scan→merge channel capacity for the streaming engine (resolves
+    /// `0 = auto`: twice the worker count, so the merge always has work
+    /// queued without unbounded buffering).
+    pub fn effective_queue_depth(&self) -> usize {
+        if self.queue_depth == 0 {
+            (2 * self.effective_threads()).max(2)
+        } else {
+            self.queue_depth
+        }
+    }
+
+    /// Merge→predict channel capacity (resolves `0 = auto` to 2: one
+    /// batch in flight to the predictor plus one being filled keeps the
+    /// stages overlapped without hoarding memory).
+    pub fn effective_batch_depth(&self) -> usize {
+        if self.batch_depth == 0 {
+            2
+        } else {
+            self.batch_depth
         }
     }
 }
@@ -314,6 +357,9 @@ mod tests {
             scale = "full"
             l_min = 48
             threads = 4
+            queue_depth = 16
+            batch_depth = 3
+            cache_dir = "warm"
             [o3]
             rob_entries = 128
             [train]
@@ -329,6 +375,11 @@ mod tests {
         assert_eq!(c.l_min, 48);
         assert_eq!(c.threads, 4);
         assert_eq!(c.effective_threads(), 4);
+        assert_eq!(c.queue_depth, 16);
+        assert_eq!(c.effective_queue_depth(), 16);
+        assert_eq!(c.batch_depth, 3);
+        assert_eq!(c.effective_batch_depth(), 3);
+        assert_eq!(c.cache_dir, "warm");
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -350,5 +401,9 @@ mod tests {
         assert_eq!(c.o3.fetch_width, 8);
         assert_eq!(c.threads, 0, "0 = auto");
         assert!(c.effective_threads() >= 1);
+        assert_eq!(c.queue_depth, 0, "0 = auto");
+        assert!(c.effective_queue_depth() >= 2);
+        assert_eq!(c.effective_batch_depth(), 2);
+        assert!(c.cache_dir.is_empty(), "persistence off by default");
     }
 }

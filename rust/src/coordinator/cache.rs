@@ -20,6 +20,12 @@
 //! Cached values are predictions, so a cache is only meaningful for one
 //! `(backend, parameters, time_scale)` combination — callers hold one
 //! cache per trained model, exactly like an inference-server result cache.
+//! The on-disk format ([`ClipCache::save`] / [`ClipCache::load`]) encodes
+//! that: a versioned header carries the model fingerprint
+//! ([`Predictor::fingerprint`](crate::runtime::Predictor::fingerprint))
+//! and the `time_scale` bits, and a load with a mismatched key (or a
+//! corrupt/truncated file) is refused so callers fall back to a cold
+//! start ([`ClipCache::load_or_cold`]).
 //! Dedup is content-keyed (paper §IV-B): `fast_clip_key` hashes decoded
 //! instruction fields, not register values, so a cached prediction
 //! carries the register context of the key's first sighting. Repeating a
@@ -28,8 +34,15 @@
 //! may canonicalize a shared key to a different first context.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+
+/// On-disk header magic ("CPLC") of a persisted clip cache.
+const FILE_MAGIC: u32 = 0x434C_5043;
+/// Bump on any incompatible layout change; old files then cold-start.
+const FILE_VERSION: u32 = 1;
 
 /// Hit/miss counters observed so far (monotone; see [`ClipCache::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -125,11 +138,99 @@ impl ClipCache {
         }
     }
 
-    /// Drop all entries (counters are kept; they describe lookups, not
-    /// contents).
+    /// Drop all entries **and** reset the hit/miss counters: after a
+    /// warm-start invalidation the cache reports a fresh hit rate
+    /// instead of one skewed by lookups against the discarded contents.
     pub fn clear(&self) {
         for s in &self.shards {
             s.write().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot of all entries, sorted by key — deterministic bytes for
+    /// [`save`](ClipCache::save) regardless of insertion or shard order.
+    pub fn entries(&self) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            out.extend(s.read().unwrap().iter().map(|(&k, &v)| (k, v)));
+        }
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    /// Persist the cache for cross-process warm starts. The header keys
+    /// the file to one `(model fingerprint, time_scale)` combination —
+    /// the same contract as the in-memory cache. Writes a sibling temp
+    /// file and renames it, so a crashed writer never leaves a
+    /// half-written cache behind. Returns the number of entries saved.
+    pub fn save(&self, path: &Path, fingerprint: u64, time_scale: f32) -> std::io::Result<usize> {
+        let entries = self.entries();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(&FILE_MAGIC.to_le_bytes())?;
+            w.write_all(&FILE_VERSION.to_le_bytes())?;
+            w.write_all(&fingerprint.to_le_bytes())?;
+            w.write_all(&time_scale.to_bits().to_le_bytes())?;
+            w.write_all(&(entries.len() as u64).to_le_bytes())?;
+            for &(k, v) in &entries {
+                w.write_all(&k.to_le_bytes())?;
+                w.write_all(&v.to_bits().to_le_bytes())?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(entries.len())
+    }
+
+    /// Load a persisted cache, verifying the version and the
+    /// `(fingerprint, time_scale)` key. Corrupt, truncated, or
+    /// mismatched files return `Err` (callers cold-start; see
+    /// [`load_or_cold`](ClipCache::load_or_cold)).
+    pub fn load(path: &Path, fingerprint: u64, time_scale: f32) -> std::io::Result<ClipCache> {
+        fn bad(msg: &str) -> std::io::Error {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+        }
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != FILE_MAGIC {
+            return Err(bad("not a clip-cache file"));
+        }
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != FILE_VERSION {
+            return Err(bad("unsupported clip-cache version"));
+        }
+        r.read_exact(&mut b8)?;
+        if u64::from_le_bytes(b8) != fingerprint {
+            return Err(bad("model fingerprint mismatch"));
+        }
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != time_scale.to_bits() {
+            return Err(bad("time_scale mismatch"));
+        }
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let cache = ClipCache::new();
+        for _ in 0..n {
+            r.read_exact(&mut b8)?;
+            let k = u64::from_le_bytes(b8);
+            r.read_exact(&mut b8)?;
+            cache.insert(k, f64::from_bits(u64::from_le_bytes(b8)));
+        }
+        Ok(cache)
+    }
+
+    /// [`load`](ClipCache::load) with a cold-start fallback: a missing,
+    /// corrupt, or mismatched-key file yields a fresh empty cache.
+    /// Returns `(cache, warm)` where `warm` says the load succeeded.
+    pub fn load_or_cold(path: &Path, fingerprint: u64, time_scale: f32) -> (ClipCache, bool) {
+        match Self::load(path, fingerprint, time_scale) {
+            Ok(c) => (c, true),
+            Err(_) => (ClipCache::new(), false),
         }
     }
 }
@@ -183,13 +284,73 @@ mod tests {
     }
 
     #[test]
-    fn clear_resets_contents_not_counters() {
+    fn clear_resets_contents_and_counters() {
         let c = ClipCache::new();
         c.insert(1, 2.0);
         let _ = c.get(1);
+        let _ = c.get(2);
+        assert_eq!((c.stats().hits, c.stats().misses), (1, 1));
         c.clear();
         assert!(c.is_empty());
-        assert_eq!(c.stats().hits, 1);
+        // hit-rate reporting after a warm-start invalidation starts fresh
+        assert_eq!(c.stats(), CacheStats::default());
+        assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_matching_key() {
+        let dir = std::env::temp_dir().join("capsim_cache_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        for k in 0..300u64 {
+            c.insert(k.wrapping_mul(0x9E37_79B9_7F4A_7C15), k as f64 * 1.5 + 0.25);
+        }
+        let saved = c.save(&path, 0xFEED_BEEF, 40.0).unwrap();
+        assert_eq!(saved, 300);
+        let loaded = ClipCache::load(&path, 0xFEED_BEEF, 40.0).unwrap();
+        assert_eq!(loaded.len(), c.len());
+        assert_eq!(loaded.entries(), c.entries(), "values survive bit-exactly");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_refuses_mismatched_key_or_garbage() {
+        let dir = std::env::temp_dir().join("capsim_cache_mismatch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        c.insert(7, 1.25);
+        c.save(&path, 1234, 40.0).unwrap();
+        assert!(ClipCache::load(&path, 4321, 40.0).is_err(), "fingerprint mismatch");
+        assert!(ClipCache::load(&path, 1234, 41.0).is_err(), "time_scale mismatch");
+        assert!(ClipCache::load(&path, 1234, 40.0).is_ok());
+        // corrupt / truncated files fall back cold
+        std::fs::write(&path, b"not a cache").unwrap();
+        let (cold, warm) = ClipCache::load_or_cold(&path, 1234, 40.0);
+        assert!(!warm && cold.is_empty());
+        // missing file falls back cold too
+        let (cold, warm) = ClipCache::load_or_cold(&dir.join("absent.bin"), 1234, 40.0);
+        assert!(!warm && cold.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_is_deterministic_across_insertion_orders() {
+        let dir = std::env::temp_dir().join("capsim_cache_det");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (pa, pb) = (dir.join("a.bin"), dir.join("b.bin"));
+        let a = ClipCache::new();
+        let b = ClipCache::new();
+        for k in 0..100u64 {
+            a.insert(k, k as f64);
+            b.insert(99 - k, (99 - k) as f64);
+        }
+        a.save(&pa, 1, 2.0).unwrap();
+        b.save(&pb, 1, 2.0).unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
     }
 
     #[test]

@@ -35,6 +35,15 @@ pub enum SuiteBatching {
     /// `wall_s` then covers the scan stage only; inference time is
     /// reported once in [`SuiteRun::wall_s`].
     CrossBench,
+    /// Run the suite through the streaming stage-pipelined engine
+    /// ([`stream`](super::stream)): scan, batch fill and inference
+    /// overlap as concurrent stages connected by bounded channels, with
+    /// benchmark-level fan-out over one shared worker pool. The
+    /// sequence-ordered merge keeps results bit-identical to
+    /// [`CrossBench`](SuiteBatching::CrossBench) (row-local backends).
+    /// Per-run `wall_s` reports the benchmark's summed scan busy
+    /// seconds; stage accounting lands in [`SuiteRun::stages`].
+    Streamed,
 }
 
 /// Aggregate result of a suite run.
@@ -50,6 +59,9 @@ pub struct SuiteRun {
     pub cache_hits: usize,
     /// Whole-suite wall-clock seconds (scan + inference).
     pub wall_s: f64,
+    /// Per-stage accounting — present for [`SuiteBatching::Streamed`]
+    /// runs, `None` for the phase-barrier paths.
+    pub stages: Option<super::stream::StageTimes>,
 }
 
 /// gem5 mode over a whole suite (no clip pipeline, so no cache; listed
@@ -70,9 +82,13 @@ pub fn capsim_suite<P: Predictor + ?Sized>(
     cache: &ClipCache,
     batching: SuiteBatching,
 ) -> Result<SuiteRun> {
+    if batching == SuiteBatching::Streamed {
+        return super::stream::capsim_suite_streamed(profiles, cfg, model, time_scale, cache);
+    }
     let t0 = Instant::now();
     let mut runs: Vec<CapsimRun> = Vec::with_capacity(profiles.len());
     match batching {
+        SuiteBatching::Streamed => unreachable!("dispatched above"),
         SuiteBatching::PerBench => {
             for p in profiles {
                 runs.push(capsim_mode(
@@ -124,6 +140,7 @@ pub fn capsim_suite<P: Predictor + ?Sized>(
         clips_unique: runs.iter().map(|r| r.clips_unique).sum(),
         cache_hits: runs.iter().map(|r| r.cache_hits).sum(),
         wall_s: t0.elapsed().as_secs_f64(),
+        stages: None,
         runs,
     })
 }

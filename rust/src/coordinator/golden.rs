@@ -115,23 +115,32 @@ pub fn snapshots_at(ck: &Checkpoint, starts: &[usize]) -> Vec<RegFile> {
 
 /// Build the full-suite dataset (merging per-benchmark datasets in suite
 /// order) plus the per-benchmark profiles. `threads` parallelizes across
-/// benchmarks.
+/// benchmarks through the same streaming stage graph the suite engines
+/// use ([`stream::ordered_stream`](super::stream)): O3 golden-label jobs
+/// fan out over the worker pool and a sequence-ordered merge folds each
+/// benchmark's dataset in as soon as it (and all its predecessors) are
+/// done, while later benchmarks are still simulating. The bounded
+/// channel keeps at most a few finished datasets in flight, and the
+/// merged result is byte-identical for every thread count.
 pub fn build_dataset(
     benches: &[Benchmark],
     cfg: &PipelineConfig,
     threads: usize,
 ) -> (Dataset, Vec<BenchProfile>) {
     let jobs: Vec<(usize, &Benchmark)> = benches.iter().enumerate().collect();
-    let results = super::pool::parallel_map(jobs, threads, |(i, b)| {
-        build_bench_dataset(i, b, cfg)
-    });
     let mut all = Dataset::new(L_TOKEN, L_CLIP, crate::context::M_ROWS);
     let mut profiles = Vec::new();
-    for (ds, bp) in results {
-        all.dropped_long += ds.dropped_long;
-        all.samples.extend(ds.samples);
-        profiles.push(bp);
-    }
+    super::stream::ordered_stream(
+        jobs,
+        threads,
+        threads.max(1) * 2,
+        |(i, b)| build_bench_dataset(i, b, cfg),
+        |_seq, (ds, bp)| {
+            all.dropped_long += ds.dropped_long;
+            all.samples.extend(ds.samples);
+            profiles.push(bp);
+        },
+    );
     (all, profiles)
 }
 
@@ -198,6 +207,24 @@ mod tests {
             .filter(|w| w[0].ctx != w[1].ctx)
             .count();
         assert!(distinct > 0, "contexts should evolve");
+    }
+
+    #[test]
+    fn build_dataset_is_thread_count_invariant() {
+        // the streamed merge folds benchmarks in sequence order, so the
+        // dataset bytes must not depend on worker scheduling
+        let benches: Vec<_> = suite(Scale::Test).into_iter().take(4).collect();
+        let cfg = test_cfg();
+        let (a, pa) = build_dataset(&benches, &cfg, 1);
+        let (b, pb) = build_dataset(&benches, &cfg, 4);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.dropped_long, b.dropped_long);
+        assert_eq!(pa.len(), pb.len());
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.n_intervals, y.n_intervals);
+            assert_eq!(x.selected.len(), y.selected.len());
+        }
     }
 
     #[test]

@@ -12,10 +12,15 @@
 //! of `PipelineConfig`) with a deterministic input-order merge, so
 //! multi-threaded results are bit-identical to `threads = 1`. [`cache`]
 //! holds the cross-benchmark clip cache that dedups identical clips across
-//! the whole suite; [`engine`] drives entire suites through one shared
-//! cache (and can fill inference batches across benchmark boundaries);
-//! [`golden`] builds the labelled training dataset (functional trace + O3
-//! commit times + Algorithm-1 slicing + Fig.-5/6 tokenization);
+//! the whole suite — and can persist to disk, keyed by model fingerprint +
+//! `time_scale`, for warm starts across processes; [`engine`] drives
+//! entire suites through one shared cache (and can fill inference batches
+//! across benchmark boundaries); [`stream`] is the streaming
+//! stage-pipelined engine that overlaps scan/tokenize, batch fill and
+//! inference as concurrent stages connected by bounded channels, with
+//! benchmark-level fan-out; [`golden`] builds the labelled training
+//! dataset (functional trace + O3 commit times + Algorithm-1 slicing +
+//! Fig.-5/6 tokenization), routed through the same stage graph;
 //! [`modes`] implements the two modes themselves.
 
 pub mod cache;
@@ -23,9 +28,11 @@ pub mod engine;
 pub mod golden;
 pub mod modes;
 pub mod pool;
+pub mod stream;
 
 pub use cache::{CacheStats, ClipCache};
 pub use engine::{capsim_suite, gem5_suite, SuiteBatching, SuiteRun};
 pub use golden::{build_bench_dataset, build_dataset, BenchProfile};
 pub use modes::{capsim_mode, gem5_mode, CapsimRun, Gem5Run};
 pub use pool::parallel_map;
+pub use stream::{capsim_suite_streamed, gem5_suite_streamed, StageTimes};

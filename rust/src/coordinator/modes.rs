@@ -87,6 +87,26 @@ pub(crate) fn extrapolate(weights: &[f64], cycles: &[f64], n_intervals: usize) -
             .sum::<f64>()
 }
 
+/// One gem5-mode interval job: fresh cold core, checkpoint restore,
+/// warm-up + measured simulation — shared by [`gem5_mode`]'s pool
+/// fan-out and the streaming engine's scan stage
+/// ([`stream::gem5_suite_streamed`](super::stream::gem5_suite_streamed)).
+pub(crate) fn simulate_interval(sel: &SelectedInterval, cfg: &PipelineConfig) -> u64 {
+    let warm = cfg.simpoint.warmup_insts;
+    let mut core = O3Core::new(cfg.o3.clone());
+    let mut cpu = sel.checkpoint.restore();
+    let trace = cpu.run_trace(warm + cfg.simpoint.interval_insts);
+    let r = core.simulate(&trace);
+    // measured portion = everything after the warm-up instructions;
+    // if the program ended inside warm-up, fall back to full cycles
+    let measured = if trace.len() > warm as usize {
+        r.stats.cycles - r.commit_cycle[warm as usize]
+    } else {
+        r.stats.cycles
+    };
+    measured.max(1)
+}
+
 /// Restore every selected checkpoint into the O3 model (the paper's
 /// conventional flow, Fig. 1 left). Intervals are independent, so they
 /// fan out over the worker pool; each job gets a fresh (cold) core,
@@ -97,22 +117,9 @@ pub fn gem5_mode(
     cfg: &PipelineConfig,
 ) -> Gem5Run {
     let t0 = Instant::now();
-    let warm = cfg.simpoint.warmup_insts;
     let jobs: Vec<&SelectedInterval> = selected.iter().collect();
-    let interval_cycles = pool::parallel_map(jobs, cfg.effective_threads(), |sel| {
-        let mut core = O3Core::new(cfg.o3.clone());
-        let mut cpu = sel.checkpoint.restore();
-        let trace = cpu.run_trace(warm + cfg.simpoint.interval_insts);
-        let r = core.simulate(&trace);
-        // measured portion = everything after the warm-up instructions;
-        // if the program ended inside warm-up, fall back to full cycles
-        let measured = if trace.len() > warm as usize {
-            r.stats.cycles - r.commit_cycle[warm as usize]
-        } else {
-            r.stats.cycles
-        };
-        measured.max(1)
-    });
+    let interval_cycles =
+        pool::parallel_map(jobs, cfg.effective_threads(), |sel| simulate_interval(sel, cfg));
     let weights: Vec<f64> = selected.iter().map(|s| s.weight).collect();
     let cycles: Vec<f64> = interval_cycles.iter().map(|&c| c as f64).collect();
     Gem5Run {
@@ -141,7 +148,7 @@ pub(crate) struct IntervalScan {
 /// a payload for needs no second tokenization (only valid when
 /// intervals run in order — with parallel workers it would make the
 /// canonical context schedule-dependent).
-fn scan_one(
+pub(crate) fn scan_one(
     sel: &SelectedInterval,
     cfg: &PipelineConfig,
     cache: Option<&ClipCache>,
@@ -253,6 +260,7 @@ pub(crate) struct DedupState {
 }
 
 /// Per-benchmark dedup accounting from [`DedupState::collect`].
+#[derive(Clone, Copy, Debug, Default)]
 pub(crate) struct CollectStats {
     pub clips_total: usize,
     pub clips_unique: usize,

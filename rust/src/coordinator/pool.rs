@@ -47,8 +47,26 @@ where
         .collect()
 }
 
-/// Number of worker threads to use by default.
+/// Parse a `CAPSIM_THREADS`-style override: a positive integer.
+/// `0`, garbage, and absence all mean "no override".
+pub(crate) fn threads_override(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Number of worker threads to use when the config leaves it on auto.
+///
+/// Precedence, highest first: `--threads N` on the CLI and
+/// `pipeline.threads` in TOML both set `PipelineConfig::threads`
+/// directly (CLI wins because it is applied after the file), so this
+/// function is only consulted when both leave it at `0` = auto. Then
+/// the `CAPSIM_THREADS` environment variable applies — useful for CI
+/// determinism and for containers whose cgroup CPU limit is lower than
+/// what `available_parallelism` reports — and finally the detected core
+/// count.
 pub fn default_threads() -> usize {
+    if let Some(n) = threads_override(std::env::var("CAPSIM_THREADS").ok().as_deref()) {
+        return n;
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -80,5 +98,18 @@ mod tests {
         // can't assert true parallelism on 1 core; assert all jobs ran
         let out = parallel_map((0..50).collect(), default_threads(), |x: i32| x);
         assert_eq!(out.len(), 50);
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        // parse logic is pure so it tests without mutating process env
+        // (tests run concurrently; std::env::set_var would race)
+        assert_eq!(threads_override(Some("4")), Some(4));
+        assert_eq!(threads_override(Some(" 16 ")), Some(16));
+        assert_eq!(threads_override(Some("0")), None, "0 keeps auto-detect");
+        assert_eq!(threads_override(Some("-2")), None);
+        assert_eq!(threads_override(Some("many")), None);
+        assert_eq!(threads_override(Some("")), None);
+        assert_eq!(threads_override(None), None);
     }
 }

@@ -1,0 +1,699 @@
+//! The streaming, stage-pipelined suite engine.
+//!
+//! PR 1's engine still ran each phase behind a barrier: scan (and
+//! tokenize) *everything*, then predict batch after batch. This module
+//! removes the barriers: checkpoint-restore/functional-scan,
+//! slice+tokenize, [`BatchAccumulator`] fill, [`Predictor::forward`] and
+//! the result merge run as **concurrent stages connected by bounded
+//! channels**, and the whole suite's scan jobs — every (benchmark,
+//! interval) pair from all 24 workloads — feed one shared stage graph
+//! instead of running suites serially:
+//!
+//! ```text
+//!   scan jobs (bench × interval, all benchmarks, one shared pool)
+//!     │
+//!     ├─ worker 1..N ── restore → warm-up → slice → tokenize   [stage 1]
+//!     │        (seq, IntervalScan, busy_s)
+//!     ▼  sync_channel(queue_depth)                 ── backpressure ──
+//!   merge thread                                               [stage 2]
+//!     reorder to sequence order → clip dedup (interval / benchmark /
+//!     suite / shared ClipCache) → BatchAccumulator fill
+//!     │        Batch | Tail | Bench summary
+//!     ▼  sync_channel(batch_depth)                 ── backpressure ──
+//!   caller thread                                              [stage 3]
+//!     Predictor::forward → resolve into pred map + shared ClipCache
+//!     → sequence-ordered per-benchmark result merge
+//! ```
+//!
+//! Determinism is the same hard contract as [`modes`](super::modes):
+//! workers finish in any order, but the merge stage consumes scans in
+//! **sequence-number order** (bench-major, interval-minor — exactly the
+//! sequential suite order), so dedup decisions, canonical-payload choice
+//! and batch composition are those of the phase-barrier
+//! [`SuiteBatching::CrossBench`](super::engine::SuiteBatching) path. With
+//! a row-local backend, `threads = N`, any queue depth, and any stage
+//! interleaving are **bit-identical** to the sequential path (proved in
+//! `tests/engine_equivalence.rs`).
+//!
+//! Why the canonical payload survives the races: the merge needs a
+//! tokenized payload for a key `K` only at `K`'s *first* appearance in
+//! sequence order, say scan `i`. The shared cache can only contain `K`
+//! after the merge has processed some scan referencing `K` — and no scan
+//! before `i` does — so when the worker scanned `i`, `K` was not in the
+//! cache and the payload was built. Later scans may build duplicate
+//! payloads (they raced the resolve); the merge drops them unread.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::dataset::ClipSample;
+use crate::predictor::{build_batch, BatchAccumulator};
+use crate::runtime::{Batch, Predictor};
+use crate::simpoint::SelectedInterval;
+
+use super::cache::ClipCache;
+use super::engine::SuiteRun;
+use super::golden::{BenchProfile, L_CLIP};
+use super::modes::{
+    extrapolate, scan_one, simulate_interval, CapsimRun, CollectStats, Gem5Run, IntervalScan,
+};
+
+/// Wall-clock accounting of one streamed run's pipeline stages.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    /// Summed busy seconds across all scan workers (stage 1).
+    pub scan_busy_s: f64,
+    /// Busy seconds of the predict stage (stage 3 forwards + resolves).
+    pub predict_busy_s: f64,
+    /// End-to-end wall seconds of the streamed run.
+    pub wall_s: f64,
+}
+
+impl StageTimes {
+    /// How much stage work the pipeline overlapped:
+    /// `(scan + predict) / wall`. Values above 1 mean scanning and
+    /// inference genuinely ran concurrently; ≈ 1 means they serialized.
+    pub fn overlap(&self) -> f64 {
+        (self.scan_busy_s + self.predict_busy_s) / self.wall_s.max(1e-9)
+    }
+}
+
+/// Fan `jobs` out over `threads` workers and hand each result to
+/// `consume` on the **caller's** thread in exact input order, while later
+/// jobs are still running — the building block of the stage graph above
+/// (the scan stage of [`capsim_suite_streamed`], and used directly by
+/// [`gem5_suite_streamed`] and
+/// [`golden::build_dataset`](super::golden::build_dataset), which have no
+/// predict stage). Backpressure is a hard bound: a worker may not *start*
+/// job `i` until `i` is within `depth + threads` of the merge frontier,
+/// so at most `depth + threads` results exist at any moment (queued,
+/// reorder-held, or being computed) no matter how unlucky the
+/// scheduling — a slow sequence-first job cannot make the reorder buffer
+/// absorb the whole run. With `threads <= 1` it degrades to a sequential
+/// loop with identical results — the same contract as
+/// [`pool::parallel_map`](super::pool).
+pub(crate) fn ordered_stream<J, R, F>(
+    jobs: Vec<J>,
+    threads: usize,
+    depth: usize,
+    worker: F,
+    mut consume: impl FnMut(usize, R),
+) where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for (i, job) in jobs.into_iter().enumerate() {
+            consume(i, worker(job));
+        }
+        return;
+    }
+    let window = depth.max(1) + threads;
+    let slots: Vec<Mutex<Option<J>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let next = AtomicUsize::new(0);
+    // admission gate: number of results consumed so far; job i may start
+    // once i < floor + window. The job the consumer is waiting for is
+    // always admitted (floor < floor + window), so the gate cannot
+    // deadlock, and the reorder buffer holds < window results.
+    let floor = (Mutex::new(0usize), Condvar::new());
+    let (tx, rx) = sync_channel::<(usize, R)>(depth.max(1));
+    let (slots, next, worker, floor) = (&slots, &next, &worker, &floor);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                {
+                    let mut f = floor.0.lock().unwrap();
+                    while i >= *f + window {
+                        f = floor.1.wait(f).unwrap();
+                    }
+                }
+                let job = slots[i].lock().unwrap().take().unwrap();
+                let r = worker(job);
+                if tx.send((i, r)).is_err() {
+                    break; // consumer went away
+                }
+            });
+        }
+        drop(tx);
+        // sequence-ordered merge on the caller thread, overlapping the
+        // still-running workers
+        let mut held: HashMap<usize, R> = HashMap::new();
+        let mut want = 0usize;
+        for (i, r) in rx {
+            held.insert(i, r);
+            while let Some(r) = held.remove(&want) {
+                consume(want, r);
+                want += 1;
+            }
+            {
+                let mut f = floor.0.lock().unwrap();
+                if want > *f {
+                    *f = want;
+                    floor.1.notify_all();
+                }
+            }
+        }
+    });
+}
+
+/// gem5 mode over a whole suite through the stream graph: every
+/// (benchmark, interval) O3 restore job from all benchmarks feeds one
+/// worker pool, and the sequence-ordered merge assembles per-benchmark
+/// results. gem5 mode has no predict stage, so the graph has two stages.
+///
+/// `Gem5Run::wall_s` reports the benchmark's summed per-interval busy
+/// seconds (its serialized cost): per-benchmark wall clocks are not
+/// observable once benchmarks interleave on one shared pool.
+pub fn gem5_suite_streamed(profiles: &[BenchProfile], cfg: &PipelineConfig) -> Vec<Gem5Run> {
+    let mut jobs: Vec<&SelectedInterval> = Vec::new();
+    let mut bench_of: Vec<usize> = Vec::new();
+    for (b, p) in profiles.iter().enumerate() {
+        for sel in &p.selected {
+            jobs.push(sel);
+            bench_of.push(b);
+        }
+    }
+    let mut cycles: Vec<Vec<u64>> = profiles
+        .iter()
+        .map(|p| Vec::with_capacity(p.selected.len()))
+        .collect();
+    let mut busy = vec![0.0f64; profiles.len()];
+    ordered_stream(
+        jobs,
+        cfg.effective_threads(),
+        cfg.effective_queue_depth(),
+        |sel| {
+            let t0 = Instant::now();
+            let c = simulate_interval(sel, cfg);
+            (c, t0.elapsed().as_secs_f64())
+        },
+        |seq, (c, dur)| {
+            let b = bench_of[seq];
+            cycles[b].push(c);
+            busy[b] += dur;
+        },
+    );
+    profiles
+        .iter()
+        .zip(cycles)
+        .zip(busy)
+        .map(|((p, interval_cycles), wall_s)| {
+            let weights: Vec<f64> = p.selected.iter().map(|s| s.weight).collect();
+            let as_f64: Vec<f64> = interval_cycles.iter().map(|&c| c as f64).collect();
+            Gem5Run {
+                total_cycles: extrapolate(&weights, &as_f64, p.n_intervals),
+                interval_cycles,
+                wall_s,
+            }
+        })
+        .collect()
+}
+
+/// One finished benchmark's merge summary (stage 2 → stage 3), suite
+/// order.
+#[derive(Default)]
+struct BenchOut {
+    /// `(key, occurrences)` per interval, interval order.
+    refs: Vec<Vec<(u64, u64)>>,
+    stats: CollectStats,
+    /// Keys this benchmark resolved from the pre-warmed cache, with
+    /// their cached predictions (first sighting in the suite only).
+    cached: Vec<(u64, f64)>,
+    /// Summed busy seconds of this benchmark's interval scans.
+    scan_busy_s: f64,
+}
+
+/// Stage-2 → stage-3 traffic.
+enum WorkItem {
+    /// A full inference batch (accumulator fill), composition in
+    /// deterministic push order.
+    Batch(Vec<u64>, Batch),
+    /// The suite-final partial remainder; the predict stage pads it to
+    /// the smallest compiled capacity that fits (`pick_fwd_batch`),
+    /// exactly like the sequential tail flush.
+    Tail(Vec<(u64, ClipSample)>),
+    /// One finished benchmark, suite order.
+    Bench(BenchOut),
+}
+
+/// Stage-2 state: the sequence-ordered clip dedup + batch fill, making
+/// exactly the decisions of the sequential `DedupState::collect` /
+/// `predict` pair, but emitting work downstream as soon as it is ready.
+struct Merge<'a> {
+    tx: SyncSender<WorkItem>,
+    cache: &'a ClipCache,
+    /// `last_seq[b]` = scans up to and including benchmark `b`.
+    last_seq: &'a [usize],
+    nbench: usize,
+    acc: BatchAccumulator,
+    /// Keys pended or cache-resolved anywhere in this run.
+    seen_suite: HashSet<u64>,
+    /// Keys seen in the current benchmark (reset per benchmark).
+    seen_bench: HashSet<u64>,
+    out: BenchOut,
+    cur_b: usize,
+    /// Set when the predict stage disappeared (terminal error there):
+    /// the merge keeps draining scans without sending, so the scan
+    /// workers finish cleanly instead of blocking on a dead channel.
+    dead: bool,
+}
+
+impl Merge<'_> {
+    fn send(&mut self, item: WorkItem) {
+        if !self.dead && self.tx.send(item).is_err() {
+            self.dead = true;
+        }
+    }
+
+    /// Emit every benchmark whose scan range is complete after
+    /// `consumed` scans (including benchmarks with no intervals).
+    fn emit_finished_benches(&mut self, consumed: usize) {
+        while self.cur_b < self.nbench && consumed >= self.last_seq[self.cur_b] {
+            let done = std::mem::take(&mut self.out);
+            self.seen_bench.clear();
+            self.send(WorkItem::Bench(done));
+            self.cur_b += 1;
+        }
+    }
+
+    /// Fold the next in-sequence scan into the dedup state and the
+    /// batch accumulator.
+    fn process(&mut self, mut scan: IntervalScan, dur: f64) {
+        self.out.scan_busy_s += dur;
+        // first-in-sequence-order payload wins, as in the sequential
+        // merge; duplicates from racing workers are dropped unread
+        let mut local: HashMap<u64, ClipSample> = HashMap::new();
+        for (key, sample) in scan.fresh.drain(..) {
+            local.entry(key).or_insert(sample);
+        }
+        for &(key, count) in &scan.refs {
+            self.out.stats.clips_total += count as usize;
+            if !self.seen_bench.insert(key) {
+                continue; // earlier interval of this benchmark owns it
+            }
+            if self.seen_suite.contains(&key) {
+                self.out.stats.cache_hits += 1; // earlier benchmark
+                continue;
+            }
+            if let Some(v) = self.cache.get(key) {
+                self.seen_suite.insert(key);
+                self.out.stats.cache_hits += 1;
+                self.out.cached.push((key, v));
+                continue;
+            }
+            let sample = local
+                .remove(&key)
+                .expect("uncached key must carry a scan payload");
+            self.seen_suite.insert(key);
+            self.out.stats.clips_unique += 1;
+            if let Some((keys, batch)) = self.acc.push(key, sample) {
+                self.send(WorkItem::Batch(keys, batch));
+            }
+        }
+        self.out.refs.push(scan.refs);
+    }
+
+    /// Trailing benchmark boundaries + the partial tail, then hang up
+    /// (dropping `tx` tells stage 3 the stream is complete).
+    fn finish(mut self, consumed: usize) {
+        self.emit_finished_benches(consumed);
+        let tail = self.acc.drain();
+        if !tail.is_empty() {
+            self.send(WorkItem::Tail(tail));
+        }
+    }
+}
+
+/// CAPSim mode over a whole suite through the streaming stage-pipelined
+/// engine (see the module docs for the stage graph). Scan, batch fill
+/// and inference overlap; all benchmarks fan out over one worker pool
+/// and feed one shared [`ClipCache`] + cross-benchmark batch stream.
+///
+/// Results are bit-identical to
+/// [`SuiteBatching::CrossBench`](super::engine::SuiteBatching) with a
+/// row-local backend. Per-run `wall_s` reports the benchmark's summed
+/// scan busy seconds; the suite-wide stage accounting lands in
+/// [`SuiteRun::stages`].
+pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
+    profiles: &[BenchProfile],
+    cfg: &PipelineConfig,
+    model: &P,
+    time_scale: f32,
+    cache: &ClipCache,
+) -> Result<SuiteRun> {
+    anyhow::ensure!(
+        cfg.l_min <= L_CLIP,
+        "l_min {} exceeds the model's clip capacity {L_CLIP}",
+        cfg.l_min
+    );
+    let t0 = Instant::now();
+    let cap = model.max_fwd_batch();
+    let geometry = model.geometry().clone();
+    let nbench = profiles.len();
+
+    // flatten every benchmark's scan jobs into one bench-major sequence;
+    // sequence order == the sequential CrossBench processing order.
+    // last_seq[b] = number of scans up to and including benchmark b.
+    let mut jobs: Vec<&SelectedInterval> = Vec::new();
+    let mut last_seq: Vec<usize> = Vec::with_capacity(nbench);
+    for p in profiles {
+        jobs.extend(p.selected.iter());
+        last_seq.push(jobs.len());
+    }
+    let threads = cfg.effective_threads();
+    let queue_depth = cfg.effective_queue_depth();
+    let (tx_work, rx_work) = sync_channel::<WorkItem>(cfg.effective_batch_depth().max(1));
+
+    let mut outs: Vec<BenchOut> = Vec::with_capacity(nbench);
+    let mut pred: HashMap<u64, f64> = HashMap::new();
+    let mut predict_busy = 0.0f64;
+    let mut failure: Option<anyhow::Error> = None;
+
+    let last_seq = &last_seq;
+    std::thread::scope(|s| {
+        // stages 1 + 2 on a dedicated merge thread: ordered_stream fans
+        // the scan jobs out (stage 1, reads the cache, never writes it)
+        // and delivers each IntervalScan to the Merge in sequence order
+        // (stage 2), which ships batches/summaries downstream
+        s.spawn(move || {
+            let mut merge = Merge {
+                tx: tx_work,
+                cache,
+                last_seq: last_seq.as_slice(),
+                nbench,
+                acc: BatchAccumulator::new(cap, geometry),
+                seen_suite: HashSet::new(),
+                seen_bench: HashSet::new(),
+                out: BenchOut::default(),
+                cur_b: 0,
+                dead: false,
+            };
+            let mut consumed = 0usize;
+            ordered_stream(
+                jobs,
+                threads,
+                queue_depth,
+                |sel| {
+                    let s0 = Instant::now();
+                    let scan = scan_one(sel, cfg, Some(cache), None, None);
+                    (scan, s0.elapsed().as_secs_f64())
+                },
+                |seq, (scan, dur)| {
+                    merge.emit_finished_benches(seq);
+                    merge.process(scan, dur);
+                    consumed = seq + 1;
+                },
+            );
+            merge.finish(consumed);
+            // the Merge's tx drops here -> stage 3 sees end-of-stream
+        });
+
+        // stage 3: predict + resolve on the caller thread (the model
+        // never crosses a thread boundary, so `P` needs no `Sync`)
+        for item in rx_work {
+            match item {
+                WorkItem::Batch(keys, batch) => {
+                    let p0 = Instant::now();
+                    match model.forward(&batch, time_scale) {
+                        Ok(preds) => {
+                            for (&k, &v) in keys.iter().zip(&preds) {
+                                pred.insert(k, v as f64);
+                                cache.insert(k, v as f64);
+                            }
+                            predict_busy += p0.elapsed().as_secs_f64();
+                        }
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
+                    }
+                }
+                WorkItem::Tail(clips) => {
+                    let p0 = Instant::now();
+                    let tail_cap = model.pick_fwd_batch(clips.len());
+                    let refs: Vec<&ClipSample> =
+                        clips.iter().map(|(_, sample)| sample).collect();
+                    let batch = build_batch(&refs, tail_cap, model.geometry());
+                    match model.forward(&batch, time_scale) {
+                        Ok(preds) => {
+                            for (&(k, _), &v) in clips.iter().zip(&preds) {
+                                pred.insert(k, v as f64);
+                                cache.insert(k, v as f64);
+                            }
+                            predict_busy += p0.elapsed().as_secs_f64();
+                        }
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
+                    }
+                }
+                WorkItem::Bench(out) => outs.push(out),
+            }
+        }
+        // rx_work dropped at loop exit: on an early break the merge
+        // thread's next send fails and the whole pipeline unwinds
+    });
+    if let Some(e) = failure {
+        return Err(e);
+    }
+
+    // sequence-ordered result merge: every referenced key is resolved by
+    // now (fresh keys through stage 3, pre-warmed keys via `cached`)
+    let mut scan_busy = 0.0f64;
+    let mut runs: Vec<CapsimRun> = Vec::with_capacity(nbench);
+    for (p, out) in profiles.iter().zip(outs) {
+        for (k, v) in out.cached {
+            pred.insert(k, v);
+        }
+        let interval_cycles: Vec<f64> = out
+            .refs
+            .iter()
+            .map(|refs| {
+                refs.iter()
+                    .map(|&(key, count)| {
+                        let v = pred
+                            .get(&key)
+                            .copied()
+                            .expect("every referenced clip is resolved");
+                        v * count as f64
+                    })
+                    .sum()
+            })
+            .collect();
+        let weights: Vec<f64> = p.selected.iter().map(|s| s.weight).collect();
+        scan_busy += out.scan_busy_s;
+        runs.push(CapsimRun {
+            total_cycles: extrapolate(&weights, &interval_cycles, p.n_intervals),
+            interval_cycles,
+            wall_s: out.scan_busy_s,
+            clips_total: out.stats.clips_total,
+            clips_unique: out.stats.clips_unique,
+            cache_hits: out.stats.cache_hits,
+        });
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(SuiteRun {
+        clips_total: runs.iter().map(|r| r.clips_total).sum(),
+        clips_unique: runs.iter().map(|r| r.clips_unique).sum(),
+        cache_hits: runs.iter().map(|r| r.cache_hits).sum(),
+        wall_s,
+        stages: Some(StageTimes {
+            scan_busy_s: scan_busy,
+            predict_busy_s: predict_busy,
+            wall_s,
+        }),
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{capsim_suite, gem5_suite, SuiteBatching};
+    use crate::runtime::NativePredictor;
+    use crate::simpoint::{choose_simpoints, profile};
+    use crate::workloads::{suite, Scale};
+
+    fn test_cfg() -> PipelineConfig {
+        let mut c = PipelineConfig::default();
+        c.simpoint.interval_insts = 8_000;
+        c.simpoint.warmup_insts = 1_000;
+        c.simpoint.max_k = 2;
+        c.l_min = 24;
+        c
+    }
+
+    fn profiles_for(indices: &[usize], cfg: &PipelineConfig) -> Vec<BenchProfile> {
+        let benches = suite(Scale::Test);
+        indices
+            .iter()
+            .map(|&i| {
+                let prof = profile(&benches[i].program, &cfg.simpoint);
+                let selected = choose_simpoints(&prof, &cfg.simpoint);
+                BenchProfile {
+                    name: benches[i].name,
+                    set_no: benches[i].set_no,
+                    tag_string: benches[i].tag_string(),
+                    n_intervals: prof.intervals.len(),
+                    selected,
+                    total_insts: prof.total_insts,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ordered_stream_preserves_order() {
+        for threads in [1usize, 3, 8] {
+            let mut seen = Vec::new();
+            ordered_stream(
+                (0..50).collect::<Vec<i32>>(),
+                threads,
+                2,
+                |x| x * 3,
+                |seq, r| seen.push((seq, r)),
+            );
+            let want: Vec<(usize, i32)> = (0..50).map(|x| (x as usize, x as i32 * 3)).collect();
+            assert_eq!(seen, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn ordered_stream_empty_input() {
+        let mut calls = 0usize;
+        ordered_stream(Vec::<i32>::new(), 4, 2, |x| x, |_, _| calls += 1);
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn ordered_stream_slow_consumer_does_not_deadlock() {
+        // depth 1 with a consumer slower than the workers exercises the
+        // backpressure path
+        let mut out = Vec::new();
+        ordered_stream(
+            (0..20).collect::<Vec<u64>>(),
+            4,
+            1,
+            |x| x + 1,
+            |_, r| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                out.push(r);
+            },
+        );
+        assert_eq!(out, (1..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn ordered_stream_slow_first_job_stays_ordered() {
+        // job 0 finishes last: the admission gate bounds the reorder
+        // buffer while later workers wait, and order still holds
+        let mut out = Vec::new();
+        ordered_stream(
+            (0..40).collect::<Vec<u64>>(),
+            4,
+            2,
+            |x| {
+                if x == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+                x
+            },
+            |_, r| out.push(r),
+        );
+        assert_eq!(out, (0..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn streamed_matches_cross_bench_bitwise() {
+        let mut cfg = test_cfg();
+        let profiles = profiles_for(&[0, 1, 5, 5], &cfg);
+        let model = NativePredictor::with_defaults();
+        cfg.threads = 1;
+        let base = capsim_suite(
+            &profiles,
+            &cfg,
+            &model,
+            40.0,
+            &ClipCache::new(),
+            SuiteBatching::CrossBench,
+        )
+        .unwrap();
+        for threads in [1usize, 4] {
+            cfg.threads = threads;
+            let run = capsim_suite_streamed(&profiles, &cfg, &model, 40.0, &ClipCache::new())
+                .unwrap();
+            assert_eq!(base.runs.len(), run.runs.len());
+            for (ra, rb) in base.runs.iter().zip(&run.runs) {
+                let abits: Vec<u64> = ra.interval_cycles.iter().map(|c| c.to_bits()).collect();
+                let bbits: Vec<u64> = rb.interval_cycles.iter().map(|c| c.to_bits()).collect();
+                assert_eq!(abits, bbits, "threads = {threads}");
+                assert_eq!(ra.total_cycles.to_bits(), rb.total_cycles.to_bits());
+                assert_eq!(ra.clips_total, rb.clips_total);
+                assert_eq!(ra.clips_unique, rb.clips_unique);
+                assert_eq!(ra.cache_hits, rb.cache_hits);
+            }
+            assert_eq!(base.clips_unique, run.clips_unique);
+            assert!(run.stages.is_some());
+        }
+    }
+
+    #[test]
+    fn streamed_gem5_matches_serial_suite() {
+        let mut cfg = test_cfg();
+        let profiles = profiles_for(&[2, 3, 7], &cfg);
+        cfg.threads = 1;
+        let serial = gem5_suite(&profiles, &cfg);
+        for threads in [1usize, 4] {
+            cfg.threads = threads;
+            let streamed = gem5_suite_streamed(&profiles, &cfg);
+            assert_eq!(serial.len(), streamed.len());
+            for (a, b) in serial.iter().zip(&streamed) {
+                assert_eq!(a.interval_cycles, b.interval_cycles, "threads = {threads}");
+                assert_eq!(a.total_cycles.to_bits(), b.total_cycles.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_warm_cache_predicts_nothing_new() {
+        let cfg = test_cfg();
+        let profiles = profiles_for(&[4, 6], &cfg);
+        let model = NativePredictor::with_defaults();
+        let cache = ClipCache::new();
+        let cold = capsim_suite_streamed(&profiles, &cfg, &model, 40.0, &cache).unwrap();
+        assert!(cold.clips_unique > 0);
+        assert_eq!(cache.len(), cold.clips_unique);
+        let warm = capsim_suite_streamed(&profiles, &cfg, &model, 40.0, &cache).unwrap();
+        assert_eq!(warm.clips_unique, 0);
+        for (rc, rw) in cold.runs.iter().zip(&warm.runs) {
+            let cbits: Vec<u64> = rc.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            let wbits: Vec<u64> = rw.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(cbits, wbits);
+        }
+    }
+
+    #[test]
+    fn streamed_empty_suite_is_fine() {
+        let cfg = test_cfg();
+        let model = NativePredictor::with_defaults();
+        let run = capsim_suite_streamed(&[], &cfg, &model, 40.0, &ClipCache::new()).unwrap();
+        assert!(run.runs.is_empty());
+        assert_eq!(run.clips_total, 0);
+    }
+}

@@ -23,15 +23,37 @@
 //! * [`predictor`] — batching (including the cross-interval/benchmark
 //!   `BatchAccumulator`), the SGD training driver and evaluation;
 //! * [`coordinator`] — the end-to-end CAPSim and gem5-mode pipelines, run
-//!   by a **sharded parallel engine**: per-interval work (checkpoint
-//!   restore → functional trace → O3 simulate / slice+tokenize) fans out
-//!   over a worker pool governed by the `threads` knob of
-//!   `config::PipelineConfig` (`0` = one worker per core; set it from the
-//!   CLI with `--threads N` or `pipeline.threads` in TOML), with a
-//!   deterministic input-order merge so `threads = N` is bit-identical to
-//!   `threads = 1`. A cross-benchmark `ClipCache` dedups identical clips
-//!   across the whole suite, and `coordinator::engine` drives entire
-//!   suites through one shared cache with full inference batches;
+//!   by a **streaming stage-pipelined engine** (`coordinator::stream`):
+//!   instead of scanning everything and then predicting behind phase
+//!   barriers, checkpoint-restore/functional-scan, slice+tokenize,
+//!   `BatchAccumulator` fill, `Predictor::forward` and the result merge
+//!   run as concurrent stages connected by bounded channels, and every
+//!   (benchmark, interval) job from all 24 workloads feeds one shared
+//!   worker pool — benchmark-level fan-out, not per-benchmark phases:
+//!
+//!   ```text
+//!     scan jobs (bench × interval, all benchmarks)
+//!       ├─ worker 1..threads: restore → warm-up → slice → tokenize
+//!       ▼ sync_channel(queue_depth)            [stage 1 → 2, bounded]
+//!     merge: reorder to sequence order → clip dedup (interval /
+//!       benchmark / suite / ClipCache) → BatchAccumulator fill
+//!       ▼ sync_channel(batch_depth)            [stage 2 → 3, bounded]
+//!     predict: Predictor::forward → resolve → per-benchmark results
+//!   ```
+//!
+//!   The `threads` knob of `config::PipelineConfig` sizes the scan pool
+//!   (`0` = auto: `CAPSIM_THREADS` env, else one per core; set it from
+//!   the CLI with `--threads N` or `pipeline.threads` in TOML;
+//!   `queue_depth`/`batch_depth` size the channels). Determinism is a
+//!   hard contract: the merge consumes scans in sequence-number order,
+//!   so `threads = N`, any queue depth, and any stage interleaving are
+//!   bit-identical to the sequential path. A cross-benchmark `ClipCache`
+//!   dedups identical clips across the whole suite and can **persist**
+//!   (`save`/`load`, keyed by model fingerprint + `time_scale`,
+//!   `--cache-dir`) for cross-process warm starts; `coordinator::engine`
+//!   drives entire suites through one shared cache with full inference
+//!   batches, and O3 golden-label generation (`coordinator::golden`)
+//!   rides the same stage graph;
 //! * [`workloads`] — the 24 synthetic SPEC-2017-analog benchmarks;
 //! * [`report`] — table/series emitters used by the benches;
 //! * [`config`], [`util`] — TOML-subset configs and offline-friendly

@@ -62,6 +62,21 @@ fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
         // negative means auto, matching the pipeline.threads TOML handling
         cfg.threads = t.max(0) as usize;
     }
+    if let Some(v) = flags.get("queue-depth") {
+        let d: i64 = v
+            .parse()
+            .map_err(|_| anyhow!("--queue-depth expects an integer, got {v}"))?;
+        cfg.queue_depth = d.max(0) as usize;
+    }
+    if let Some(v) = flags.get("batch-depth") {
+        let d: i64 = v
+            .parse()
+            .map_err(|_| anyhow!("--batch-depth expects an integer, got {v}"))?;
+        cfg.batch_depth = d.max(0) as usize;
+    }
+    if let Some(dir) = flags.get("cache-dir") {
+        cfg.cache_dir = dir.clone();
+    }
     Ok(cfg)
 }
 
@@ -89,8 +104,13 @@ fn help() {
         "capsim — attention-based CPU performance simulator\n\
          usage: capsim <table1|table2|trace|o3|dataset|train|compare|info> [flags]\n\
          flags: --config FILE  --bench N  --max M  --steps N  --variant V  --out F\n\
-                --full  --threads N (0 = auto)  --native (compare: analytic backend,\n\
-                no artifacts needed)"
+                --full  --threads N (0 = auto; precedence: --threads >\n\
+                pipeline.threads > CAPSIM_THREADS env > core count)\n\
+                --queue-depth N / --batch-depth N (streaming engine channel\n\
+                capacities, 0 = auto)\n\
+                --cache-dir DIR (persist the clip cache across runs, keyed by\n\
+                model fingerprint + time_scale; mismatches cold-start)\n\
+                --native (compare: analytic backend, no artifacts needed)"
     );
 }
 
@@ -331,15 +351,34 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
         cfg.effective_threads()
     );
 
-    // cross-benchmark engine run: one shared cache over the whole suite
-    let cache = ClipCache::new();
+    // cross-benchmark engine run through the streaming stage-pipelined
+    // engine: one shared cache, scan/predict overlapped, optionally
+    // warm-started from (and persisted back to) --cache-dir
+    let cache_file = if cfg.cache_dir.is_empty() {
+        None
+    } else {
+        Some(Path::new(&cfg.cache_dir).join("clip_cache.bin"))
+    };
+    let cache = match &cache_file {
+        Some(path) => {
+            let (c, warm) =
+                ClipCache::load_or_cold(path, model.fingerprint(), time_scale);
+            if warm {
+                println!("warm-started clip cache from {path:?} ({} clips)", c.len());
+            } else {
+                println!("no usable clip cache at {path:?} (cold start)");
+            }
+            c
+        }
+        None => ClipCache::new(),
+    };
     let shared = capsim::coordinator::capsim_suite(
         &profiles,
         &cfg,
         model.as_ref(),
         time_scale,
         &cache,
-        capsim::coordinator::SuiteBatching::CrossBench,
+        capsim::coordinator::SuiteBatching::Streamed,
     )?;
     println!(
         "clip dedup: {clips_total} clip occurrences; per-benchmark dedup predicts \
@@ -347,6 +386,29 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
          benchmarks) in {:.3}s",
         shared.clips_unique, shared.cache_hits, shared.wall_s
     );
+    if let Some(st) = shared.stages {
+        println!(
+            "stage overlap: scan {:.3}s + predict {:.3}s in {:.3}s wall ({:.2}x)",
+            st.scan_busy_s,
+            st.predict_busy_s,
+            st.wall_s,
+            st.overlap()
+        );
+    }
+    let warm_stats = cache.stats();
+    if warm_stats.hits > 0 {
+        println!(
+            "warm-start hit rate: {:.1}% ({} hits / {} lookups)",
+            100.0 * warm_stats.hit_rate(),
+            warm_stats.hits,
+            warm_stats.hits + warm_stats.misses
+        );
+    }
+    if let Some(path) = &cache_file {
+        std::fs::create_dir_all(&cfg.cache_dir)?;
+        let saved = cache.save(path, model.fingerprint(), time_scale)?;
+        println!("saved clip cache ({saved} clips) to {path:?}");
+    }
     Ok(())
 }
 

@@ -109,6 +109,16 @@ impl BatchAccumulator {
         }
     }
 
+    /// Take every pending `(key, sample)` pair out of the accumulator
+    /// without building a batch — the streaming engine's merge stage
+    /// hands its tail downstream raw, and the predict stage (which knows
+    /// the compiled batch sizes) pads it with `pick_fwd_batch`.
+    pub fn drain(&mut self) -> Vec<(u64, ClipSample)> {
+        let keys = std::mem::take(&mut self.keys);
+        let samples = std::mem::take(&mut self.samples);
+        keys.into_iter().zip(samples).collect()
+    }
+
     fn emit(&mut self, cap: usize) -> Option<(Vec<u64>, Batch)> {
         let keys = std::mem::take(&mut self.keys);
         let samples = std::mem::take(&mut self.samples);

@@ -27,6 +27,32 @@ pub use native::NativePredictor;
 
 use anyhow::Result;
 
+/// One FNV-1a step — the mixing primitive of backend fingerprints.
+pub fn fingerprint_mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Mix a byte string into a fingerprint (backend identity labels).
+pub fn fingerprint_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = fingerprint_mix(h, b as u64);
+    }
+    h
+}
+
+/// FNV-1a over every geometry field — the base of each backend's
+/// [`Predictor::fingerprint`].
+pub fn fingerprint_geometry(g: &ModelGeometry) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for v in [g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch] {
+        h = fingerprint_mix(h, v as u64);
+    }
+    for &b in &g.fwd_batch_sizes {
+        h = fingerprint_mix(h, b as u64);
+    }
+    h
+}
+
 /// A forward-only predictor backend.
 ///
 /// Object-safe on purpose: engine code and benches hold `&dyn Predictor` /
@@ -44,4 +70,14 @@ pub trait Predictor {
     /// Predict clip times for the live rows of `batch` (length
     /// `batch.live`; padding rows are never returned).
     fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>>;
+
+    /// A stable identity key for caches of this backend's predictions
+    /// (the persistent [`ClipCache`](crate::coordinator::ClipCache) is
+    /// keyed by `fingerprint + time_scale`). The default hashes the
+    /// geometry; backends override it to mix in everything else that
+    /// changes predictions — backend kind, variant name, parameter
+    /// shape.
+    fn fingerprint(&self) -> u64 {
+        fingerprint_geometry(self.geometry())
+    }
 }

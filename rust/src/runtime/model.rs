@@ -262,4 +262,26 @@ impl Predictor for ModelHandle {
     fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
         ModelHandle::forward(self, batch, time_scale)
     }
+
+    fn fingerprint(&self) -> u64 {
+        // variant name + parameter shape distinguish models that share a
+        // geometry, and the resident weights distinguish training runs —
+        // a retrained model must never serve a stale persisted cache
+        let mut h = super::fingerprint_geometry(&self.geometry);
+        h = super::fingerprint_bytes(h, b"pjrt-attention");
+        h = super::fingerprint_bytes(h, self.name.as_bytes());
+        h = super::fingerprint_mix(h, self.param_size as u64);
+        match self.params_vec() {
+            Ok(params) => {
+                h = super::fingerprint_mix(h, params.len() as u64);
+                for v in params {
+                    h = super::fingerprint_mix(h, v.to_bits() as u64);
+                }
+            }
+            // uninitialized/unreadable weights get a distinct marker so
+            // they never collide with a real training run
+            Err(_) => h = super::fingerprint_mix(h, u64::MAX),
+        }
+        h
+    }
 }

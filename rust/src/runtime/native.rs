@@ -114,6 +114,15 @@ impl Predictor for NativePredictor {
             .map(|r| self.row_cost(batch, r, time_scale))
             .collect())
     }
+
+    fn fingerprint(&self) -> u64 {
+        // the analytic backend has no parameters: kind + geometry is the
+        // whole identity
+        super::fingerprint_bytes(
+            super::fingerprint_geometry(&self.geometry),
+            b"native-analytic",
+        )
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +189,22 @@ mod tests {
             .unwrap()[0];
         assert_ne!(base.to_bits(), diff_tok.to_bits());
         assert_ne!(base.to_bits(), diff_ctx.to_bits());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_geometry_sensitive() {
+        let a = NativePredictor::with_defaults();
+        let b = NativePredictor::with_defaults();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same backend, same key");
+        let mut g = a.geometry.clone();
+        g.l_clip += 1;
+        let c = NativePredictor::new(g);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "geometry changes the key");
+        assert_ne!(
+            a.fingerprint(),
+            crate::runtime::fingerprint_geometry(&a.geometry),
+            "the backend-kind label is mixed in"
+        );
     }
 
     #[test]

@@ -1,10 +1,16 @@
-//! Equivalence tests for the sharded parallel engine over the full
-//! Table-II workload suite:
+//! Equivalence tests for the parallel engines over the full Table-II
+//! workload suite:
 //!
 //! * `gem5_mode` and `capsim_mode` with `threads = 4` are **bit-identical**
 //!   to `threads = 1` (interval cycles and extrapolated totals);
+//! * the streaming stage-pipelined engine (`SuiteBatching::Streamed` /
+//!   `gem5_suite_streamed`) is bit-identical to the sequential
+//!   phase-barrier path at `threads ∈ {1, 2, 8}` and any stage
+//!   interleaving;
 //! * the cross-benchmark clip cache never changes predictions: cold and
-//!   warm runs match bitwise, and a warm run predicts zero new clips;
+//!   warm runs match bitwise, and a warm run predicts zero new clips —
+//!   including a warm start restored from the persisted on-disk cache,
+//!   which refuses mismatched fingerprint/time_scale keys;
 //! * cross-benchmark dedup never predicts more than the per-benchmark
 //!   baseline, and strictly fewer once workloads share clips.
 //!
@@ -13,9 +19,10 @@
 
 use capsim::config::PipelineConfig;
 use capsim::coordinator::{
-    capsim_mode, capsim_suite, gem5_mode, BenchProfile, ClipCache, SuiteBatching,
+    capsim_mode, capsim_suite, gem5_mode, gem5_suite_streamed, BenchProfile, ClipCache,
+    SuiteBatching,
 };
-use capsim::runtime::NativePredictor;
+use capsim::runtime::{NativePredictor, Predictor};
 use capsim::simpoint::{choose_simpoints, profile};
 use capsim::workloads::{suite, Benchmark, Scale};
 
@@ -227,4 +234,141 @@ fn cross_benchmark_dedup_never_exceeds_per_benchmark_baseline() {
         ext_shared.clips_unique,
         ext_isolated
     );
+}
+
+#[test]
+fn streamed_engine_bit_identical_to_sequential_full_suite() {
+    let mut cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    let model = NativePredictor::with_defaults();
+
+    // the pre-refactor sequential path: phase-barrier CrossBench at 1 thread
+    cfg.threads = 1;
+    let base = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &ClipCache::new(),
+        SuiteBatching::CrossBench,
+    )
+    .unwrap();
+
+    for threads in [1usize, 2, 8] {
+        cfg.threads = threads;
+        let run = capsim_suite(
+            &profiles,
+            &cfg,
+            &model,
+            TIME_SCALE,
+            &ClipCache::new(),
+            SuiteBatching::Streamed,
+        )
+        .unwrap();
+        assert_eq!(base.runs.len(), run.runs.len());
+        for ((ra, rb), p) in base.runs.iter().zip(&run.runs).zip(&profiles) {
+            assert_eq!(
+                f64_bits(&ra.interval_cycles),
+                f64_bits(&rb.interval_cycles),
+                "{}: streamed engine diverged at {threads} threads",
+                p.name
+            );
+            assert_eq!(ra.total_cycles.to_bits(), rb.total_cycles.to_bits(), "{}", p.name);
+            assert_eq!(ra.clips_total, rb.clips_total, "{}", p.name);
+            assert_eq!(ra.clips_unique, rb.clips_unique, "{}", p.name);
+            assert_eq!(ra.cache_hits, rb.cache_hits, "{}", p.name);
+        }
+        assert_eq!(base.clips_unique, run.clips_unique);
+        assert_eq!(base.clips_total, run.clips_total);
+        let st = run.stages.expect("streamed runs report stage times");
+        assert!(st.wall_s > 0.0);
+        assert!(st.scan_busy_s > 0.0);
+    }
+}
+
+#[test]
+fn streamed_gem5_bit_identical_to_gem5_mode_full_suite() {
+    let mut cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    for threads in [1usize, 2, 8] {
+        cfg.threads = threads;
+        let streamed = gem5_suite_streamed(&profiles, &cfg);
+        assert_eq!(streamed.len(), profiles.len());
+        cfg.threads = 1;
+        for (run, p) in streamed.iter().zip(&profiles) {
+            let solo = gem5_mode(&p.selected, p.n_intervals, &cfg);
+            assert_eq!(
+                run.interval_cycles, solo.interval_cycles,
+                "{}: gem5 stream diverged at {threads} threads",
+                p.name
+            );
+            assert_eq!(run.total_cycles.to_bits(), solo.total_cycles.to_bits(), "{}", p.name);
+        }
+    }
+}
+
+#[test]
+fn persisted_cache_warm_start_bit_identical_and_key_checked() {
+    let cfg = test_cfg();
+    let profiles = all_profiles(&cfg);
+    let model = NativePredictor::with_defaults();
+    let dir = std::env::temp_dir().join("capsim_engine_eq_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("clip_cache.bin");
+    let fp = model.fingerprint();
+
+    let cache = ClipCache::new();
+    let cold = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &cache,
+        SuiteBatching::Streamed,
+    )
+    .unwrap();
+    assert!(cold.clips_unique > 0);
+    let saved = cache.save(&path, fp, TIME_SCALE).unwrap();
+    assert_eq!(saved, cache.len());
+
+    // a mismatched key must refuse the file and fall back cold
+    assert!(ClipCache::load(&path, fp ^ 1, TIME_SCALE).is_err());
+    assert!(ClipCache::load(&path, fp, TIME_SCALE + 1.0).is_err());
+    let (fallback, warm) = ClipCache::load_or_cold(&path, fp ^ 1, TIME_SCALE);
+    assert!(!warm && fallback.is_empty());
+
+    // matching key: a new process's warm start predicts nothing new and
+    // reproduces the cold run bit-for-bit
+    let (warm_cache, warm) = ClipCache::load_or_cold(&path, fp, TIME_SCALE);
+    assert!(warm, "matching key must load");
+    assert_eq!(warm_cache.len(), cache.len());
+    let warm_run = capsim_suite(
+        &profiles,
+        &cfg,
+        &model,
+        TIME_SCALE,
+        &warm_cache,
+        SuiteBatching::Streamed,
+    )
+    .unwrap();
+    assert_eq!(warm_run.clips_unique, 0, "warm start predicts nothing new");
+    assert!(
+        warm_cache.stats().hit_rate() > 0.0,
+        "warm start must report cache hits"
+    );
+    for ((rc, rw), p) in cold.runs.iter().zip(&warm_run.runs).zip(&profiles) {
+        assert_eq!(
+            f64_bits(&rc.interval_cycles),
+            f64_bits(&rw.interval_cycles),
+            "{}: persisted cache changed a prediction",
+            p.name
+        );
+        assert_eq!(rc.total_cycles.to_bits(), rw.total_cycles.to_bits(), "{}", p.name);
+    }
+
+    // corrupt file: cold start, not an error
+    std::fs::write(&path, b"garbage").unwrap();
+    let (corrupt, warm) = ClipCache::load_or_cold(&path, fp, TIME_SCALE);
+    assert!(!warm && corrupt.is_empty());
+    let _ = std::fs::remove_file(&path);
 }

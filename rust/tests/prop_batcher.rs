@@ -1,0 +1,164 @@
+//! Property tests for `predictor::BatchAccumulator` — the batch-fill
+//! stage of the streaming engine. The engine's determinism contract
+//! rests on the accumulator being a pure function of its push sequence,
+//! so the properties run over **arbitrary interleavings of producers**
+//! (benchmarks/intervals pushing clips in any merge order):
+//!
+//! * emission order is exactly push order (keys concatenate to the
+//!   interleaved sequence — nothing reordered, dropped, or duplicated);
+//! * every batch except the tail is emitted at exactly `cap` live rows;
+//! * the tail pads to the caller-chosen capacity and carries the exact
+//!   remainder;
+//! * `drain` (the streaming tail path) returns the same pending pairs
+//!   `flush` would have batched.
+
+use capsim::dataset::ClipSample;
+use capsim::predictor::BatchAccumulator;
+use capsim::runtime::ModelGeometry;
+use capsim::util::prop;
+use capsim::util::Rng;
+
+const L_TOKEN: usize = 4;
+const L_CLIP: usize = 8;
+const M_ROWS: usize = 9;
+
+fn geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 512,
+        embed_dim: 64,
+        l_token: L_TOKEN,
+        l_clip: L_CLIP,
+        m_rows: M_ROWS,
+        train_batch: 4,
+        fwd_batch_sizes: vec![1, 4, 8],
+    }
+}
+
+/// A clip whose content is derived from its key, so batch rows can be
+/// matched back to the sample that produced them.
+fn sample(key: u64) -> ClipSample {
+    let len = 1 + (key % L_CLIP as u64) as u16;
+    ClipSample {
+        tokens: (0..len as usize * L_TOKEN)
+            .map(|i| 1 + ((key as usize + i) % 200) as u16)
+            .collect(),
+        len,
+        ctx: vec![(key % 300) as u16; M_ROWS],
+        time: key as f32 + 1.0,
+        key,
+        bench: (key % 7) as u16,
+    }
+}
+
+/// One generated case: `cap`, plus an interleaving of several producers'
+/// push sequences. Keys encode `(producer, index)` so any reordering,
+/// drop, or duplication is visible.
+#[derive(Debug)]
+struct Case {
+    cap: usize,
+    /// Push order after interleaving.
+    pushes: Vec<u64>,
+    /// Tail headroom beyond the pending count (tail_cap = pending + slack).
+    tail_slack: usize,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let producers = 1 + rng.below(4) as usize;
+    // per-producer queues of unique keys: key = producer * 1000 + i
+    let mut queues: Vec<Vec<u64>> = (0..producers)
+        .map(|p| {
+            let n = rng.below(13);
+            (0..n).map(|i| p as u64 * 1000 + i).collect()
+        })
+        .collect();
+    // arbitrary interleaving: repeatedly pick a non-empty producer
+    let mut pushes = Vec::new();
+    while queues.iter().any(|q| !q.is_empty()) {
+        let pick = rng.below(producers as u64) as usize;
+        if !queues[pick].is_empty() {
+            pushes.push(queues[pick].remove(0));
+        }
+    }
+    Case {
+        cap: 1 + rng.below(6) as usize,
+        pushes,
+        tail_slack: rng.below(3) as usize,
+    }
+}
+
+#[test]
+fn prop_emission_is_push_order_with_exact_capacities() {
+    let g = geometry();
+    prop::check("batcher-interleaving", prop::DEFAULT_CASES, gen_case, |case| {
+        let mut acc = BatchAccumulator::new(case.cap, g.clone());
+        let mut emitted_keys: Vec<u64> = Vec::new();
+        for &key in &case.pushes {
+            if let Some((keys, batch)) = acc.push(key, sample(key)) {
+                // a mid-stream batch is always exactly full
+                if batch.live != case.cap || batch.b != case.cap || keys.len() != case.cap {
+                    return false;
+                }
+                // rows carry the pushed samples' labels in key order
+                for (r, &k) in keys.iter().enumerate() {
+                    if batch.target[r] != k as f32 + 1.0 {
+                        return false;
+                    }
+                }
+                emitted_keys.extend(keys);
+            }
+        }
+        let pending = acc.pending();
+        if pending >= case.cap {
+            return false; // a full accumulator must have emitted
+        }
+        let tail_cap = pending + case.tail_slack;
+        match acc.flush(tail_cap.max(1)) {
+            Some((keys, batch)) => {
+                if pending == 0 {
+                    return false; // flush on empty must be None
+                }
+                if keys.len() != pending || batch.live != pending || batch.b != tail_cap.max(1) {
+                    return false;
+                }
+                emitted_keys.extend(keys);
+            }
+            None => {
+                if pending != 0 {
+                    return false;
+                }
+            }
+        }
+        if acc.pending() != 0 {
+            return false;
+        }
+        // no reorder, no drop, no duplicate: exact sequence equality
+        emitted_keys == case.pushes
+    });
+}
+
+#[test]
+fn prop_drain_returns_the_exact_remainder() {
+    let g = geometry();
+    prop::check("batcher-drain", prop::DEFAULT_CASES, gen_case, |case| {
+        let mut acc = BatchAccumulator::new(case.cap, g.clone());
+        let mut batched: Vec<u64> = Vec::new();
+        for &key in &case.pushes {
+            if let Some((keys, _)) = acc.push(key, sample(key)) {
+                batched.extend(keys);
+            }
+        }
+        let drained = acc.drain();
+        if acc.pending() != 0 {
+            return false;
+        }
+        // drained pairs keep push order and carry their own samples
+        for (k, s) in &drained {
+            if s.key != *k || s.time != *k as f32 + 1.0 {
+                return false;
+            }
+        }
+        let mut all: Vec<u64> = batched;
+        all.extend(drained.iter().map(|&(k, _)| k));
+        all == case.pushes
+    });
+}

@@ -12,7 +12,7 @@ use capsim::config::PipelineConfig;
 use capsim::coordinator::{build_dataset, BenchProfile};
 use capsim::dataset::Dataset;
 use capsim::predictor::{train, TrainLog, TrainParams};
-use capsim::runtime::{ModelHandle, NativePredictor, Predictor, Runtime};
+use capsim::runtime::{Backend, ModelHandle, Predictor, Runtime};
 use capsim::workloads::{suite, Benchmark, Scale};
 
 pub fn is_full() -> bool {
@@ -84,28 +84,29 @@ pub fn runtime(cfg: &PipelineConfig) -> Runtime {
     }
 }
 
-/// A trained PJRT predictor when artifacts exist, else the native
-/// analytic backend — so speed benches run end-to-end on a clean tree.
-/// Returns the boxed backend, its time scale and a label for reports.
-pub fn predictor_or_native(
+/// Build the configured backend (`cfg.backend`, the runtime registry)
+/// ready for comparison runs. A `pjrt` request that fails (clean tree,
+/// no `make artifacts`) falls back to the native analytic backend so
+/// the speed benches always run end-to-end. Returns the boxed backend,
+/// its time scale and the backend name for reports.
+pub fn predictor_for(
     cfg: &PipelineConfig,
     ds: &Dataset,
     steps: usize,
 ) -> anyhow::Result<(Box<dyn Predictor>, f32, &'static str)> {
-    match Runtime::load(Path::new(&cfg.artifacts)) {
-        Ok(rt) => {
-            let (model, log, _) = train_variant(&rt, "capsim", ds, steps, cfg.seed)?;
-            let ts = log.time_scale;
-            Ok((Box::new(model), ts, "pjrt-attention"))
+    let backend = cfg.backend;
+    if backend.requires_artifacts() {
+        match backend.build_trained(cfg, ds, steps, "capsim") {
+            Ok((model, ts)) => Ok((model, ts, backend.name())),
+            Err(e) => {
+                eprintln!("[common] {backend} backend unavailable ({e}); using native");
+                let (model, ts) = Backend::Native.build_trained(cfg, ds, steps, "capsim")?;
+                Ok((model, ts, Backend::Native.name()))
+            }
         }
-        Err(e) => {
-            eprintln!("[common] artifacts unavailable ({e}); using the native backend");
-            Ok((
-                Box::new(NativePredictor::with_defaults()),
-                ds.mean_time() as f32,
-                "native-analytic",
-            ))
-        }
+    } else {
+        let (model, ts) = backend.build_trained(cfg, ds, steps, "capsim")?;
+        Ok((model, ts, backend.name()))
     }
 }
 

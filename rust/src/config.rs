@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::o3::O3Config;
+use crate::runtime::Backend;
 use crate::sampler::SamplerConfig;
 use crate::simpoint::SimpointConfig;
 use crate::workloads::Scale;
@@ -173,6 +174,13 @@ pub struct PipelineConfig {
     pub simpoint: SimpointConfig,
     pub o3: O3Config,
     pub sampler: SamplerConfig,
+    /// Predictor backend (`pipeline.backend` TOML / `--backend` CLI;
+    /// `pjrt | native | attention`, default `pjrt`). The registry in
+    /// [`runtime::backend`](crate::runtime::backend) resolves it to a
+    /// constructed predictor; unknown TOML values fall back to `pjrt`,
+    /// matching this parser's defaults-for-absent-keys convention (the
+    /// CLI flag is strict).
+    pub backend: Backend,
     /// Worker threads for the sharded engine (per-interval and
     /// per-benchmark fan-out). `0` means auto — the `CAPSIM_THREADS`
     /// env var if set, else one per available core (precedence:
@@ -192,6 +200,13 @@ pub struct PipelineConfig {
     /// Directory holding the persistent clip cache (`--cache-dir` /
     /// `pipeline.cache_dir`); empty = no persistence.
     pub cache_dir: String,
+    /// Upper bound on resident `ClipCache` entries
+    /// (`--cache-max-entries` / `pipeline.cache_max_entries`; `0` =
+    /// unbounded). When full, the oldest-inserted entries are evicted on
+    /// insert (and before `save`). The default is far above what current
+    /// suites produce, so eviction only engages on long-lived persistent
+    /// caches.
+    pub cache_max_entries: usize,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -211,10 +226,12 @@ impl Default for PipelineConfig {
             simpoint: SimpointConfig::default(),
             o3: O3Config::default(),
             sampler: SamplerConfig::default(),
+            backend: Backend::Pjrt,
             threads: 0,
             queue_depth: 0,
             batch_depth: 0,
             cache_dir: String::new(),
+            cache_max_entries: 1_000_000,
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -233,11 +250,19 @@ impl PipelineConfig {
             "full" => Scale::Full,
             _ => Scale::Test,
         };
+        c.backend = match t.str("pipeline.backend", "pjrt").as_str() {
+            "native" => Backend::Native,
+            "attention" => Backend::Attention,
+            _ => Backend::Pjrt,
+        };
         // negative values mean "auto" rather than wrapping to usize::MAX
         c.threads = t.int("pipeline.threads", c.threads as i64).max(0) as usize;
         c.queue_depth = t.int("pipeline.queue_depth", c.queue_depth as i64).max(0) as usize;
         c.batch_depth = t.int("pipeline.batch_depth", c.batch_depth as i64).max(0) as usize;
         c.cache_dir = t.str("pipeline.cache_dir", &c.cache_dir);
+        c.cache_max_entries = t
+            .int("pipeline.cache_max_entries", c.cache_max_entries as i64)
+            .max(0) as usize;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -355,11 +380,13 @@ mod tests {
             r#"
             [pipeline]
             scale = "full"
+            backend = "attention"
             l_min = 48
             threads = 4
             queue_depth = 16
             batch_depth = 3
             cache_dir = "warm"
+            cache_max_entries = 500
             [o3]
             rob_entries = 128
             [train]
@@ -380,6 +407,8 @@ mod tests {
         assert_eq!(c.batch_depth, 3);
         assert_eq!(c.effective_batch_depth(), 3);
         assert_eq!(c.cache_dir, "warm");
+        assert_eq!(c.backend, Backend::Attention);
+        assert_eq!(c.cache_max_entries, 500);
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -405,5 +434,26 @@ mod tests {
         assert!(c.effective_queue_depth() >= 2);
         assert_eq!(c.effective_batch_depth(), 2);
         assert!(c.cache_dir.is_empty(), "persistence off by default");
+        assert_eq!(c.backend, Backend::Pjrt, "pjrt is the default backend");
+        assert_eq!(c.cache_max_entries, 1_000_000, "bound far above suite sizes");
+    }
+
+    #[test]
+    fn backend_values_parse_and_unknown_falls_back() {
+        for (s, want) in [
+            ("pjrt", Backend::Pjrt),
+            ("native", Backend::Native),
+            ("attention", Backend::Attention),
+            ("mystery", Backend::Pjrt),
+        ] {
+            let t = parse_toml(&format!("[pipeline]\nbackend = \"{s}\"")).unwrap();
+            assert_eq!(PipelineConfig::from_toml(&t).backend, want, "{s}");
+        }
+    }
+
+    #[test]
+    fn negative_cache_max_entries_means_unbounded() {
+        let t = parse_toml("[pipeline]\ncache_max_entries = -5").unwrap();
+        assert_eq!(PipelineConfig::from_toml(&t).cache_max_entries, 0);
     }
 }

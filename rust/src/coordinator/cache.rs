@@ -26,6 +26,14 @@
 //! and the `time_scale` bits, and a load with a mismatched key (or a
 //! corrupt/truncated file) is refused so callers fall back to a cold
 //! start ([`ClipCache::load_or_cold`]).
+//! The cache can be **bounded** ([`ClipCache::bounded`], wired to
+//! `pipeline.cache_max_entries` / `--cache-max-entries`): when an insert
+//! would exceed the bound, the oldest-inserted entries are evicted — on
+//! insert and again before [`ClipCache::save`] — and counted in
+//! [`CacheStats::evictions`]. The default bound is far above what any
+//! current suite produces, so eviction only engages on long-lived
+//! persistent caches; `0` disables the bound entirely.
+//!
 //! Dedup is content-keyed (paper §IV-B): `fast_clip_key` hashes decoded
 //! instruction fields, not register values, so a cached prediction
 //! carries the register context of the key's first sighting. Repeating a
@@ -33,22 +41,25 @@
 //! the composition (a benchmark alone vs. after a sibling sharing clips)
 //! may canonicalize a shared key to a different first context.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 
 /// On-disk header magic ("CPLC") of a persisted clip cache.
 const FILE_MAGIC: u32 = 0x434C_5043;
 /// Bump on any incompatible layout change; old files then cold-start.
 const FILE_VERSION: u32 = 1;
 
-/// Hit/miss counters observed so far (monotone; see [`ClipCache::stats`]).
+/// Hit/miss/eviction counters observed so far (monotone; see
+/// [`ClipCache::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the size bound (see [`ClipCache::bounded`]).
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -62,11 +73,23 @@ impl CacheStats {
     }
 }
 
-/// Sharded concurrent `fast_clip_key -> predicted cycles` map.
+/// Sharded concurrent `fast_clip_key -> predicted cycles` map, with an
+/// optional entry bound (oldest-inserted eviction).
 pub struct ClipCache {
     shards: Vec<RwLock<HashMap<u64, f64>>>,
+    /// Maximum resident entries; `0` = unbounded.
+    max_entries: usize,
+    /// Resident entry count (kept in sync with the shards so the bound
+    /// check never has to scan).
+    count: AtomicUsize,
+    /// Keys in first-insertion order — the eviction queue. Only
+    /// [`insert`](ClipCache::insert) (sequential in the engine's resolve
+    /// stage) and [`clear`](ClipCache::clear) touch it; the parallel
+    /// scan stage's `contains`/`get` reads never take this lock.
+    order: Mutex<VecDeque<u64>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl Default for ClipCache {
@@ -76,9 +99,22 @@ impl Default for ClipCache {
 }
 
 impl ClipCache {
-    /// A cache with the default shard count.
+    /// An unbounded cache with the default shard count.
     pub fn new() -> ClipCache {
         ClipCache::with_shards(16)
+    }
+
+    /// A cache bounded to `max_entries` resident clips (`0` =
+    /// unbounded). When an insert would exceed the bound, the
+    /// **oldest-inserted** entries are evicted (and counted in
+    /// [`CacheStats::evictions`]); the same trim runs before
+    /// [`save`](ClipCache::save). Eviction order is insertion order, and
+    /// the engine inserts sequentially in its deterministic resolve
+    /// stage, so evictions are schedule-independent too.
+    pub fn bounded(max_entries: usize) -> ClipCache {
+        let mut c = ClipCache::new();
+        c.max_entries = max_entries;
+        c
     }
 
     /// A cache with `n` shards (rounded up to a power of two, min 1).
@@ -86,9 +122,35 @@ impl ClipCache {
         let n = n.max(1).next_power_of_two();
         ClipCache {
             shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            max_entries: 0,
+            count: AtomicUsize::new(0),
+            order: Mutex::new(VecDeque::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// The configured entry bound (`0` = unbounded).
+    pub fn max_entries(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Whether inserts may evict entries. The streamed engine — whose
+    /// stage-3 inserts run concurrently with its scans — combines this
+    /// with a worst-case headroom check to decide whether a scan's
+    /// `contains` observation is **stable** until the merge resolves it;
+    /// when it is not, scans keep payloads for cached keys too and the
+    /// merge falls back to re-pricing from the run's own first-sighting
+    /// payload. Evicting a cached clip that a later run (or benchmark)
+    /// would have reused re-canonicalizes it to that run's first
+    /// sighting — the same content-keyed rule a changed run composition
+    /// already follows (see the module docs) — and shifts dedup
+    /// accounting; it never orphans a clip or fails a run. The
+    /// phase-barrier paths complete every read before any insert, so
+    /// they never need the headroom check.
+    pub fn may_evict(&self) -> bool {
+        self.max_entries > 0
     }
 
     #[inline]
@@ -116,9 +178,38 @@ impl ClipCache {
         v
     }
 
-    /// Insert (or overwrite) a predicted time.
+    /// Insert (or overwrite) a predicted time. A fresh key joins the
+    /// back of the eviction queue; overwrites keep the key's original
+    /// insertion age. May evict the oldest entries when a bound is set.
     pub fn insert(&self, key: u64, time: f64) {
-        self.shard(key).write().unwrap().insert(key, time);
+        let fresh = self.shard(key).write().unwrap().insert(key, time).is_none();
+        if fresh {
+            self.order.lock().unwrap().push_back(key);
+            self.count.fetch_add(1, Ordering::Relaxed);
+            self.enforce_bound();
+        }
+    }
+
+    /// Evict oldest-inserted entries until the bound is respected.
+    /// Shard locks are never held while waiting on the queue lock (and
+    /// vice versa is take-then-release), so readers stay wait-free on
+    /// disjoint shards.
+    fn enforce_bound(&self) {
+        if self.max_entries == 0 {
+            return;
+        }
+        while self.count.load(Ordering::Relaxed) > self.max_entries {
+            let oldest = self.order.lock().unwrap().pop_front();
+            match oldest {
+                Some(key) => {
+                    if self.shard(key).write().unwrap().remove(&key).is_some() {
+                        self.count.fetch_sub(1, Ordering::Relaxed);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
     }
 
     /// Number of cached unique clips.
@@ -130,23 +221,27 @@ impl ClipCache {
         self.len() == 0
     }
 
-    /// Hit/miss counters accumulated so far.
+    /// Hit/miss/eviction counters accumulated so far.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
-    /// Drop all entries **and** reset the hit/miss counters: after a
-    /// warm-start invalidation the cache reports a fresh hit rate
-    /// instead of one skewed by lookups against the discarded contents.
+    /// Drop all entries **and** reset the counters: after a warm-start
+    /// invalidation the cache reports a fresh hit rate instead of one
+    /// skewed by lookups against the discarded contents.
     pub fn clear(&self) {
         for s in &self.shards {
             s.write().unwrap().clear();
         }
+        self.order.lock().unwrap().clear();
+        self.count.store(0, Ordering::Relaxed);
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
     }
 
     /// Snapshot of all entries, sorted by key — deterministic bytes for
@@ -162,10 +257,13 @@ impl ClipCache {
 
     /// Persist the cache for cross-process warm starts. The header keys
     /// the file to one `(model fingerprint, time_scale)` combination —
-    /// the same contract as the in-memory cache. Writes a sibling temp
-    /// file and renames it, so a crashed writer never leaves a
-    /// half-written cache behind. Returns the number of entries saved.
+    /// the same contract as the in-memory cache. The size bound is
+    /// enforced first, so a bounded cache never persists more than
+    /// `max_entries` clips. Writes a sibling temp file and renames it,
+    /// so a crashed writer never leaves a half-written cache behind.
+    /// Returns the number of entries saved.
     pub fn save(&self, path: &Path, fingerprint: u64, time_scale: f32) -> std::io::Result<usize> {
+        self.enforce_bound();
         let entries = self.entries();
         let tmp = path.with_extension("tmp");
         {
@@ -188,8 +286,23 @@ impl ClipCache {
     /// Load a persisted cache, verifying the version and the
     /// `(fingerprint, time_scale)` key. Corrupt, truncated, or
     /// mismatched files return `Err` (callers cold-start; see
-    /// [`load_or_cold`](ClipCache::load_or_cold)).
+    /// [`load_or_cold`](ClipCache::load_or_cold)). The loaded cache is
+    /// unbounded; use [`load_bounded`](ClipCache::load_bounded) to apply
+    /// an entry bound.
     pub fn load(path: &Path, fingerprint: u64, time_scale: f32) -> std::io::Result<ClipCache> {
+        Self::load_bounded(path, fingerprint, time_scale, 0)
+    }
+
+    /// [`load`](ClipCache::load) into a cache bounded to `max_entries`
+    /// (`0` = unbounded). A file holding more than `max_entries` clips
+    /// is trimmed during the load (file order, which is key order — the
+    /// on-disk format does not record insertion age).
+    pub fn load_bounded(
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+    ) -> std::io::Result<ClipCache> {
         fn bad(msg: &str) -> std::io::Error {
             std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
         }
@@ -214,13 +327,18 @@ impl ClipCache {
         }
         r.read_exact(&mut b8)?;
         let n = u64::from_le_bytes(b8) as usize;
-        let cache = ClipCache::new();
+        let cache = ClipCache::bounded(max_entries);
         for _ in 0..n {
             r.read_exact(&mut b8)?;
             let k = u64::from_le_bytes(b8);
             r.read_exact(&mut b8)?;
             cache.insert(k, f64::from_bits(u64::from_le_bytes(b8)));
         }
+        // loading is plumbing, not cache traffic: start the counters
+        // fresh (evictions included) so stats describe the run ahead
+        cache.hits.store(0, Ordering::Relaxed);
+        cache.misses.store(0, Ordering::Relaxed);
+        cache.evictions.store(0, Ordering::Relaxed);
         Ok(cache)
     }
 
@@ -228,9 +346,20 @@ impl ClipCache {
     /// corrupt, or mismatched-key file yields a fresh empty cache.
     /// Returns `(cache, warm)` where `warm` says the load succeeded.
     pub fn load_or_cold(path: &Path, fingerprint: u64, time_scale: f32) -> (ClipCache, bool) {
-        match Self::load(path, fingerprint, time_scale) {
+        Self::load_or_cold_bounded(path, fingerprint, time_scale, 0)
+    }
+
+    /// [`load_bounded`](ClipCache::load_bounded) with the same
+    /// cold-start fallback; the fallback cache carries the bound too.
+    pub fn load_or_cold_bounded(
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+    ) -> (ClipCache, bool) {
+        match Self::load_bounded(path, fingerprint, time_scale, max_entries) {
             Ok(c) => (c, true),
-            Err(_) => (ClipCache::new(), false),
+            Err(_) => (ClipCache::bounded(max_entries), false),
         }
     }
 }
@@ -351,6 +480,86 @@ mod tests {
         assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
         let _ = std::fs::remove_file(&pa);
         let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_oldest_inserted() {
+        let c = ClipCache::bounded(3);
+        for k in 1..=5u64 {
+            c.insert(k, k as f64);
+        }
+        assert_eq!(c.len(), 3);
+        assert!(!c.contains(1) && !c.contains(2), "oldest two evicted");
+        assert!(c.contains(3) && c.contains(4) && c.contains(5));
+        assert_eq!(c.stats().evictions, 2);
+        // an evicted key can come back; the now-oldest entry makes room
+        c.insert(1, 10.0);
+        assert!(c.contains(1) && !c.contains(3));
+        assert_eq!(c.stats().evictions, 3);
+    }
+
+    #[test]
+    fn overwrite_keeps_age_and_never_evicts() {
+        let c = ClipCache::bounded(2);
+        c.insert(7, 1.0);
+        c.insert(8, 2.0);
+        c.insert(7, 3.0); // overwrite: no growth, no eviction
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.get(7), Some(3.0));
+        // 7 kept its original (oldest) insertion age, so it goes first
+        c.insert(9, 4.0);
+        assert!(!c.contains(7) && c.contains(8) && c.contains(9));
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let c = ClipCache::new();
+        assert_eq!(c.max_entries(), 0);
+        for k in 0..5_000u64 {
+            c.insert(k, k as f64);
+        }
+        assert_eq!(c.len(), 5_000);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn save_respects_the_bound_and_bounded_load_trims() {
+        let dir = std::env::temp_dir().join("capsim_cache_bound_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::bounded(10);
+        for k in 0..25u64 {
+            c.insert(k, k as f64);
+        }
+        let saved = c.save(&path, 1, 2.0).unwrap();
+        assert_eq!(saved, 10, "save never persists beyond the bound");
+        // loading into a smaller bound trims during the load and starts
+        // the counters fresh
+        let small = ClipCache::load_bounded(&path, 1, 2.0, 4).unwrap();
+        assert_eq!(small.len(), 4);
+        assert_eq!(small.stats(), CacheStats::default());
+        // cold-start fallback carries the bound
+        let (cold, warm) = ClipCache::load_or_cold_bounded(&path, 999, 2.0, 4);
+        assert!(!warm && cold.is_empty());
+        assert_eq!(cold.max_entries(), 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clear_resets_eviction_state() {
+        let c = ClipCache::bounded(2);
+        for k in 0..5u64 {
+            c.insert(k, k as f64);
+        }
+        assert!(c.stats().evictions > 0);
+        c.clear();
+        assert_eq!(c.stats(), CacheStats::default());
+        // the eviction queue was cleared too: refilling works cleanly
+        c.insert(1, 1.0);
+        c.insert(2, 2.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
     }
 
     #[test]

@@ -25,8 +25,10 @@ pub struct BenchProfile {
     pub total_insts: u64,
 }
 
-/// Model geometry constants the dataset must match (kept in lock-step with
-/// `model_config.json`; the runtime re-validates at load).
+/// Model geometry constants the dataset must match (kept in lock-step
+/// with `model_config.json`; the runtime re-validates at load, and
+/// [`runtime::default_geometry`](crate::runtime::default_geometry) —
+/// the shape every registry backend shares — is built from them).
 pub const L_TOKEN: usize = 16;
 pub const L_CLIP: usize = 32;
 

@@ -148,10 +148,17 @@ pub(crate) struct IntervalScan {
 /// a payload for needs no second tokenization (only valid when
 /// intervals run in order — with parallel workers it would make the
 /// canonical context schedule-dependent).
+///
+/// `cache_stable` says a `contains` observation is guaranteed to still
+/// hold when the merge resolves this scan — true for the phase-barrier
+/// paths (every cache read completes before any insert runs) and for
+/// streamed runs whose cache cannot evict mid-run; when false, payloads
+/// are kept for cached keys too, as the merge's eviction fallback.
 pub(crate) fn scan_one(
     sel: &SelectedInterval,
     cfg: &PipelineConfig,
     cache: Option<&ClipCache>,
+    cache_stable: bool,
     known: Option<&HashSet<u64>>,
     mut bench_seen: Option<&mut HashSet<u64>>,
 ) -> IntervalScan {
@@ -184,11 +191,13 @@ pub(crate) fn scan_one(
                     e.insert(1);
                     order.push(key);
                     // tokenize only on local first sight of a key that is
-                    // neither cached, pending in the suite, nor already
-                    // carried by an earlier interval of this benchmark
-                    let resolved_elsewhere = cache.map_or(false, |c| c.contains(key))
-                        || known.map_or(false, |k| k.contains(&key))
-                        || bench_seen.as_deref().map_or(false, |s| s.contains(&key));
+                    // neither stably cached, pending in the suite, nor
+                    // already carried by an earlier interval of this
+                    // benchmark
+                    let resolved_elsewhere =
+                        cache.map_or(false, |c| cache_stable && c.contains(key))
+                            || known.map_or(false, |k| k.contains(&key))
+                            || bench_seen.as_deref().map_or(false, |s| s.contains(&key));
                     if !resolved_elsewhere {
                         if let Some(seen) = bench_seen.as_deref_mut() {
                             seen.insert(key);
@@ -238,12 +247,14 @@ pub(crate) fn scan_intervals(
         let mut seen: HashSet<u64> = HashSet::new();
         return selected
             .iter()
-            .map(|sel| scan_one(sel, cfg, cache, known, Some(&mut seen)))
+            .map(|sel| scan_one(sel, cfg, cache, true, known, Some(&mut seen)))
             .collect();
     }
     let jobs: Vec<&SelectedInterval> = selected.iter().collect();
+    // the phase-barrier callers complete every cache read before any
+    // insert runs, so a `contains` observation is always stable here
     pool::parallel_map(jobs, threads, |sel| {
-        scan_one(sel, cfg, cache, known, None)
+        scan_one(sel, cfg, cache, true, known, None)
     })
 }
 
@@ -405,15 +416,16 @@ impl DedupState {
 /// `fast_clip_key` share one prediction, computed from the context of the
 /// key's *first sighting* — first in (interval, position) order within a
 /// run, and suite-global when a shared cache spans benchmarks. With a
-/// row-local backend (e.g. `runtime::NativePredictor`) results are
-/// bit-identical across `threads` settings, and repeating a run of the
-/// same composition against a warm cache is bit-identical to its cold
-/// run; runs of *different* compositions (a benchmark alone vs. after a
+/// row-local backend (`--backend native` or `--backend attention`; the
+/// pure-Rust transformer is row-local too) results are bit-identical
+/// across `threads` settings, and repeating a run of the same
+/// composition against a warm cache is bit-identical to its cold run;
+/// runs of *different* compositions (a benchmark alone vs. after a
 /// sibling that shares clips) may canonicalize a shared key to a
 /// different first-sighting context, exactly as content-keyed dedup
-/// prescribes. With the PJRT attention model, thread counts are still
-/// bit-identical and batch composition is padding-invariant (≈1e-3
-/// relative).
+/// prescribes. With the compiled PJRT model (`--backend pjrt`), thread
+/// counts are still bit-identical and batch composition is
+/// padding-invariant (≈1e-3 relative).
 pub fn capsim_mode<P: Predictor + ?Sized>(
     selected: &[SelectedInterval],
     n_intervals: usize,
@@ -530,6 +542,26 @@ mod tests {
         assert!(run.clips_unique > 0);
         assert!(run.clips_unique <= run.clips_total);
         assert_eq!(run.cache_hits, 0, "no cache was supplied");
+    }
+
+    #[test]
+    fn capsim_mode_attention_backend_is_thread_invariant() {
+        // the registry's pure-Rust attention backend rides the same
+        // engine contract as the analytic stand-in: bit-identical
+        // across thread counts. The artifacts dir is pointed somewhere
+        // empty so a saved attention.bin cannot change the weights.
+        let mut cfg = test_cfg();
+        cfg.artifacts = "no-such-artifacts-dir".to_string();
+        let (sel, n) = selected_for(1, &cfg);
+        let model = crate::runtime::Backend::Attention.build_forward(&cfg).unwrap();
+        cfg.threads = 1;
+        let a = capsim_mode(&sel, n, &cfg, model.as_ref(), 40.0, None).unwrap();
+        cfg.threads = 4;
+        let b = capsim_mode(&sel, n, &cfg, model.as_ref(), 40.0, None).unwrap();
+        let abits: Vec<u64> = a.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        let bbits: Vec<u64> = b.interval_cycles.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(abits, bbits);
+        assert!(a.total_cycles > 0.0);
     }
 
     #[test]

@@ -379,6 +379,23 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
     let queue_depth = cfg.effective_queue_depth();
     let (tx_work, rx_work) = sync_channel::<WorkItem>(cfg.effective_batch_depth().max(1));
 
+    // Unlike the phase-barrier paths, stage-3 inserts (and therefore
+    // bounded-cache evictions) run concurrently with the scans, so a
+    // scan's `contains` observation is only stable when this run cannot
+    // possibly push the cache over its bound: every insert is a new
+    // unique clip, and a run of J scan jobs can discover at most
+    // J * (interval_insts / l_min + 1) of those. When eviction is
+    // possible, scans keep payloads for cached keys too and the merge
+    // falls back to re-pricing from this run's first-sighting payload —
+    // the same content-keyed canonicalization a cold run of this
+    // composition would use (in-run keys always resolve from the run's
+    // own pred map, so only reuse of *warm* entries can shift under
+    // eviction pressure).
+    let worst_new =
+        jobs.len() as u64 * (cfg.simpoint.interval_insts / cfg.l_min.max(1) as u64 + 1);
+    let cache_stable = !cache.may_evict()
+        || cache.len() as u64 + worst_new <= cache.max_entries() as u64;
+
     let mut outs: Vec<BenchOut> = Vec::with_capacity(nbench);
     let mut pred: HashMap<u64, f64> = HashMap::new();
     let mut predict_busy = 0.0f64;
@@ -410,7 +427,7 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
                 queue_depth,
                 |sel| {
                     let s0 = Instant::now();
-                    let scan = scan_one(sel, cfg, Some(cache), None, None);
+                    let scan = scan_one(sel, cfg, Some(cache), cache_stable, None, None);
                     (scan, s0.elapsed().as_secs_f64())
                 },
                 |seq, (scan, dur)| {
@@ -668,6 +685,37 @@ mod tests {
                 assert_eq!(a.total_cycles.to_bits(), b.total_cycles.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn streamed_attention_backend_matches_cross_bench_bitwise() {
+        // the registry's pure-Rust attention backend is row-local, so
+        // the streamed stage graph must reproduce the phase-barrier
+        // path bit-for-bit, exactly like the analytic stand-in
+        // (artifacts pointed somewhere empty so a saved attention.bin
+        // cannot change the weights under the test)
+        let mut cfg = test_cfg();
+        cfg.artifacts = "no-such-artifacts-dir".to_string();
+        let profiles = profiles_for(&[3], &cfg);
+        let model = crate::runtime::Backend::Attention.build_forward(&cfg).unwrap();
+        let base = capsim_suite(
+            &profiles,
+            &cfg,
+            model.as_ref(),
+            40.0,
+            &ClipCache::new(),
+            SuiteBatching::CrossBench,
+        )
+        .unwrap();
+        let run =
+            capsim_suite_streamed(&profiles, &cfg, model.as_ref(), 40.0, &ClipCache::new())
+                .unwrap();
+        for (ra, rb) in base.runs.iter().zip(&run.runs) {
+            let abits: Vec<u64> = ra.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            let bbits: Vec<u64> = rb.interval_cycles.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(abits, bbits);
+        }
+        assert_eq!(base.clips_unique, run.clips_unique);
     }
 
     #[test]

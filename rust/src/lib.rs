@@ -17,9 +17,20 @@
 //! * [`tokenizer`] — Fig. 5: standardization transformation into tokens;
 //! * [`context`] — Fig. 6: register-value context matrix;
 //! * [`dataset`] — clip datasets, splits and the six Table-II benchmark sets;
-//! * [`runtime`] — predictor backends behind one `Predictor` trait: PJRT
-//!   loading of the AOT-compiled artifacts, plus a dependency-free native
-//!   analytic backend;
+//! * [`runtime`] — predictor backends behind one `Predictor` trait and a
+//!   `Backend` registry (`pipeline.backend` TOML / `--backend` CLI):
+//!
+//!   | backend | needs | determinism | use |
+//!   |---|---|---|---|
+//!   | `pjrt` | `make artifacts` + PJRT | batch-sensitive ≈1e-3 | trained-accuracy experiments |
+//!   | `native` | nothing | row-local, bit-exact | equivalence tests, smoke runs |
+//!   | `attention` | nothing | row-local, bit-exact | pure-Rust transformer: a real model cost in the hot path, CI |
+//!
+//!   `attention` executes the paper's architecture (token embedding →
+//!   multi-head self-attention over the clip stream with padding masks →
+//!   clip pooling + context-row fusion → regression head) with in-crate
+//!   f32 kernels (`runtime::tensor`), weights seeded deterministically or
+//!   loaded from a versioned `artifacts/attention.bin`;
 //! * [`predictor`] — batching (including the cross-interval/benchmark
 //!   `BatchAccumulator`), the SGD training driver and evaluation;
 //! * [`coordinator`] — the end-to-end CAPSim and gem5-mode pipelines, run
@@ -48,9 +59,10 @@
 //!   hard contract: the merge consumes scans in sequence-number order,
 //!   so `threads = N`, any queue depth, and any stage interleaving are
 //!   bit-identical to the sequential path. A cross-benchmark `ClipCache`
-//!   dedups identical clips across the whole suite and can **persist**
+//!   dedups identical clips across the whole suite, can **persist**
 //!   (`save`/`load`, keyed by model fingerprint + `time_scale`,
-//!   `--cache-dir`) for cross-process warm starts; `coordinator::engine`
+//!   `--cache-dir`) for cross-process warm starts, and can be **bounded**
+//!   (`--cache-max-entries`, oldest-inserted eviction); `coordinator::engine`
 //!   drives entire suites through one shared cache with full inference
 //!   batches, and O3 golden-label generation (`coordinator::golden`)
 //!   rides the same stage graph;

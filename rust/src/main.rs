@@ -24,7 +24,7 @@ use capsim::functional::AtomicCpu;
 use capsim::o3::O3Core;
 use capsim::predictor::{train, TrainParams};
 use capsim::report::Table;
-use capsim::runtime::{NativePredictor, Predictor, Runtime};
+use capsim::runtime::{Backend, Predictor, Runtime};
 use capsim::util::stats;
 use capsim::workloads::{suite, Scale};
 
@@ -77,6 +77,21 @@ fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
     if let Some(dir) = flags.get("cache-dir") {
         cfg.cache_dir = dir.clone();
     }
+    if let Some(v) = flags.get("cache-max-entries") {
+        let n: i64 = v
+            .parse()
+            .map_err(|_| anyhow!("--cache-max-entries expects an integer, got {v}"))?;
+        // 0 (or negative) disables the bound
+        cfg.cache_max_entries = n.max(0) as usize;
+    }
+    // backend selection: --backend is the registry flag; --native survives
+    // as a deprecating alias (and loses to an explicit --backend)
+    if let Some(name) = flags.get("backend") {
+        cfg.backend = name.parse()?;
+    } else if flags.contains_key("native") {
+        eprintln!("note: --native is deprecated; use --backend native");
+        cfg.backend = Backend::Native;
+    }
     Ok(cfg)
 }
 
@@ -110,7 +125,12 @@ fn help() {
                 capacities, 0 = auto)\n\
                 --cache-dir DIR (persist the clip cache across runs, keyed by\n\
                 model fingerprint + time_scale; mismatches cold-start)\n\
-                --native (compare: analytic backend, no artifacts needed)"
+                --cache-max-entries N (bound the clip cache; oldest-inserted\n\
+                entries are evicted; 0 = unbounded)\n\
+                --backend B (pjrt | native | attention; pjrt needs\n\
+                `make artifacts`, native/attention are dependency-free —\n\
+                attention runs the pure-Rust model)\n\
+                --native (deprecated alias for --backend native)"
     );
 }
 
@@ -242,6 +262,13 @@ fn dataset_cmd(flags: &HashMap<String, String>) -> Result<()> {
 
 fn train_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = load_config(flags)?;
+    if cfg.backend != Backend::Pjrt {
+        bail!(
+            "`capsim train` drives SGD through the AOT train entry points, which only \
+             the pjrt backend has; the {} backend is training-free (drop --backend)",
+            cfg.backend
+        );
+    }
     let variant = flags.get("variant").map(String::as_str).unwrap_or("capsim");
     let steps: usize = flags
         .get("steps")
@@ -281,33 +308,14 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let benches = suite(cfg.scale);
     let (ds, profiles) = build_dataset(&benches, &cfg, cfg.effective_threads());
 
-    // backend: the trained PJRT model, or the dependency-free analytic
-    // backend with `--native` (no `make artifacts` required)
-    let (model, time_scale): (Box<dyn Predictor>, f32) = if flags.contains_key("native")
-    {
-        (
-            Box::new(NativePredictor::with_defaults()),
-            ds.mean_time() as f32,
-        )
-    } else {
-        let rt = Runtime::load(Path::new(&cfg.artifacts))?;
-        let mut model = rt.load_variant(variant)?;
-        model.init_params(cfg.seed as u32)?;
-        let (tr, va, _) = ds.split(cfg.seed);
-        let steps = flags
-            .get("steps")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(cfg.train_steps);
-        let log = train(
-            &mut model,
-            &ds,
-            &tr,
-            &va,
-            &TrainParams { steps, lr: cfg.lr, ..Default::default() },
-        )?;
-        let ts = log.time_scale;
-        (Box::new(model), ts)
-    };
+    // backend via the runtime registry: `pjrt` trains the AOT model
+    // first; `native`/`attention` are training-free and dependency-free
+    let steps = flags
+        .get("steps")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.train_steps);
+    let (model, time_scale) = cfg.backend.build_trained(&cfg, &ds, steps, variant)?;
+    println!("backend: {}", cfg.backend);
 
     // per-benchmark rows use the paper methodology (each benchmark stands
     // alone, no cache) so wall times are order-independent; the engine's
@@ -361,8 +369,12 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
     };
     let cache = match &cache_file {
         Some(path) => {
-            let (c, warm) =
-                ClipCache::load_or_cold(path, model.fingerprint(), time_scale);
+            let (c, warm) = ClipCache::load_or_cold_bounded(
+                path,
+                model.fingerprint(),
+                time_scale,
+                cfg.cache_max_entries,
+            );
             if warm {
                 println!("warm-started clip cache from {path:?} ({} clips)", c.len());
             } else {
@@ -370,7 +382,7 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
             }
             c
         }
-        None => ClipCache::new(),
+        None => ClipCache::bounded(cfg.cache_max_entries),
     };
     let shared = capsim::coordinator::capsim_suite(
         &profiles,
@@ -402,6 +414,12 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
             100.0 * warm_stats.hit_rate(),
             warm_stats.hits,
             warm_stats.hits + warm_stats.misses
+        );
+    }
+    if warm_stats.evictions > 0 {
+        println!(
+            "cache bound: {} entries, {} oldest-inserted clips evicted",
+            cfg.cache_max_entries, warm_stats.evictions
         );
     }
     if let Some(path) = &cache_file {

@@ -1,0 +1,808 @@
+//! A dependency-free **pure-Rust attention backend** — the paper's
+//! predictor architecture (token embedding → multi-head self-attention
+//! over the clip token stream → clip pooling + context fusion → regression
+//! head) executed by the scalar f32 kernels in [`super::tensor`], with no
+//! PJRT, no XLA and no artifacts directory.
+//!
+//! Structure of one forward pass (per clip row):
+//!
+//! ```text
+//! tokens[l_clip, l_token] ── embed + masked token-mean ──► X[l_clip, d]
+//!                                      + position embedding
+//! X ──► N × { MHA(clip padding mask) + LN, FFN(GELU) + LN } ──► X'
+//! X' ── masked mean over live instructions ──► clip vector [d]
+//! ctx[m] ── embed mean → linear → GELU ──► context vector [d]
+//! [clip ‖ ctx] ── linear → GELU → linear ──► s
+//! prediction = softplus(s) · time_scale
+//! ```
+//!
+//! Two properties the engine relies on, both **exact** here:
+//!
+//! * **row locality**: each row of a [`Batch`] is processed by an
+//!   independent loop that reads only that row's tokens, masks and
+//!   context, so predictions are bit-identical across batch sizes,
+//!   padding and cache states — the invariance the engine-equivalence
+//!   suite asserts (the compiled PJRT model only approximates this;
+//!   see `tests/prop_attention.rs`);
+//! * **determinism**: weights come from a seeded PRNG or a versioned
+//!   weights file, and every kernel runs in a fixed scalar order, so the
+//!   same `(weights, row, time_scale)` always produces the same bits.
+//!
+//! Weights can be persisted ([`AttentionPredictor::save`]) and reloaded
+//! ([`AttentionPredictor::load`]) through a versioned binary format; the
+//! [`Predictor::fingerprint`] mixes every weight bit, so the persistent
+//! `ClipCache` cold-starts whenever the weights (or the seed) change.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Rng;
+
+use super::manifest::ModelGeometry;
+use super::model::Batch;
+use super::tensor::{
+    add_bias, gelu, gelu_slice, layernorm, masked_softmax, matmul, softplus, vecmat,
+};
+use super::Predictor;
+
+/// On-disk magic ("CAWB") of a persisted weights file.
+const WEIGHTS_MAGIC: u32 = 0x4257_4143;
+/// Bump on any architecture or layout change; old files are refused.
+const WEIGHTS_VERSION: u32 = 1;
+/// Guard against absurd allocations from corrupt headers.
+const MAX_WEIGHT_COUNT: u64 = 1 << 24;
+
+/// Attention heads (embed_dim must divide evenly).
+pub const DEFAULT_HEADS: usize = 4;
+/// Encoder layers.
+pub const DEFAULT_LAYERS: usize = 2;
+/// FFN hidden multiple (hidden = ffn_mult * embed_dim).
+pub const DEFAULT_FFN_MULT: usize = 2;
+
+/// One pre-LN-free (post-norm) transformer encoder layer.
+struct EncoderLayer {
+    wq: Vec<f32>,    // [d, d]
+    wk: Vec<f32>,    // [d, d]
+    wv: Vec<f32>,    // [d, d]
+    wo: Vec<f32>,    // [d, d]
+    ln1_g: Vec<f32>, // [d]
+    ln1_b: Vec<f32>, // [d]
+    ff1_w: Vec<f32>, // [d, f]
+    ff1_b: Vec<f32>, // [f]
+    ff2_w: Vec<f32>, // [f, d]
+    ff2_b: Vec<f32>, // [d]
+    ln2_g: Vec<f32>, // [d]
+    ln2_b: Vec<f32>, // [d]
+}
+
+/// The full parameter set.
+struct Weights {
+    embed: Vec<f32>,   // [vocab, d] — shared by clip tokens and context
+    pos: Vec<f32>,     // [l_clip, d]
+    layers: Vec<EncoderLayer>,
+    ctx_w: Vec<f32>,   // [d, d]
+    ctx_b: Vec<f32>,   // [d]
+    head_w1: Vec<f32>, // [2d, d]
+    head_b1: Vec<f32>, // [d]
+    head_w2: Vec<f32>, // [d]
+    head_b2: Vec<f32>, // [1]
+}
+
+/// Per-forward scratch buffers, reused across rows of a batch.
+struct Scratch {
+    x: Vec<f32>,      // [l_clip, d]
+    q: Vec<f32>,      // [l_clip, d]
+    k: Vec<f32>,      // [l_clip, d]
+    v: Vec<f32>,      // [l_clip, d]
+    attn: Vec<f32>,   // [l_clip, d]
+    scores: Vec<f32>, // [l_clip, l_clip]
+    ff: Vec<f32>,     // [l_clip, f]
+    tmp: Vec<f32>,    // [l_clip, d]
+    clip: Vec<f32>,   // [d]
+    ctx: Vec<f32>,    // [d]
+    fused: Vec<f32>,  // [2d]
+    hidden: Vec<f32>, // [d]
+}
+
+impl Scratch {
+    fn new(lc: usize, d: usize, f: usize) -> Scratch {
+        Scratch {
+            x: vec![0.0; lc * d],
+            q: vec![0.0; lc * d],
+            k: vec![0.0; lc * d],
+            v: vec![0.0; lc * d],
+            attn: vec![0.0; lc * d],
+            scores: vec![0.0; lc * lc],
+            ff: vec![0.0; lc * f],
+            tmp: vec![0.0; lc * d],
+            clip: vec![0.0; d],
+            ctx: vec![0.0; d],
+            fused: vec![0.0; 2 * d],
+            hidden: vec![0.0; d],
+        }
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn fill_f32(r: &mut impl Read, t: &mut [f32]) -> std::io::Result<()> {
+    let mut b = [0u8; 4];
+    for v in t.iter_mut() {
+        r.read_exact(&mut b)?;
+        *v = f32::from_bits(u32::from_le_bytes(b));
+    }
+    Ok(())
+}
+
+/// Deterministic pure-Rust attention predictor; see the module docs.
+pub struct AttentionPredictor {
+    geometry: ModelGeometry,
+    heads: usize,
+    ffn_mult: usize,
+    /// Seed the weights were drawn from (provenance label; file loads
+    /// carry the seed of the run that saved them).
+    seed: u64,
+    w: Weights,
+}
+
+impl AttentionPredictor {
+    /// Deterministically initialized weights for `geometry` drawn from
+    /// `seed` (uniform, 1/sqrt(fan_in)-scaled; layernorm gains 1).
+    pub fn seeded(geometry: ModelGeometry, seed: u64) -> AttentionPredictor {
+        let d = geometry.embed_dim;
+        assert!(d > 0 && d % DEFAULT_HEADS == 0, "embed_dim must divide heads");
+        let f = DEFAULT_FFN_MULT * d;
+        let mut rng = Rng::new(seed ^ 0xA77E_4710_4BAC_83D5);
+        let mut uniform = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+        };
+        let proj = 1.0 / (d as f32).sqrt();
+        let embed = uniform(geometry.vocab_size * d, 0.05);
+        let pos = uniform(geometry.l_clip * d, 0.05);
+        let layers = (0..DEFAULT_LAYERS)
+            .map(|_| EncoderLayer {
+                wq: uniform(d * d, proj),
+                wk: uniform(d * d, proj),
+                wv: uniform(d * d, proj),
+                wo: uniform(d * d, proj),
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ff1_w: uniform(d * f, proj),
+                ff1_b: vec![0.0; f],
+                ff2_w: uniform(f * d, 1.0 / (f as f32).sqrt()),
+                ff2_b: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+            })
+            .collect();
+        let ctx_w = uniform(d * d, proj);
+        let head_w1 = uniform(2 * d * d, 1.0 / (2.0 * d as f32).sqrt());
+        let head_w2 = uniform(d, proj);
+        AttentionPredictor {
+            geometry,
+            heads: DEFAULT_HEADS,
+            ffn_mult: DEFAULT_FFN_MULT,
+            seed,
+            w: Weights {
+                embed,
+                pos,
+                layers,
+                ctx_w,
+                ctx_b: vec![0.0; d],
+                head_w1,
+                head_b1: vec![0.0; d],
+                head_w2,
+                head_b2: vec![0.5],
+            },
+        }
+    }
+
+    /// Default geometry (the `model_config.json` constants) with the
+    /// default pipeline seed.
+    pub fn with_defaults() -> AttentionPredictor {
+        AttentionPredictor::seeded(super::default_geometry(), 42)
+    }
+
+    /// The seed the resident weights were drawn from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Every tensor in canonical (save/fingerprint) order.
+    fn tensors(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = vec![self.w.embed.as_slice(), self.w.pos.as_slice()];
+        for l in &self.w.layers {
+            out.extend([
+                l.wq.as_slice(),
+                l.wk.as_slice(),
+                l.wv.as_slice(),
+                l.wo.as_slice(),
+                l.ln1_g.as_slice(),
+                l.ln1_b.as_slice(),
+                l.ff1_w.as_slice(),
+                l.ff1_b.as_slice(),
+                l.ff2_w.as_slice(),
+                l.ff2_b.as_slice(),
+                l.ln2_g.as_slice(),
+                l.ln2_b.as_slice(),
+            ]);
+        }
+        out.extend([
+            self.w.ctx_w.as_slice(),
+            self.w.ctx_b.as_slice(),
+            self.w.head_w1.as_slice(),
+            self.w.head_b1.as_slice(),
+            self.w.head_w2.as_slice(),
+            self.w.head_b2.as_slice(),
+        ]);
+        out
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors().iter().map(|t| t.len()).sum()
+    }
+
+    /// Persist the weights (versioned; see [`AttentionPredictor::load`]).
+    /// Writes a sibling temp file and renames, like the clip cache.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(&WEIGHTS_MAGIC.to_le_bytes())?;
+            w.write_all(&WEIGHTS_VERSION.to_le_bytes())?;
+            let g = &self.geometry;
+            for v in [g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch] {
+                w.write_all(&(v as u32).to_le_bytes())?;
+            }
+            w.write_all(&(g.fwd_batch_sizes.len() as u32).to_le_bytes())?;
+            for &b in &g.fwd_batch_sizes {
+                w.write_all(&(b as u32).to_le_bytes())?;
+            }
+            for v in [self.heads, self.w.layers.len(), self.ffn_mult] {
+                w.write_all(&(v as u32).to_le_bytes())?;
+            }
+            w.write_all(&self.seed.to_le_bytes())?;
+            w.write_all(&(self.param_count() as u64).to_le_bytes())?;
+            for t in self.tensors() {
+                for &v in t {
+                    w.write_all(&v.to_bits().to_le_bytes())?;
+                }
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load a persisted weights file, refusing wrong magic/version,
+    /// inconsistent shapes, or truncated data.
+    pub fn load(path: &Path) -> Result<AttentionPredictor> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?,
+        );
+        if read_u32(&mut r)? != WEIGHTS_MAGIC {
+            return Err(anyhow!("{path:?}: not an attention weights file"));
+        }
+        if read_u32(&mut r)? != WEIGHTS_VERSION {
+            return Err(anyhow!("{path:?}: unsupported weights version"));
+        }
+        let vocab_size = read_u32(&mut r)? as usize;
+        let embed_dim = read_u32(&mut r)? as usize;
+        let l_token = read_u32(&mut r)? as usize;
+        let l_clip = read_u32(&mut r)? as usize;
+        let m_rows = read_u32(&mut r)? as usize;
+        let train_batch = read_u32(&mut r)? as usize;
+        let n_fwd = read_u32(&mut r)? as usize;
+        if n_fwd > 64 {
+            return Err(anyhow!("{path:?}: implausible fwd batch list"));
+        }
+        let mut fwd_batch_sizes = Vec::with_capacity(n_fwd);
+        for _ in 0..n_fwd {
+            fwd_batch_sizes.push(read_u32(&mut r)? as usize);
+        }
+        let heads = read_u32(&mut r)? as usize;
+        let layers = read_u32(&mut r)? as usize;
+        let ffn_mult = read_u32(&mut r)? as usize;
+        let seed = read_u64(&mut r)?;
+        let count = read_u64(&mut r)?;
+        let arch_ok =
+            embed_dim > 0 && heads > 0 && embed_dim % heads == 0 && layers > 0 && ffn_mult > 0;
+        if !arch_ok {
+            return Err(anyhow!("{path:?}: inconsistent architecture header"));
+        }
+        // bound every dimension before doing arithmetic on it, so a
+        // corrupt header can neither overflow the `expected` product
+        // below nor provoke a huge allocation
+        let dims_ok = vocab_size <= 1 << 20
+            && embed_dim <= 1 << 12
+            && l_token <= 1 << 12
+            && l_clip <= 1 << 12
+            && m_rows <= 1 << 16
+            && train_batch <= 1 << 12
+            && layers <= 64
+            && ffn_mult <= 16
+            && fwd_batch_sizes.iter().all(|&b| b > 0 && b <= 1 << 12);
+        if !dims_ok {
+            return Err(anyhow!("{path:?}: implausible geometry header"));
+        }
+
+        // validate the advertised total against the header shape BEFORE
+        // allocating anything (with the bounds above, every product fits
+        // comfortably in u64 and the total is capped by MAX_WEIGHT_COUNT)
+        let d = embed_dim as u64;
+        let f = ffn_mult as u64 * d;
+        let per_layer = 4 * d * d + 2 * d + d * f + f + f * d + d + 2 * d;
+        let expected = vocab_size as u64 * d
+            + l_clip as u64 * d
+            + layers as u64 * per_layer
+            + (d * d + d)
+            + (2 * d * d + d + d + 1);
+        if count != expected || count > MAX_WEIGHT_COUNT {
+            return Err(anyhow!(
+                "{path:?}: weight count {count} does not match header shape ({expected})"
+            ));
+        }
+        let geometry = ModelGeometry {
+            vocab_size,
+            embed_dim,
+            l_token,
+            l_clip,
+            m_rows,
+            train_batch,
+            fwd_batch_sizes,
+        };
+
+        // build a zeroed skeleton with the recorded shape, then fill
+        // tensor by tensor in canonical order
+        let d = embed_dim;
+        let f = ffn_mult * d;
+        let layer = || EncoderLayer {
+            wq: vec![0.0; d * d],
+            wk: vec![0.0; d * d],
+            wv: vec![0.0; d * d],
+            wo: vec![0.0; d * d],
+            ln1_g: vec![0.0; d],
+            ln1_b: vec![0.0; d],
+            ff1_w: vec![0.0; d * f],
+            ff1_b: vec![0.0; f],
+            ff2_w: vec![0.0; f * d],
+            ff2_b: vec![0.0; d],
+            ln2_g: vec![0.0; d],
+            ln2_b: vec![0.0; d],
+        };
+        let mut out = AttentionPredictor {
+            geometry,
+            heads,
+            ffn_mult,
+            seed,
+            w: Weights {
+                embed: vec![0.0; vocab_size * d],
+                pos: vec![0.0; l_clip * d],
+                layers: (0..layers).map(|_| layer()).collect(),
+                ctx_w: vec![0.0; d * d],
+                ctx_b: vec![0.0; d],
+                head_w1: vec![0.0; 2 * d * d],
+                head_b1: vec![0.0; d],
+                head_w2: vec![0.0; d],
+                head_b2: vec![0.0; 1],
+            },
+        };
+        debug_assert_eq!(out.param_count() as u64, count);
+        fill_f32(&mut r, &mut out.w.embed)?;
+        fill_f32(&mut r, &mut out.w.pos)?;
+        for l in &mut out.w.layers {
+            fill_f32(&mut r, &mut l.wq)?;
+            fill_f32(&mut r, &mut l.wk)?;
+            fill_f32(&mut r, &mut l.wv)?;
+            fill_f32(&mut r, &mut l.wo)?;
+            fill_f32(&mut r, &mut l.ln1_g)?;
+            fill_f32(&mut r, &mut l.ln1_b)?;
+            fill_f32(&mut r, &mut l.ff1_w)?;
+            fill_f32(&mut r, &mut l.ff1_b)?;
+            fill_f32(&mut r, &mut l.ff2_w)?;
+            fill_f32(&mut r, &mut l.ff2_b)?;
+            fill_f32(&mut r, &mut l.ln2_g)?;
+            fill_f32(&mut r, &mut l.ln2_b)?;
+        }
+        fill_f32(&mut r, &mut out.w.ctx_w)?;
+        fill_f32(&mut r, &mut out.w.ctx_b)?;
+        fill_f32(&mut r, &mut out.w.head_w1)?;
+        fill_f32(&mut r, &mut out.w.head_b1)?;
+        fill_f32(&mut r, &mut out.w.head_w2)?;
+        fill_f32(&mut r, &mut out.w.head_b2)?;
+        Ok(out)
+    }
+
+    /// One encoder layer over `x` (`[l_clip, d]`) under the clip padding
+    /// `mask` (`[l_clip]`). Masked *keys* receive zero attention, so live
+    /// positions never read padding content; masked positions' own
+    /// outputs are computed but ignored by the pooling stage.
+    fn encoder_layer(&self, lw: &EncoderLayer, mask: &[f32], s: &mut Scratch) {
+        let lc = self.geometry.l_clip;
+        let d = self.geometry.embed_dim;
+        let hd = d / self.heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        matmul(&s.x, &lw.wq, lc, d, d, &mut s.q);
+        matmul(&s.x, &lw.wk, lc, d, d, &mut s.k);
+        matmul(&s.x, &lw.wv, lc, d, d, &mut s.v);
+        s.attn.fill(0.0);
+        for h in 0..self.heads {
+            let o = h * hd;
+            for i in 0..lc {
+                for j in 0..lc {
+                    let mut dot = 0.0f32;
+                    for c in 0..hd {
+                        dot += s.q[i * d + o + c] * s.k[j * d + o + c];
+                    }
+                    s.scores[i * lc + j] = dot * scale;
+                }
+            }
+            masked_softmax(&mut s.scores, lc, lc, mask);
+            for i in 0..lc {
+                for j in 0..lc {
+                    let p = s.scores[i * lc + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    for c in 0..hd {
+                        s.attn[i * d + o + c] += p * s.v[j * d + o + c];
+                    }
+                }
+            }
+        }
+        matmul(&s.attn, &lw.wo, lc, d, d, &mut s.tmp);
+        for (a, &b) in s.x.iter_mut().zip(s.tmp.iter()) {
+            *a += b;
+        }
+        layernorm(&mut s.x, &lw.ln1_g, &lw.ln1_b);
+
+        let f = self.ffn_mult * d;
+        matmul(&s.x, &lw.ff1_w, lc, d, f, &mut s.ff);
+        add_bias(&mut s.ff, &lw.ff1_b);
+        gelu_slice(&mut s.ff);
+        matmul(&s.ff, &lw.ff2_w, lc, f, d, &mut s.tmp);
+        add_bias(&mut s.tmp, &lw.ff2_b);
+        for (a, &b) in s.x.iter_mut().zip(s.tmp.iter()) {
+            *a += b;
+        }
+        layernorm(&mut s.x, &lw.ln2_g, &lw.ln2_b);
+    }
+
+    /// Price one live row; pure function of that row's tokens, masks and
+    /// context (never of the batch composition — see the module docs).
+    fn row_forward(&self, batch: &Batch, r: usize, time_scale: f32, s: &mut Scratch) -> f32 {
+        let g = &self.geometry;
+        let (lc, lt, d) = (g.l_clip, g.l_token, g.embed_dim);
+        let row_tokens = lc * lt;
+        let mask = &batch.clip_mask[r * lc..(r + 1) * lc];
+
+        // token embedding + masked token-mean per instruction + position
+        s.x.fill(0.0);
+        for i in 0..lc {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let mut live = 0.0f32;
+            for t in 0..lt {
+                let idx = r * row_tokens + i * lt + t;
+                if batch.tok_mask[idx] == 0.0 {
+                    continue;
+                }
+                let tok = (batch.tokens[idx].max(0) as usize).min(g.vocab_size - 1);
+                for c in 0..d {
+                    s.x[i * d + c] += self.w.embed[tok * d + c];
+                }
+                live += 1.0;
+            }
+            if live > 0.0 {
+                let inv = 1.0 / live;
+                for c in 0..d {
+                    s.x[i * d + c] *= inv;
+                }
+            }
+            for c in 0..d {
+                s.x[i * d + c] += self.w.pos[i * d + c];
+            }
+        }
+
+        for lw in &self.w.layers {
+            self.encoder_layer(lw, mask, s);
+        }
+
+        // masked mean pooling over live instructions
+        s.clip.fill(0.0);
+        let mut live = 0.0f32;
+        for i in 0..lc {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            for c in 0..d {
+                s.clip[c] += s.x[i * d + c];
+            }
+            live += 1.0;
+        }
+        if live > 0.0 {
+            let inv = 1.0 / live;
+            for v in s.clip.iter_mut() {
+                *v *= inv;
+            }
+        }
+
+        // context fusion: embed mean over the M context rows → linear →
+        // GELU
+        s.ctx.fill(0.0);
+        for m in 0..g.m_rows {
+            let tok = (batch.ctx[r * g.m_rows + m].max(0) as usize).min(g.vocab_size - 1);
+            for c in 0..d {
+                s.ctx[c] += self.w.embed[tok * d + c];
+            }
+        }
+        let inv = 1.0 / g.m_rows.max(1) as f32;
+        for v in s.ctx.iter_mut() {
+            *v *= inv;
+        }
+        s.fused[..d].copy_from_slice(&s.clip);
+        vecmat(&s.ctx, &self.w.ctx_w, d, d, &mut s.hidden);
+        for c in 0..d {
+            s.fused[d + c] = gelu(s.hidden[c] + self.w.ctx_b[c]);
+        }
+
+        // regression head
+        vecmat(&s.fused, &self.w.head_w1, 2 * d, d, &mut s.hidden);
+        add_bias(&mut s.hidden, &self.w.head_b1);
+        gelu_slice(&mut s.hidden);
+        let mut out = self.w.head_b2[0];
+        for c in 0..d {
+            out += s.hidden[c] * self.w.head_w2[c];
+        }
+        (softplus(out) * time_scale).max(1e-3)
+    }
+}
+
+impl Predictor for AttentionPredictor {
+    fn geometry(&self) -> &ModelGeometry {
+        &self.geometry
+    }
+
+    fn max_fwd_batch(&self) -> usize {
+        self.geometry.fwd_batch_sizes.last().copied().unwrap_or(1)
+    }
+
+    fn pick_fwd_batch(&self, live: usize) -> usize {
+        for &b in &self.geometry.fwd_batch_sizes {
+            if b >= live {
+                return b;
+            }
+        }
+        self.max_fwd_batch()
+    }
+
+    fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch.live <= batch.b,
+            "live rows {} exceed batch capacity {}",
+            batch.live,
+            batch.b
+        );
+        let g = &self.geometry;
+        let mut scratch = Scratch::new(g.l_clip, g.embed_dim, self.ffn_mult * g.embed_dim);
+        Ok((0..batch.live)
+            .map(|r| self.row_forward(batch, r, time_scale, &mut scratch))
+            .collect())
+    }
+
+    fn fingerprint(&self) -> u64 {
+        // kind + architecture + every weight bit: retraining, reseeding
+        // or editing the weights file must cold-start persisted caches
+        let mut h = super::fingerprint_geometry(&self.geometry);
+        h = super::fingerprint_bytes(h, b"attention-rs");
+        h = super::fingerprint_mix(h, WEIGHTS_VERSION as u64);
+        for v in [self.heads, self.w.layers.len(), self.ffn_mult] {
+            h = super::fingerprint_mix(h, v as u64);
+        }
+        for t in self.tensors() {
+            for &v in t {
+                h = super::fingerprint_mix(h, v.to_bits() as u64);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ClipSample;
+    use crate::predictor::build_batch;
+
+    /// A small geometry so unit tests stay fast in debug builds.
+    fn small_geometry() -> ModelGeometry {
+        ModelGeometry {
+            vocab_size: 64,
+            embed_dim: 16,
+            l_token: 4,
+            l_clip: 8,
+            m_rows: 6,
+            train_batch: 4,
+            fwd_batch_sizes: vec![1, 4, 8],
+        }
+    }
+
+    fn sample(g: &ModelGeometry, fill: u16, len: u16, ctx_fill: u16) -> ClipSample {
+        ClipSample {
+            tokens: (0..len as usize * g.l_token)
+                .map(|i| if i % g.l_token == 0 { 1 } else { fill })
+                .collect(),
+            len,
+            ctx: vec![ctx_fill; g.m_rows],
+            time: 10.0,
+            key: 1,
+            bench: 0,
+        }
+    }
+
+    #[test]
+    fn predictions_positive_finite_and_scaled() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 7);
+        let s = sample(&g, 20, 5, 30);
+        let b = build_batch(&[&s], 1, &g);
+        let out = p.forward(&b, 50.0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_finite() && out[0] > 0.0);
+        let out2 = p.forward(&b, 100.0).unwrap();
+        assert!((out2[0] - 2.0 * out[0]).abs() / out[0] < 1e-4, "linear in time_scale");
+    }
+
+    #[test]
+    fn batch_and_padding_invariance_is_exact() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 11);
+        let samples: Vec<ClipSample> =
+            (0..5).map(|i| sample(&g, 10 + i as u16, 2 + i as u16, 40 + i as u16)).collect();
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let full = p.forward(&build_batch(&refs, 8, &g), 40.0).unwrap();
+        assert_eq!(full.len(), 5);
+        for (i, s) in samples.iter().enumerate() {
+            let one = p.forward(&build_batch(&[s], 1, &g), 40.0).unwrap();
+            assert_eq!(one[0].to_bits(), full[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn tokens_and_context_both_matter() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 3);
+        let base = p
+            .forward(&build_batch(&[&sample(&g, 20, 6, 30)], 1, &g), 30.0)
+            .unwrap()[0];
+        let diff_tok = p
+            .forward(&build_batch(&[&sample(&g, 21, 6, 30)], 1, &g), 30.0)
+            .unwrap()[0];
+        let diff_ctx = p
+            .forward(&build_batch(&[&sample(&g, 20, 6, 31)], 1, &g), 30.0)
+            .unwrap()[0];
+        assert_ne!(base.to_bits(), diff_tok.to_bits());
+        assert_ne!(base.to_bits(), diff_ctx.to_bits());
+    }
+
+    #[test]
+    fn empty_clip_is_well_defined() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 5);
+        let s = sample(&g, 0, 0, 12);
+        let b = build_batch(&[&s], 1, &g);
+        let out = p.forward(&b, 40.0).unwrap();
+        assert!(out[0].is_finite() && out[0] > 0.0, "no NaN from a fully-masked clip");
+    }
+
+    #[test]
+    fn seeds_change_predictions_and_fingerprints() {
+        let g = small_geometry();
+        let a = AttentionPredictor::seeded(g.clone(), 1);
+        let b = AttentionPredictor::seeded(g.clone(), 2);
+        let c = AttentionPredictor::seeded(g.clone(), 1);
+        assert_eq!(a.fingerprint(), c.fingerprint(), "same seed, same identity");
+        assert_ne!(a.fingerprint(), b.fingerprint(), "seed is part of the identity");
+        let s = sample(&g, 9, 4, 21);
+        let batch = build_batch(&[&s], 1, &g);
+        let pa = a.forward(&batch, 40.0).unwrap()[0];
+        let pb = b.forward(&batch, 40.0).unwrap()[0];
+        let pc = c.forward(&batch, 40.0).unwrap()[0];
+        assert_eq!(pa.to_bits(), pc.to_bits());
+        assert_ne!(pa.to_bits(), pb.to_bits());
+    }
+
+    #[test]
+    fn fingerprint_distinct_from_native_backend() {
+        let p = AttentionPredictor::with_defaults();
+        let n = crate::runtime::NativePredictor::with_defaults();
+        assert_ne!(
+            Predictor::fingerprint(&p),
+            Predictor::fingerprint(&n),
+            "persisted caches must cold-start across backends"
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_identity() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 99);
+        let dir = std::env::temp_dir().join("capsim_attn_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("attention.bin");
+        p.save(&path).unwrap();
+        let q = AttentionPredictor::load(&path).unwrap();
+        assert_eq!(q.seed(), 99);
+        assert_eq!(q.param_count(), p.param_count());
+        assert_eq!(Predictor::fingerprint(&q), Predictor::fingerprint(&p));
+        let s = sample(&g, 17, 6, 8);
+        let batch = build_batch(&[&s], 1, &g);
+        let a = p.forward(&batch, 40.0).unwrap()[0];
+        let b = q.forward(&batch, 40.0).unwrap()[0];
+        assert_eq!(a.to_bits(), b.to_bits(), "loaded weights predict identically");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_refuses_garbage_and_truncation() {
+        let dir = std::env::temp_dir().join("capsim_attn_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("attention.bin");
+        std::fs::write(&path, b"not a weights file").unwrap();
+        assert!(AttentionPredictor::load(&path).is_err());
+        // valid header, truncated body
+        let p = AttentionPredictor::seeded(small_geometry(), 1);
+        p.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(AttentionPredictor::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_refuses_corrupt_batch_sizes() {
+        // the weight count is independent of the fwd batch list, so a
+        // flipped byte there passes the count check; the dimension
+        // guard must still refuse it (a 0 would panic the accumulator,
+        // a huge value would over-allocate batches)
+        let dir = std::env::temp_dir().join("capsim_attn_bad_fwd");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("attention.bin");
+        let p = AttentionPredictor::seeded(small_geometry(), 1);
+        for corrupt in [0u32, u32::MAX] {
+            p.save(&path).unwrap();
+            let mut bytes = std::fs::read(&path).unwrap();
+            // header layout: magic, version, six geometry u32s, n_fwd,
+            // then the fwd batch sizes — first entry at byte 36
+            bytes[36..40].copy_from_slice(&corrupt.to_le_bytes());
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(AttentionPredictor::load(&path).is_err(), "fwd size {corrupt}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn default_geometry_matches_dataset_constants() {
+        let p = AttentionPredictor::with_defaults();
+        let g = p.geometry();
+        assert_eq!(g.l_token, crate::coordinator::golden::L_TOKEN);
+        assert_eq!(g.l_clip, crate::coordinator::golden::L_CLIP);
+        assert_eq!(g.m_rows, crate::context::M_ROWS);
+        assert!(g.vocab_size >= crate::tokenizer::vocab::VOCAB_USED as usize);
+        assert_eq!(g.embed_dim % DEFAULT_HEADS, 0);
+    }
+}

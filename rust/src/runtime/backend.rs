@@ -1,0 +1,269 @@
+//! The runtime backend registry: one place that knows every predictor
+//! backend, how to name it, and how to construct it.
+//!
+//! Before this module, backend choice was an ad-hoc `--native` boolean
+//! threaded by hand through the CLI and every bench. Now a single
+//! [`Backend`] value lives in [`PipelineConfig`](crate::config::PipelineConfig)
+//! (TOML `pipeline.backend`, CLI `--backend`, with `--native` kept as a
+//! deprecating alias) and every construction site — `capsim compare`, the
+//! suite engines, the benches, the equivalence tests — resolves it here.
+//!
+//! | backend     | engine                  | dependencies            | deterministic |
+//! |-------------|-------------------------|-------------------------|---------------|
+//! | `pjrt`      | AOT-compiled XLA (HLO)  | `make artifacts` + PJRT | per-build     |
+//! | `native`    | analytic row hash       | none                    | bit-exact     |
+//! | `attention` | pure-Rust transformer   | none                    | bit-exact     |
+//!
+//! `native` and `attention` are **row-local** (a prediction depends only
+//! on its own batch row), which is what makes the engine-equivalence
+//! suite's bit-identical assertions meaningful; `attention` is the real
+//! model architecture and therefore the backend that puts a realistic
+//! inference cost into the measured loop (Fig. 7).
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::PipelineConfig;
+use crate::dataset::Dataset;
+use crate::predictor::{train, TrainParams};
+
+use super::{AttentionPredictor, NativePredictor, Predictor, Runtime};
+
+/// File name of the persisted attention weights inside the artifacts
+/// directory (see [`AttentionPredictor::save`]).
+pub const ATTENTION_WEIGHTS_FILE: &str = "attention.bin";
+
+/// A predictor backend selector; see the module docs for the matrix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled attention model executed through PJRT (needs
+    /// `make artifacts`).
+    #[default]
+    Pjrt,
+    /// Dependency-free analytic stand-in (exact row-local hash cost).
+    Native,
+    /// Dependency-free pure-Rust attention model
+    /// ([`AttentionPredictor`]).
+    Attention,
+}
+
+impl Backend {
+    /// Every registered backend, registry order.
+    pub const ALL: [Backend; 3] = [Backend::Pjrt, Backend::Native, Backend::Attention];
+
+    /// The CLI/TOML name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::Attention => "attention",
+        }
+    }
+
+    /// Whether the backend needs the AOT artifacts directory to exist.
+    pub fn requires_artifacts(self) -> bool {
+        matches!(self, Backend::Pjrt)
+    }
+
+    /// Construct a forward-only predictor.
+    ///
+    /// * `Native` — the analytic stand-in, no inputs beyond the default
+    ///   geometry;
+    /// * `Attention` — loads `artifacts/attention.bin` when present
+    ///   (versioned weights file), else seeds weights deterministically
+    ///   from `cfg.seed`;
+    /// * `Pjrt` — loads the AOT artifacts and initializes (untrained)
+    ///   parameters from `cfg.seed`; use [`Backend::build_trained`] for
+    ///   a trained model.
+    pub fn build_forward(self, cfg: &PipelineConfig) -> Result<Box<dyn Predictor>> {
+        match self {
+            Backend::Native => Ok(Box::new(NativePredictor::with_defaults())),
+            Backend::Attention => {
+                let path = Path::new(&cfg.artifacts).join(ATTENTION_WEIGHTS_FILE);
+                if path.is_file() {
+                    let p = AttentionPredictor::load(&path)?;
+                    // the dataset is sliced/tokenized with the default
+                    // geometry constants, so a weights file from another
+                    // shape must be refused, not silently preferred
+                    // (mirrors the PJRT manifest re-validation)
+                    let (g, want) = (p.geometry(), super::default_geometry());
+                    if g.l_token != want.l_token
+                        || g.l_clip != want.l_clip
+                        || g.m_rows != want.m_rows
+                        || g.vocab_size < want.vocab_size
+                    {
+                        return Err(anyhow!(
+                            "{path:?}: weights geometry (l_token {}, l_clip {}, m {}, vocab {}) \
+                             does not match the dataset constants (l_token {}, l_clip {}, m {}, \
+                             vocab >= {})",
+                            g.l_token,
+                            g.l_clip,
+                            g.m_rows,
+                            g.vocab_size,
+                            want.l_token,
+                            want.l_clip,
+                            want.m_rows,
+                            want.vocab_size
+                        ));
+                    }
+                    Ok(Box::new(p))
+                } else {
+                    let g = super::default_geometry();
+                    Ok(Box::new(AttentionPredictor::seeded(g, cfg.seed)))
+                }
+            }
+            Backend::Pjrt => {
+                let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+                let mut model = rt.load_variant("capsim")?;
+                model.init_params(cfg.seed as u32)?;
+                Ok(Box::new(model))
+            }
+        }
+    }
+
+    /// Construct a predictor ready for end-to-end comparison runs,
+    /// together with its `time_scale`.
+    ///
+    /// For `Pjrt` this trains `variant` for `steps` SGD steps on a
+    /// Method-1 split of `ds` and returns the fitted time scale; the
+    /// training-free backends return immediately with the dataset mean
+    /// as the scale (the same convention `--native` used).
+    pub fn build_trained(
+        self,
+        cfg: &PipelineConfig,
+        ds: &Dataset,
+        steps: usize,
+        variant: &str,
+    ) -> Result<(Box<dyn Predictor>, f32)> {
+        match self {
+            Backend::Pjrt => {
+                let rt = Runtime::load(Path::new(&cfg.artifacts))?;
+                let mut model = rt.load_variant(variant)?;
+                model.init_params(cfg.seed as u32)?;
+                let (tr, va, _) = ds.split(cfg.seed);
+                // the config seed drives the minibatch shuffle (so
+                // pipeline.seed reproduces a training run end-to-end);
+                // patience matches the bench driver's long-run setting
+                let params = TrainParams {
+                    steps,
+                    lr: cfg.lr,
+                    seed: cfg.seed,
+                    patience: 10_000,
+                    ..Default::default()
+                };
+                let log = train(&mut model, ds, &tr, &va, &params)?;
+                let ts = log.time_scale;
+                let model: Box<dyn Predictor> = Box::new(model);
+                Ok((model, ts))
+            }
+            _ => Ok((self.build_forward(cfg)?, ds.mean_time() as f32)),
+        }
+    }
+}
+
+impl FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Backend> {
+        for b in Backend::ALL {
+            if s == b.name() {
+                return Ok(b);
+            }
+        }
+        Err(anyhow!("unknown backend {s:?} (expected one of: pjrt, native, attention)"))
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A config whose artifacts directory is guaranteed empty, so the
+    /// seeded-weights path is exercised even on a tree where someone
+    /// saved a real `artifacts/attention.bin`.
+    fn cfg_without_artifacts() -> PipelineConfig {
+        let mut cfg = PipelineConfig::default();
+        cfg.artifacts = std::env::temp_dir()
+            .join("capsim-no-artifacts")
+            .to_str()
+            .unwrap()
+            .to_string();
+        cfg
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for b in Backend::ALL {
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b);
+        }
+        assert!("hlo".parse::<Backend>().is_err());
+        assert!("Native".parse::<Backend>().is_err(), "names are case-sensitive");
+    }
+
+    #[test]
+    fn default_is_pjrt() {
+        assert_eq!(Backend::default(), Backend::Pjrt);
+        assert!(Backend::Pjrt.requires_artifacts());
+        assert!(!Backend::Native.requires_artifacts());
+        assert!(!Backend::Attention.requires_artifacts());
+    }
+
+    #[test]
+    fn native_and_attention_build_without_artifacts() {
+        let cfg = cfg_without_artifacts();
+        let n = Backend::Native.build_forward(&cfg).unwrap();
+        let a = Backend::Attention.build_forward(&cfg).unwrap();
+        assert_eq!(n.geometry().l_clip, a.geometry().l_clip);
+        assert_ne!(n.fingerprint(), a.fingerprint(), "backends must never share a cache key");
+    }
+
+    #[test]
+    fn attention_build_is_deterministic_per_seed() {
+        let mut cfg = cfg_without_artifacts();
+        let a = Backend::Attention.build_forward(&cfg).unwrap();
+        let b = Backend::Attention.build_forward(&cfg).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        cfg.seed = 77;
+        let c = Backend::Attention.build_forward(&cfg).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed changes the identity");
+    }
+
+    #[test]
+    fn attention_build_refuses_a_mismatched_geometry_file() {
+        let dir = std::env::temp_dir().join("capsim_backend_bad_geometry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(ATTENTION_WEIGHTS_FILE);
+        let mut g = crate::runtime::default_geometry();
+        g.l_clip = 8; // not the dataset's clip capacity
+        AttentionPredictor::seeded(g, 1).save(&path).unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.artifacts = dir.to_str().unwrap().to_string();
+        let err = Backend::Attention.build_forward(&cfg).unwrap_err();
+        assert!(err.to_string().contains("does not match the dataset constants"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn attention_build_prefers_a_weights_file() {
+        let dir = std::env::temp_dir().join("capsim_backend_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(ATTENTION_WEIGHTS_FILE);
+        let saved = AttentionPredictor::seeded(crate::runtime::default_geometry(), 1234);
+        saved.save(&path).unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.artifacts = dir.to_str().unwrap().to_string();
+        cfg.seed = 42; // different seed: the file must win
+        let built = Backend::Attention.build_forward(&cfg).unwrap();
+        assert_eq!(built.fingerprint(), Predictor::fingerprint(&saved));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,31 +1,61 @@
 //! The predictor runtime: backends that turn padded clip [`Batch`]es into
-//! predicted clip times.
+//! predicted clip times, behind one [`Predictor`] trait and one
+//! [`Backend`] registry.
 //!
-//! Two backends implement the [`Predictor`] trait:
+//! ## Backend matrix
 //!
-//! * [`ModelHandle`] — the PJRT path: loads the AOT-compiled HLO-text
-//!   artifacts produced by `python/compile/aot.py` and executes them from
-//!   the Rust hot path. Python never runs here — the artifacts directory
-//!   (HLO text + `manifest.json`) is the entire contract between the
-//!   layers (see DESIGN.md §4 and `/opt/xla-example/load_hlo` for the
-//!   interchange rationale: HLO *text*, not serialized protos);
-//! * [`NativePredictor`] — a dependency-free analytic backend whose
-//!   predictions are exact row-local functions of the batch row; used by
-//!   the engine equivalence tests and as the `--native` fallback when no
-//!   artifacts are built.
+//! | backend | type | dependencies | determinism | intended use |
+//! |---|---|---|---|---|
+//! | [`ModelHandle`] (`pjrt`) | AOT-compiled attention model (HLO text + PJRT C API) | `make artifacts` + an XLA runtime | bit-stable per build; predictions are batch-composition sensitive to ≈1e-3 | trained-accuracy experiments (Figs. 8–11) |
+//! | [`NativePredictor`] (`native`) | analytic row-hash stand-in | none | **row-local and bit-exact** across batches/threads/caches | engine equivalence tests, clean-tree smoke runs |
+//! | [`AttentionPredictor`] (`attention`) | pure-Rust transformer (token embedding → multi-head self-attention → pooling + context fusion → regression head) | none | **row-local and bit-exact** across batches/threads/caches | realistic inference cost in the measured loop (Fig. 7), CI, anywhere PJRT artifacts are unavailable |
 //!
-//! Everything above this layer (`predictor::eval`, `coordinator`) is
-//! generic over [`Predictor`], so backends are interchangeable.
+//! Selection is a single [`Backend`] value carried by
+//! [`PipelineConfig`](crate::config::PipelineConfig) (`pipeline.backend`
+//! TOML key, `--backend` CLI flag; `--native` survives as a deprecating
+//! alias) and resolved through [`Backend::build_forward`] /
+//! [`Backend::build_trained`]. Everything above this layer
+//! (`predictor::eval`, `coordinator`) is generic over [`Predictor`], so
+//! backends swap freely.
+//!
+//! The PJRT path loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path —
+//! Python never runs here; the artifacts directory (HLO text +
+//! `manifest.json`) is the entire contract between the layers (see
+//! DESIGN.md §4). The `attention` backend is the same architecture
+//! executed by the scalar kernels in [`tensor`], one batch row at a
+//! time, which is what upgrades "padding invariance ≈ 1e-3" to
+//! "padding invariance exact".
 
+pub mod attention;
+pub mod backend;
 pub mod manifest;
 pub mod model;
 pub mod native;
+pub mod tensor;
 
+pub use attention::AttentionPredictor;
+pub use backend::{Backend, ATTENTION_WEIGHTS_FILE};
 pub use manifest::{Manifest, ModelGeometry, VariantManifest};
 pub use model::{Batch, ModelHandle, Runtime};
 pub use native::NativePredictor;
 
 use anyhow::Result;
+
+/// The default model geometry: the `model_config.json` constants every
+/// dependency-free backend shares (and `coordinator::golden` locks the
+/// dataset to).
+pub fn default_geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 512,
+        embed_dim: 64,
+        l_token: crate::coordinator::golden::L_TOKEN,
+        l_clip: crate::coordinator::golden::L_CLIP,
+        m_rows: crate::context::M_ROWS,
+        train_batch: 32,
+        fwd_batch_sizes: vec![1, 8, 32, 128],
+    }
+}
 
 /// One FNV-1a step — the mixing primitive of backend fingerprints.
 pub fn fingerprint_mix(h: u64, v: u64) -> u64 {
@@ -56,7 +86,8 @@ pub fn fingerprint_geometry(g: &ModelGeometry) -> u64 {
 /// A forward-only predictor backend.
 ///
 /// Object-safe on purpose: engine code and benches hold `&dyn Predictor` /
-/// `Box<dyn Predictor>` so the PJRT and native backends swap freely.
+/// `Box<dyn Predictor>` so the PJRT, native and attention backends swap
+/// freely.
 pub trait Predictor {
     /// Model geometry (batch shapes the backend expects).
     fn geometry(&self) -> &ModelGeometry;
@@ -76,7 +107,7 @@ pub trait Predictor {
     /// keyed by `fingerprint + time_scale`). The default hashes the
     /// geometry; backends override it to mix in everything else that
     /// changes predictions — backend kind, variant name, parameter
-    /// shape.
+    /// shape, resident weights.
     fn fingerprint(&self) -> u64 {
         fingerprint_geometry(self.geometry())
     }

@@ -4,15 +4,16 @@
 //! and an XLA runtime; this backend needs neither. It prices a clip with a
 //! deterministic, **row-local** analytic function of the batch row — every
 //! prediction depends only on that row's tokens and context, never on the
-//! batch composition — which gives it two properties the attention model
-//! only approximates:
+//! batch composition — which gives it two properties the compiled PJRT
+//! model only approximates (the pure-Rust [`super::AttentionPredictor`]
+//! shares both exactly):
 //!
 //! * **padding/batch invariance is exact**: a clip predicts the same value
 //!   in a batch of 1 or 256, cold or warm — which is what lets the engine
 //!   equivalence tests assert *bit-identical* results across thread counts
 //!   and cache states;
-//! * **no load-time dependencies**: `capsim compare --native` and the
-//!   Fig.-7 bench work on a clean tree with no `make artifacts`.
+//! * **no load-time dependencies**: `capsim compare --backend native` and
+//!   the Fig.-7 bench work on a clean tree with no `make artifacts`.
 //!
 //! The analytic cost is a stand-in, not a trained model: each instruction
 //! contributes a hash-derived pseudo-latency, the clip's register context
@@ -39,15 +40,7 @@ impl NativePredictor {
     /// Geometry matching the AOT `model_config.json` defaults (and the
     /// `coordinator::golden` dataset constants).
     pub fn with_defaults() -> NativePredictor {
-        NativePredictor::new(ModelGeometry {
-            vocab_size: 512,
-            embed_dim: 64,
-            l_token: crate::coordinator::golden::L_TOKEN,
-            l_clip: crate::coordinator::golden::L_CLIP,
-            m_rows: crate::context::M_ROWS,
-            train_batch: 32,
-            fwd_batch_sizes: vec![1, 8, 32, 128],
-        })
+        NativePredictor::new(super::default_geometry())
     }
 
     /// Price one live row. Pure function of the row's tokens + context.

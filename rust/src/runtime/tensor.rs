@@ -1,0 +1,257 @@
+//! Minimal f32 tensor kernels for the pure-Rust attention backend.
+//!
+//! No BLAS, no SIMD intrinsics, no dependencies: plain row-major loops in
+//! a fixed evaluation order, so every result is a deterministic function
+//! of the inputs — bit-identical across runs, thread counts and batch
+//! compositions (the backend calls these per clip row, never across
+//! rows). Rust never applies fast-math, so `opt-level` does not change
+//! the produced bits either.
+//!
+//! Numerical contracts the property tests pin down
+//! (`tests/prop_attention.rs`):
+//!
+//! * [`masked_softmax`] rows with at least one live column sum to 1 (up
+//!   to rounding) and contain no NaN/inf;
+//! * fully-masked rows are **well-defined**: all-zero, not NaN (the
+//!   attention layer reads them as "attend to nothing");
+//! * [`layernorm`] of an all-zero vector is the bias vector (variance 0
+//!   is regularized by `EPS`, never divided through directly).
+
+/// Variance regularizer for [`layernorm`].
+const EPS: f32 = 1e-5;
+
+/// Row-major matrix product: `out[m, n] = a[m, k] · b[k, n]`.
+///
+/// `out` is fully overwritten. The k-loop is innermost and accumulates
+/// into an f32 register in index order — the canonical scalar schedule.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "lhs shape");
+    assert_eq!(b.len(), k * n, "rhs shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Vector-matrix product: `out[n] = x[k] · w[k, n]` (a 1-row [`matmul`]).
+pub fn vecmat(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    matmul(x, w, 1, k, n, out);
+}
+
+/// Add a bias vector to every length-`n` row of `x`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    assert!(n > 0 && x.len() % n == 0, "rows must be bias-sized");
+    for row in x.chunks_exact_mut(n) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// In-place masked softmax over each length-`cols` row of `scores`.
+///
+/// `mask[j] != 0.0` marks column `j` live; the same mask applies to every
+/// row (the attention use: one key-padding mask shared by all queries).
+/// Masked columns get probability exactly 0.0. A row whose mask is all
+/// zero becomes all zeros — a defined, NaN-free "attend to nothing" row —
+/// rather than the NaN a naive `exp / sum` would produce.
+pub fn masked_softmax(scores: &mut [f32], rows: usize, cols: usize, mask: &[f32]) {
+    assert_eq!(scores.len(), rows * cols, "scores shape");
+    assert_eq!(mask.len(), cols, "mask shape");
+    for r in 0..rows {
+        let row = &mut scores[r * cols..(r + 1) * cols];
+        // max over live columns for the usual exp-shift stability
+        let mut max = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if mask[j] != 0.0 && v > max {
+                max = v;
+            }
+        }
+        if max == f32::NEG_INFINITY {
+            row.fill(0.0);
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for (j, v) in row.iter_mut().enumerate() {
+            if mask[j] != 0.0 {
+                *v = (*v - max).exp();
+                sum += *v;
+            } else {
+                *v = 0.0;
+            }
+        }
+        // sum >= 1 because the max column contributes exp(0) = 1
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place layer normalization of each length-`gamma.len()` row of `x`:
+/// `x = (x - mean) / sqrt(var + EPS) * gamma + beta`.
+pub fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32]) {
+    let d = gamma.len();
+    assert_eq!(beta.len(), d, "gamma/beta shape");
+    assert!(d > 0 && x.len() % d == 0, "rows must be d-sized");
+    for row in x.chunks_exact_mut(d) {
+        let mut mean = 0.0f32;
+        for &v in row.iter() {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in row.iter() {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+}
+
+/// GELU activation (tanh approximation, as in the original BERT/GPT
+/// formulation): `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
+pub fn gelu(x: f32) -> f32 {
+    // sqrt(2/pi), to f32 precision
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Apply [`gelu`] element-wise.
+pub fn gelu_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// Numerically stable softplus `ln(1 + e^x)`: strictly positive, smooth,
+/// and asymptotically `x` for large `x` (no overflow).
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = [1.5, -2.0, 0.25, 7.0, 3.0, -1.0];
+        let id = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let mut out = [0.0f32; 6];
+        matmul(&a, &id, 2, 3, 3, &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn vecmat_is_one_row_matmul() {
+        let x = [1.0, 2.0, 3.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // [3, 2]
+        let mut out = [0.0f32; 2];
+        vecmat(&x, &w, 3, 2, &mut out);
+        assert_eq!(out, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn add_bias_every_row() {
+        let mut x = [1.0, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0]);
+        assert_eq!(x, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn softmax_unmasked_row_sums_to_one() {
+        let mut s = [1.0f32, 2.0, 3.0, 4.0];
+        masked_softmax(&mut s, 1, 4, &[1.0; 4]);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // monotone inputs stay monotone
+        assert!(s[0] < s[1] && s[1] < s[2] && s[2] < s[3]);
+    }
+
+    #[test]
+    fn softmax_masked_columns_are_exactly_zero() {
+        let mut s = [10.0f32, 999.0, -3.0];
+        masked_softmax(&mut s, 1, 3, &[1.0, 0.0, 1.0]);
+        assert_eq!(s[1], 0.0, "masked column contributes nothing");
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_fully_masked_row_is_zero_not_nan() {
+        let mut s = [5.0f32, -2.0, 0.5];
+        masked_softmax(&mut s, 1, 3, &[0.0; 3]);
+        assert_eq!(s, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_finite_at_extremes() {
+        let mut a = [1e4f32, 1e4 + 1.0];
+        masked_softmax(&mut a, 1, 2, &[1.0, 1.0]);
+        assert!(a.iter().all(|v| v.is_finite()));
+        let mut b = [0.0f32, 1.0];
+        masked_softmax(&mut b, 1, 2, &[1.0, 1.0]);
+        assert!((a[0] - b[0]).abs() < 1e-6 && (a[1] - b[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_normalizes_then_scales() {
+        let mut x = [1.0f32, 2.0, 3.0, 4.0];
+        layernorm(&mut x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn layernorm_zero_vector_yields_beta() {
+        let mut x = [0.0f32; 3];
+        layernorm(&mut x, &[2.0; 3], &[0.5, -0.5, 1.5]);
+        assert_eq!(x, [0.5, -0.5, 1.5]);
+    }
+
+    #[test]
+    fn gelu_fixed_points_and_sign() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3, "large x passes through");
+        assert!(gelu(-10.0).abs() < 1e-3, "large negative x gates to 0");
+        assert!(gelu(1.0) > 0.8 && gelu(1.0) < 0.9);
+    }
+
+    #[test]
+    fn softplus_positive_and_asymptotic() {
+        assert!(softplus(-50.0) > 0.0);
+        assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert_eq!(softplus(50.0), 50.0);
+        assert!(softplus(5.0) > 5.0 && softplus(5.0) < 5.01);
+    }
+}

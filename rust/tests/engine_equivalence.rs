@@ -12,17 +12,23 @@
 //!   including a warm start restored from the persisted on-disk cache,
 //!   which refuses mismatched fingerprint/time_scale keys;
 //! * cross-benchmark dedup never predicts more than the per-benchmark
-//!   baseline, and strictly fewer once workloads share clips.
+//!   baseline, and strictly fewer once workloads share clips;
+//! * the pure-Rust **attention backend** (`--backend attention`) passes
+//!   the same threads {1, 2, 8} × cold/warm-cache matrix bit-identically
+//!   — a real transformer forward pass in the measured loop, not just
+//!   the analytic stand-in — and its persisted caches never warm-start
+//!   another backend (fingerprints differ).
 //!
-//! Uses the native analytic backend, whose row-local predictions make
-//! "bit-identical" a meaningful contract (no batch-composition effects).
+//! Uses the row-local backends (native analytic + pure-Rust attention),
+//! whose per-row predictions make "bit-identical" a meaningful contract
+//! (no batch-composition effects).
 
 use capsim::config::PipelineConfig;
 use capsim::coordinator::{
     capsim_mode, capsim_suite, gem5_mode, gem5_suite_streamed, BenchProfile, ClipCache,
     SuiteBatching,
 };
-use capsim::runtime::{NativePredictor, Predictor};
+use capsim::runtime::{Backend, NativePredictor, Predictor};
 use capsim::simpoint::{choose_simpoints, profile};
 use capsim::workloads::{suite, Benchmark, Scale};
 
@@ -370,5 +376,128 @@ fn persisted_cache_warm_start_bit_identical_and_key_checked() {
     std::fs::write(&path, b"garbage").unwrap();
     let (corrupt, warm) = ClipCache::load_or_cold(&path, fp, TIME_SCALE);
     assert!(!warm && corrupt.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A subset of the Table-II suite: the attention backend is a real
+/// transformer forward pass, so the matrix tests run it over enough
+/// benchmarks to exercise cross-benchmark dedup without turning the
+/// debug-build test suite into a bench.
+fn subset_profiles(cfg: &PipelineConfig, idx: &[usize]) -> Vec<BenchProfile> {
+    let benches = suite(Scale::Test);
+    idx.iter().map(|&i| profile_bench(&benches[i], cfg)).collect()
+}
+
+/// Point the registry at a guaranteed-empty artifacts directory so the
+/// attention backend always takes the seeded-weights path, even on a
+/// tree where a real `artifacts/attention.bin` was saved.
+fn without_artifacts(mut cfg: PipelineConfig) -> PipelineConfig {
+    cfg.artifacts =
+        std::env::temp_dir().join("capsim-no-artifacts").to_str().unwrap().to_string();
+    cfg
+}
+
+#[test]
+fn attention_backend_streamed_matrix_bit_identical_threads_and_cache() {
+    let mut cfg = without_artifacts(test_cfg());
+    // includes a duplicated benchmark so cross-benchmark dedup engages
+    let profiles = subset_profiles(&cfg, &[0, 1, 5, 5, 9]);
+    let model = Backend::Attention.build_forward(&cfg).unwrap();
+
+    // reference: the sequential phase-barrier path at 1 thread
+    cfg.threads = 1;
+    let base = capsim_suite(
+        &profiles,
+        &cfg,
+        model.as_ref(),
+        TIME_SCALE,
+        &ClipCache::new(),
+        SuiteBatching::CrossBench,
+    )
+    .unwrap();
+    assert!(base.clips_unique > 0);
+
+    for threads in [1usize, 2, 8] {
+        cfg.threads = threads;
+        let cache = ClipCache::new();
+        let cold = capsim_suite(
+            &profiles,
+            &cfg,
+            model.as_ref(),
+            TIME_SCALE,
+            &cache,
+            SuiteBatching::Streamed,
+        )
+        .unwrap();
+        let warm = capsim_suite(
+            &profiles,
+            &cfg,
+            model.as_ref(),
+            TIME_SCALE,
+            &cache,
+            SuiteBatching::Streamed,
+        )
+        .unwrap();
+        assert_eq!(warm.clips_unique, 0, "warm run predicts nothing new at {threads}");
+        for (which, run) in [("cold", &cold), ("warm", &warm)] {
+            assert_eq!(base.runs.len(), run.runs.len());
+            for ((ra, rb), p) in base.runs.iter().zip(&run.runs).zip(&profiles) {
+                assert_eq!(
+                    f64_bits(&ra.interval_cycles),
+                    f64_bits(&rb.interval_cycles),
+                    "{}: attention {which} run diverged at {threads} threads",
+                    p.name
+                );
+                assert_eq!(
+                    ra.total_cycles.to_bits(),
+                    rb.total_cycles.to_bits(),
+                    "{} ({which}, {threads} threads)",
+                    p.name
+                );
+                assert_eq!(ra.clips_total, rb.clips_total, "{}", p.name);
+            }
+        }
+        assert_eq!(base.clips_unique, cold.clips_unique, "threads = {threads}");
+        assert_eq!(base.clips_total, cold.clips_total, "threads = {threads}");
+    }
+}
+
+#[test]
+fn attention_caches_never_cross_backends_or_seeds() {
+    let cfg = without_artifacts(test_cfg());
+    let profiles = subset_profiles(&cfg, &[2]);
+    let attention = Backend::Attention.build_forward(&cfg).unwrap();
+    let native = NativePredictor::with_defaults();
+    assert_ne!(attention.fingerprint(), native.fingerprint());
+
+    let dir = std::env::temp_dir().join("capsim_attn_cache_keys");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("clip_cache.bin");
+
+    let cache = ClipCache::new();
+    let run = capsim_suite(
+        &profiles,
+        &cfg,
+        attention.as_ref(),
+        TIME_SCALE,
+        &cache,
+        SuiteBatching::Streamed,
+    )
+    .unwrap();
+    assert!(run.clips_unique > 0);
+    cache.save(&path, attention.fingerprint(), TIME_SCALE).unwrap();
+
+    // the native backend must refuse the attention-keyed file…
+    let (c, warm) = ClipCache::load_or_cold(&path, native.fingerprint(), TIME_SCALE);
+    assert!(!warm && c.is_empty(), "native must cold-start on an attention cache");
+    // …and so must an attention model with different weights
+    let mut reseeded = cfg.clone();
+    reseeded.seed = cfg.seed + 1;
+    let other = Backend::Attention.build_forward(&reseeded).unwrap();
+    let (c, warm) = ClipCache::load_or_cold(&path, other.fingerprint(), TIME_SCALE);
+    assert!(!warm && c.is_empty(), "reseeded weights must cold-start");
+    // the saving model itself warm-starts
+    let (c, warm) = ClipCache::load_or_cold(&path, attention.fingerprint(), TIME_SCALE);
+    assert!(warm && c.len() == run.clips_unique);
     let _ = std::fs::remove_file(&path);
 }

@@ -182,10 +182,9 @@ fn main() -> anyhow::Result<()> {
         let wst = warm_cache.stats();
         println!(
             "persistent cache [{be}]: {} clips saved; warm start loaded={warm_loaded}, \
-             hit rate {:.1}% ({} hits), {} new clips predicted (cold run predicted {})",
+             hit rate {}, {} new clips predicted (cold run predicted {})",
             cold_cache.len(),
-            100.0 * wst.hit_rate(),
-            wst.hits,
+            wst.hit_line(),
             warm.clips_unique,
             cold.clips_unique,
         );

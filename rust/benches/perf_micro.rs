@@ -1,24 +1,54 @@
-//! §Perf microbenchmarks — the per-layer hot paths (DESIGN.md §8):
-//! functional-simulator and O3 throughput, tokenizer throughput, SimPoint
-//! k-means, PJRT inference latency per batch size, and AOT train-step time.
-//! Criterion is not in the offline crate set; `util::timer::bench_fn`
-//! provides the warmup + repeat harness.
+//! §Kernel regression harness — the attention-backend hot kernels and
+//! the end-to-end forward, timed and emitted as machine-readable
+//! `BENCH_kernels.json` so future PRs diff a perf *trajectory* instead
+//! of eyeballing log lines (the CI `perf-smoke` job runs this on small
+//! shapes and uploads the JSON as an artifact).
+//!
+//! Sections:
+//!
+//! * **kernels** — naive scalar matmul vs the packed/blocked
+//!   [`PackedLinear`] at the model's QKV shapes (single clip and a
+//!   64-clip batch), plus masked-softmax and layernorm throughput;
+//! * **forward** — end-to-end attention forward at batch {1, 8, 64}:
+//!   the PR-3 row-by-row scalar reference vs the batched
+//!   packed/workspace production path, reported as ns/clip with the
+//!   speedup (the Fig.-7 predict-stage cost). The two paths are
+//!   asserted bit-identical before they are timed;
+//! * **pipeline** — functional-simulator, O3 and tokenizer throughput
+//!   for context (the non-predictor hot loops).
+//!
+//! Budget per measurement: `CAPSIM_BENCH_MS` (default 1500 ms). Output
+//! path: `CAPSIM_BENCH_OUT` (default `BENCH_kernels.json`). Everything
+//! here is dependency-free — no PJRT artifacts required.
 
-#[path = "common.rs"]
-mod common;
-
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-use capsim::config::PipelineConfig;
 use capsim::dataset::ClipSample;
 use capsim::functional::AtomicCpu;
 use capsim::o3::{O3Config, O3Core};
 use capsim::predictor::build_batch;
-use capsim::simpoint::kmeans;
+use capsim::runtime::attention::DEFAULT_FFN_MULT;
+use capsim::runtime::tensor::{layernorm, masked_softmax, matmul, PackedLinear};
+use capsim::runtime::{default_geometry, AttentionPredictor, Predictor, Workspace};
 use capsim::tokenizer::standardize::tokenize_clip;
-use capsim::util::timer::bench_fn;
+use capsim::util::json::Json;
+use capsim::util::timer::{bench_fn, BenchResult};
 use capsim::util::Rng;
 use capsim::workloads::{suite, Scale};
+
+fn entry(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("iters", Json::num(r.iters as f64)),
+        ("mean_ns", Json::num(r.mean_s * 1e9)),
+        ("min_ns", Json::num(r.min_s * 1e9)),
+        ("max_ns", Json::num(r.max_s * 1e9)),
+    ])
+}
+
+fn random_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 2.0).collect()
+}
 
 fn main() -> anyhow::Result<()> {
     let budget = Duration::from_millis(
@@ -27,65 +57,91 @@ fn main() -> anyhow::Result<()> {
             .and_then(|v| v.parse().ok())
             .unwrap_or(1500),
     );
-    let benches = suite(Scale::Test);
-    let program = &benches[3].program; // mcf analog: mixed behaviour
+    let out_path =
+        std::env::var("CAPSIM_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
 
-    // ---- functional simulator throughput ----
-    let n_insts = 200_000u64;
-    let mut cpu = AtomicCpu::load(program);
-    let executed = cpu.run_with(n_insts, |_| {});
-    let r = bench_fn("functional_sim (mcf analog)", budget, || {
-        let mut cpu = AtomicCpu::load(program);
-        cpu.run_with(n_insts, |_| {});
-    });
-    println!("{}  | {:.2} M inst/s", r.report(), executed as f64 / r.mean_s / 1e6);
+    let g = default_geometry();
+    let (lc, lt, d) = (g.l_clip, g.l_token, g.embed_dim);
+    let f = DEFAULT_FFN_MULT * d;
+    let mut rng = Rng::new(7);
+    let mut kernels: BTreeMap<String, Json> = BTreeMap::new();
 
-    // ---- trace collection ----
-    let mut cpu = AtomicCpu::load(program);
-    let trace = cpu.run_trace(n_insts);
-    let r = bench_fn("functional_trace 200k insts", budget, || {
-        let mut cpu = AtomicCpu::load(program);
-        let _ = cpu.run_trace(n_insts);
-    });
-    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+    // ---- matmul tier: naive scalar vs packed/blocked, QKV shape ----
+    // (m, label): one clip's token rows, and a 64-clip batch's rows
+    for (m, label) in [(lc, "clip"), (64 * lc, "batch64")] {
+        let a = random_buf(&mut rng, m * d);
+        let w = random_buf(&mut rng, d * 3 * d);
+        let mut out = vec![0.0f32; m * 3 * d];
+        let naive = bench_fn(&format!("matmul_naive qkv {label} ({m}x{d}x{})", 3 * d), budget, || {
+            matmul(&a, &w, m, d, 3 * d, &mut out);
+        });
+        println!("{}", naive.report());
+        let packed = PackedLinear::pack(&w, d, 3 * d);
+        let fast = bench_fn(&format!("matmul_packed qkv {label} ({m}x{d}x{})", 3 * d), budget, || {
+            packed.apply(&a, m, &mut out);
+        });
+        println!(
+            "{}  | {:.2}x vs naive",
+            fast.report(),
+            naive.mean_s / fast.mean_s.max(1e-12)
+        );
+        kernels.insert(format!("matmul_naive_qkv_{label}"), entry(&naive));
+        kernels.insert(format!("matmul_packed_qkv_{label}"), entry(&fast));
+    }
 
-    // ---- O3 timing throughput ----
-    let r = bench_fn("o3_simulate 200k insts", budget, || {
-        let mut core = O3Core::new(O3Config::default());
-        let _ = core.simulate(&trace);
-    });
-    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+    // ---- FFN shape (k = f on the contraction side) ----
+    {
+        let m = 8 * lc;
+        let a = random_buf(&mut rng, m * f);
+        let w = random_buf(&mut rng, f * d);
+        let mut out = vec![0.0f32; m * d];
+        let naive = bench_fn(&format!("matmul_naive ffn ({m}x{f}x{d})"), budget, || {
+            matmul(&a, &w, m, f, d, &mut out);
+        });
+        println!("{}", naive.report());
+        let packed = PackedLinear::pack(&w, f, d);
+        let fast = bench_fn(&format!("matmul_packed ffn ({m}x{f}x{d})"), budget, || {
+            packed.apply(&a, m, &mut out);
+        });
+        println!(
+            "{}  | {:.2}x vs naive",
+            fast.report(),
+            naive.mean_s / fast.mean_s.max(1e-12)
+        );
+        kernels.insert("matmul_naive_ffn".to_string(), entry(&naive));
+        kernels.insert("matmul_packed_ffn".to_string(), entry(&fast));
+    }
 
-    // ---- tokenizer throughput ----
-    let r = bench_fn("tokenize 200k insts", budget, || {
-        let _ = tokenize_clip(&trace, 16);
-    });
-    println!("{}  | {:.2} M inst/s", r.report(), trace.len() as f64 / r.mean_s / 1e6);
+    // ---- softmax + layernorm ----
+    {
+        let scores0 = random_buf(&mut rng, lc * lc);
+        let mask: Vec<f32> = (0..lc).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let mut scores = scores0.clone();
+        let r = bench_fn(&format!("masked_softmax ({lc}x{lc})"), budget, || {
+            scores.copy_from_slice(&scores0);
+            masked_softmax(&mut scores, lc, lc, &mask);
+        });
+        println!("{}", r.report());
+        kernels.insert("masked_softmax_tile".to_string(), entry(&r));
 
-    // ---- simpoint k-means ----
-    let mut rng = Rng::new(5);
-    let pts: Vec<Vec<f64>> = (0..200)
-        .map(|_| (0..16).map(|_| rng.normal()).collect())
-        .collect();
-    let r = bench_fn("kmeans 200x16 k=6", budget, || {
-        let _ = kmeans(&pts, 6, 40, 7);
-    });
-    println!("{}", r.report());
+        let rows = 64 * lc;
+        let x0 = random_buf(&mut rng, rows * d);
+        let (gamma, beta) = (vec![1.0f32; d], vec![0.0f32; d]);
+        let mut x = x0.clone();
+        let r = bench_fn(&format!("layernorm ({rows}x{d})"), budget, || {
+            x.copy_from_slice(&x0);
+            layernorm(&mut x, &gamma, &beta);
+        });
+        println!("{}", r.report());
+        kernels.insert("layernorm_batch64".to_string(), entry(&r));
+    }
 
-    // ---- PJRT inference + training ----
-    let cfg = PipelineConfig::default();
-    let rt = common::runtime(&cfg);
-    let g = rt.manifest.geometry.clone();
-    let mut model = rt.load_variant("capsim")?;
-    model.init_params(1)?;
-
-    let mut rng = Rng::new(9);
+    // ---- end-to-end attention forward: reference vs batched ----
+    let model = AttentionPredictor::seeded(g.clone(), 42);
     let mk = |rng: &mut Rng| -> ClipSample {
-        let len = g.l_clip as u16;
+        let len = lc as u16;
         ClipSample {
-            tokens: (0..len as usize * g.l_token)
-                .map(|_| rng.range(1, 150) as u16)
-                .collect(),
+            tokens: (0..len as usize * lt).map(|_| rng.range(1, 150) as u16).collect(),
             len,
             ctx: (0..g.m_rows).map(|_| rng.range(150, 400) as u16).collect(),
             time: 50.0,
@@ -93,28 +149,96 @@ fn main() -> anyhow::Result<()> {
             bench: 0,
         }
     };
-    for &b in &g.fwd_batch_sizes.clone() {
+    let mut forward: BTreeMap<String, Json> = BTreeMap::new();
+    let mut ws = Workspace::new();
+    let mut preds: Vec<f32> = Vec::new();
+    for &b in &[1usize, 8, 64] {
         let samples: Vec<ClipSample> = (0..b).map(|_| mk(&mut rng)).collect();
         let refs: Vec<&ClipSample> = samples.iter().collect();
         let batch = build_batch(&refs, b, &g);
-        let r = bench_fn(&format!("pjrt_forward b={b}"), budget, || {
-            let _ = model.forward(&batch, 50.0).unwrap();
+
+        // the contract before the clock: batched == reference, bitwise
+        let oracle = model.forward_reference(&batch, 50.0)?;
+        model.forward_into(&batch, 50.0, &mut ws, &mut preds)?;
+        assert_eq!(oracle.len(), preds.len());
+        for (i, (x, y)) in oracle.iter().zip(&preds).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "kernel harness: batched forward diverged from reference at b={b} row {i}"
+            );
+        }
+
+        let rr = bench_fn(&format!("attention_forward_reference b={b}"), budget, || {
+            let _ = model.forward_reference(&batch, 50.0).unwrap();
         });
-        println!(
-            "{}  | {:.1} clips/s",
-            r.report(),
-            b as f64 / r.mean_s
+        let rb = bench_fn(&format!("attention_forward_batched b={b}"), budget, || {
+            model.forward_into(&batch, 50.0, &mut ws, &mut preds).unwrap();
+        });
+        let ref_ns_clip = rr.mean_s * 1e9 / b as f64;
+        let fast_ns_clip = rb.mean_s * 1e9 / b as f64;
+        let speedup = rr.mean_s / rb.mean_s.max(1e-12);
+        println!("{}  | {ref_ns_clip:.0} ns/clip", rr.report());
+        println!("{}  | {fast_ns_clip:.0} ns/clip  | {speedup:.2}x vs reference", rb.report());
+        forward.insert(
+            format!("batch_{b}"),
+            Json::obj(vec![
+                ("reference_ns_per_clip", Json::num(ref_ns_clip)),
+                ("batched_ns_per_clip", Json::num(fast_ns_clip)),
+                ("speedup", Json::num(speedup)),
+                ("reference", entry(&rr)),
+                ("batched", entry(&rb)),
+            ]),
         );
     }
 
-    let tb = model.train_batch().unwrap();
-    let samples: Vec<ClipSample> = (0..tb).map(|_| mk(&mut rng)).collect();
-    let refs: Vec<&ClipSample> = samples.iter().collect();
-    let batch = build_batch(&refs, tb, &g);
-    let r = bench_fn(&format!("pjrt_train_step b={tb}"), budget, || {
-        let _ = model.train_step(&batch, 1e-3, 50.0).unwrap();
+    // ---- pipeline context: the non-predictor hot loops ----
+    let mut pipeline: BTreeMap<String, Json> = BTreeMap::new();
+    let benches = suite(Scale::Test);
+    let program = &benches[3].program; // mcf analog: mixed behaviour
+    let n_insts = 200_000u64;
+    let r = bench_fn("functional_sim 200k insts", budget, || {
+        let mut cpu = AtomicCpu::load(program);
+        cpu.run_with(n_insts, |_| {});
     });
-    println!("{}  | {:.1} clips/s", r.report(), tb as f64 / r.mean_s);
+    println!("{}", r.report());
+    pipeline.insert("functional_sim_200k".to_string(), entry(&r));
 
+    let mut cpu = AtomicCpu::load(program);
+    let trace = cpu.run_trace(n_insts);
+    let r = bench_fn("o3_simulate 200k insts", budget, || {
+        let mut core = O3Core::new(O3Config::default());
+        let _ = core.simulate(&trace);
+    });
+    println!("{}", r.report());
+    pipeline.insert("o3_simulate_200k".to_string(), entry(&r));
+
+    let r = bench_fn("tokenize 200k insts", budget, || {
+        let _ = tokenize_clip(&trace, lt);
+    });
+    println!("{}", r.report());
+    pipeline.insert("tokenize_200k".to_string(), entry(&r));
+
+    // ---- machine-readable trajectory ----
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("budget_ms", Json::num(budget.as_millis() as f64)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("embed_dim", Json::num(d as f64)),
+                ("ffn_dim", Json::num(f as f64)),
+                ("l_clip", Json::num(lc as f64)),
+                ("l_token", Json::num(lt as f64)),
+                ("m_rows", Json::num(g.m_rows as f64)),
+                ("heads", Json::num(capsim::runtime::attention::DEFAULT_HEADS as f64)),
+            ]),
+        ),
+        ("kernels", Json::Obj(kernels)),
+        ("forward", Json::Obj(forward)),
+        ("pipeline", Json::Obj(pipeline)),
+    ]);
+    std::fs::write(&out_path, doc.dump_pretty())?;
+    println!("wrote {out_path}");
     Ok(())
 }

@@ -63,13 +63,30 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Total lookups observed (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when none ran).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
+        if self.lookups() == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            self.hits as f64 / self.lookups() as f64
         }
+    }
+
+    /// One-line hit-rate summary — the warm-start reporting format
+    /// shared by `capsim compare` and the Fig.-7 bench, so call sites
+    /// stop re-deriving percentages from the raw counters.
+    pub fn hit_line(&self) -> String {
+        format!(
+            "{:.1}% ({} hits / {} lookups)",
+            100.0 * self.hit_rate(),
+            self.hits,
+            self.lookups()
+        )
     }
 }
 
@@ -568,6 +585,9 @@ mod tests {
         c.insert(7, 1.0);
         let _ = c.get(7);
         let _ = c.get(8);
-        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-12);
+        let st = c.stats();
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(st.lookups(), 2);
+        assert_eq!(st.hit_line(), "50.0% (1 hits / 2 lookups)");
     }
 }

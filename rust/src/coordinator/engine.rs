@@ -31,9 +31,11 @@ pub enum SuiteBatching {
     PerBench,
     /// Scan every benchmark first, then predict all new unique clips in
     /// one accumulator pass — batches fill across benchmark boundaries,
-    /// so only the suite's single final batch can be partial. Per-run
-    /// `wall_s` then covers the scan stage only; inference time is
-    /// reported once in [`SuiteRun::wall_s`].
+    /// so only the suite's single final batch can be partial, and every
+    /// batch runs through one reused predictor
+    /// [`Workspace`](crate::runtime::Workspace) (allocation-free steady
+    /// state). Per-run `wall_s` then covers the scan stage only;
+    /// inference time is reported once in [`SuiteRun::wall_s`].
     CrossBench,
     /// Run the suite through the streaming stage-pipelined engine
     /// ([`stream`](super::stream)): scan, batch fill and inference

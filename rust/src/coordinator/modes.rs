@@ -35,7 +35,7 @@ use crate::dataset::ClipSample;
 use crate::functional::TraceRecord;
 use crate::o3::O3Core;
 use crate::predictor::BatchAccumulator;
-use crate::runtime::Predictor;
+use crate::runtime::{Predictor, Workspace};
 use crate::simpoint::SelectedInterval;
 use crate::tokenizer::standardize::{fast_clip_key, tokenize_clip};
 
@@ -359,16 +359,20 @@ impl DedupState {
             return Ok(());
         }
         let mut acc = BatchAccumulator::new(model.max_fwd_batch(), model.geometry().clone());
+        // one workspace + prediction buffer for every batch of the run:
+        // steady-state forwards reuse the same scratch arena
+        let mut ws = Workspace::new();
+        let mut preds: Vec<f32> = Vec::new();
         for (key, sample) in pending {
             if let Some((keys, batch)) = acc.push(key, sample) {
-                let preds = model.forward(&batch, time_scale)?;
+                model.forward_into(&batch, time_scale, &mut ws, &mut preds)?;
                 self.resolve(&keys, &preds, cache);
             }
         }
         // tail batch: the smallest compiled size that fits, not full cap
         let tail_cap = model.pick_fwd_batch(acc.pending());
         if let Some((keys, batch)) = acc.flush(tail_cap) {
-            let preds = model.forward(&batch, time_scale)?;
+            model.forward_into(&batch, time_scale, &mut ws, &mut preds)?;
             self.resolve(&keys, &preds, cache);
         }
         Ok(())

@@ -54,7 +54,7 @@ use anyhow::Result;
 use crate::config::PipelineConfig;
 use crate::dataset::ClipSample;
 use crate::predictor::{build_batch, BatchAccumulator};
-use crate::runtime::{Batch, Predictor};
+use crate::runtime::{Batch, Predictor, Workspace};
 use crate::simpoint::SelectedInterval;
 
 use super::cache::ClipCache;
@@ -441,13 +441,17 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
         });
 
         // stage 3: predict + resolve on the caller thread (the model
-        // never crosses a thread boundary, so `P` needs no `Sync`)
+        // never crosses a thread boundary, so `P` needs no `Sync`). One
+        // workspace + one prediction buffer live for the whole run, so
+        // steady-state forwards allocate nothing.
+        let mut ws = Workspace::new();
+        let mut preds: Vec<f32> = Vec::new();
         for item in rx_work {
             match item {
                 WorkItem::Batch(keys, batch) => {
                     let p0 = Instant::now();
-                    match model.forward(&batch, time_scale) {
-                        Ok(preds) => {
+                    match model.forward_into(&batch, time_scale, &mut ws, &mut preds) {
+                        Ok(()) => {
                             for (&k, &v) in keys.iter().zip(&preds) {
                                 pred.insert(k, v as f64);
                                 cache.insert(k, v as f64);
@@ -466,8 +470,8 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
                     let refs: Vec<&ClipSample> =
                         clips.iter().map(|(_, sample)| sample).collect();
                     let batch = build_batch(&refs, tail_cap, model.geometry());
-                    match model.forward(&batch, time_scale) {
-                        Ok(preds) => {
+                    match model.forward_into(&batch, time_scale, &mut ws, &mut preds) {
+                        Ok(()) => {
                             for (&(k, _), &v) in clips.iter().zip(&preds) {
                                 pred.insert(k, v as f64);
                                 cache.insert(k, v as f64);

@@ -89,7 +89,10 @@ fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
     if let Some(name) = flags.get("backend") {
         cfg.backend = name.parse()?;
     } else if flags.contains_key("native") {
-        eprintln!("note: --native is deprecated; use --backend native");
+        eprintln!(
+            "warning: the --native flag is deprecated and will be removed; \
+             use `--backend native` instead"
+        );
         cfg.backend = Backend::Native;
     }
     Ok(cfg)
@@ -409,12 +412,7 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
     let warm_stats = cache.stats();
     if warm_stats.hits > 0 {
-        println!(
-            "warm-start hit rate: {:.1}% ({} hits / {} lookups)",
-            100.0 * warm_stats.hit_rate(),
-            warm_stats.hits,
-            warm_stats.hits + warm_stats.misses
-        );
+        println!("warm-start hit rate: {}", warm_stats.hit_line());
     }
     if warm_stats.evictions > 0 {
         println!(

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::dataset::{ClipSample, Dataset};
-use crate::runtime::Predictor;
+use crate::runtime::{Predictor, Workspace};
 use crate::util::stats;
 
 use super::batcher::build_batch;
@@ -34,11 +34,14 @@ pub fn predict_all<P: Predictor + ?Sized>(
     let g = model.geometry().clone();
     let b = model.max_fwd_batch();
     let mut out = Vec::with_capacity(idx.len());
+    // one workspace + prediction buffer across the chunk loop
+    let mut ws = Workspace::new();
+    let mut pred: Vec<f32> = Vec::new();
     for chunk in idx.chunks(b) {
         let refs: Vec<&ClipSample> = chunk.iter().map(|&i| &ds.samples[i]).collect();
         let cap = model.pick_fwd_batch(refs.len());
         let batch = build_batch(&refs, cap, &g);
-        let pred = model.forward(&batch, time_scale)?;
+        model.forward_into(&batch, time_scale, &mut ws, &mut pred)?;
         out.extend(pred.iter().map(|&p| p as f64));
     }
     Ok(out)

@@ -18,20 +18,35 @@
 //!
 //! Two properties the engine relies on, both **exact** here:
 //!
-//! * **row locality**: each row of a [`Batch`] is processed by an
-//!   independent loop that reads only that row's tokens, masks and
-//!   context, so predictions are bit-identical across batch sizes,
-//!   padding and cache states — the invariance the engine-equivalence
-//!   suite asserts (the compiled PJRT model only approximates this;
-//!   see `tests/prop_attention.rs`);
+//! * **row locality**: every stage of the forward is row-independent —
+//!   the batched matmuls are per-row dot products and the attention
+//!   mixing reads only its own clip's tokens, mask and context — so
+//!   predictions are bit-identical across batch sizes, padding and
+//!   cache states — the invariance the engine-equivalence suite asserts
+//!   (the compiled PJRT model only approximates this; see
+//!   `tests/prop_attention.rs`);
 //! * **determinism**: weights come from a seeded PRNG or a versioned
 //!   weights file, and every kernel runs in a fixed scalar order, so the
 //!   same `(weights, row, time_scale)` always produces the same bits.
+//!
+//! The production forward ([`Predictor::forward_into`]) is **batched and
+//! allocation-free in steady state**: weights are pre-packed into the
+//! transposed/fused [`PackedLinear`] layout at model build, whole
+//! batches run through shared-weight matmuls, and all scratch lives in a
+//! caller-owned [`Workspace`] arena. Every optimization preserves the
+//! per-output-element accumulation order, so the batched path is
+//! bit-identical to the original row-by-row scalar forward — retained as
+//! [`AttentionPredictor::forward_reference`], the oracle the property
+//! suite pins it against and the baseline the `perf_micro` kernel
+//! harness measures (see the contract section in [`super`]'s docs).
 //!
 //! Weights can be persisted ([`AttentionPredictor::save`]) and reloaded
 //! ([`AttentionPredictor::load`]) through a versioned binary format; the
 //! [`Predictor::fingerprint`] mixes every weight bit, so the persistent
 //! `ClipCache` cold-starts whenever the weights (or the seed) change.
+//! Save, load and fingerprint all read the canonical row-major
+//! [`Weights`]; the packed layout is derived state, so the on-disk
+//! format and the cache identity are unchanged by the kernel layout.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -44,7 +59,9 @@ use super::manifest::ModelGeometry;
 use super::model::Batch;
 use super::tensor::{
     add_bias, gelu, gelu_slice, layernorm, masked_softmax, matmul, softplus, vecmat,
+    PackedLinear,
 };
+use super::workspace::Workspace;
 use super::Predictor;
 
 /// On-disk magic ("CAWB") of a persisted weights file.
@@ -77,7 +94,10 @@ struct EncoderLayer {
     ln2_b: Vec<f32>, // [d]
 }
 
-/// The full parameter set.
+/// The full parameter set — the **canonical row-major layout**: the one
+/// layout save/load/fingerprint read, and the one the reference forward
+/// runs on. The inference layout ([`PackedWeights`]) is derived from it
+/// at construction.
 struct Weights {
     embed: Vec<f32>,   // [vocab, d] — shared by clip tokens and context
     pos: Vec<f32>,     // [l_clip, d]
@@ -90,7 +110,47 @@ struct Weights {
     head_b2: Vec<f32>, // [1]
 }
 
-/// Per-forward scratch buffers, reused across rows of a batch.
+/// One encoder layer in the packed inference layout: fused Q‖K‖V, plus
+/// pre-transposed output/FFN projections with their biases folded in.
+/// Layernorm gains/biases stay in [`EncoderLayer`] (read directly).
+struct PackedLayer {
+    qkv: PackedLinear, // [d -> 3d], bias-free like the unpacked projections
+    wo: PackedLinear,  // [d -> d]
+    ff1: PackedLinear, // [d -> f] + ff1_b
+    ff2: PackedLinear, // [f -> d] + ff2_b
+}
+
+/// The packed inference layout derived from [`Weights`] (see the module
+/// docs: derived state only — identity and persistence read `Weights`).
+struct PackedWeights {
+    layers: Vec<PackedLayer>,
+    ctx: PackedLinear,   // [d -> d] + ctx_b
+    head1: PackedLinear, // [2d -> d] + head_b1
+}
+
+impl PackedWeights {
+    fn pack(w: &Weights, d: usize, f: usize) -> PackedWeights {
+        PackedWeights {
+            layers: w
+                .layers
+                .iter()
+                .map(|l| PackedLayer {
+                    qkv: PackedLinear::pack_fused(&[(&l.wq, d), (&l.wk, d), (&l.wv, d)], d),
+                    wo: PackedLinear::pack(&l.wo, d, d),
+                    ff1: PackedLinear::pack_with_bias(&l.ff1_w, &l.ff1_b, d, f),
+                    ff2: PackedLinear::pack_with_bias(&l.ff2_w, &l.ff2_b, f, d),
+                })
+                .collect(),
+            ctx: PackedLinear::pack_with_bias(&w.ctx_w, &w.ctx_b, d, d),
+            head1: PackedLinear::pack_with_bias(&w.head_w1, &w.head_b1, 2 * d, d),
+        }
+    }
+}
+
+/// Per-forward scratch of the **reference** row-by-row path
+/// ([`AttentionPredictor::forward_reference`]), reused across rows of a
+/// batch but reallocated per call — the pre-packing cost model the
+/// kernel harness baselines against.
 struct Scratch {
     x: Vec<f32>,      // [l_clip, d]
     q: Vec<f32>,      // [l_clip, d]
@@ -125,6 +185,78 @@ impl Scratch {
     }
 }
 
+/// Scratch arena of the batched production forward, stored inside the
+/// caller's [`Workspace`]. Grows monotonically to the largest batch seen
+/// (`ensure`), so steady-state forwards allocate nothing. Contents carry
+/// no numerical state between calls: every live region is fully
+/// overwritten or explicitly zeroed before it is read (the
+/// dirty-workspace property test pins this).
+struct AttnScratch {
+    /// Batch-row capacity and model dims the buffers are sized for (a
+    /// workspace can outlive one predictor and meet another geometry).
+    rows: usize,
+    lc: usize,
+    d: usize,
+    f: usize,
+    x: Vec<f32>,      // [b * l_clip, d]
+    qkv: Vec<f32>,    // [b * l_clip, 3d] — fused Q‖K‖V
+    attn: Vec<f32>,   // [b * l_clip, d]
+    tmp: Vec<f32>,    // [b * l_clip, d]
+    ff: Vec<f32>,     // [b * l_clip, f]
+    scores: Vec<f32>, // [l_clip, l_clip] — one L1-resident tile per row
+    clip: Vec<f32>,   // [b, d]
+    ctxv: Vec<f32>,   // [b, d]
+    fused: Vec<f32>,  // [b, 2d]
+    hidden: Vec<f32>, // [b, d]
+}
+
+impl AttnScratch {
+    fn new() -> AttnScratch {
+        AttnScratch {
+            rows: 0,
+            lc: 0,
+            d: 0,
+            f: 0,
+            x: Vec::new(),
+            qkv: Vec::new(),
+            attn: Vec::new(),
+            tmp: Vec::new(),
+            ff: Vec::new(),
+            scores: Vec::new(),
+            clip: Vec::new(),
+            ctxv: Vec::new(),
+            fused: Vec::new(),
+            hidden: Vec::new(),
+        }
+    }
+
+    /// Size the buffers for `b` batch rows of the given geometry: grows
+    /// monotonically while the geometry is stable, resizes on a
+    /// geometry change.
+    fn ensure(&mut self, b: usize, lc: usize, d: usize, f: usize) {
+        let same_geometry = lc == self.lc && d == self.d && f == self.f;
+        if same_geometry && b <= self.rows {
+            return;
+        }
+        let rows = if same_geometry { b.max(self.rows) } else { b };
+        let bl = rows * lc;
+        self.x.resize(bl * d, 0.0);
+        self.qkv.resize(bl * 3 * d, 0.0);
+        self.attn.resize(bl * d, 0.0);
+        self.tmp.resize(bl * d, 0.0);
+        self.ff.resize(bl * f, 0.0);
+        self.scores.resize(lc * lc, 0.0);
+        self.clip.resize(rows * d, 0.0);
+        self.ctxv.resize(rows * d, 0.0);
+        self.fused.resize(rows * 2 * d, 0.0);
+        self.hidden.resize(rows * d, 0.0);
+        self.rows = rows;
+        self.lc = lc;
+        self.d = d;
+        self.f = f;
+    }
+}
+
 fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -154,10 +286,28 @@ pub struct AttentionPredictor {
     /// Seed the weights were drawn from (provenance label; file loads
     /// carry the seed of the run that saved them).
     seed: u64,
+    /// Canonical row-major parameters (identity + persistence).
     w: Weights,
+    /// Derived packed inference layout (never saved or fingerprinted).
+    packed: PackedWeights,
 }
 
 impl AttentionPredictor {
+    /// Build a predictor from its canonical weights, deriving the packed
+    /// inference layout — the single constructor every entry point
+    /// funnels through.
+    fn from_weights(
+        geometry: ModelGeometry,
+        heads: usize,
+        ffn_mult: usize,
+        seed: u64,
+        w: Weights,
+    ) -> AttentionPredictor {
+        let d = geometry.embed_dim;
+        let packed = PackedWeights::pack(&w, d, ffn_mult * d);
+        AttentionPredictor { geometry, heads, ffn_mult, seed, w, packed }
+    }
+
     /// Deterministically initialized weights for `geometry` drawn from
     /// `seed` (uniform, 1/sqrt(fan_in)-scaled; layernorm gains 1).
     pub fn seeded(geometry: ModelGeometry, seed: u64) -> AttentionPredictor {
@@ -190,12 +340,12 @@ impl AttentionPredictor {
         let ctx_w = uniform(d * d, proj);
         let head_w1 = uniform(2 * d * d, 1.0 / (2.0 * d as f32).sqrt());
         let head_w2 = uniform(d, proj);
-        AttentionPredictor {
+        AttentionPredictor::from_weights(
             geometry,
-            heads: DEFAULT_HEADS,
-            ffn_mult: DEFAULT_FFN_MULT,
+            DEFAULT_HEADS,
+            DEFAULT_FFN_MULT,
             seed,
-            w: Weights {
+            Weights {
                 embed,
                 pos,
                 layers,
@@ -206,7 +356,7 @@ impl AttentionPredictor {
                 head_w2,
                 head_b2: vec![0.5],
             },
-        }
+        )
     }
 
     /// Default geometry (the `model_config.json` constants) with the
@@ -364,8 +514,8 @@ impl AttentionPredictor {
             fwd_batch_sizes,
         };
 
-        // build a zeroed skeleton with the recorded shape, then fill
-        // tensor by tensor in canonical order
+        // build a zeroed skeleton with the recorded shape, fill it
+        // tensor by tensor in canonical order, then pack for inference
         let d = embed_dim;
         let f = ffn_mult * d;
         let layer = || EncoderLayer {
@@ -382,27 +532,20 @@ impl AttentionPredictor {
             ln2_g: vec![0.0; d],
             ln2_b: vec![0.0; d],
         };
-        let mut out = AttentionPredictor {
-            geometry,
-            heads,
-            ffn_mult,
-            seed,
-            w: Weights {
-                embed: vec![0.0; vocab_size * d],
-                pos: vec![0.0; l_clip * d],
-                layers: (0..layers).map(|_| layer()).collect(),
-                ctx_w: vec![0.0; d * d],
-                ctx_b: vec![0.0; d],
-                head_w1: vec![0.0; 2 * d * d],
-                head_b1: vec![0.0; d],
-                head_w2: vec![0.0; d],
-                head_b2: vec![0.0; 1],
-            },
+        let mut w = Weights {
+            embed: vec![0.0; vocab_size * d],
+            pos: vec![0.0; l_clip * d],
+            layers: (0..layers).map(|_| layer()).collect(),
+            ctx_w: vec![0.0; d * d],
+            ctx_b: vec![0.0; d],
+            head_w1: vec![0.0; 2 * d * d],
+            head_b1: vec![0.0; d],
+            head_w2: vec![0.0; d],
+            head_b2: vec![0.0; 1],
         };
-        debug_assert_eq!(out.param_count() as u64, count);
-        fill_f32(&mut r, &mut out.w.embed)?;
-        fill_f32(&mut r, &mut out.w.pos)?;
-        for l in &mut out.w.layers {
+        fill_f32(&mut r, &mut w.embed)?;
+        fill_f32(&mut r, &mut w.pos)?;
+        for l in &mut w.layers {
             fill_f32(&mut r, &mut l.wq)?;
             fill_f32(&mut r, &mut l.wk)?;
             fill_f32(&mut r, &mut l.wv)?;
@@ -416,20 +559,23 @@ impl AttentionPredictor {
             fill_f32(&mut r, &mut l.ln2_g)?;
             fill_f32(&mut r, &mut l.ln2_b)?;
         }
-        fill_f32(&mut r, &mut out.w.ctx_w)?;
-        fill_f32(&mut r, &mut out.w.ctx_b)?;
-        fill_f32(&mut r, &mut out.w.head_w1)?;
-        fill_f32(&mut r, &mut out.w.head_b1)?;
-        fill_f32(&mut r, &mut out.w.head_w2)?;
-        fill_f32(&mut r, &mut out.w.head_b2)?;
+        fill_f32(&mut r, &mut w.ctx_w)?;
+        fill_f32(&mut r, &mut w.ctx_b)?;
+        fill_f32(&mut r, &mut w.head_w1)?;
+        fill_f32(&mut r, &mut w.head_b1)?;
+        fill_f32(&mut r, &mut w.head_w2)?;
+        fill_f32(&mut r, &mut w.head_b2)?;
+        let out = AttentionPredictor::from_weights(geometry, heads, ffn_mult, seed, w);
+        debug_assert_eq!(out.param_count() as u64, count);
         Ok(out)
     }
 
-    /// One encoder layer over `x` (`[l_clip, d]`) under the clip padding
-    /// `mask` (`[l_clip]`). Masked *keys* receive zero attention, so live
-    /// positions never read padding content; masked positions' own
-    /// outputs are computed but ignored by the pooling stage.
-    fn encoder_layer(&self, lw: &EncoderLayer, mask: &[f32], s: &mut Scratch) {
+    /// One **reference-path** encoder layer over `x` (`[l_clip, d]`)
+    /// under the clip padding `mask` (`[l_clip]`). Masked *keys* receive
+    /// zero attention, so live positions never read padding content;
+    /// masked positions' own outputs are computed but ignored by the
+    /// pooling stage.
+    fn encoder_layer_ref(&self, lw: &EncoderLayer, mask: &[f32], s: &mut Scratch) {
         let lc = self.geometry.l_clip;
         let d = self.geometry.embed_dim;
         let hd = d / self.heads;
@@ -481,9 +627,10 @@ impl AttentionPredictor {
         layernorm(&mut s.x, &lw.ln2_g, &lw.ln2_b);
     }
 
-    /// Price one live row; pure function of that row's tokens, masks and
-    /// context (never of the batch composition — see the module docs).
-    fn row_forward(&self, batch: &Batch, r: usize, time_scale: f32, s: &mut Scratch) -> f32 {
+    /// Price one live row through the reference path; pure function of
+    /// that row's tokens, masks and context (never of the batch
+    /// composition — see the module docs).
+    fn row_forward_ref(&self, batch: &Batch, r: usize, time_scale: f32, s: &mut Scratch) -> f32 {
         let g = &self.geometry;
         let (lc, lt, d) = (g.l_clip, g.l_token, g.embed_dim);
         let row_tokens = lc * lt;
@@ -519,7 +666,7 @@ impl AttentionPredictor {
         }
 
         for lw in &self.w.layers {
-            self.encoder_layer(lw, mask, s);
+            self.encoder_layer_ref(lw, mask, s);
         }
 
         // masked mean pooling over live instructions
@@ -570,6 +717,143 @@ impl AttentionPredictor {
         }
         (softplus(out) * time_scale).max(1e-3)
     }
+
+    /// The original (PR 3) row-by-row scalar forward: naive `matmul` on
+    /// the row-major weights, per-call scratch. Kept as the
+    /// **bit-exactness oracle** the property suite pins the batched
+    /// production path against, and as the baseline the `perf_micro`
+    /// kernel-regression harness measures speedups from. Never used by
+    /// the engine.
+    pub fn forward_reference(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch.live <= batch.b,
+            "live rows {} exceed batch capacity {}",
+            batch.live,
+            batch.b
+        );
+        let g = &self.geometry;
+        let mut scratch = Scratch::new(g.l_clip, g.embed_dim, self.ffn_mult * g.embed_dim);
+        Ok((0..batch.live)
+            .map(|r| self.row_forward_ref(batch, r, time_scale, &mut scratch))
+            .collect())
+    }
+
+    /// Token embedding + masked token-mean + position for every live
+    /// row, into `s.x` (`[b * l_clip, d]`, zeroed here) — the batched
+    /// path's stage 1. Pure gather; identical per-element arithmetic to
+    /// the reference path's embedding stage.
+    fn embed_batch(&self, batch: &Batch, b: usize, s: &mut AttnScratch) {
+        let g = &self.geometry;
+        let (lc, lt, d) = (g.l_clip, g.l_token, g.embed_dim);
+        let row_tokens = lc * lt;
+        s.x[..b * lc * d].fill(0.0);
+        for r in 0..b {
+            let x = &mut s.x[r * lc * d..(r + 1) * lc * d];
+            let mask = &batch.clip_mask[r * lc..(r + 1) * lc];
+            for i in 0..lc {
+                if mask[i] == 0.0 {
+                    continue;
+                }
+                let mut live = 0.0f32;
+                for t in 0..lt {
+                    let idx = r * row_tokens + i * lt + t;
+                    if batch.tok_mask[idx] == 0.0 {
+                        continue;
+                    }
+                    let tok = (batch.tokens[idx].max(0) as usize).min(g.vocab_size - 1);
+                    for c in 0..d {
+                        x[i * d + c] += self.w.embed[tok * d + c];
+                    }
+                    live += 1.0;
+                }
+                if live > 0.0 {
+                    let inv = 1.0 / live;
+                    for c in 0..d {
+                        x[i * d + c] *= inv;
+                    }
+                }
+                for c in 0..d {
+                    x[i * d + c] += self.w.pos[i * d + c];
+                }
+            }
+        }
+    }
+
+    /// One encoder layer over all `b` rows at once: the Q‖K‖V, output
+    /// and FFN projections run as single packed matmuls over `b * l_clip`
+    /// token rows; only the attention mixing (scores → masked softmax →
+    /// value mix, one `l_clip × l_clip` tile) runs per clip row, under
+    /// that row's padding mask. Per-element arithmetic — and therefore
+    /// every produced bit — matches [`AttentionPredictor::encoder_layer_ref`].
+    fn encoder_layer_batched(
+        &self,
+        batch: &Batch,
+        b: usize,
+        lw: &EncoderLayer,
+        pw: &PackedLayer,
+        s: &mut AttnScratch,
+    ) {
+        let g = &self.geometry;
+        let (lc, d) = (g.l_clip, g.embed_dim);
+        let f = self.ffn_mult * d;
+        let bl = b * lc;
+        let hd = d / self.heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // fused QKV projection: one packed matmul over every token row
+        pw.qkv.apply(&s.x[..bl * d], bl, &mut s.qkv[..bl * 3 * d]);
+
+        // attention mixing per clip row — the only row-scoped stage
+        s.attn[..bl * d].fill(0.0);
+        for r in 0..b {
+            let mask = &batch.clip_mask[r * lc..(r + 1) * lc];
+            let qkv = &s.qkv[r * lc * 3 * d..(r + 1) * lc * 3 * d];
+            let attn = &mut s.attn[r * lc * d..(r + 1) * lc * d];
+            for h in 0..self.heads {
+                let o = h * hd;
+                for i in 0..lc {
+                    let q = &qkv[i * 3 * d + o..i * 3 * d + o + hd];
+                    for j in 0..lc {
+                        let k = &qkv[j * 3 * d + d + o..j * 3 * d + d + o + hd];
+                        let mut dot = 0.0f32;
+                        for c in 0..hd {
+                            dot += q[c] * k[c];
+                        }
+                        s.scores[i * lc + j] = dot * scale;
+                    }
+                }
+                masked_softmax(&mut s.scores, lc, lc, mask);
+                for i in 0..lc {
+                    for j in 0..lc {
+                        let p = s.scores[i * lc + j];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let v = &qkv[j * 3 * d + 2 * d + o..j * 3 * d + 2 * d + o + hd];
+                        for c in 0..hd {
+                            attn[i * d + o + c] += p * v[c];
+                        }
+                    }
+                }
+            }
+        }
+
+        // output projection + residual + LN over all rows at once
+        pw.wo.apply(&s.attn[..bl * d], bl, &mut s.tmp[..bl * d]);
+        for (a, &t) in s.x[..bl * d].iter_mut().zip(&s.tmp[..bl * d]) {
+            *a += t;
+        }
+        layernorm(&mut s.x[..bl * d], &lw.ln1_g, &lw.ln1_b);
+
+        // FFN as two packed matmuls (biases folded into the stores)
+        pw.ff1.apply(&s.x[..bl * d], bl, &mut s.ff[..bl * f]);
+        gelu_slice(&mut s.ff[..bl * f]);
+        pw.ff2.apply(&s.ff[..bl * f], bl, &mut s.tmp[..bl * d]);
+        for (a, &t) in s.x[..bl * d].iter_mut().zip(&s.tmp[..bl * d]) {
+            *a += t;
+        }
+        layernorm(&mut s.x[..bl * d], &lw.ln2_g, &lw.ln2_b);
+    }
 }
 
 impl Predictor for AttentionPredictor {
@@ -591,17 +875,107 @@ impl Predictor for AttentionPredictor {
     }
 
     fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        // one-shot convenience over the batched path: same bits as a
+        // caller-owned workspace, minus the steady-state reuse
+        let mut ws = Workspace::new();
+        let mut out = Vec::with_capacity(batch.live);
+        self.forward_into(batch, time_scale, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// The production forward: batched, packed, allocation-free in
+    /// steady state — bit-identical to
+    /// [`AttentionPredictor::forward_reference`] (see the module docs).
+    fn forward_into(
+        &self,
+        batch: &Batch,
+        time_scale: f32,
+        ws: &mut Workspace,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         anyhow::ensure!(
             batch.live <= batch.b,
             "live rows {} exceed batch capacity {}",
             batch.live,
             batch.b
         );
+        out.clear();
+        let b = batch.live;
+        if b == 0 {
+            return Ok(());
+        }
         let g = &self.geometry;
-        let mut scratch = Scratch::new(g.l_clip, g.embed_dim, self.ffn_mult * g.embed_dim);
-        Ok((0..batch.live)
-            .map(|r| self.row_forward(batch, r, time_scale, &mut scratch))
-            .collect())
+        let (lc, d) = (g.l_clip, g.embed_dim);
+        let f = self.ffn_mult * d;
+        let s = ws.get_or_insert_with(AttnScratch::new);
+        s.ensure(b, lc, d, f);
+
+        self.embed_batch(batch, b, s);
+        for (lw, pw) in self.w.layers.iter().zip(&self.packed.layers) {
+            self.encoder_layer_batched(batch, b, lw, pw, s);
+        }
+
+        // masked mean pooling over live instructions, per row
+        s.clip[..b * d].fill(0.0);
+        for r in 0..b {
+            let mask = &batch.clip_mask[r * lc..(r + 1) * lc];
+            let x = &s.x[r * lc * d..(r + 1) * lc * d];
+            let clip = &mut s.clip[r * d..(r + 1) * d];
+            let mut live = 0.0f32;
+            for i in 0..lc {
+                if mask[i] == 0.0 {
+                    continue;
+                }
+                for c in 0..d {
+                    clip[c] += x[i * d + c];
+                }
+                live += 1.0;
+            }
+            if live > 0.0 {
+                let inv = 1.0 / live;
+                for v in clip.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+
+        // context fusion: embed mean per row, then one packed matmul
+        // (ctx_b folded in) and the GELU gate into the fused vector
+        s.ctxv[..b * d].fill(0.0);
+        let inv = 1.0 / g.m_rows.max(1) as f32;
+        for r in 0..b {
+            let ctx = &mut s.ctxv[r * d..(r + 1) * d];
+            for m in 0..g.m_rows {
+                let tok = (batch.ctx[r * g.m_rows + m].max(0) as usize).min(g.vocab_size - 1);
+                for c in 0..d {
+                    ctx[c] += self.w.embed[tok * d + c];
+                }
+            }
+            for v in ctx.iter_mut() {
+                *v *= inv;
+            }
+        }
+        self.packed.ctx.apply(&s.ctxv[..b * d], b, &mut s.hidden[..b * d]);
+        for r in 0..b {
+            let fused = &mut s.fused[r * 2 * d..(r + 1) * 2 * d];
+            fused[..d].copy_from_slice(&s.clip[r * d..(r + 1) * d]);
+            for c in 0..d {
+                fused[d + c] = gelu(s.hidden[r * d + c]);
+            }
+        }
+
+        // regression head: packed matmul (head_b1 folded in) + GELU +
+        // per-row dot with the output vector
+        self.packed.head1.apply(&s.fused[..b * 2 * d], b, &mut s.hidden[..b * d]);
+        gelu_slice(&mut s.hidden[..b * d]);
+        for r in 0..b {
+            let mut v = self.w.head_b2[0];
+            for c in 0..d {
+                v += s.hidden[r * d + c] * self.w.head_w2[c];
+            }
+            out.push((softplus(v) * time_scale).max(1e-3));
+        }
+        Ok(())
     }
 
     fn fingerprint(&self) -> u64 {
@@ -680,6 +1054,49 @@ mod tests {
             let one = p.forward(&build_batch(&[s], 1, &g), 40.0).unwrap();
             assert_eq!(one[0].to_bits(), full[i].to_bits(), "row {i}");
         }
+    }
+
+    #[test]
+    fn batched_forward_matches_reference_bitwise() {
+        // the packed/fused/workspace production path vs the PR-3 scalar
+        // oracle, including an empty clip in the mix
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 21);
+        let samples: Vec<ClipSample> =
+            (0..6).map(|i| sample(&g, 5 + i as u16, (i % 7) as u16, 9 + i as u16)).collect();
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let batch = build_batch(&refs, 8, &g);
+        let a = p.forward_reference(&batch, 40.0).unwrap();
+        let b = p.forward(&batch, 40.0).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn workspace_survives_geometry_changes() {
+        // a workspace sized by one model must serve a model of another
+        // geometry (resize) and then the first again, bit-identically
+        let g_small = small_geometry();
+        let p_small = AttentionPredictor::seeded(g_small.clone(), 3);
+        let p_big = AttentionPredictor::with_defaults();
+        let g_big = p_big.geometry().clone();
+        let mut ws = Workspace::new();
+        let mut out: Vec<f32> = Vec::new();
+
+        let s_small = sample(&g_small, 4, 3, 7);
+        let b_small = build_batch(&[&s_small], 1, &g_small);
+        p_small.forward_into(&b_small, 40.0, &mut ws, &mut out).unwrap();
+        let first = out[0];
+
+        let s_big = sample(&g_big, 9, 5, 2);
+        let b_big = build_batch(&[&s_big], 1, &g_big);
+        p_big.forward_into(&b_big, 40.0, &mut ws, &mut out).unwrap();
+        assert!(out[0].is_finite() && out[0] > 0.0);
+
+        p_small.forward_into(&b_small, 40.0, &mut ws, &mut out).unwrap();
+        assert_eq!(first.to_bits(), out[0].to_bits(), "geometry swap corrupted scratch");
     }
 
     #[test]

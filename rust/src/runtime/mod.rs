@@ -23,9 +23,39 @@
 //! Python never runs here; the artifacts directory (HLO text +
 //! `manifest.json`) is the entire contract between the layers (see
 //! DESIGN.md §4). The `attention` backend is the same architecture
-//! executed by the scalar kernels in [`tensor`], one batch row at a
-//! time, which is what upgrades "padding invariance ≈ 1e-3" to
-//! "padding invariance exact".
+//! executed by the kernels in [`tensor`], which is what upgrades
+//! "padding invariance ≈ 1e-3" to "padding invariance exact".
+//!
+//! ## Kernel performance & bit-exactness contract
+//!
+//! The `attention` backend's production forward
+//! ([`Predictor::forward_into`]) is **batched, layout-packed and
+//! allocation-free in steady state**:
+//!
+//! * weights are pre-transposed once at model build
+//!   ([`tensor::PackedLinear`]) so every matmul inner loop walks
+//!   contiguous memory, the Q/K/V projections fuse into one packed
+//!   matmul, and the bias add folds into the store;
+//! * whole batches run through shared-weight matmuls (`B × l_clip` rows
+//!   at once) instead of per-clip kernel calls; only the attention
+//!   mixing itself — softmax over one clip's `l_clip × l_clip` score
+//!   tile — runs per row, keeping the tile L1-resident;
+//! * matmul output space is cache-blocked and register-tiled for
+//!   L1/L2;
+//! * all per-layer scratch lives in a caller-owned [`Workspace`] arena
+//!   (one per driving thread: stream stage 3, `DedupState::predict`,
+//!   the eval loop, the benches), sized once from the geometry — the
+//!   steady-state forward performs **zero heap allocations**.
+//!
+//! The contract that makes this safe: every optimization preserves the
+//! per-output-element accumulation order (k-innermost, index order, one
+//! accumulator per element), so the packed/fused/blocked/batched path is
+//! **bit-identical** to the PR-3 row-by-row scalar forward — kept as
+//! [`AttentionPredictor::forward_reference`], the oracle that
+//! `tests/prop_attention.rs` pins the production path against (arbitrary
+//! batch compositions, paddings, and dirty-workspace reuse), and the
+//! baseline the `perf_micro` kernel-regression harness measures speedups
+//! against (`BENCH_kernels.json`, uploaded by the CI `perf-smoke` job).
 
 pub mod attention;
 pub mod backend;
@@ -33,12 +63,14 @@ pub mod manifest;
 pub mod model;
 pub mod native;
 pub mod tensor;
+pub mod workspace;
 
 pub use attention::AttentionPredictor;
 pub use backend::{Backend, ATTENTION_WEIGHTS_FILE};
 pub use manifest::{Manifest, ModelGeometry, VariantManifest};
 pub use model::{Batch, ModelHandle, Runtime};
 pub use native::NativePredictor;
+pub use workspace::Workspace;
 
 use anyhow::Result;
 
@@ -101,6 +133,26 @@ pub trait Predictor {
     /// Predict clip times for the live rows of `batch` (length
     /// `batch.live`; padding rows are never returned).
     fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>>;
+
+    /// [`Predictor::forward`] into a caller-owned buffer, reusing the
+    /// scratch arena in `ws` across calls. Semantically (and, for the
+    /// row-local backends, bitwise) identical to `forward`; backends
+    /// with a real kernel cost override it to run batched,
+    /// allocation-free steady-state forwards. `out` is cleared first;
+    /// callers keep one `Workspace` + one output buffer per driving
+    /// thread. The default delegates to `forward`.
+    fn forward_into(
+        &self,
+        batch: &Batch,
+        time_scale: f32,
+        ws: &mut Workspace,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let _ = ws;
+        out.clear();
+        out.extend(self.forward(batch, time_scale)?);
+        Ok(())
+    }
 
     /// A stable identity key for caches of this backend's predictions
     /// (the persistent [`ClipCache`](crate::coordinator::ClipCache) is

@@ -24,6 +24,7 @@ use anyhow::Result;
 
 use super::manifest::ModelGeometry;
 use super::model::Batch;
+use super::workspace::Workspace;
 use super::Predictor;
 
 /// Deterministic analytic predictor; see the module docs.
@@ -97,15 +98,30 @@ impl Predictor for NativePredictor {
     }
 
     fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(batch.live);
+        self.forward_into(batch, time_scale, &mut Workspace::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// The analytic backend needs no scratch, but it adopts the batched
+    /// entry point so engine drivers run one allocation-free call path
+    /// regardless of backend.
+    fn forward_into(
+        &self,
+        batch: &Batch,
+        time_scale: f32,
+        _ws: &mut Workspace,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         anyhow::ensure!(
             batch.live <= batch.b,
             "live rows {} exceed batch capacity {}",
             batch.live,
             batch.b
         );
-        Ok((0..batch.live)
-            .map(|r| self.row_cost(batch, r, time_scale))
-            .collect())
+        out.clear();
+        out.extend((0..batch.live).map(|r| self.row_cost(batch, r, time_scale)));
+        Ok(())
     }
 
     fn fingerprint(&self) -> u64 {

@@ -3,9 +3,30 @@
 //! No BLAS, no SIMD intrinsics, no dependencies: plain row-major loops in
 //! a fixed evaluation order, so every result is a deterministic function
 //! of the inputs — bit-identical across runs, thread counts and batch
-//! compositions (the backend calls these per clip row, never across
-//! rows). Rust never applies fast-math, so `opt-level` does not change
-//! the produced bits either.
+//! compositions. Rust never applies fast-math, so `opt-level` does not
+//! change the produced bits either.
+//!
+//! Two kernel tiers share one arithmetic contract:
+//!
+//! * the **naive scalar tier** ([`matmul`], [`vecmat`], [`add_bias`]) —
+//!   the reference schedule: for each output element, accumulate over
+//!   `k` in index order into a single f32 register;
+//! * the **packed tier** ([`PackedLinear`]) — the hot-loop layout: the
+//!   weight matrix is pre-transposed once at model build, so every dot
+//!   product walks two contiguous slices, the bias add is folded into
+//!   the store, several matrices sharing an input fuse into one
+//!   projection (Q‖K‖V), and the output space is cache-blocked and
+//!   register-tiled.
+//!
+//! The packed tier is **bit-identical** to the naive tier by
+//! construction: blocking and tiling only reorder *which output
+//! elements* are computed when; every output element still accumulates
+//! over the full `k` range, in index order, in its own register, and the
+//! bias is still one addition after the full accumulation — exactly the
+//! naive `matmul` + `add_bias` sequence. (This is also why there is no
+//! k-blocking and no multi-accumulator unroll over `k`: either would
+//! split the accumulation and change the rounding.) The unit tests below
+//! and `tests/prop_attention.rs` pin the equivalence bit-for-bit.
 //!
 //! Numerical contracts the property tests pin down
 //! (`tests/prop_attention.rs`):
@@ -19,6 +40,146 @@
 
 /// Variance regularizer for [`layernorm`].
 const EPS: f32 = 1e-5;
+
+/// Output-row tile edge of [`PackedLinear::apply`]: `BLOCK_M` input rows
+/// (`BLOCK_M × k` floats, ≤ 8 KiB at the model's k ∈ {64, 128}) are
+/// reused against each weight tile while it is cache-resident.
+const BLOCK_M: usize = 16;
+
+/// Output-column tile edge of [`PackedLinear::apply`]: one tile of packed
+/// weight rows (`BLOCK_N × k` floats, 16–32 KiB at the model's shapes)
+/// stays L1/L2-resident while every input row of the M-tile streams
+/// against it.
+const BLOCK_N: usize = 64;
+
+/// A linear layer packed for the inference hot loop: weights stored
+/// **pre-transposed** (`wt[j * k + p] = w[p * n + j]`, i.e. row `j` of
+/// `wt` is column `j` of the row-major `[k, n]` matrix `w`), with an
+/// optional bias folded into the store. `apply` then computes every
+/// output as a dot product of two contiguous slices — no strided walk
+/// over the weight matrix — under the cache-blocking described in the
+/// module docs, and is bit-identical to naive [`matmul`] (+
+/// [`add_bias`]).
+pub struct PackedLinear {
+    /// Transposed weights, row-major `[n, k]`.
+    wt: Vec<f32>,
+    /// Per-output bias; empty = no bias.
+    bias: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedLinear {
+    /// Pack a row-major `[k, n]` matrix (no bias).
+    pub fn pack(w: &[f32], k: usize, n: usize) -> PackedLinear {
+        PackedLinear::pack_with_bias(w, &[], k, n)
+    }
+
+    /// Pack a row-major `[k, n]` matrix with a length-`n` bias that
+    /// `apply` adds after the full accumulation (one addition per
+    /// output, exactly like a separate [`add_bias`] pass).
+    pub fn pack_with_bias(w: &[f32], bias: &[f32], k: usize, n: usize) -> PackedLinear {
+        assert!(k > 0 && n > 0, "degenerate shape");
+        assert_eq!(w.len(), k * n, "weight shape");
+        assert!(bias.is_empty() || bias.len() == n, "bias shape");
+        let mut wt = vec![0.0f32; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                wt[j * k + p] = w[p * n + j];
+            }
+        }
+        PackedLinear { wt, bias: bias.to_vec(), k, n }
+    }
+
+    /// Fuse several row-major `[k, n_i]` matrices that share one input
+    /// into a single packed `[k, Σ n_i]` projection (the Q‖K‖V fusion):
+    /// one `apply` then produces the concatenated outputs, each
+    /// bit-identical to its standalone [`matmul`].
+    pub fn pack_fused(parts: &[(&[f32], usize)], k: usize) -> PackedLinear {
+        assert!(k > 0 && !parts.is_empty(), "degenerate fusion");
+        let n: usize = parts.iter().map(|&(_, ni)| ni).sum();
+        assert!(n > 0, "degenerate shape");
+        let mut wt = Vec::with_capacity(k * n);
+        for &(w, ni) in parts {
+            assert_eq!(w.len(), k * ni, "fused part shape");
+            for j in 0..ni {
+                for p in 0..k {
+                    wt.push(w[p * ni + j]);
+                }
+            }
+        }
+        PackedLinear { wt, bias: Vec::new(), k, n }
+    }
+
+    /// Input width.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output width (the fused total for [`PackedLinear::pack_fused`]).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `out[m, n] = x[m, k] · W (+ bias)` over the packed layout,
+    /// cache-blocked and register-tiled; bit-identical to [`matmul`]
+    /// followed by [`add_bias`] (see the module docs for why).
+    pub fn apply(&self, x: &[f32], m: usize, out: &mut [f32]) {
+        let (k, n) = (self.k, self.n);
+        assert_eq!(x.len(), m * k, "input shape");
+        assert_eq!(out.len(), m * n, "output shape");
+        for i0 in (0..m).step_by(BLOCK_M) {
+            let i1 = (i0 + BLOCK_M).min(m);
+            for j0 in (0..n).step_by(BLOCK_N) {
+                let j1 = (j0 + BLOCK_N).min(n);
+                for i in i0..i1 {
+                    let a = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    // 4-wide register tile: four packed weight rows
+                    // stream against a single pass over `a`, each output
+                    // in its own accumulator walking k in index order
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let w0 = &self.wt[j * k..(j + 1) * k];
+                        let w1 = &self.wt[(j + 1) * k..(j + 2) * k];
+                        let w2 = &self.wt[(j + 2) * k..(j + 3) * k];
+                        let w3 = &self.wt[(j + 3) * k..(j + 4) * k];
+                        let (mut s0, mut s1, mut s2, mut s3) =
+                            (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                        for p in 0..k {
+                            let av = a[p];
+                            s0 += av * w0[p];
+                            s1 += av * w1[p];
+                            s2 += av * w2[p];
+                            s3 += av * w3[p];
+                        }
+                        if self.bias.is_empty() {
+                            orow[j] = s0;
+                            orow[j + 1] = s1;
+                            orow[j + 2] = s2;
+                            orow[j + 3] = s3;
+                        } else {
+                            orow[j] = s0 + self.bias[j];
+                            orow[j + 1] = s1 + self.bias[j + 1];
+                            orow[j + 2] = s2 + self.bias[j + 2];
+                            orow[j + 3] = s3 + self.bias[j + 3];
+                        }
+                        j += 4;
+                    }
+                    while j < j1 {
+                        let w0 = &self.wt[j * k..(j + 1) * k];
+                        let mut s0 = 0.0f32;
+                        for p in 0..k {
+                            s0 += a[p] * w0[p];
+                        }
+                        orow[j] = if self.bias.is_empty() { s0 } else { s0 + self.bias[j] };
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
 
 /// Row-major matrix product: `out[m, n] = a[m, k] · b[k, n]`.
 ///
@@ -253,5 +414,90 @@ mod tests {
         assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
         assert_eq!(softplus(50.0), 50.0);
         assert!(softplus(5.0) > 5.0 && softplus(5.0) < 5.01);
+    }
+
+    fn random_matrix(rng: &mut crate::util::Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 3.0).collect()
+    }
+
+    #[test]
+    fn packed_apply_bit_equals_naive_matmul_across_tile_boundaries() {
+        // shapes straddling every tile edge: smaller than one tile,
+        // exactly one tile, and ragged multi-tile remainders
+        let mut rng = crate::util::Rng::new(41);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 64, 192),
+            (3, 7, 5),
+            (16, 64, 64),
+            (17, 33, 65),
+            (40, 128, 64),
+            (33, 16, 130),
+        ] {
+            let a = random_matrix(&mut rng, m * k);
+            let w = random_matrix(&mut rng, k * n);
+            let mut naive = vec![0.0f32; m * n];
+            matmul(&a, &w, m, k, n, &mut naive);
+            let packed = PackedLinear::pack(&w, k, n);
+            assert_eq!((packed.k(), packed.n()), (k, n));
+            let mut fast = vec![f32::NAN; m * n];
+            packed.apply(&a, m, &mut fast);
+            for (i, (x, y)) in naive.iter().zip(&fast).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bias_bit_equals_matmul_then_add_bias() {
+        let mut rng = crate::util::Rng::new(42);
+        let (m, k, n) = (9usize, 24usize, 70usize);
+        let a = random_matrix(&mut rng, m * k);
+        let w = random_matrix(&mut rng, k * n);
+        let bias = random_matrix(&mut rng, n);
+        let mut naive = vec![0.0f32; m * n];
+        matmul(&a, &w, m, k, n, &mut naive);
+        add_bias(&mut naive, &bias);
+        let packed = PackedLinear::pack_with_bias(&w, &bias, k, n);
+        let mut fast = vec![f32::NAN; m * n];
+        packed.apply(&a, m, &mut fast);
+        for (i, (x, y)) in naive.iter().zip(&fast).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fused_projection_bit_equals_separate_matmuls() {
+        // the Q‖K‖V fusion: one packed apply == three naive matmuls
+        let mut rng = crate::util::Rng::new(43);
+        let (m, k, d) = (5usize, 32usize, 32usize);
+        let a = random_matrix(&mut rng, m * k);
+        let wq = random_matrix(&mut rng, k * d);
+        let wk = random_matrix(&mut rng, k * d);
+        let wv = random_matrix(&mut rng, k * d);
+        let fused = PackedLinear::pack_fused(&[(&wq, d), (&wk, d), (&wv, d)], k);
+        assert_eq!(fused.n(), 3 * d);
+        let mut out = vec![f32::NAN; m * 3 * d];
+        fused.apply(&a, m, &mut out);
+        for (part, w) in [(0usize, &wq), (1, &wk), (2, &wv)] {
+            let mut naive = vec![0.0f32; m * d];
+            matmul(&a, w, m, k, d, &mut naive);
+            for i in 0..m {
+                for j in 0..d {
+                    assert_eq!(
+                        naive[i * d + j].to_bits(),
+                        out[i * 3 * d + part * d + j].to_bits(),
+                        "part {part} elem ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_apply_handles_zero_rows() {
+        let packed = PackedLinear::pack(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        let mut out: [f32; 0] = [];
+        packed.apply(&[], 0, &mut out);
     }
 }

@@ -1,0 +1,89 @@
+//! A reusable scratch arena for the predictor hot loop.
+//!
+//! [`Predictor::forward_into`](super::Predictor::forward_into) threads a
+//! [`Workspace`] through every forward call so a backend can keep its
+//! per-layer scratch buffers alive *across* batches: the engine drivers
+//! (`coordinator::stream` stage 3, `DedupState::predict`,
+//! `predictor::eval`, the benches) each own one `Workspace` per driving
+//! thread, size it implicitly on the first forward, and from then on run
+//! **allocation-free in steady state**.
+//!
+//! The arena is deliberately opaque: each backend stores its own scratch
+//! type in the single slot (downcast by `TypeId`), so the `Predictor`
+//! trait stays object-safe and backend-agnostic — swapping backends
+//! mid-stream simply rebuilds the slot. Contents are scratch only and
+//! carry **no numerical state**: a dirty workspace must produce
+//! bit-identical predictions to a fresh one (every buffer is fully
+//! overwritten or explicitly zeroed before use — property-tested in
+//! `tests/prop_attention.rs`).
+
+use std::any::Any;
+
+/// Backend-owned scratch storage; see the module docs. One per driving
+/// thread — `Workspace` is `Send` but deliberately not shared.
+#[derive(Default)]
+pub struct Workspace {
+    slot: Option<Box<dyn Any + Send>>,
+}
+
+impl Workspace {
+    /// An empty arena; backends populate it on first use.
+    pub fn new() -> Workspace {
+        Workspace { slot: None }
+    }
+
+    /// Borrow the resident scratch of type `T`, building it with `make`
+    /// on first use or when a different backend type owned the slot.
+    pub fn get_or_insert_with<T: Any + Send>(&mut self, make: impl FnOnce() -> T) -> &mut T {
+        let fresh = match &self.slot {
+            Some(b) => !b.is::<T>(),
+            None => true,
+        };
+        if fresh {
+            self.slot = Some(Box::new(make()));
+        }
+        self.slot
+            .as_mut()
+            .expect("slot just populated")
+            .downcast_mut::<T>()
+            .expect("slot type just checked")
+    }
+
+    /// Whether the arena currently holds a scratch allocation.
+    pub fn is_warm(&self) -> bool {
+        self.slot.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_cold_and_warms_on_first_use() {
+        let mut ws = Workspace::new();
+        assert!(!ws.is_warm());
+        let v = ws.get_or_insert_with(|| vec![1u32, 2, 3]);
+        assert_eq!(v.len(), 3);
+        assert!(ws.is_warm());
+    }
+
+    #[test]
+    fn same_type_reuses_the_resident_value() {
+        let mut ws = Workspace::new();
+        ws.get_or_insert_with(|| vec![7u32]).push(8);
+        let v = ws.get_or_insert_with(|| -> Vec<u32> { panic!("must not rebuild") });
+        assert_eq!(v, &[7, 8]);
+    }
+
+    #[test]
+    fn different_type_rebuilds_the_slot() {
+        let mut ws = Workspace::new();
+        ws.get_or_insert_with(|| vec![1u32]);
+        let s = ws.get_or_insert_with(|| String::from("fresh"));
+        assert_eq!(s, "fresh");
+        // and back again: the previous Vec is gone
+        let v = ws.get_or_insert_with(Vec::<u32>::new);
+        assert!(v.is_empty());
+    }
+}

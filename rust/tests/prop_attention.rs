@@ -10,12 +10,18 @@
 //! * attention predictions are **bit-identical** across batch sizes and
 //!   padding for the same row — the row-locality invariance the
 //!   engine-equivalence suite (and the clip cache) relies on — and are
-//!   always finite and positive.
+//!   always finite and positive;
+//! * the batched packed/fused/workspace production path
+//!   ([`Predictor::forward_into`]) is bit-identical to the PR-3
+//!   row-by-row scalar reference
+//!   ([`AttentionPredictor::forward_reference`]) for **arbitrary batch
+//!   compositions and paddings**, and a **dirty, reused workspace**
+//!   never changes a single produced bit versus fresh workspaces.
 
 use capsim::dataset::ClipSample;
 use capsim::predictor::build_batch;
 use capsim::runtime::tensor::{gelu, layernorm, masked_softmax, softplus};
-use capsim::runtime::{AttentionPredictor, ModelGeometry, Predictor};
+use capsim::runtime::{AttentionPredictor, ModelGeometry, Predictor, Workspace};
 use capsim::util::{prop, Rng};
 
 /// A compact geometry so the transformer forward stays cheap per case.
@@ -199,6 +205,117 @@ fn attention_predictions_bit_identical_across_batch_sizes_and_padding() {
             // padding rows are never returned
             if full.len() != samples.len() {
                 return Err(format!("{} predictions for {} rows", full.len(), samples.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batched_forward_bit_equals_rowwise_reference_for_arbitrary_batches() {
+    // the packed/fused/blocked batched path vs the PR-3 scalar oracle,
+    // over arbitrary batch compositions (including empty clips) and
+    // arbitrary padding, with ONE workspace reused across every case —
+    // so steady-state dirtiness is part of what the property covers
+    let g = geometry();
+    let model = AttentionPredictor::seeded(g.clone(), 0xD00D);
+    let mut ws = Workspace::new();
+    let mut preds: Vec<f32> = Vec::new();
+    prop::check_res(
+        "attention-batched-vs-rowwise",
+        24,
+        |rng| {
+            let n = rng.range(1, 7);
+            let samples: Vec<ClipSample> = (0..n).map(|_| random_sample(rng, &g)).collect();
+            let cap = n + rng.range(0, 6); // arbitrary padding beyond live
+            (samples, cap)
+        },
+        |(samples, cap)| {
+            let refs: Vec<&ClipSample> = samples.iter().collect();
+            let batch = build_batch(&refs, *cap, &g);
+            let oracle = model.forward_reference(&batch, 40.0).map_err(|e| e.to_string())?;
+            model
+                .forward_into(&batch, 40.0, &mut ws, &mut preds)
+                .map_err(|e| e.to_string())?;
+            if preds.len() != oracle.len() {
+                return Err(format!("{} batched rows vs {} reference", preds.len(), oracle.len()));
+            }
+            for (i, (a, b)) in oracle.iter().zip(&preds).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("row {i}: reference {a} != batched {b}"));
+                }
+            }
+            // and rowwise through the production path itself: each row
+            // alone in a singleton batch produces the same bits
+            for (i, s) in samples.iter().enumerate() {
+                let solo = model
+                    .forward(&build_batch(&[s], 1, &g), 40.0)
+                    .map_err(|e| e.to_string())?;
+                if solo[0].to_bits() != oracle[i].to_bits() {
+                    return Err(format!("row {i}: solo {} != reference {}", solo[0], oracle[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dirty_workspace_forwards_bit_equal_fresh_workspaces() {
+    // two forwards through one dirty workspace == fresh workspaces: a
+    // larger batch dirties every arena buffer, then smaller batches must
+    // read nothing stale from it (and repeating a batch through the
+    // same dirty arena reproduces its own bits)
+    let g = geometry();
+    let model = AttentionPredictor::seeded(g.clone(), 0xACE);
+    prop::check_res(
+        "attention-workspace-reuse",
+        16,
+        |rng| {
+            let big: Vec<ClipSample> =
+                (0..rng.range(2, 7)).map(|_| random_sample(rng, &g)).collect();
+            let small: Vec<ClipSample> =
+                (0..rng.range(1, 4)).map(|_| random_sample(rng, &g)).collect();
+            (big, small)
+        },
+        |(big, small)| {
+            let forward_fresh = |samples: &[ClipSample]| -> Result<Vec<f32>, String> {
+                let refs: Vec<&ClipSample> = samples.iter().collect();
+                let batch = build_batch(&refs, samples.len(), &g);
+                let mut fresh = Workspace::new();
+                let mut out = Vec::new();
+                model
+                    .forward_into(&batch, 40.0, &mut fresh, &mut out)
+                    .map_err(|e| e.to_string())?;
+                Ok(out)
+            };
+            let fresh_big = forward_fresh(big)?;
+            let fresh_small = forward_fresh(small)?;
+
+            let mut ws = Workspace::new();
+            let mut out: Vec<f32> = Vec::new();
+            let big_refs: Vec<&ClipSample> = big.iter().collect();
+            let small_refs: Vec<&ClipSample> = small.iter().collect();
+            let big_batch = build_batch(&big_refs, big.len(), &g);
+            let small_batch = build_batch(&small_refs, small.len(), &g);
+            // dirty the arena with the big batch, then reuse it
+            for (label, batch, want) in [
+                ("big", &big_batch, &fresh_big),
+                ("small-after-big", &small_batch, &fresh_small),
+                ("small-repeat", &small_batch, &fresh_small),
+                ("big-after-small", &big_batch, &fresh_big),
+            ] {
+                model
+                    .forward_into(batch, 40.0, &mut ws, &mut out)
+                    .map_err(|e| e.to_string())?;
+                if out.len() != want.len() {
+                    return Err(format!("{label}: {} rows vs {}", out.len(), want.len()));
+                }
+                for (i, (a, b)) in want.iter().zip(&out).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{label} row {i}: fresh {a} != dirty {b}"));
+                    }
+                }
             }
             Ok(())
         },

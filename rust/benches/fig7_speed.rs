@@ -21,7 +21,10 @@
 //!   hides it;
 //! * **persistent clip cache** — a second run warm-started from the
 //!   on-disk cache must resolve every clip without inference
-//!   (warm-start hit rate > 0, zero new predictions).
+//!   (warm-start hit rate > 0, zero new predictions);
+//! * **serve latency** — p50/p99/mean per client concurrency against a
+//!   `capsim serve` daemon (attention backend), with the per-sweep batch
+//!   fill showing cross-request batching engage as concurrency rises.
 //!
 //! The per-benchmark paper table runs on the configured backend
 //! (`pipeline.backend`, default pjrt → trained PJRT model when
@@ -195,5 +198,80 @@ fn main() -> anyhow::Result<()> {
         let _ = std::fs::remove_file(&cache_path);
     }
     scaling.emit("fig7_engine_scaling");
+
+    // ---- serve latency: p50/p99 per client concurrency against the
+    // daemon (attention backend — a real model cost in the hot path).
+    // Stats deltas between sweeps isolate each concurrency level's
+    // batches; rising mean fill with concurrency is the cross-request
+    // batching paying off ----
+    serve_latency_sweep(&cfg)?;
+    Ok(())
+}
+
+fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<()> {
+    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary};
+
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        linger_us: 500,
+        queue_depth: cfg.effective_queue_depth(),
+        time_scale: 40.0,
+        cache_path: None,
+        cache_max_entries: cfg.cache_max_entries,
+    };
+    let server = Server::bind(opts)?;
+    let addr = server.addr();
+    let seed_cfg = cfg.clone();
+    let daemon = std::thread::spawn(move || -> anyhow::Result<ServeSummary> {
+        // build the model inside the thread: Predictor is not Send
+        let model = Backend::Attention.build_forward(&seed_cfg)?;
+        server.run(model.as_ref())
+    });
+
+    let g = capsim::runtime::default_geometry();
+    let mut t = Table::new(
+        "Serve latency — p50/p99 per client concurrency (attention daemon)",
+        &["Clients", "Requests", "p50 ms", "p99 ms", "mean ms", "fill", "x-req batches"],
+    );
+    let mut prev_clips = 0u64;
+    let mut prev_batches = 0u64;
+    let mut prev_cross = 0u64;
+    for (i, &clients) in [1usize, 2, 4, 8].iter().enumerate() {
+        let spec = BurstSpec {
+            clients,
+            requests: 24,
+            clips: 6,
+            use_cache: false,
+            seed: 0xF16_5EED + i as u64,
+        };
+        let report = burst(addr, &g, &spec)?;
+        let clips_d = report.stats.predicted_clips - prev_clips;
+        let batches_d = report.stats.batches - prev_batches;
+        let cross_d = report.stats.cross_batches - prev_cross;
+        prev_clips = report.stats.predicted_clips;
+        prev_batches = report.stats.batches;
+        prev_cross = report.stats.cross_batches;
+        let fill = if batches_d == 0 { 0.0 } else { clips_d as f64 / batches_d as f64 };
+        t.row(vec![
+            clients.to_string(),
+            (clients * spec.requests).to_string(),
+            format!("{:.3}", report.p50_ms()),
+            format!("{:.3}", report.p99_ms()),
+            format!("{:.3}", report.mean_ms()),
+            format!("{fill:.2}"),
+            cross_d.to_string(),
+        ]);
+    }
+    t.emit("fig7_serve_latency");
+
+    Client::connect(addr)?.shutdown()?;
+    let summary = daemon.join().expect("serve daemon panicked")?;
+    println!(
+        "serve drained: {} requests, {} batches, mean fill {:.2}, {} rejected",
+        summary.stats.requests,
+        summary.stats.batches,
+        summary.stats.mean_fill(),
+        summary.stats.rejected
+    );
     Ok(())
 }

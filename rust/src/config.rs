@@ -207,6 +207,14 @@ pub struct PipelineConfig {
     /// suites produce, so eviction only engages on long-lived persistent
     /// caches.
     pub cache_max_entries: usize,
+    /// Listen address of the `capsim serve` daemon (`--listen` /
+    /// `serve.listen`); port `0` picks a free port.
+    pub serve_listen: String,
+    /// How long (µs) the serve daemon's predict loop lets a partial
+    /// batch wait for more requests before flushing (`--linger-us` /
+    /// `serve.linger_us`). Larger values trade first-clip latency for
+    /// fuller cross-request batches.
+    pub serve_linger_us: u64,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -232,6 +240,8 @@ impl Default for PipelineConfig {
             batch_depth: 0,
             cache_dir: String::new(),
             cache_max_entries: 1_000_000,
+            serve_listen: "127.0.0.1:4650".to_string(),
+            serve_linger_us: 2_000,
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -263,6 +273,8 @@ impl PipelineConfig {
         c.cache_max_entries = t
             .int("pipeline.cache_max_entries", c.cache_max_entries as i64)
             .max(0) as usize;
+        c.serve_listen = t.str("serve.listen", &c.serve_listen);
+        c.serve_linger_us = t.int("serve.linger_us", c.serve_linger_us as i64).max(0) as u64;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -387,6 +399,9 @@ mod tests {
             batch_depth = 3
             cache_dir = "warm"
             cache_max_entries = 500
+            [serve]
+            listen = "127.0.0.1:9999"
+            linger_us = 750
             [o3]
             rob_entries = 128
             [train]
@@ -409,6 +424,8 @@ mod tests {
         assert_eq!(c.cache_dir, "warm");
         assert_eq!(c.backend, Backend::Attention);
         assert_eq!(c.cache_max_entries, 500);
+        assert_eq!(c.serve_listen, "127.0.0.1:9999");
+        assert_eq!(c.serve_linger_us, 750);
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -436,6 +453,8 @@ mod tests {
         assert!(c.cache_dir.is_empty(), "persistence off by default");
         assert_eq!(c.backend, Backend::Pjrt, "pjrt is the default backend");
         assert_eq!(c.cache_max_entries, 1_000_000, "bound far above suite sizes");
+        assert_eq!(c.serve_listen, "127.0.0.1:4650");
+        assert_eq!(c.serve_linger_us, 2_000);
     }
 
     #[test]

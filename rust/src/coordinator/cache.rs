@@ -52,6 +52,11 @@ const FILE_MAGIC: u32 = 0x434C_5043;
 /// Bump on any incompatible layout change; old files then cold-start.
 const FILE_VERSION: u32 = 1;
 
+/// Per-process counter folded into temp-file names so concurrent
+/// [`ClipCache::save`] calls (threads in one process, or several
+/// processes via the pid component) never share a temp file.
+static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// Hit/miss/eviction counters observed so far (monotone; see
 /// [`ClipCache::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -275,15 +280,31 @@ impl ClipCache {
     /// Persist the cache for cross-process warm starts. The header keys
     /// the file to one `(model fingerprint, time_scale)` combination —
     /// the same contract as the in-memory cache. The size bound is
-    /// enforced first, so a bounded cache never persists more than
-    /// `max_entries` clips. Writes a sibling temp file and renames it,
-    /// so a crashed writer never leaves a half-written cache behind.
-    /// Returns the number of entries saved.
+    /// enforced on the **snapshot**, so a bounded cache never persists
+    /// more than `max_entries` clips even when inserts race the save.
+    /// Writes a uniquely-named sibling temp file (pid + sequence — a
+    /// fixed name would let two concurrent savers interleave writes and
+    /// rename a torn image over the good cache), fsyncs it, and renames
+    /// it into place, so a crashed or racing writer never leaves a
+    /// half-written cache behind. Returns the number of entries saved.
     pub fn save(&self, path: &Path, fingerprint: u64, time_scale: f32) -> std::io::Result<usize> {
         self.enforce_bound();
-        let entries = self.entries();
-        let tmp = path.with_extension("tmp");
-        {
+        let mut entries = self.entries();
+        // Inserts racing this save can grow the snapshot past the bound
+        // between enforce_bound() and entries(); trim the snapshot itself
+        // (key order — the same rule `load_bounded` applies to an
+        // oversized file) so the promise holds under any schedule.
+        if self.max_entries > 0 && entries.len() > self.max_entries {
+            entries.truncate(self.max_entries);
+        }
+        // `with_extension("tmp")` would *replace* the final extension, so
+        // `clips.cache` and `clips.other` collide on one `clips.tmp`;
+        // append to the full file name instead.
+        let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        tmp_name.push(format!(".{}.{}.tmp", std::process::id(), seq));
+        let tmp = path.with_file_name(tmp_name);
+        let write = (|| -> std::io::Result<()> {
             let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
             w.write_all(&FILE_MAGIC.to_le_bytes())?;
             w.write_all(&FILE_VERSION.to_le_bytes())?;
@@ -294,9 +315,17 @@ impl ClipCache {
                 w.write_all(&k.to_le_bytes())?;
                 w.write_all(&v.to_bits().to_le_bytes())?;
             }
-            w.flush()?;
+            // fsync before rename: without it a crash shortly after the
+            // rename can leave a file whose *name* is durable but whose
+            // bytes are not — exactly the torn cache the temp-file dance
+            // is meant to rule out.
+            w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+            std::fs::rename(&tmp, path)
+        })();
+        if write.is_err() {
+            let _ = std::fs::remove_file(&tmp);
         }
-        std::fs::rename(&tmp, path)?;
+        write?;
         Ok(entries.len())
     }
 
@@ -577,6 +606,131 @@ mod tests {
         c.insert(2, 2.0);
         assert_eq!(c.len(), 2);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    /// Concurrent saves to one path must never produce a torn file: each
+    /// writer gets a unique temp file, so every rename publishes one
+    /// writer's complete image. Pre-fix, the shared `clips.tmp` sibling
+    /// let writers interleave bytes (corrupt loads) or race the rename
+    /// (spurious `NotFound` save errors).
+    #[test]
+    fn concurrent_saves_to_one_path_never_corrupt_it() {
+        let dir = std::env::temp_dir().join("capsim_cache_save_race");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let counts = [50usize, 100, 150, 200];
+        let caches: Vec<ClipCache> = counts
+            .iter()
+            .map(|&n| {
+                let c = ClipCache::new();
+                for k in 0..n as u64 {
+                    c.insert(k, k as f64 + 0.5);
+                }
+                c
+            })
+            .collect();
+        caches[0].save(&path, 77, 4.0).unwrap();
+        std::thread::scope(|s| {
+            for c in &caches {
+                let path = &path;
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        c.save(path, 77, 4.0).unwrap();
+                    }
+                });
+            }
+            for _ in 0..50 {
+                let loaded = ClipCache::load(&path, 77, 4.0).unwrap();
+                assert!(
+                    counts.contains(&loaded.len()),
+                    "load saw a torn image: {} entries",
+                    loaded.len()
+                );
+            }
+        });
+        let loaded = ClipCache::load(&path, 77, 4.0).unwrap();
+        assert!(counts.contains(&loaded.len()));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Same-stem caches with different extensions must not share a temp
+    /// file (`with_extension("tmp")` folded `clips.cache` and
+    /// `clips.other` onto one `clips.tmp`); and no `.tmp` litter may
+    /// survive a successful save.
+    #[test]
+    fn sibling_caches_with_distinct_extensions_do_not_collide() {
+        let dir = std::env::temp_dir().join("capsim_cache_ext_collide");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let pa = dir.join("clips.cache");
+        let pb = dir.join("clips.other");
+        let a = ClipCache::new();
+        let b = ClipCache::new();
+        for k in 0..100u64 {
+            a.insert(k, k as f64);
+        }
+        for k in 0..200u64 {
+            b.insert(k, k as f64 * 2.0);
+        }
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..10 {
+                    a.save(&pa, 5, 1.0).unwrap();
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..10 {
+                    b.save(&pb, 5, 1.0).unwrap();
+                }
+            });
+        });
+        let la = ClipCache::load(&pa, 5, 1.0).unwrap();
+        let lb = ClipCache::load(&pb, 5, 1.0).unwrap();
+        assert_eq!(la.len(), 100);
+        assert_eq!(lb.len(), 200);
+        assert_eq!(la.entries(), a.entries());
+        assert_eq!(lb.entries(), b.entries());
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let name = name.to_string_lossy().into_owned();
+            assert!(!name.ends_with(".tmp"), "leftover temp file {name}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The bound holds on the persisted file even when inserts race the
+    /// save: the snapshot itself is trimmed, not just the live map.
+    #[test]
+    fn bounded_save_never_exceeds_bound_under_racing_inserts() {
+        let dir = std::env::temp_dir().join("capsim_cache_bound_race");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let bound = 64usize;
+        let c = ClipCache::bounded(bound);
+        let finished = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let c = &c;
+                let finished = &finished;
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(0xBEEF ^ t);
+                    for _ in 0..2_000 {
+                        c.insert(rng.next_u64(), 1.0);
+                    }
+                    finished.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // save continuously while the inserters hammer the cache
+            while finished.load(Ordering::Relaxed) < 3 {
+                let saved = c.save(&path, 11, 2.5).unwrap();
+                assert!(saved <= bound, "save persisted {saved} > bound {bound}");
+            }
+        });
+        let saved = c.save(&path, 11, 2.5).unwrap();
+        assert!(saved <= bound);
+        let loaded = ClipCache::load(&path, 11, 2.5).unwrap();
+        assert!(loaded.len() <= bound);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

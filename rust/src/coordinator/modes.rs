@@ -34,8 +34,8 @@ use crate::context::{context_tokens, REGISTER_SPEC};
 use crate::dataset::ClipSample;
 use crate::functional::TraceRecord;
 use crate::o3::O3Core;
-use crate::predictor::BatchAccumulator;
-use crate::runtime::{Predictor, Workspace};
+use crate::predictor::{BatchAccumulator, BatchRunner};
+use crate::runtime::Predictor;
 use crate::simpoint::SelectedInterval;
 use crate::tokenizer::standardize::{fast_clip_key, tokenize_clip};
 
@@ -359,21 +359,21 @@ impl DedupState {
             return Ok(());
         }
         let mut acc = BatchAccumulator::new(model.max_fwd_batch(), model.geometry().clone());
-        // one workspace + prediction buffer for every batch of the run:
-        // steady-state forwards reuse the same scratch arena
-        let mut ws = Workspace::new();
-        let mut preds: Vec<f32> = Vec::new();
+        // one BatchRunner (workspace + prediction buffer) for every batch
+        // of the run: steady-state forwards reuse the same scratch arena
+        let mut runner = BatchRunner::new();
         for (key, sample) in pending {
             if let Some((keys, batch)) = acc.push(key, sample) {
-                model.forward_into(&batch, time_scale, &mut ws, &mut preds)?;
-                self.resolve(&keys, &preds, cache);
+                let preds = runner.forward(model, &batch, time_scale)?;
+                self.resolve(&keys, preds, cache);
             }
         }
         // tail batch: the smallest compiled size that fits, not full cap
-        let tail_cap = model.pick_fwd_batch(acc.pending());
-        if let Some((keys, batch)) = acc.flush(tail_cap) {
-            model.forward_into(&batch, time_scale, &mut ws, &mut preds)?;
-            self.resolve(&keys, &preds, cache);
+        let tail = acc.drain();
+        if !tail.is_empty() {
+            let keys: Vec<u64> = tail.iter().map(|&(k, _)| k).collect();
+            let preds = runner.forward_tail(model, &tail, time_scale)?;
+            self.resolve(&keys, preds, cache);
         }
         Ok(())
     }

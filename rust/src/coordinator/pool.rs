@@ -4,12 +4,29 @@
 //! returns results in input order. With one core (this image) it degrades
 //! to sequential execution with identical results — determinism is part of
 //! the contract either way.
+//!
+//! Panic contract: a panicking job re-raises with its **original
+//! payload** on the caller thread (not the opaque `PoisonError` a
+//! poisoned slot mutex would otherwise produce), and once any worker has
+//! observed a panic the remaining workers stop pulling new jobs — a
+//! failing run winds down instead of burning through the whole job list.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, ignoring poison: every slot value here is only read
+/// after the panic has been captured separately, so a poisoned guard
+/// carries no torn state worth refusing.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Map `f` over `items` using up to `threads` OS threads; results keep
 /// input order. `f` must be `Sync` (called concurrently by reference).
+/// If a job panics, the first panic payload is re-raised here once the
+/// workers have wound down (see the module docs).
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -26,24 +43,45 @@ where
         items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    let panicked = AtomicBool::new(false);
+    let first_panic: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
 
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
+                if panicked.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let item = jobs[i].lock().unwrap().take().unwrap();
-                let r = f(item);
-                *results[i].lock().unwrap() = Some(r);
+                let item = lock_clean(&jobs[i]).take().unwrap();
+                match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                    Ok(r) => *lock_clean(&results[i]) = Some(r),
+                    Err(payload) => {
+                        let mut slot = lock_clean(&first_panic);
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                        panicked.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
             });
         }
     });
 
+    if let Some(payload) = lock_clean(&first_panic).take() {
+        resume_unwind(payload);
+    }
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().unwrap())
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(PoisonError::into_inner)
+                .expect("every job completed (no panic was captured)")
+        })
         .collect()
 }
 
@@ -98,6 +136,47 @@ mod tests {
         // can't assert true parallelism on 1 core; assert all jobs ran
         let out = parallel_map((0..50).collect(), default_threads(), |x: i32| x);
         assert_eq!(out.len(), 50);
+    }
+
+    /// A panicking job must surface its own message, not the opaque
+    /// `PoisonError` the pre-fix result-collection loop raised when it
+    /// hit a slot mutex the dying worker had poisoned.
+    #[test]
+    fn worker_panic_preserves_the_original_message() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map((0..200).collect::<Vec<i32>>(), 4, |x: i32| {
+                if x == 0 {
+                    panic!("boom at job zero");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                x
+            })
+        });
+        let payload = caught.expect_err("the job panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+        assert_eq!(msg, "boom at job zero");
+    }
+
+    #[test]
+    fn workers_stop_pulling_jobs_after_a_panic() {
+        let executed = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map((0..1000).collect::<Vec<i32>>(), 2, |x: i32| {
+                if x == 0 {
+                    panic!("first job fails");
+                }
+                executed.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                x
+            })
+        });
+        assert!(caught.is_err());
+        // job 0 panics within microseconds; with 1ms per remaining job the
+        // other worker cannot drain the whole list before seeing the flag
+        assert!(
+            executed.load(Ordering::Relaxed) < 999,
+            "remaining jobs must be skipped once a panic is observed"
+        );
     }
 
     #[test]

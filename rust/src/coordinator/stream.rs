@@ -53,8 +53,8 @@ use anyhow::Result;
 
 use crate::config::PipelineConfig;
 use crate::dataset::ClipSample;
-use crate::predictor::{build_batch, BatchAccumulator};
-use crate::runtime::{Batch, Predictor, Workspace};
+use crate::predictor::{BatchAccumulator, BatchRunner};
+use crate::runtime::{Batch, Predictor};
 use crate::simpoint::SelectedInterval;
 
 use super::cache::ClipCache;
@@ -442,17 +442,16 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
 
         // stage 3: predict + resolve on the caller thread (the model
         // never crosses a thread boundary, so `P` needs no `Sync`). One
-        // workspace + one prediction buffer live for the whole run, so
-        // steady-state forwards allocate nothing.
-        let mut ws = Workspace::new();
-        let mut preds: Vec<f32> = Vec::new();
+        // BatchRunner (workspace + prediction buffer) lives for the
+        // whole run, so steady-state forwards allocate nothing.
+        let mut runner = BatchRunner::new();
         for item in rx_work {
             match item {
                 WorkItem::Batch(keys, batch) => {
                     let p0 = Instant::now();
-                    match model.forward_into(&batch, time_scale, &mut ws, &mut preds) {
-                        Ok(()) => {
-                            for (&k, &v) in keys.iter().zip(&preds) {
+                    match runner.forward(model, &batch, time_scale) {
+                        Ok(preds) => {
+                            for (&k, &v) in keys.iter().zip(preds) {
                                 pred.insert(k, v as f64);
                                 cache.insert(k, v as f64);
                             }
@@ -466,13 +465,9 @@ pub fn capsim_suite_streamed<P: Predictor + ?Sized>(
                 }
                 WorkItem::Tail(clips) => {
                     let p0 = Instant::now();
-                    let tail_cap = model.pick_fwd_batch(clips.len());
-                    let refs: Vec<&ClipSample> =
-                        clips.iter().map(|(_, sample)| sample).collect();
-                    let batch = build_batch(&refs, tail_cap, model.geometry());
-                    match model.forward_into(&batch, time_scale, &mut ws, &mut preds) {
-                        Ok(()) => {
-                            for (&(k, _), &v) in clips.iter().zip(&preds) {
+                    match runner.forward_tail(model, &clips, time_scale) {
+                        Ok(preds) => {
+                            for (&(k, _), &v) in clips.iter().zip(preds) {
                                 pred.insert(k, v as f64);
                                 cache.insert(k, v as f64);
                             }

@@ -66,6 +66,12 @@
 //!   drives entire suites through one shared cache with full inference
 //!   batches, and O3 golden-label generation (`coordinator::golden`)
 //!   rides the same stage graph;
+//! * [`serve`] — the `capsim serve` daemon: weights loaded once, a
+//!   persistent clip cache, and **cross-request batching** — concurrent
+//!   clients' clips fill one shared `BatchAccumulator` (flush on
+//!   batch-full or a small linger deadline), with a bounded admission
+//!   queue that answers `Busy` + retry hint under overload, and a
+//!   graceful drain that saves the cache on shutdown;
 //! * [`workloads`] — the 24 synthetic SPEC-2017-analog benchmarks;
 //! * [`report`] — table/series emitters used by the benches;
 //! * [`config`], [`util`] — TOML-subset configs and offline-friendly
@@ -86,6 +92,7 @@ pub mod predictor;
 pub mod report;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod simpoint;
 pub mod slicer;
 pub mod tokenizer;

@@ -10,10 +10,14 @@
 //! capsim dataset --out F [--config F] build + save the golden dataset
 //! capsim train  [--steps N] [--variant V] train a predictor end-to-end
 //! capsim compare [--config F]       Fig.-7 style gem5 vs CAPSim timing
+//! capsim serve  [--listen A] [--linger-us N] run the prediction daemon
+//!               (--stats / --shutdown query a running daemon instead)
+//! capsim burst  [--listen A] [--clients N]  fire a client burst at a daemon
 //! capsim info                       artifact manifest summary
 //! ```
 
 use std::collections::HashMap;
+use std::net::{SocketAddr, ToSocketAddrs};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -25,6 +29,7 @@ use capsim::o3::O3Core;
 use capsim::predictor::{train, TrainParams};
 use capsim::report::Table;
 use capsim::runtime::{Backend, Predictor, Runtime};
+use capsim::serve::{BurstSpec, Client, Server, ServeOptions};
 use capsim::util::stats;
 use capsim::workloads::{suite, Scale};
 
@@ -111,6 +116,8 @@ fn main() -> Result<()> {
         "dataset" => dataset_cmd(&flags)?,
         "train" => train_cmd(&flags)?,
         "compare" => compare_cmd(&flags)?,
+        "serve" => serve_cmd(&flags)?,
+        "burst" => burst_cmd(&flags)?,
         "info" => info_cmd(&flags)?,
         _ => help(),
     }
@@ -120,7 +127,7 @@ fn main() -> Result<()> {
 fn help() {
     println!(
         "capsim — attention-based CPU performance simulator\n\
-         usage: capsim <table1|table2|trace|o3|dataset|train|compare|info> [flags]\n\
+         usage: capsim <table1|table2|trace|o3|dataset|train|compare|serve|burst|info> [flags]\n\
          flags: --config FILE  --bench N  --max M  --steps N  --variant V  --out F\n\
                 --full  --threads N (0 = auto; precedence: --threads >\n\
                 pipeline.threads > CAPSIM_THREADS env > core count)\n\
@@ -133,7 +140,18 @@ fn help() {
                 --backend B (pjrt | native | attention; pjrt needs\n\
                 `make artifacts`, native/attention are dependency-free —\n\
                 attention runs the pure-Rust model)\n\
-                --native (deprecated alias for --backend native)"
+                --native (deprecated alias for --backend native)\n\
+         serve:  --listen ADDR (default 127.0.0.1:4650 / serve.listen TOML;\n\
+                port 0 picks a free port)\n\
+                --linger-us N (how long a partial batch waits for more\n\
+                requests before flushing; default 2000 / serve.linger_us)\n\
+                --queue-depth N (admission bound; overload answers Busy +\n\
+                retry hint), --cache-dir DIR (persistent clip cache, saved\n\
+                on graceful shutdown), --time-scale X (cache key part)\n\
+                --stats / --shutdown (query or stop a *running* daemon)\n\
+         burst:  --listen ADDR  --clients N  --requests N  --clips N\n\
+                --seed N  --no-cache  --expect-cross-batch (fail unless\n\
+                batches mixed requests)  --shutdown (stop the daemon after)"
     );
 }
 
@@ -424,6 +442,159 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
         std::fs::create_dir_all(&cfg.cache_dir)?;
         let saved = cache.save(path, model.fingerprint(), time_scale)?;
         println!("saved clip cache ({saved} clips) to {path:?}");
+    }
+    Ok(())
+}
+
+/// Resolve `--listen` (falling back to the `serve.listen` config key)
+/// into a connectable socket address.
+fn resolve_addr(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<SocketAddr> {
+    let listen = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| cfg.serve_listen.clone());
+    listen
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {listen}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{listen} resolved to no address"))
+}
+
+fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<ServeOptions> {
+    let mut opts = ServeOptions {
+        listen: flags
+            .get("listen")
+            .cloned()
+            .unwrap_or_else(|| cfg.serve_listen.clone()),
+        linger_us: cfg.serve_linger_us,
+        queue_depth: cfg.effective_queue_depth(),
+        time_scale: 40.0,
+        cache_path: if cfg.cache_dir.is_empty() {
+            None
+        } else {
+            Some(Path::new(&cfg.cache_dir).join("clip_cache.bin"))
+        },
+        cache_max_entries: cfg.cache_max_entries,
+    };
+    if let Some(v) = flags.get("linger-us") {
+        opts.linger_us = v
+            .parse()
+            .map_err(|_| anyhow!("--linger-us expects an integer, got {v}"))?;
+    }
+    if let Some(v) = flags.get("time-scale") {
+        opts.time_scale = v
+            .parse()
+            .map_err(|_| anyhow!("--time-scale expects a number, got {v}"))?;
+    }
+    Ok(opts)
+}
+
+fn print_stats(stats: &capsim::serve::StatsReply) {
+    println!(
+        "requests {}  rejected {}  batches {}  cross-request batches {}  mean fill {:.2}",
+        stats.requests, stats.rejected, stats.batches, stats.cross_batches, stats.mean_fill()
+    );
+    println!(
+        "cache: {} clips resident, hit rate {:.1}% ({} hits / {} lookups), {} evictions",
+        stats.cache_len,
+        100.0 * stats.hit_rate(),
+        stats.cache_hits,
+        stats.cache_hits + stats.cache_misses,
+        stats.cache_evictions
+    );
+}
+
+fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+
+    // client modes against a running daemon
+    if flags.contains_key("stats") {
+        let addr = resolve_addr(flags, &cfg)?;
+        let stats = Client::connect(addr)?.stats()?;
+        print_stats(&stats);
+        return Ok(());
+    }
+    if flags.contains_key("shutdown") {
+        let addr = resolve_addr(flags, &cfg)?;
+        Client::connect(addr)?.shutdown()?;
+        println!("shutdown acknowledged by {addr}");
+        return Ok(());
+    }
+
+    if cfg.backend == Backend::Pjrt {
+        bail!(
+            "`capsim serve` keeps one model resident in-process, which needs a \
+             dependency-free backend; pick --backend native or --backend attention"
+        );
+    }
+    let model = cfg.backend.build_forward(&cfg)?;
+    let opts = serve_opts(flags, &cfg)?;
+    let server = Server::bind(opts)?;
+    println!(
+        "serving {} predictions on {} (linger {} us, queue depth {})",
+        cfg.backend,
+        server.addr(),
+        cfg.serve_linger_us,
+        cfg.effective_queue_depth()
+    );
+    let summary = server.run(model.as_ref())?;
+    println!("warm start: {}", summary.warm_start);
+    print_stats(&summary.stats);
+    match summary.cache_saved {
+        Some(n) => println!("saved clip cache ({n} clips)"),
+        None => println!("no cache dir configured; nothing persisted"),
+    }
+    Ok(())
+}
+
+fn burst_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let addr = resolve_addr(flags, &cfg)?;
+    let int_flag = |key: &str, default: usize| -> Result<usize> {
+        match flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+            None => Ok(default),
+        }
+    };
+    let spec = BurstSpec {
+        clients: int_flag("clients", 4)?.max(1),
+        requests: int_flag("requests", 25)?.max(1),
+        clips: int_flag("clips", 6)?.max(1),
+        use_cache: !flags.contains_key("no-cache"),
+        seed: int_flag("seed", 0x5EED)? as u64,
+    };
+    // load generation uses the default geometry — the one every
+    // dependency-free backend serves; the daemon validates each clip
+    let g = capsim::runtime::default_geometry();
+    let report = capsim::serve::burst(addr, &g, &spec)?;
+    println!(
+        "{} clients x {} requests x {} clips against {addr}",
+        spec.clients, spec.requests, spec.clips
+    );
+    println!(
+        "latency: p50 {:.3} ms  p99 {:.3} ms  mean {:.3} ms  ({} Busy retries absorbed)",
+        report.p50_ms(),
+        report.p99_ms(),
+        report.mean_ms(),
+        report.busy_retries
+    );
+    print_stats(&report.stats);
+    if flags.contains_key("expect-cross-batch") {
+        if report.stats.cross_batches == 0 || report.stats.mean_fill() <= 1.0 {
+            bail!(
+                "expected cross-request batching but saw {} cross-request batches \
+                 at mean fill {:.2}",
+                report.stats.cross_batches,
+                report.stats.mean_fill()
+            );
+        }
+        println!("cross-request batching confirmed");
+    }
+    if flags.contains_key("shutdown") {
+        Client::connect(addr)?.shutdown()?;
+        println!("shutdown acknowledged by {addr}");
     }
     Ok(())
 }

@@ -1,10 +1,14 @@
 //! Padding clip samples into the fixed-shape batches the AOT model expects,
 //! plus the [`BatchAccumulator`] the sharded engine uses to fill batches
-//! *across* intervals and benchmarks instead of flushing ragged
-//! per-interval remainders.
+//! *across* intervals and benchmarks (and, in `capsim serve`, across
+//! client requests) instead of flushing ragged per-interval remainders,
+//! and the [`BatchRunner`] that owns the per-driving-thread forward
+//! state every predict loop shares.
+
+use anyhow::Result;
 
 use crate::dataset::{ClipSample, Dataset};
-use crate::runtime::{Batch, ModelGeometry};
+use crate::runtime::{Batch, ModelGeometry, Predictor, Workspace};
 
 /// Assemble one batch of capacity `b` from `samples` (at most `b` of them).
 /// Rows beyond `samples.len()` stay zero-masked padding.
@@ -54,17 +58,23 @@ pub fn build_batches(ds: &Dataset, idx: &[usize], b: usize, g: &ModelGeometry) -
 /// [`flush`](BatchAccumulator::flush) can be partial (and is still padded
 /// to `cap`, which must be a compiled batch size).
 ///
+/// The key type `T` is generic so the same accumulator serves both the
+/// engine (plain `u64` content keys, the default) and the serving daemon,
+/// whose keys carry routing tags — `(request id, slot, content key)` —
+/// that thread each batched clip back to the client request it came from
+/// (cross-request batching).
+///
 /// Emission order is exactly push order, which is what keeps the engine
 /// deterministic across thread counts.
-pub struct BatchAccumulator {
+pub struct BatchAccumulator<T = u64> {
     cap: usize,
     g: ModelGeometry,
-    keys: Vec<u64>,
+    keys: Vec<T>,
     samples: Vec<ClipSample>,
 }
 
-impl BatchAccumulator {
-    pub fn new(cap: usize, g: ModelGeometry) -> BatchAccumulator {
+impl<T> BatchAccumulator<T> {
+    pub fn new(cap: usize, g: ModelGeometry) -> BatchAccumulator<T> {
         assert!(cap > 0, "batch capacity must be positive");
         BatchAccumulator {
             cap,
@@ -81,7 +91,7 @@ impl BatchAccumulator {
 
     /// Add one clip; returns a full `(keys, batch)` pair once `cap` clips
     /// have accumulated.
-    pub fn push(&mut self, key: u64, sample: ClipSample) -> Option<(Vec<u64>, Batch)> {
+    pub fn push(&mut self, key: T, sample: ClipSample) -> Option<(Vec<T>, Batch)> {
         self.keys.push(key);
         self.samples.push(sample);
         if self.samples.len() == self.cap {
@@ -95,7 +105,7 @@ impl BatchAccumulator {
     /// padded to `tail_cap` — pass the smallest *compiled* batch size
     /// that fits `pending()` (i.e. `model.pick_fwd_batch(pending())`) so
     /// the tail doesn't burn a full-capacity forward on a few rows.
-    pub fn flush(&mut self, tail_cap: usize) -> Option<(Vec<u64>, Batch)> {
+    pub fn flush(&mut self, tail_cap: usize) -> Option<(Vec<T>, Batch)> {
         if self.samples.is_empty() {
             None
         } else {
@@ -112,19 +122,74 @@ impl BatchAccumulator {
     /// Take every pending `(key, sample)` pair out of the accumulator
     /// without building a batch — the streaming engine's merge stage
     /// hands its tail downstream raw, and the predict stage (which knows
-    /// the compiled batch sizes) pads it with `pick_fwd_batch`.
-    pub fn drain(&mut self) -> Vec<(u64, ClipSample)> {
+    /// the compiled batch sizes) pads it with `pick_fwd_batch` (see
+    /// [`BatchRunner::forward_tail`]).
+    pub fn drain(&mut self) -> Vec<(T, ClipSample)> {
         let keys = std::mem::take(&mut self.keys);
         let samples = std::mem::take(&mut self.samples);
         keys.into_iter().zip(samples).collect()
     }
 
-    fn emit(&mut self, cap: usize) -> Option<(Vec<u64>, Batch)> {
+    fn emit(&mut self, cap: usize) -> Option<(Vec<T>, Batch)> {
         let keys = std::mem::take(&mut self.keys);
         let samples = std::mem::take(&mut self.samples);
         let refs: Vec<&ClipSample> = samples.iter().collect();
         let batch = build_batch(&refs, cap, &self.g);
         Some((keys, batch))
+    }
+}
+
+/// The per-driving-thread forward state — a [`Workspace`] scratch arena
+/// plus a reusable prediction buffer — behind every predict loop in the
+/// tree (stream stage 3, `DedupState::predict`, the eval loop, the serve
+/// daemon). One `BatchRunner` per driving thread keeps the steady-state
+/// forward allocation-free, exactly as the kernel contract in
+/// [`runtime`](crate::runtime) requires; centralizing it here means the
+/// workspace + buffer + tail-padding idiom exists once instead of being
+/// re-derived at each call site.
+#[derive(Default)]
+pub struct BatchRunner {
+    ws: Workspace,
+    preds: Vec<f32>,
+}
+
+impl BatchRunner {
+    pub fn new() -> BatchRunner {
+        BatchRunner { ws: Workspace::new(), preds: Vec::new() }
+    }
+
+    /// Run one prepared batch through [`Predictor::forward_into`] and
+    /// return the live-row predictions (length `batch.live`, borrowed
+    /// from the runner's buffer until the next call).
+    pub fn forward<P: Predictor + ?Sized>(
+        &mut self,
+        model: &P,
+        batch: &Batch,
+        time_scale: f32,
+    ) -> Result<&[f32]> {
+        model.forward_into(batch, time_scale, &mut self.ws, &mut self.preds)?;
+        Ok(&self.preds)
+    }
+
+    /// Pad-and-forward a raw accumulator tail (the output of
+    /// [`BatchAccumulator::drain`]): picks the smallest compiled capacity
+    /// that fits via [`Predictor::pick_fwd_batch`], builds the padded
+    /// batch, and forwards it. Predictions come back in `clips` order; an
+    /// empty tail returns an empty slice without touching the model.
+    pub fn forward_tail<P: Predictor + ?Sized, T>(
+        &mut self,
+        model: &P,
+        clips: &[(T, ClipSample)],
+        time_scale: f32,
+    ) -> Result<&[f32]> {
+        if clips.is_empty() {
+            self.preds.clear();
+            return Ok(&self.preds);
+        }
+        let cap = model.pick_fwd_batch(clips.len());
+        let refs: Vec<&ClipSample> = clips.iter().map(|(_, sample)| sample).collect();
+        let batch = build_batch(&refs, cap, model.geometry());
+        self.forward(model, &batch, time_scale)
     }
 }
 
@@ -215,6 +280,60 @@ mod tests {
         assert_eq!(batch.b, 2, "tail uses the caller-picked capacity");
         assert!(acc.flush(4).is_none());
         assert_eq!(acc.pending(), 0);
+    }
+
+    #[test]
+    fn accumulator_supports_tagged_keys() {
+        // the serve daemon threads (request id, slot) routing tags
+        // through the same accumulator the engine uses with plain keys
+        let g = geometry();
+        let mut acc: BatchAccumulator<(u64, usize)> = BatchAccumulator::new(2, g);
+        assert!(acc.push((7, 0), sample(2, 1)).is_none());
+        let (tags, batch) = acc.push((9, 1), sample(2, 2)).unwrap();
+        assert_eq!(tags, vec![(7, 0), (9, 1)]);
+        assert_eq!(batch.live, 2);
+        assert_eq!(acc.pending(), 0);
+        assert!(acc.drain().is_empty());
+    }
+
+    #[test]
+    fn batch_runner_tail_matches_single_row_forwards() {
+        use crate::runtime::{NativePredictor, Predictor};
+        let model = NativePredictor::with_defaults();
+        let g = model.geometry().clone();
+        let clips: Vec<(u64, ClipSample)> = (0..3u64)
+            .map(|i| {
+                let len = 2 + i as u16;
+                let tokens = (0..len as usize * g.l_token)
+                    .map(|t| 1 + ((t as u16 + i as u16) % 7))
+                    .collect();
+                ClipSample {
+                    tokens,
+                    len,
+                    ctx: vec![3; g.m_rows],
+                    time: 10.0,
+                    key: i,
+                    bench: 0,
+                }
+            })
+            .map(|s| (s.key, s))
+            .collect();
+        let mut runner = BatchRunner::new();
+        let batched: Vec<f32> =
+            runner.forward_tail(&model, &clips, 40.0).unwrap().to_vec();
+        assert_eq!(batched.len(), 3);
+        // the backend is row-local, so one-row tails reproduce each
+        // batched prediction bit-exactly (dirty runner reuse included)
+        let mut solo = BatchRunner::new();
+        for (i, pair) in clips.iter().enumerate() {
+            let p = solo
+                .forward_tail(&model, std::slice::from_ref(pair), 40.0)
+                .unwrap();
+            assert_eq!(p.len(), 1);
+            assert_eq!(p[0].to_bits(), batched[i].to_bits(), "clip {i}");
+        }
+        let none: &[(u64, ClipSample)] = &[];
+        assert!(runner.forward_tail(&model, none, 40.0).unwrap().is_empty());
     }
 
     #[test]

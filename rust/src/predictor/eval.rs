@@ -9,10 +9,10 @@
 use anyhow::Result;
 
 use crate::dataset::{ClipSample, Dataset};
-use crate::runtime::{Predictor, Workspace};
+use crate::runtime::Predictor;
 use crate::util::stats;
 
-use super::batcher::build_batch;
+use super::batcher::{build_batch, BatchRunner};
 
 /// Evaluation result over a subset.
 #[derive(Clone, Debug)]
@@ -34,15 +34,14 @@ pub fn predict_all<P: Predictor + ?Sized>(
     let g = model.geometry().clone();
     let b = model.max_fwd_batch();
     let mut out = Vec::with_capacity(idx.len());
-    // one workspace + prediction buffer across the chunk loop
-    let mut ws = Workspace::new();
-    let mut pred: Vec<f32> = Vec::new();
+    // one BatchRunner (workspace + prediction buffer) across the chunks
+    let mut runner = BatchRunner::new();
     for chunk in idx.chunks(b) {
         let refs: Vec<&ClipSample> = chunk.iter().map(|&i| &ds.samples[i]).collect();
         let cap = model.pick_fwd_batch(refs.len());
         let batch = build_batch(&refs, cap, &g);
-        model.forward_into(&batch, time_scale, &mut ws, &mut pred)?;
-        out.extend(pred.iter().map(|&p| p as f64));
+        let preds = runner.forward(model, &batch, time_scale)?;
+        out.extend(preds.iter().map(|&p| p as f64));
     }
     Ok(out)
 }

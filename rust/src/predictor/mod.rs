@@ -8,7 +8,7 @@ pub mod eval;
 pub mod linreg;
 pub mod train;
 
-pub use batcher::{build_batch, build_batches, BatchAccumulator};
+pub use batcher::{build_batch, build_batches, BatchAccumulator, BatchRunner};
 pub use eval::{evaluate, predict_all, EvalResult};
 pub use linreg::LinRegBaseline;
 pub use train::{train, TrainLog, TrainParams};

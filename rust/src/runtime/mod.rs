@@ -56,6 +56,37 @@
 //! batch compositions, paddings, and dirty-workspace reuse), and the
 //! baseline the `perf_micro` kernel-regression harness measures speedups
 //! against (`BENCH_kernels.json`, uploaded by the CI `perf-smoke` job).
+//!
+//! ## Serving architecture
+//!
+//! The [`serve`](crate::serve) daemon is the runtime's long-lived
+//! deployment shape: one backend built once through
+//! [`Backend::build_forward`], then shared by every client connection.
+//! A request travels
+//!
+//! ```text
+//!   client ──frame──▶ session thread ──bounded admission──▶ predict loop
+//!                      (validate against    (queue_depth;     (one model,
+//!                       ModelGeometry)       full → Busy +     one Workspace,
+//!                                            retry hint)       one shared
+//!                                                              BatchAccumulator)
+//!   client ◀─reply── settle: rows routed back per request ◀── forward
+//! ```
+//!
+//! Clips from *different* requests fill **one** accumulator, flushed on
+//! batch-full or a small linger deadline, so concurrent small requests
+//! ride full batches. This is only sound because the dependency-free
+//! backends are **row-local**: a clip's prediction is a function of that
+//! clip alone, never of its batch neighbors or padding (the invariance
+//! `tests/prop_attention.rs` pins). Cross-request batching therefore
+//! changes throughput and latency, never answers — concurrent serving
+//! is bit-identical to single-shot calls, which `tests/serve_e2e.rs`
+//! asserts end to end. The daemon's persistent clip cache reuses the
+//! coordinator's [`ClipCache`](crate::coordinator::ClipCache), keyed by
+//! [`Predictor::fingerprint`] + `time_scale` like every other warm
+//! start. The `pjrt` backend is excluded from serving: its predictions
+//! are batch-composition sensitive (≈1e-3), which would break the
+//! bit-identical contract.
 
 pub mod attention;
 pub mod backend;

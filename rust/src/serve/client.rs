@@ -1,0 +1,214 @@
+//! Client side of the serve protocol, plus the burst-load harness the
+//! CI smoke job and the Fig.-7 latency bench drive.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::dataset::ClipSample;
+use crate::runtime::{fingerprint_mix, ModelGeometry};
+use crate::util::{stats, Rng};
+
+use super::wire::{read_frame, write_frame, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE};
+
+/// The two normal outcomes of one predict round-trip: `Busy` is
+/// backpressure, not failure — retry after the server's hint.
+#[derive(Debug)]
+pub enum PredictOutcome {
+    Predictions(Vec<f64>),
+    Busy { retry_ms: u32 },
+}
+
+/// One connection to a running `capsim serve` daemon.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting to {addr:?}"))?;
+        Ok(Client { stream })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode()).context("sending request")?;
+        let frame = read_frame(&mut self.stream).context("reading reply")?;
+        Response::decode(&frame)
+    }
+
+    /// One predict round-trip; see [`PredictOutcome`].
+    pub fn predict(
+        &mut self,
+        clips: &[(u64, ClipSample)],
+        use_cache: bool,
+    ) -> Result<PredictOutcome> {
+        let wire: Vec<WireClip> = clips
+            .iter()
+            .map(|(k, s)| WireClip {
+                key: *k,
+                len: s.len,
+                tokens: s.tokens.clone(),
+                ctx: s.ctx.clone(),
+            })
+            .collect();
+        let flags = if use_cache { FLAG_USE_CACHE } else { 0 };
+        match self.roundtrip(&Request::Predict { flags, clips: wire })? {
+            Response::Predictions(p) => {
+                ensure!(
+                    p.len() == clips.len(),
+                    "expected {} predictions, got {}",
+                    clips.len(),
+                    p.len()
+                );
+                Ok(PredictOutcome::Predictions(p))
+            }
+            Response::Busy { retry_ms, .. } => Ok(PredictOutcome::Busy { retry_ms }),
+            Response::Error(e) => bail!("server refused the request: {e}"),
+            other => bail!("unexpected reply to predict: {other:?}"),
+        }
+    }
+
+    /// Predict, honoring `Busy` retry hints up to `max_retries` times.
+    /// Returns the predictions and how many retries were needed.
+    pub fn predict_retry(
+        &mut self,
+        clips: &[(u64, ClipSample)],
+        use_cache: bool,
+        max_retries: usize,
+    ) -> Result<(Vec<f64>, usize)> {
+        for attempt in 0..=max_retries {
+            match self.predict(clips, use_cache)? {
+                PredictOutcome::Predictions(p) => return Ok((p, attempt)),
+                PredictOutcome::Busy { retry_ms } => {
+                    std::thread::sleep(Duration::from_millis(retry_ms.max(1) as u64));
+                }
+            }
+        }
+        bail!("server still busy after {max_retries} retries")
+    }
+
+    pub fn stats(&mut self) -> Result<StatsReply> {
+        match self.roundtrip(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("unexpected reply to stats: {other:?}"),
+        }
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Response::ShutdownAck => Ok(()),
+            other => bail!("unexpected reply to shutdown: {other:?}"),
+        }
+    }
+}
+
+/// Shape of a burst-load run: `clients` concurrent connections each
+/// sending `requests` requests of `clips` clips.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstSpec {
+    pub clients: usize,
+    pub requests: usize,
+    pub clips: usize,
+    pub use_cache: bool,
+    pub seed: u64,
+}
+
+impl Default for BurstSpec {
+    fn default() -> BurstSpec {
+        BurstSpec { clients: 4, requests: 25, clips: 6, use_cache: true, seed: 0x5EED }
+    }
+}
+
+/// Per-request latencies plus the server's counter snapshot after the
+/// burst — the raw material of the Fig.-7 p50/p99-per-concurrency table.
+#[derive(Debug)]
+pub struct BurstReport {
+    pub latencies_s: Vec<f64>,
+    /// Total `Busy` bounces the clients absorbed (each then retried).
+    pub busy_retries: usize,
+    pub stats: StatsReply,
+}
+
+impl BurstReport {
+    pub fn p50_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 50.0) * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 99.0) * 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.latencies_s) * 1e3
+    }
+}
+
+/// Deterministic geometry-valid clips for load generation: every
+/// `(seed, client, request, i)` combination yields the same clip on
+/// every machine, and distinct combinations yield distinct keys.
+pub fn synthetic_clips(
+    seed: u64,
+    client: u64,
+    request: u64,
+    n: usize,
+    g: &ModelGeometry,
+) -> Vec<(u64, ClipSample)> {
+    (0..n as u64)
+        .map(|i| {
+            let mut h = fingerprint_mix(0xCBF2_9CE4_8422_2325, seed);
+            for v in [client, request, i] {
+                h = fingerprint_mix(h, v);
+            }
+            let mut rng = Rng::new(h);
+            let len = 1 + rng.below(g.l_clip as u64) as u16;
+            let tokens: Vec<u16> = (0..len as usize * g.l_token)
+                .map(|_| 1 + rng.below(g.vocab_size as u64 - 1) as u16)
+                .collect();
+            let ctx: Vec<u16> =
+                (0..g.m_rows).map(|_| rng.below(g.vocab_size as u64) as u16).collect();
+            let key = fingerprint_mix(h, rng.next_u64());
+            (key, ClipSample { tokens, len, ctx, time: 1.0, key, bench: 0 })
+        })
+        .collect()
+}
+
+/// Fire one burst at a running daemon and collect per-request latency.
+/// Each client thread runs its requests back-to-back, retrying through
+/// `Busy` bounces; latency includes those retries (it is what a caller
+/// actually waits).
+pub fn burst(addr: SocketAddr, g: &ModelGeometry, spec: &BurstSpec) -> Result<BurstReport> {
+    let mut latencies: Vec<f64> = Vec::with_capacity(spec.clients * spec.requests);
+    let mut busy_retries = 0usize;
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..spec.clients)
+            .map(|c| {
+                s.spawn(move || -> Result<(Vec<f64>, usize)> {
+                    let mut client = Client::connect(addr)?;
+                    let mut lats = Vec::with_capacity(spec.requests);
+                    let mut retries = 0usize;
+                    for r in 0..spec.requests {
+                        let clips =
+                            synthetic_clips(spec.seed, c as u64, r as u64, spec.clips, g);
+                        let t0 = Instant::now();
+                        let (_preds, n_retry) =
+                            client.predict_retry(&clips, spec.use_cache, 10_000)?;
+                        lats.push(t0.elapsed().as_secs_f64());
+                        retries += n_retry;
+                    }
+                    Ok((lats, retries))
+                })
+            })
+            .collect();
+        for h in handles {
+            let (lats, retries) = h.join().expect("burst client thread panicked")?;
+            latencies.extend(lats);
+            busy_retries += retries;
+        }
+        Ok(())
+    })?;
+    let stats = Client::connect(addr)?.stats()?;
+    Ok(BurstReport { latencies_s: latencies, busy_retries, stats })
+}

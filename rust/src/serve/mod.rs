@@ -1,0 +1,31 @@
+//! `capsim serve` — the long-lived prediction daemon.
+//!
+//! A CAPSim deployment that re-runs the CLI per query pays the weight
+//! load, cache warm-up, and workspace allocation on every call. The
+//! daemon pays them **once**: weights load through the same
+//! [`runtime::Backend`](crate::runtime::Backend) registry the CLI uses,
+//! a persistent [`ClipCache`](crate::coordinator::ClipCache) and one
+//! [`BatchRunner`](crate::predictor::BatchRunner) live for the process,
+//! and clients submit clips over a small length-prefixed socket protocol
+//! ([`wire`]).
+//!
+//! The piece that makes a *shared* daemon worthwhile is cross-request
+//! batching ([`server`]): every client's cache-missing clips feed one
+//! [`BatchAccumulator`](crate::predictor::BatchAccumulator) — the same
+//! type the suite engine fills across benchmark boundaries — so
+//! concurrent small requests ride full forward batches instead of each
+//! paying a padded one. Row-local backends make this invisible in the
+//! answers: predictions are bit-identical to single-shot runs, whatever
+//! the batch mix.
+//!
+//! [`client`] is the matching client plus the deterministic burst-load
+//! harness used by the e2e tests, the CI smoke job, and the Fig.-7
+//! latency table.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{burst, synthetic_clips, BurstReport, BurstSpec, Client, PredictOutcome};
+pub use server::{Server, ServeOptions, ServeSummary};
+pub use wire::{Request, Response, StatsReply, WireClip, FLAG_USE_CACHE, MAX_FRAME};

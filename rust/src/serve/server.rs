@@ -1,0 +1,490 @@
+//! The `capsim serve` daemon: weights loaded once, clips predicted for
+//! many clients over the [`wire`](super::wire) protocol.
+//!
+//! ```text
+//!  client sessions (1 thread each)        predict loop (caller thread)
+//!  ┌─────────────────────────────┐   admission   ┌──────────────────────┐
+//!  │ read frame → validate clips │──sync_channel─▶ cache lookups        │
+//!  │ try_send  (Busy when full)  │  (bounded by  │ BatchAccumulator     │
+//!  │ block on per-request reply ◀│─ queue_depth) │   (cross-request)    │
+//!  └─────────────────────────────┘               │ flush: full batch or │
+//!                                                │   linger deadline    │
+//!                                                │ settle → route rows  │
+//!                                                │   back per request   │
+//!                                                └──────────────────────┘
+//! ```
+//!
+//! One model, one [`BatchRunner`], one predict loop: requests from
+//! different clients fill **one shared accumulator**, so concurrent
+//! small requests ride full batches (`StatsReply::cross_batches`,
+//! `mean_fill`). Because every registered backend is row-local (the
+//! batch-invariance contract pinned by the runtime tests), a clip's
+//! prediction is bit-identical whether its batch was filled by one
+//! client or five — serving changes throughput, never answers.
+//!
+//! Backpressure is the bounded admission channel: when `queue_depth`
+//! requests are already waiting, new ones bounce immediately with
+//! [`Response::Busy`] carrying a retry hint, so daemon memory stays
+//! bounded no matter how many clients pile on. Shutdown drains: accepted
+//! work is finished, the tail batch flushed, and the clip cache saved
+//! before [`Server::run`] returns.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::ClipCache;
+use crate::dataset::ClipSample;
+use crate::predictor::{BatchAccumulator, BatchRunner};
+use crate::runtime::{ModelGeometry, Predictor};
+
+use super::wire::{
+    read_frame, write_frame, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE,
+};
+
+/// Daemon configuration (CLI flags + `[serve]` TOML keys).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen address (`--listen`); port 0 picks a free port.
+    pub listen: String,
+    /// How long a partial batch may wait for more requests (`--linger-us`).
+    pub linger_us: u64,
+    /// Admission-queue bound (`--queue-depth`): requests waiting for the
+    /// predict loop beyond this bounce with `Busy`.
+    pub queue_depth: usize,
+    /// Prediction time scale — part of the cache key.
+    pub time_scale: f32,
+    /// Warm-start / save path for the persistent clip cache.
+    pub cache_path: Option<PathBuf>,
+    /// Entry bound for the persistent cache (`0` = unbounded).
+    pub cache_max_entries: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            listen: "127.0.0.1:4650".into(),
+            linger_us: 2_000,
+            queue_depth: 16,
+            time_scale: 40.0,
+            cache_path: None,
+            cache_max_entries: 1_000_000,
+        }
+    }
+}
+
+/// What the daemon did, reported after a graceful drain.
+#[derive(Debug)]
+pub struct ServeSummary {
+    pub stats: StatsReply,
+    /// Entries persisted on shutdown (None without a cache path).
+    pub cache_saved: Option<usize>,
+    /// Whether the cache warm-started from disk.
+    pub warm_start: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    predicted_clips: AtomicU64,
+    batches: AtomicU64,
+    cross_batches: AtomicU64,
+}
+
+fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
+    let cs = cache.stats();
+    StatsReply {
+        requests: counters.requests.load(Ordering::Relaxed),
+        rejected: counters.rejected.load(Ordering::Relaxed),
+        predicted_clips: counters.predicted_clips.load(Ordering::Relaxed),
+        batches: counters.batches.load(Ordering::Relaxed),
+        cross_batches: counters.cross_batches.load(Ordering::Relaxed),
+        cache_hits: cs.hits,
+        cache_misses: cs.misses,
+        cache_len: cache.len() as u64,
+        cache_evictions: cs.evictions,
+    }
+}
+
+/// One admitted predict request, queued for the predict loop.
+struct Job {
+    clips: Vec<(u64, ClipSample)>,
+    use_cache: bool,
+    reply: SyncSender<Vec<f64>>,
+}
+
+/// Routing tag threaded through the shared accumulator:
+/// `(request id, slot in that request, clip content key)`.
+type Tag = (u64, usize, u64);
+
+/// A request whose rows are still spread across pending batches.
+struct Inflight {
+    reply: SyncSender<Vec<f64>>,
+    out: Vec<f64>,
+    remaining: usize,
+    use_cache: bool,
+}
+
+/// A bound listener, ready to [`run`](Server::run). Binding is split
+/// from running so callers (tests, the bench) can learn the actual
+/// port of a `:0` bind before the daemon blocks.
+pub struct Server {
+    listener: TcpListener,
+    opts: ServeOptions,
+}
+
+impl Server {
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding {}", opts.listen))?;
+        Ok(Server { listener, opts })
+    }
+
+    /// The bound address (resolves a `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has a local address")
+    }
+
+    /// Serve until a `Shutdown` request (or a fatal model error), then
+    /// drain, save the cache, and report. Blocks the calling thread —
+    /// the predict loop runs here so the model never has to be `Send`.
+    pub fn run(self, model: &dyn Predictor) -> Result<ServeSummary> {
+        let Server { listener, opts } = self;
+        let addr = listener.local_addr().context("listener address")?;
+        let (cache, warm_start) = match opts.cache_path.as_deref() {
+            Some(p) => ClipCache::load_or_cold_bounded(
+                p,
+                model.fingerprint(),
+                opts.time_scale,
+                opts.cache_max_entries,
+            ),
+            None => (ClipCache::bounded(opts.cache_max_entries), false),
+        };
+        let counters = Counters::default();
+        let shutdown = AtomicBool::new(false);
+        let queue_depth = opts.queue_depth.max(1);
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let retry_ms = (opts.linger_us / 1_000).max(1) as u32;
+        let linger = Duration::from_micros(opts.linger_us);
+        let time_scale = opts.time_scale;
+        let g = model.geometry().clone();
+
+        let loop_result = std::thread::scope(|s| {
+            let cache = &cache;
+            let counters = &counters;
+            let shutdown = &shutdown;
+            // Acceptor owns the only long-lived sender clone; sessions
+            // clone from it. When the acceptor breaks out and the last
+            // session ends, the channel disconnects and the predict loop
+            // below drains out — that ordering *is* the graceful drain.
+            s.spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(st) => st,
+                        Err(_) => continue,
+                    };
+                    let tx = tx.clone();
+                    let g = g.clone();
+                    s.spawn(move || {
+                        session(
+                            stream, tx, g, cache, counters, shutdown, retry_ms, addr,
+                            queue_depth,
+                        )
+                    });
+                }
+            });
+            let r = predict_loop(model, rx, cache, counters, linger, time_scale);
+            if r.is_err() {
+                // fatal model error: stop accepting; sessions see the
+                // disconnected queue and answer with Error
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(addr);
+            }
+            r
+        });
+        loop_result?;
+
+        let stats = snapshot(&counters, &cache);
+        let cache_saved = match opts.cache_path.as_deref() {
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)
+                            .with_context(|| format!("creating {}", parent.display()))?;
+                    }
+                }
+                let n = cache
+                    .save(p, model.fingerprint(), opts.time_scale)
+                    .with_context(|| format!("saving clip cache to {}", p.display()))?;
+                Some(n)
+            }
+            None => None,
+        };
+        Ok(ServeSummary { stats, cache_saved, warm_start })
+    }
+}
+
+/// Validate wire clips against the model geometry and build the
+/// `ClipSample`s the batcher expects. All-or-nothing: one bad clip
+/// refuses the whole request before it can occupy a queue slot.
+fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64, ClipSample)>> {
+    clips
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let len = c.len as usize;
+            ensure!(
+                len >= 1 && len <= g.l_clip,
+                "clip {i}: length {len} outside 1..={}",
+                g.l_clip
+            );
+            ensure!(
+                c.tokens.len() == len * g.l_token,
+                "clip {i}: expected {} tokens for length {len}, got {}",
+                len * g.l_token,
+                c.tokens.len()
+            );
+            ensure!(
+                c.ctx.len() == g.m_rows,
+                "clip {i}: expected {} context rows, got {}",
+                g.m_rows,
+                c.ctx.len()
+            );
+            for &t in c.tokens.iter().chain(c.ctx.iter()) {
+                ensure!((t as usize) < g.vocab_size, "clip {i}: token {t} outside the vocabulary");
+            }
+            Ok((
+                c.key,
+                ClipSample {
+                    tokens: c.tokens.clone(),
+                    len: c.len,
+                    ctx: c.ctx.clone(),
+                    // target time is training-only; the forward pass
+                    // never reads it
+                    time: 1.0,
+                    key: c.key,
+                    bench: 0,
+                },
+            ))
+        })
+        .collect()
+}
+
+/// One client connection: decode frames, admit predict work, answer.
+#[allow(clippy::too_many_arguments)]
+fn session(
+    mut stream: TcpStream,
+    tx: SyncSender<Job>,
+    g: ModelGeometry,
+    cache: &ClipCache,
+    counters: &Counters,
+    shutdown: &AtomicBool,
+    retry_ms: u32,
+    addr: SocketAddr,
+    queue_depth: usize,
+) {
+    loop {
+        // client hangup (or a poisoned length prefix) ends the session
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let req = match Request::decode(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                let msg = Response::Error(format!("bad request: {e}"));
+                let _ = write_frame(&mut stream, &msg.encode());
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Stats => Response::Stats(snapshot(counters, cache)),
+            Request::Shutdown => {
+                let _ = write_frame(&mut stream, &Response::ShutdownAck.encode());
+                shutdown.store(true, Ordering::SeqCst);
+                // wake the blocking accept so the acceptor re-checks
+                let _ = TcpStream::connect(addr);
+                return;
+            }
+            Request::Predict { flags, clips } => match convert(&clips, &g) {
+                Err(e) => Response::Error(format!("invalid clips: {e}")),
+                Ok(converted) => {
+                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                    if converted.is_empty() {
+                        Response::Predictions(Vec::new())
+                    } else {
+                        let use_cache = flags & FLAG_USE_CACHE != 0;
+                        let (rtx, rrx) = sync_channel::<Vec<f64>>(1);
+                        match tx.try_send(Job { clips: converted, use_cache, reply: rtx }) {
+                            Ok(()) => match rrx.recv() {
+                                Ok(preds) => Response::Predictions(preds),
+                                Err(_) => {
+                                    Response::Error("predictor dropped the request".into())
+                                }
+                            },
+                            Err(TrySendError::Full(_)) => {
+                                counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                Response::Busy { retry_ms, queue_depth: queue_depth as u32 }
+                            }
+                            Err(TrySendError::Disconnected(_)) => {
+                                Response::Error("server is shutting down".into())
+                            }
+                        }
+                    }
+                }
+            },
+        };
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Route one settled batch's rows back to their requests; a request
+/// replies the moment its last row lands.
+fn settle(
+    tags: &[Tag],
+    preds: &[f32],
+    cache: &ClipCache,
+    counters: &Counters,
+    inflight: &mut HashMap<u64, Inflight>,
+) {
+    debug_assert_eq!(tags.len(), preds.len());
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    counters.predicted_clips.fetch_add(tags.len() as u64, Ordering::Relaxed);
+    if tags.windows(2).any(|w| w[0].0 != w[1].0) {
+        counters.cross_batches.fetch_add(1, Ordering::Relaxed);
+    }
+    for (&(id, slot, key), &p) in tags.iter().zip(preds) {
+        let v = p as f64;
+        let Some(fl) = inflight.get_mut(&id) else { continue };
+        if fl.use_cache {
+            cache.insert(key, v);
+        }
+        finish_slot(inflight, id, slot, v);
+    }
+}
+
+/// Record one resolved row; send the reply when the request completes.
+/// A send to a dead session is fine — the client just stopped waiting.
+fn finish_slot(inflight: &mut HashMap<u64, Inflight>, id: u64, slot: usize, v: f64) {
+    let Some(fl) = inflight.get_mut(&id) else { return };
+    fl.out[slot] = v;
+    fl.remaining -= 1;
+    if fl.remaining == 0 {
+        let fl = inflight.remove(&id).expect("entry just updated");
+        let _ = fl.reply.send(fl.out);
+    }
+}
+
+/// The single predict loop: pulls admitted jobs, resolves cache hits
+/// inline, fills the shared accumulator with the misses, and flushes on
+/// batch-full or linger expiry.
+fn predict_loop(
+    model: &dyn Predictor,
+    rx: Receiver<Job>,
+    cache: &ClipCache,
+    counters: &Counters,
+    linger: Duration,
+    time_scale: f32,
+) -> Result<()> {
+    let mut acc: BatchAccumulator<Tag> =
+        BatchAccumulator::new(model.max_fwd_batch(), model.geometry().clone());
+    let mut runner = BatchRunner::new();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut deadline: Option<Instant> = None;
+
+    loop {
+        let job = match deadline {
+            Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Ok(j) => Some(j),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(j) => Some(j),
+                Err(_) => break,
+            },
+        };
+        match job {
+            Some(job) => {
+                let id = next_id;
+                next_id += 1;
+                let use_cache = job.use_cache;
+                inflight.insert(
+                    id,
+                    Inflight {
+                        reply: job.reply,
+                        out: vec![0.0; job.clips.len()],
+                        remaining: job.clips.len(),
+                        use_cache,
+                    },
+                );
+                for (slot, (key, sample)) in job.clips.into_iter().enumerate() {
+                    if use_cache {
+                        if let Some(v) = cache.get(key) {
+                            finish_slot(&mut inflight, id, slot, v);
+                            continue;
+                        }
+                    }
+                    if let Some((tags, batch)) = acc.push((id, slot, key), sample) {
+                        deadline = None;
+                        let preds = runner.forward(model, &batch, time_scale)?;
+                        settle(&tags, preds, cache, counters, &mut inflight);
+                    }
+                }
+                if acc.pending() == 0 {
+                    deadline = None;
+                } else if deadline.is_none() {
+                    deadline = Some(Instant::now() + linger);
+                }
+            }
+            None => {
+                // linger expired with no new work: flush the partial batch
+                flush_tail(
+                    model,
+                    &mut acc,
+                    &mut runner,
+                    cache,
+                    counters,
+                    &mut inflight,
+                    time_scale,
+                )?;
+                deadline = None;
+            }
+        }
+    }
+    // drain: the channel disconnected with clips still accumulated
+    flush_tail(model, &mut acc, &mut runner, cache, counters, &mut inflight, time_scale)?;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flush_tail(
+    model: &dyn Predictor,
+    acc: &mut BatchAccumulator<Tag>,
+    runner: &mut BatchRunner,
+    cache: &ClipCache,
+    counters: &Counters,
+    inflight: &mut HashMap<u64, Inflight>,
+    time_scale: f32,
+) -> Result<()> {
+    let tail = acc.drain();
+    if tail.is_empty() {
+        return Ok(());
+    }
+    let tags: Vec<Tag> = tail.iter().map(|&(t, _)| t).collect();
+    let preds = runner.forward_tail(model, &tail, time_scale)?;
+    settle(&tags, preds, cache, counters, inflight);
+    Ok(())
+}

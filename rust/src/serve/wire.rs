@@ -1,0 +1,426 @@
+//! Wire format of the `capsim serve` socket protocol.
+//!
+//! Every message is one **frame**: a `u32` little-endian payload length
+//! followed by that many payload bytes. Payloads are tag-prefixed binary
+//! (requests `0x01..`, responses `0x81..`), all integers little-endian,
+//! `f64` values as IEEE-754 bit patterns — the same fixed-width LE
+//! conventions as the clip-cache file format, so the protocol stays
+//! dependency-free and bit-exact across client and server.
+//!
+//! Decoding is defensive: a frame longer than [`MAX_FRAME`] is refused
+//! before allocation, element counts are checked against the bytes
+//! actually present before any `Vec` is sized from them, and trailing
+//! bytes after a complete message are an error (they would mean the
+//! peers disagree about the format).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+/// Upper bound on a frame payload (16 MiB) — far above any real request
+/// (a max-geometry predict batch is a few hundred KiB) but small enough
+/// that a corrupt length prefix cannot drive a huge allocation.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// `Request::Predict` flag: route the request through the server's
+/// persistent clip cache (lookups before inference, inserts after).
+pub const FLAG_USE_CACHE: u8 = 1;
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME as usize);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame; refuses oversized lengths before
+/// allocating.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4);
+    if n > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds the {MAX_FRAME} byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; n as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// One clip as it crosses the wire: the caller-chosen content key plus
+/// the tokenized clip body (`len` instructions × `l_token` tokens) and
+/// its register-context row. The server validates every field against
+/// the loaded model's geometry before admission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireClip {
+    pub key: u64,
+    pub len: u16,
+    pub tokens: Vec<u16>,
+    pub ctx: Vec<u16>,
+}
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Predict the time of each clip, in order.
+    Predict { flags: u8, clips: Vec<WireClip> },
+    /// Snapshot the server counters.
+    Stats,
+    /// Drain in-flight work, save the cache, and exit.
+    Shutdown,
+}
+
+/// Server counters as reported over the wire (`serve --stats`) and in
+/// the post-run [`ServeSummary`](super::ServeSummary).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsReply {
+    /// Predict requests admitted for counting (including cache-only ones).
+    pub requests: u64,
+    /// Predict requests bounced with [`Response::Busy`].
+    pub rejected: u64,
+    /// Clip rows sent through the model (cache hits excluded).
+    pub predicted_clips: u64,
+    /// Forward batches executed.
+    pub batches: u64,
+    /// Batches that mixed clips from more than one request.
+    pub cross_batches: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_len: u64,
+    pub cache_evictions: u64,
+}
+
+impl StatsReply {
+    /// Mean live rows per forward batch (0 when none ran). Values above
+    /// 1 under concurrent single-clip load are the cross-request
+    /// batching working.
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.predicted_clips as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of cache lookups served from the cache (0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
+    }
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Predicted clip times, in request order.
+    Predictions(Vec<f64>),
+    Stats(StatsReply),
+    /// The admission queue is full; retry after `retry_ms`.
+    Busy { retry_ms: u32, queue_depth: u32 },
+    ShutdownAck,
+    /// The request was refused (validation failure, shutdown race, …).
+    Error(String),
+}
+
+const TAG_PREDICT: u8 = 0x01;
+const TAG_STATS: u8 = 0x02;
+const TAG_SHUTDOWN: u8 = 0x03;
+const TAG_PREDICTIONS: u8 = 0x81;
+const TAG_STATS_REPLY: u8 = 0x82;
+const TAG_BUSY: u8 = 0x83;
+const TAG_SHUTDOWN_ACK: u8 = 0x84;
+const TAG_ERROR: u8 = 0x85;
+
+/// Bounds-checked little-endian read cursor over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "truncated message: wanted {n} bytes, have {}",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u32` element count and check the remaining bytes can hold
+    /// `count * elem_size` — the guard that keeps a forged count from
+    /// sizing an allocation the frame cannot back.
+    fn count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            self.remaining() >= n.saturating_mul(elem_size),
+            "truncated message: {n} elements of {elem_size} bytes exceed the frame"
+        );
+        Ok(n)
+    }
+
+    fn u16_vec(&mut self) -> Result<Vec<u16>> {
+        let n = self.count(2)?;
+        (0..n).map(|_| self.u16()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes after message", self.remaining());
+        Ok(())
+    }
+}
+
+fn put_u16s(out: &mut Vec<u8>, xs: &[u16]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Predict { flags, clips } => {
+                let mut out = vec![TAG_PREDICT, *flags];
+                out.extend_from_slice(&(clips.len() as u32).to_le_bytes());
+                for c in clips {
+                    out.extend_from_slice(&c.key.to_le_bytes());
+                    out.extend_from_slice(&c.len.to_le_bytes());
+                    put_u16s(&mut out, &c.tokens);
+                    put_u16s(&mut out, &c.ctx);
+                }
+                out
+            }
+            Request::Stats => vec![TAG_STATS],
+            Request::Shutdown => vec![TAG_SHUTDOWN],
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut c = Cursor::new(buf);
+        let req = match c.u8()? {
+            TAG_PREDICT => {
+                let flags = c.u8()?;
+                // a clip is at least key + len + two empty counts
+                let n = c.count(8 + 2 + 4 + 4)?;
+                let mut clips = Vec::with_capacity(n);
+                for _ in 0..n {
+                    clips.push(WireClip {
+                        key: c.u64()?,
+                        len: c.u16()?,
+                        tokens: c.u16_vec()?,
+                        ctx: c.u16_vec()?,
+                    });
+                }
+                Request::Predict { flags, clips }
+            }
+            TAG_STATS => Request::Stats,
+            TAG_SHUTDOWN => Request::Shutdown,
+            t => bail!("unknown request tag 0x{t:02X}"),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Predictions(preds) => {
+                let mut out = vec![TAG_PREDICTIONS];
+                out.extend_from_slice(&(preds.len() as u32).to_le_bytes());
+                for &p in preds {
+                    out.extend_from_slice(&p.to_bits().to_le_bytes());
+                }
+                out
+            }
+            Response::Stats(s) => {
+                let mut out = vec![TAG_STATS_REPLY];
+                for v in [
+                    s.requests,
+                    s.rejected,
+                    s.predicted_clips,
+                    s.batches,
+                    s.cross_batches,
+                    s.cache_hits,
+                    s.cache_misses,
+                    s.cache_len,
+                    s.cache_evictions,
+                ] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            Response::Busy { retry_ms, queue_depth } => {
+                let mut out = vec![TAG_BUSY];
+                out.extend_from_slice(&retry_ms.to_le_bytes());
+                out.extend_from_slice(&queue_depth.to_le_bytes());
+                out
+            }
+            Response::ShutdownAck => vec![TAG_SHUTDOWN_ACK],
+            Response::Error(msg) => {
+                let mut out = vec![TAG_ERROR];
+                out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                out.extend_from_slice(msg.as_bytes());
+                out
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let mut c = Cursor::new(buf);
+        let resp = match c.u8()? {
+            TAG_PREDICTIONS => {
+                let n = c.count(8)?;
+                let preds = (0..n)
+                    .map(|_| Ok(f64::from_bits(c.u64()?)))
+                    .collect::<Result<Vec<f64>>>()?;
+                Response::Predictions(preds)
+            }
+            TAG_STATS_REPLY => Response::Stats(StatsReply {
+                requests: c.u64()?,
+                rejected: c.u64()?,
+                predicted_clips: c.u64()?,
+                batches: c.u64()?,
+                cross_batches: c.u64()?,
+                cache_hits: c.u64()?,
+                cache_misses: c.u64()?,
+                cache_len: c.u64()?,
+                cache_evictions: c.u64()?,
+            }),
+            TAG_BUSY => Response::Busy { retry_ms: c.u32()?, queue_depth: c.u32()? },
+            TAG_SHUTDOWN_ACK => Response::ShutdownAck,
+            TAG_ERROR => {
+                let n = c.count(1)?;
+                Response::Error(String::from_utf8_lossy(c.take(n)?).into_owned())
+            }
+            t => bail!("unknown response tag 0x{t:02X}"),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clip(key: u64) -> WireClip {
+        WireClip {
+            key,
+            len: 3,
+            tokens: (0..12).map(|t| t as u16 + 1).collect(),
+            ctx: vec![7; 5],
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Predict { flags: FLAG_USE_CACHE, clips: vec![clip(1), clip(2)] },
+            Request::Predict { flags: 0, clips: vec![] },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let stats = StatsReply {
+            requests: 10,
+            rejected: 2,
+            predicted_clips: 40,
+            batches: 8,
+            cross_batches: 3,
+            cache_hits: 5,
+            cache_misses: 35,
+            cache_len: 35,
+            cache_evictions: 1,
+        };
+        let resps = [
+            Response::Predictions(vec![1.5, -0.25, 1e300]),
+            Response::Predictions(vec![]),
+            Response::Stats(stats),
+            Response::Busy { retry_ms: 2, queue_depth: 16 },
+            Response::ShutdownAck,
+            Response::Error("nope".into()),
+        ];
+        for r in resps {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+        assert!((stats.mean_fill() - 5.0).abs() < 1e-12);
+        assert!((stats.hit_rate() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_refused() {
+        let enc = Request::Predict { flags: 0, clips: vec![clip(9)] }.encode();
+        for cut in 1..enc.len() {
+            assert!(Request::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = enc.clone();
+        long.push(0);
+        assert!(Request::decode(&long).is_err(), "trailing byte");
+        // a forged element count cannot size an allocation the frame
+        // cannot back
+        let mut forged = vec![TAG_PREDICTIONS];
+        forged.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(&forged).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_cap_oversized_lengths() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        let bad = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_are_refused() {
+        assert!(Request::decode(&[0x7F]).is_err());
+        assert!(Response::decode(&[0x01]).is_err(), "request tag is not a response");
+        assert!(Request::decode(&[]).is_err(), "empty payload");
+    }
+}

@@ -1,0 +1,279 @@
+//! End-to-end tests of the `capsim serve` daemon: bit-identical answers
+//! under concurrency, bounded-queue backpressure, cross-request
+//! batching, and graceful shutdown with a persisted clip cache.
+//!
+//! Every test binds port 0 (a free port) and runs the daemon on a plain
+//! spawned thread with its own deterministically-constructed model —
+//! `AttentionPredictor::with_defaults()` / `NativePredictor` build the
+//! same weights in every thread, which is exactly the property that lets
+//! the tests compute expected answers locally.
+
+use std::sync::Barrier;
+use std::time::Duration;
+
+use anyhow::Result;
+use capsim::coordinator::ClipCache;
+use capsim::dataset::ClipSample;
+use capsim::predictor::BatchRunner;
+use capsim::runtime::{AttentionPredictor, Batch, ModelGeometry, NativePredictor, Predictor};
+use capsim::serve::{synthetic_clips, Client, PredictOutcome, Server, ServeOptions};
+
+const TS: f32 = 40.0;
+
+fn opts(linger_us: u64, queue_depth: usize) -> ServeOptions {
+    ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        linger_us,
+        queue_depth,
+        time_scale: TS,
+        cache_path: None,
+        cache_max_entries: 10_000,
+    }
+}
+
+/// Concurrent clients must read exactly the bits a single-shot forward
+/// produces — cold (predicted, possibly in cross-request batches) and
+/// warm (served from the cache).
+#[test]
+fn concurrent_clients_get_bit_identical_answers() {
+    let model = AttentionPredictor::with_defaults();
+    let g = model.geometry().clone();
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12;
+    let all: Vec<(u64, ClipSample)> = (0..CLIENTS as u64)
+        .flat_map(|c| synthetic_clips(0xA11, c, 0, PER_CLIENT, &g))
+        .collect();
+    // ground truth: each clip forwarded alone, straight through the model
+    let mut runner = BatchRunner::new();
+    let expected: Vec<f64> = all
+        .iter()
+        .map(|pair| {
+            runner.forward_tail(&model, std::slice::from_ref(pair), TS).unwrap()[0] as f64
+        })
+        .collect();
+
+    let server = Server::bind(opts(1_000, 8)).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || {
+        let model = AttentionPredictor::with_defaults();
+        server.run(&model)
+    });
+
+    // two passes: cold (all predicted) then warm (all from the cache);
+    // the answers must be the same bits either way
+    for pass in 0..2 {
+        std::thread::scope(|s| {
+            for c in 0..CLIENTS {
+                let all = &all;
+                let expected = &expected;
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    for half in 0..2 {
+                        let lo = c * PER_CLIENT + half * (PER_CLIENT / 2);
+                        let clips = &all[lo..lo + PER_CLIENT / 2];
+                        let (preds, _) = client.predict_retry(clips, true, 1_000).unwrap();
+                        assert_eq!(preds.len(), clips.len());
+                        for (i, p) in preds.iter().enumerate() {
+                            assert_eq!(
+                                p.to_bits(),
+                                expected[lo + i].to_bits(),
+                                "pass {pass}, clip {}",
+                                lo + i
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let stats = Client::connect(addr).unwrap().stats().unwrap();
+    assert_eq!(stats.predicted_clips, all.len() as u64, "cold pass predicted each clip once");
+    assert_eq!(stats.cache_hits, all.len() as u64, "warm pass hit the cache for every clip");
+
+    Client::connect(addr).unwrap().shutdown().unwrap();
+    let summary = daemon.join().unwrap().unwrap();
+    assert_eq!(summary.stats.requests, (CLIENTS * 2 * 2) as u64);
+    assert!(!summary.warm_start);
+    assert_eq!(summary.cache_saved, None, "no cache path configured");
+}
+
+/// A predictor wrapper that makes every forward slow — the backpressure
+/// test needs the queue to actually fill.
+struct SlowPredictor<P> {
+    inner: P,
+    delay: Duration,
+}
+
+impl<P: Predictor> Predictor for SlowPredictor<P> {
+    fn geometry(&self) -> &ModelGeometry {
+        self.inner.geometry()
+    }
+    fn max_fwd_batch(&self) -> usize {
+        self.inner.max_fwd_batch()
+    }
+    fn pick_fwd_batch(&self, live: usize) -> usize {
+        self.inner.pick_fwd_batch(live)
+    }
+    fn forward(&self, batch: &Batch, time_scale: f32) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.forward(batch, time_scale)
+    }
+}
+
+/// Overfilling the admission queue must bounce requests with `Busy` +
+/// a usable retry hint — and every bounced request must eventually
+/// succeed when retried.
+#[test]
+fn full_admission_queue_answers_busy_with_retry_hint() {
+    let server = Server::bind(opts(0, 1)).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || {
+        let model = SlowPredictor {
+            inner: NativePredictor::with_defaults(),
+            delay: Duration::from_millis(25),
+        };
+        server.run(&model)
+    });
+    let g = NativePredictor::with_defaults().geometry().clone();
+
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 3;
+    let mut busy_total = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS as u64)
+            .map(|c| {
+                let g = &g;
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut busy = 0usize;
+                    for r in 0..REQUESTS as u64 {
+                        let clips = synthetic_clips(0xB0B, c, r, 2, g);
+                        loop {
+                            match client.predict(&clips, false).unwrap() {
+                                PredictOutcome::Predictions(p) => {
+                                    assert_eq!(p.len(), clips.len());
+                                    break;
+                                }
+                                PredictOutcome::Busy { retry_ms } => {
+                                    assert!(retry_ms >= 1, "retry hint must be usable");
+                                    busy += 1;
+                                    std::thread::sleep(Duration::from_millis(retry_ms as u64));
+                                }
+                            }
+                        }
+                    }
+                    busy
+                })
+            })
+            .collect();
+        for h in handles {
+            busy_total += h.join().unwrap();
+        }
+    });
+
+    Client::connect(addr).unwrap().shutdown().unwrap();
+    let summary = daemon.join().unwrap().unwrap();
+    assert!(busy_total > 0, "8 clients against a depth-1 queue must bounce");
+    assert_eq!(
+        summary.stats.rejected, busy_total as u64,
+        "every client-observed Busy is one server-side rejection — nothing queued beyond the bound"
+    );
+    assert_eq!(
+        summary.stats.requests,
+        (CLIENTS * REQUESTS + busy_total) as u64,
+        "requests counts every predict attempt; the Busy bounces are the rejected subset"
+    );
+    assert_eq!(summary.stats.predicted_clips, (CLIENTS * REQUESTS * 2) as u64);
+}
+
+/// Two requests landing within the linger window must share one forward
+/// batch (`cross_batches`, mean fill > 1) — the point of a shared daemon.
+#[test]
+fn concurrent_requests_share_a_batch() {
+    let server = Server::bind(opts(300_000, 8)).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || {
+        let model = NativePredictor::with_defaults();
+        server.run(&model)
+    });
+    let g = NativePredictor::with_defaults().geometry().clone();
+
+    let barrier = Barrier::new(2);
+    std::thread::scope(|s| {
+        for c in 0..2u64 {
+            let g = &g;
+            let barrier = &barrier;
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let clips = synthetic_clips(0xCAFE, c, 0, 3, g);
+                barrier.wait();
+                let (preds, _) = client.predict_retry(&clips, false, 1_000).unwrap();
+                assert_eq!(preds.len(), 3);
+            });
+        }
+    });
+
+    Client::connect(addr).unwrap().shutdown().unwrap();
+    let summary = daemon.join().unwrap().unwrap();
+    assert!(
+        summary.stats.cross_batches >= 1,
+        "expected a batch mixing both requests, stats: {:?}",
+        summary.stats
+    );
+    assert!(summary.stats.mean_fill() > 1.0, "mean fill {:.2}", summary.stats.mean_fill());
+}
+
+/// Graceful shutdown must persist the clip cache, and a restarted daemon
+/// must warm-start from it and answer from hits.
+#[test]
+fn shutdown_saves_the_cache_and_restart_warm_starts() {
+    let dir = std::env::temp_dir().join("capsim_serve_cache_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache_path = dir.join("clip_cache.bin");
+    let serve_opts = || ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        linger_us: 500,
+        queue_depth: 4,
+        time_scale: 33.0,
+        cache_path: Some(cache_path.clone()),
+        cache_max_entries: 10_000,
+    };
+    let g = NativePredictor::with_defaults().geometry().clone();
+    let clips = synthetic_clips(0xD15C, 0, 0, 10, &g);
+
+    // first life: cold start, predict, drain, save
+    let server = Server::bind(serve_opts()).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || server.run(&NativePredictor::with_defaults()));
+    let mut client = Client::connect(addr).unwrap();
+    let (cold_preds, _) = client.predict_retry(&clips, true, 1_000).unwrap();
+    client.shutdown().unwrap();
+    drop(client);
+    let summary = daemon.join().unwrap().unwrap();
+    assert!(!summary.warm_start);
+    assert_eq!(summary.cache_saved, Some(10), "drain persisted every predicted clip");
+
+    // the saved file is a valid cache under the same (fingerprint, scale) key
+    let fp = NativePredictor::with_defaults().fingerprint();
+    let loaded = ClipCache::load(&cache_path, fp, 33.0).unwrap();
+    assert_eq!(loaded.len(), 10);
+
+    // second life: warm start, same clips come straight from the cache
+    let server = Server::bind(serve_opts()).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || server.run(&NativePredictor::with_defaults()));
+    let mut client = Client::connect(addr).unwrap();
+    let (warm_preds, _) = client.predict_retry(&clips, true, 1_000).unwrap();
+    client.shutdown().unwrap();
+    drop(client);
+    let summary = daemon.join().unwrap().unwrap();
+    assert!(summary.warm_start, "second daemon must load the saved cache");
+    assert_eq!(summary.stats.cache_hits, 10);
+    assert_eq!(summary.stats.predicted_clips, 0, "warm answers need no inference");
+    assert_eq!(summary.cache_saved, Some(10));
+    for (c, w) in cold_preds.iter().zip(&warm_preds) {
+        assert_eq!(c.to_bits(), w.to_bits(), "cache round-trip preserves bits");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,19 +1,30 @@
 //! §Kernel regression harness — the attention-backend hot kernels and
-//! the end-to-end forward, timed and emitted as machine-readable
-//! `BENCH_kernels.json` so future PRs diff a perf *trajectory* instead
-//! of eyeballing log lines (the CI `perf-smoke` job runs this on small
-//! shapes and uploads the JSON as an artifact).
+//! the end-to-end forward, timed **per kernel tier** and emitted as
+//! machine-readable `BENCH_kernels.json` so future PRs diff a perf
+//! *trajectory* instead of eyeballing log lines (the CI `perf-smoke`
+//! job runs this on small shapes and uploads the JSON as an artifact).
+//!
+//! Tiers are pinned explicitly — the scalar baseline always runs, and
+//! the auto-detected SIMD tier (AVX2 on x86_64, NEON on aarch64) runs
+//! next to it when the host has one — so the JSON carries real
+//! scalar-vs-SIMD speedups per kernel shape rather than whatever tier
+//! dispatch happened to pick. All tiers are bit-identical (the
+//! canonical-accumulation-order contract in `runtime`), which the
+//! forward section asserts against `forward_reference` before any
+//! timing starts.
 //!
 //! Sections:
 //!
 //! * **kernels** — naive scalar matmul vs the packed/blocked
-//!   [`PackedLinear`] at the model's QKV shapes (single clip and a
-//!   64-clip batch), plus masked-softmax and layernorm throughput;
+//!   [`PackedLinear`] on every benched tier at the model's QKV shapes
+//!   (single clip and a 64-clip batch), plus masked-softmax and
+//!   layernorm throughput per tier;
 //! * **forward** — end-to-end attention forward at batch {1, 8, 64}:
 //!   the PR-3 row-by-row scalar reference vs the batched
-//!   packed/workspace production path, reported as ns/clip with the
-//!   speedup (the Fig.-7 predict-stage cost). The two paths are
-//!   asserted bit-identical before they are timed;
+//!   packed/workspace production path on every benched tier, reported
+//!   as ns/clip with speedups vs the reference and vs the scalar tier
+//!   (the Fig.-7 predict-stage cost). Every tier is asserted
+//!   bit-identical to the reference before it is timed;
 //! * **pipeline** — functional-simulator, O3 and tokenizer throughput
 //!   for context (the non-predictor hot loops).
 //!
@@ -29,8 +40,8 @@ use capsim::functional::AtomicCpu;
 use capsim::o3::{O3Config, O3Core};
 use capsim::predictor::build_batch;
 use capsim::runtime::attention::DEFAULT_FFN_MULT;
-use capsim::runtime::tensor::{layernorm, masked_softmax, matmul, PackedLinear};
-use capsim::runtime::{default_geometry, AttentionPredictor, Predictor, Workspace};
+use capsim::runtime::tensor::{layernorm_tier, masked_softmax_tier, matmul, PackedLinear};
+use capsim::runtime::{default_geometry, AttentionPredictor, KernelTier, Predictor, Workspace};
 use capsim::tokenizer::standardize::tokenize_clip;
 use capsim::util::json::Json;
 use capsim::util::timer::{bench_fn, BenchResult};
@@ -50,6 +61,18 @@ fn random_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
     (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 2.0).collect()
 }
 
+/// The tiers this harness times: the scalar baseline always (first, so
+/// later tiers can report a speedup against it), plus the auto-detected
+/// SIMD tier when the host has one.
+fn bench_tiers() -> Vec<KernelTier> {
+    let mut tiers = vec![KernelTier::Scalar];
+    let auto = KernelTier::detect();
+    if auto != KernelTier::Scalar {
+        tiers.push(auto);
+    }
+    tiers
+}
+
 fn main() -> anyhow::Result<()> {
     let budget = Duration::from_millis(
         std::env::var("CAPSIM_BENCH_MS")
@@ -60,13 +83,19 @@ fn main() -> anyhow::Result<()> {
     let out_path =
         std::env::var("CAPSIM_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
 
+    // the CI perf-smoke job greps this line to assert the runner's SIMD
+    // tier was actually detected (a silent scalar fallback would make
+    // every "speedup" below a 1.0x tautology)
+    println!("kernel tier: auto -> {}", KernelTier::detect());
+    let tiers = bench_tiers();
+
     let g = default_geometry();
     let (lc, lt, d) = (g.l_clip, g.l_token, g.embed_dim);
     let f = DEFAULT_FFN_MULT * d;
     let mut rng = Rng::new(7);
     let mut kernels: BTreeMap<String, Json> = BTreeMap::new();
 
-    // ---- matmul tier: naive scalar vs packed/blocked, QKV shape ----
+    // ---- matmul: naive scalar vs packed/blocked per tier, QKV shape ----
     // (m, label): one clip's token rows, and a 64-clip batch's rows
     for (m, label) in [(lc, "clip"), (64 * lc, "batch64")] {
         let a = random_buf(&mut rng, m * d);
@@ -76,17 +105,32 @@ fn main() -> anyhow::Result<()> {
             matmul(&a, &w, m, d, 3 * d, &mut out);
         });
         println!("{}", naive.report());
-        let packed = PackedLinear::pack(&w, d, 3 * d);
-        let fast = bench_fn(&format!("matmul_packed qkv {label} ({m}x{d}x{})", 3 * d), budget, || {
-            packed.apply(&a, m, &mut out);
-        });
-        println!(
-            "{}  | {:.2}x vs naive",
-            fast.report(),
-            naive.mean_s / fast.mean_s.max(1e-12)
-        );
         kernels.insert(format!("matmul_naive_qkv_{label}"), entry(&naive));
-        kernels.insert(format!("matmul_packed_qkv_{label}"), entry(&fast));
+        let packed = PackedLinear::pack(&w, d, 3 * d);
+        let mut scalar_mean = naive.mean_s;
+        for &tier in &tiers {
+            let fast = bench_fn(
+                &format!("matmul_packed[{tier}] qkv {label} ({m}x{d}x{})", 3 * d),
+                budget,
+                || packed.apply_tier(tier, &a, m, &mut out),
+            );
+            if tier == KernelTier::Scalar {
+                scalar_mean = fast.mean_s;
+                println!(
+                    "{}  | {:.2}x vs naive",
+                    fast.report(),
+                    naive.mean_s / fast.mean_s.max(1e-12)
+                );
+            } else {
+                let vs_scalar = scalar_mean / fast.mean_s.max(1e-12);
+                println!("{}  | {vs_scalar:.2}x vs scalar tier", fast.report());
+                kernels.insert(
+                    format!("matmul_packed_qkv_{label}_speedup_{tier}_vs_scalar"),
+                    Json::num(vs_scalar),
+                );
+            }
+            kernels.insert(format!("matmul_packed_qkv_{label}_{tier}"), entry(&fast));
+        }
     }
 
     // ---- FFN shape (k = f on the contraction side) ----
@@ -99,45 +143,89 @@ fn main() -> anyhow::Result<()> {
             matmul(&a, &w, m, f, d, &mut out);
         });
         println!("{}", naive.report());
-        let packed = PackedLinear::pack(&w, f, d);
-        let fast = bench_fn(&format!("matmul_packed ffn ({m}x{f}x{d})"), budget, || {
-            packed.apply(&a, m, &mut out);
-        });
-        println!(
-            "{}  | {:.2}x vs naive",
-            fast.report(),
-            naive.mean_s / fast.mean_s.max(1e-12)
-        );
         kernels.insert("matmul_naive_ffn".to_string(), entry(&naive));
-        kernels.insert("matmul_packed_ffn".to_string(), entry(&fast));
+        let packed = PackedLinear::pack(&w, f, d);
+        let mut scalar_mean = naive.mean_s;
+        for &tier in &tiers {
+            let fast = bench_fn(&format!("matmul_packed[{tier}] ffn ({m}x{f}x{d})"), budget, || {
+                packed.apply_tier(tier, &a, m, &mut out);
+            });
+            if tier == KernelTier::Scalar {
+                scalar_mean = fast.mean_s;
+                println!(
+                    "{}  | {:.2}x vs naive",
+                    fast.report(),
+                    naive.mean_s / fast.mean_s.max(1e-12)
+                );
+            } else {
+                let vs_scalar = scalar_mean / fast.mean_s.max(1e-12);
+                println!("{}  | {vs_scalar:.2}x vs scalar tier", fast.report());
+                kernels.insert(
+                    format!("matmul_packed_ffn_speedup_{tier}_vs_scalar"),
+                    Json::num(vs_scalar),
+                );
+            }
+            kernels.insert(format!("matmul_packed_ffn_{tier}"), entry(&fast));
+        }
     }
 
-    // ---- softmax + layernorm ----
+    // ---- softmax + layernorm per tier ----
     {
         let scores0 = random_buf(&mut rng, lc * lc);
         let mask: Vec<f32> = (0..lc).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
         let mut scores = scores0.clone();
-        let r = bench_fn(&format!("masked_softmax ({lc}x{lc})"), budget, || {
-            scores.copy_from_slice(&scores0);
-            masked_softmax(&mut scores, lc, lc, &mask);
-        });
-        println!("{}", r.report());
-        kernels.insert("masked_softmax_tile".to_string(), entry(&r));
+        let mut scalar_mean = 0.0f64;
+        for &tier in &tiers {
+            let r = bench_fn(&format!("masked_softmax[{tier}] ({lc}x{lc})"), budget, || {
+                scores.copy_from_slice(&scores0);
+                masked_softmax_tier(tier, &mut scores, lc, lc, &mask);
+            });
+            if tier == KernelTier::Scalar {
+                scalar_mean = r.mean_s;
+                println!("{}", r.report());
+            } else {
+                let vs_scalar = scalar_mean / r.mean_s.max(1e-12);
+                println!("{}  | {vs_scalar:.2}x vs scalar tier", r.report());
+                kernels.insert(
+                    format!("masked_softmax_tile_speedup_{tier}_vs_scalar"),
+                    Json::num(vs_scalar),
+                );
+            }
+            kernels.insert(format!("masked_softmax_tile_{tier}"), entry(&r));
+        }
 
         let rows = 64 * lc;
         let x0 = random_buf(&mut rng, rows * d);
         let (gamma, beta) = (vec![1.0f32; d], vec![0.0f32; d]);
         let mut x = x0.clone();
-        let r = bench_fn(&format!("layernorm ({rows}x{d})"), budget, || {
-            x.copy_from_slice(&x0);
-            layernorm(&mut x, &gamma, &beta);
-        });
-        println!("{}", r.report());
-        kernels.insert("layernorm_batch64".to_string(), entry(&r));
+        for &tier in &tiers {
+            let r = bench_fn(&format!("layernorm[{tier}] ({rows}x{d})"), budget, || {
+                x.copy_from_slice(&x0);
+                layernorm_tier(tier, &mut x, &gamma, &beta);
+            });
+            if tier == KernelTier::Scalar {
+                scalar_mean = r.mean_s;
+                println!("{}", r.report());
+            } else {
+                let vs_scalar = scalar_mean / r.mean_s.max(1e-12);
+                println!("{}  | {vs_scalar:.2}x vs scalar tier", r.report());
+                kernels.insert(
+                    format!("layernorm_batch64_speedup_{tier}_vs_scalar"),
+                    Json::num(vs_scalar),
+                );
+            }
+            kernels.insert(format!("layernorm_batch64_{tier}"), entry(&r));
+        }
     }
 
-    // ---- end-to-end attention forward: reference vs batched ----
-    let model = AttentionPredictor::seeded(g.clone(), 42);
+    // ---- end-to-end attention forward: reference vs batched per tier ----
+    // one model per tier (same seed, same weights, same fingerprint —
+    // only the dispatch differs); the reference path is tier-free
+    let reference = AttentionPredictor::seeded(g.clone(), 42);
+    let models: Vec<(KernelTier, AttentionPredictor)> = tiers
+        .iter()
+        .map(|&t| (t, AttentionPredictor::seeded(g.clone(), 42).with_tier(t)))
+        .collect();
     let mk = |rng: &mut Rng| -> ClipSample {
         let len = lc as u16;
         ClipSample {
@@ -157,39 +245,57 @@ fn main() -> anyhow::Result<()> {
         let refs: Vec<&ClipSample> = samples.iter().collect();
         let batch = build_batch(&refs, b, &g);
 
-        // the contract before the clock: batched == reference, bitwise
-        let oracle = model.forward_reference(&batch, 50.0)?;
-        model.forward_into(&batch, 50.0, &mut ws, &mut preds)?;
-        assert_eq!(oracle.len(), preds.len());
-        for (i, (x, y)) in oracle.iter().zip(&preds).enumerate() {
-            assert_eq!(
-                x.to_bits(),
-                y.to_bits(),
-                "kernel harness: batched forward diverged from reference at b={b} row {i}"
-            );
+        // the contract before the clock: every tier == reference, bitwise
+        let oracle = reference.forward_reference(&batch, 50.0)?;
+        for (tier, model) in &models {
+            model.forward_into(&batch, 50.0, &mut ws, &mut preds)?;
+            assert_eq!(oracle.len(), preds.len());
+            for (i, (x, y)) in oracle.iter().zip(&preds).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "kernel harness: {tier} forward diverged from reference at b={b} row {i}"
+                );
+            }
         }
 
         let rr = bench_fn(&format!("attention_forward_reference b={b}"), budget, || {
-            let _ = model.forward_reference(&batch, 50.0).unwrap();
-        });
-        let rb = bench_fn(&format!("attention_forward_batched b={b}"), budget, || {
-            model.forward_into(&batch, 50.0, &mut ws, &mut preds).unwrap();
+            let _ = reference.forward_reference(&batch, 50.0).unwrap();
         });
         let ref_ns_clip = rr.mean_s * 1e9 / b as f64;
-        let fast_ns_clip = rb.mean_s * 1e9 / b as f64;
-        let speedup = rr.mean_s / rb.mean_s.max(1e-12);
         println!("{}  | {ref_ns_clip:.0} ns/clip", rr.report());
-        println!("{}  | {fast_ns_clip:.0} ns/clip  | {speedup:.2}x vs reference", rb.report());
-        forward.insert(
-            format!("batch_{b}"),
-            Json::obj(vec![
-                ("reference_ns_per_clip", Json::num(ref_ns_clip)),
-                ("batched_ns_per_clip", Json::num(fast_ns_clip)),
-                ("speedup", Json::num(speedup)),
-                ("reference", entry(&rr)),
-                ("batched", entry(&rb)),
-            ]),
-        );
+        let mut fields =
+            vec![("reference_ns_per_clip", Json::num(ref_ns_clip)), ("reference", entry(&rr))];
+        let mut scalar_mean = rr.mean_s;
+        for (tier, model) in &models {
+            let rb = bench_fn(&format!("attention_forward_batched[{tier}] b={b}"), budget, || {
+                model.forward_into(&batch, 50.0, &mut ws, &mut preds).unwrap();
+            });
+            if *tier == KernelTier::Scalar {
+                scalar_mean = rb.mean_s;
+            }
+            let ns_clip = rb.mean_s * 1e9 / b as f64;
+            let vs_ref = rr.mean_s / rb.mean_s.max(1e-12);
+            let vs_scalar = scalar_mean / rb.mean_s.max(1e-12);
+            if *tier == KernelTier::Scalar {
+                println!("{}  | {ns_clip:.0} ns/clip  | {vs_ref:.2}x vs reference", rb.report());
+            } else {
+                println!(
+                    "{}  | {ns_clip:.0} ns/clip  | {vs_scalar:.2}x vs scalar tier",
+                    rb.report()
+                );
+            }
+            fields.push((
+                tier.name(),
+                Json::obj(vec![
+                    ("batched_ns_per_clip", Json::num(ns_clip)),
+                    ("speedup_vs_reference", Json::num(vs_ref)),
+                    ("speedup_vs_scalar", Json::num(vs_scalar)),
+                    ("batched", entry(&rb)),
+                ]),
+            ));
+        }
+        forward.insert(format!("batch_{b}"), Json::obj(fields));
     }
 
     // ---- pipeline context: the non-predictor hot loops ----
@@ -220,9 +326,13 @@ fn main() -> anyhow::Result<()> {
     pipeline.insert("tokenize_200k".to_string(), entry(&r));
 
     // ---- machine-readable trajectory ----
+    // schema 2: kernel entries and forward sub-objects are keyed by
+    // tier, with speedup_*_vs_scalar fields alongside
     let doc = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        ("schema", Json::num(2.0)),
         ("budget_ms", Json::num(budget.as_millis() as f64)),
+        ("auto_tier", Json::str(KernelTier::detect().name())),
+        ("tiers", Json::arr(tiers.iter().map(|t| Json::str(t.name())))),
         (
             "geometry",
             Json::obj(vec![

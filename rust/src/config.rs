@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::o3::O3Config;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, KernelTier};
 use crate::sampler::SamplerConfig;
 use crate::simpoint::SimpointConfig;
 use crate::workloads::Scale;
@@ -181,6 +181,16 @@ pub struct PipelineConfig {
     /// matching this parser's defaults-for-absent-keys convention (the
     /// CLI flag is strict).
     pub backend: Backend,
+    /// SIMD kernel tier of the kernel-executing backends
+    /// (`pipeline.kernel_tier` TOML / `--kernel-tier` CLI;
+    /// `auto | scalar | avx2 | neon`, default `auto`). `Auto` consults
+    /// the `CAPSIM_KERNEL_TIER` env var, then auto-detects (precedence:
+    /// CLI > TOML > env > detect; see
+    /// [`PipelineConfig::effective_kernel_tier`]). All tiers are
+    /// bit-identical, so this only changes throughput; unknown TOML
+    /// values fall back to `auto`, matching the backend key's
+    /// convention (the CLI flag is strict).
+    pub kernel_tier: KernelTier,
     /// Worker threads for the sharded engine (per-interval and
     /// per-benchmark fan-out). `0` means auto — the `CAPSIM_THREADS`
     /// env var if set, else one per available core (precedence:
@@ -235,6 +245,7 @@ impl Default for PipelineConfig {
             o3: O3Config::default(),
             sampler: SamplerConfig::default(),
             backend: Backend::Pjrt,
+            kernel_tier: KernelTier::Auto,
             threads: 0,
             queue_depth: 0,
             batch_depth: 0,
@@ -265,6 +276,9 @@ impl PipelineConfig {
             "attention" => Backend::Attention,
             _ => Backend::Pjrt,
         };
+        // unknown values fall back to auto, like the backend key
+        c.kernel_tier =
+            t.str("pipeline.kernel_tier", "auto").parse().unwrap_or(KernelTier::Auto);
         // negative values mean "auto" rather than wrapping to usize::MAX
         c.threads = t.int("pipeline.threads", c.threads as i64).max(0) as usize;
         c.queue_depth = t.int("pipeline.queue_depth", c.queue_depth as i64).max(0) as usize;
@@ -315,6 +329,24 @@ impl PipelineConfig {
         } else {
             self.threads
         }
+    }
+
+    /// The concrete kernel tier kernel-executing backends should run
+    /// on. Resolution order: an explicit `kernel_tier` (CLI flag or
+    /// TOML key) wins outright; `auto` consults the
+    /// `CAPSIM_KERNEL_TIER` env var (unparseable values are ignored,
+    /// like any malformed env override); whatever is still `auto` after
+    /// that resolves to the best detected tier. A tier that is forced —
+    /// by config or env — but unavailable on this host is an error, not
+    /// a silent fallback.
+    pub fn effective_kernel_tier(&self) -> anyhow::Result<KernelTier> {
+        let mut tier = self.kernel_tier;
+        if tier == KernelTier::Auto {
+            if let Ok(v) = std::env::var("CAPSIM_KERNEL_TIER") {
+                tier = v.parse().unwrap_or(KernelTier::Auto);
+            }
+        }
+        tier.resolve()
     }
 
     /// Scan→merge channel capacity for the streaming engine (resolves
@@ -474,5 +506,32 @@ mod tests {
     fn negative_cache_max_entries_means_unbounded() {
         let t = parse_toml("[pipeline]\ncache_max_entries = -5").unwrap();
         assert_eq!(PipelineConfig::from_toml(&t).cache_max_entries, 0);
+    }
+
+    #[test]
+    fn kernel_tier_values_parse_and_unknown_falls_back() {
+        // the env-override path is pinned in tests/prop_kernel_tiers.rs
+        // (integration binary, so the env mutation cannot race other
+        // unit tests)
+        assert_eq!(PipelineConfig::default().kernel_tier, KernelTier::Auto);
+        for (s, want) in [
+            ("auto", KernelTier::Auto),
+            ("scalar", KernelTier::Scalar),
+            ("avx2", KernelTier::Avx2),
+            ("neon", KernelTier::Neon),
+            ("sse9", KernelTier::Auto),
+        ] {
+            let t = parse_toml(&format!("[pipeline]\nkernel_tier = \"{s}\"")).unwrap();
+            assert_eq!(PipelineConfig::from_toml(&t).kernel_tier, want, "{s}");
+        }
+    }
+
+    #[test]
+    fn forced_scalar_tier_resolves_to_scalar() {
+        let mut c = PipelineConfig::default();
+        c.kernel_tier = KernelTier::Scalar;
+        // an explicit tier ignores the env override entirely, so this
+        // holds regardless of CAPSIM_KERNEL_TIER in the test environment
+        assert_eq!(c.effective_kernel_tier().unwrap(), KernelTier::Scalar);
     }
 }

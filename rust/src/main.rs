@@ -13,6 +13,7 @@
 //! capsim serve  [--listen A] [--linger-us N] run the prediction daemon
 //!               (--stats / --shutdown query a running daemon instead)
 //! capsim burst  [--listen A] [--clients N]  fire a client burst at a daemon
+//! capsim backends                   CPU features, kernel tiers, backends
 //! capsim info                       artifact manifest summary
 //! ```
 
@@ -28,7 +29,7 @@ use capsim::functional::AtomicCpu;
 use capsim::o3::O3Core;
 use capsim::predictor::{train, TrainParams};
 use capsim::report::Table;
-use capsim::runtime::{Backend, Predictor, Runtime};
+use capsim::runtime::{cpu_features, Backend, KernelTier, Predictor, Runtime};
 use capsim::serve::{BurstSpec, Client, Server, ServeOptions};
 use capsim::util::stats;
 use capsim::workloads::{suite, Scale};
@@ -100,6 +101,11 @@ fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
         );
         cfg.backend = Backend::Native;
     }
+    // kernel tier: the CLI flag is strict (a typo should not silently
+    // fall back to auto-detection the way an unknown TOML value does)
+    if let Some(v) = flags.get("kernel-tier") {
+        cfg.kernel_tier = v.parse()?;
+    }
     Ok(cfg)
 }
 
@@ -118,6 +124,7 @@ fn main() -> Result<()> {
         "compare" => compare_cmd(&flags)?,
         "serve" => serve_cmd(&flags)?,
         "burst" => burst_cmd(&flags)?,
+        "backends" => backends_cmd(&flags)?,
         "info" => info_cmd(&flags)?,
         _ => help(),
     }
@@ -127,7 +134,7 @@ fn main() -> Result<()> {
 fn help() {
     println!(
         "capsim — attention-based CPU performance simulator\n\
-         usage: capsim <table1|table2|trace|o3|dataset|train|compare|serve|burst|info> [flags]\n\
+         usage: capsim <table1|table2|trace|o3|dataset|train|compare|serve|burst|backends|info>\n\
          flags: --config FILE  --bench N  --max M  --steps N  --variant V  --out F\n\
                 --full  --threads N (0 = auto; precedence: --threads >\n\
                 pipeline.threads > CAPSIM_THREADS env > core count)\n\
@@ -141,6 +148,10 @@ fn help() {
                 `make artifacts`, native/attention are dependency-free —\n\
                 attention runs the pure-Rust model)\n\
                 --native (deprecated alias for --backend native)\n\
+                --kernel-tier T (auto | scalar | avx2 | neon; precedence:\n\
+                --kernel-tier > pipeline.kernel_tier > CAPSIM_KERNEL_TIER\n\
+                env > auto-detect; all tiers are bit-identical — see\n\
+                `capsim backends` for what this host supports)\n\
          serve:  --listen ADDR (default 127.0.0.1:4650 / serve.listen TOML;\n\
                 port 0 picks a free port)\n\
                 --linger-us N (how long a partial batch waits for more\n\
@@ -336,7 +347,10 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(cfg.train_steps);
     let (model, time_scale) = cfg.backend.build_trained(&cfg, &ds, steps, variant)?;
-    println!("backend: {}", cfg.backend);
+    match model.kernel_tier() {
+        Some(t) => println!("backend: {} (kernel tier: {t})", cfg.backend),
+        None => println!("backend: {}", cfg.backend),
+    }
 
     // per-benchmark rows use the paper methodology (each benchmark stands
     // alone, no cache) so wall times are order-independent; the engine's
@@ -530,8 +544,12 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let model = cfg.backend.build_forward(&cfg)?;
     let opts = serve_opts(flags, &cfg)?;
     let server = Server::bind(opts)?;
+    let tier = model
+        .kernel_tier()
+        .map(|t| format!(", kernel tier {t}"))
+        .unwrap_or_default();
     println!(
-        "serving {} predictions on {} (linger {} us, queue depth {})",
+        "serving {} predictions on {} (linger {} us, queue depth {}{tier})",
         cfg.backend,
         server.addr(),
         cfg.serve_linger_us,
@@ -619,6 +637,53 @@ mod tests {
     fn empty_args() {
         assert!(parse_flags(&[]).is_empty());
     }
+}
+
+/// `capsim backends` — what this host can run: detected CPU features,
+/// kernel tier availability and the auto/effective selection, and the
+/// backend registry with the configured backend marked.
+fn backends_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    println!("host: {} / {}", std::env::consts::ARCH, std::env::consts::OS);
+
+    let feats = cpu_features();
+    if feats.is_empty() {
+        println!("cpu features: (no feature probes on this architecture)");
+    } else {
+        for (name, detected) in feats {
+            println!("cpu feature {name:<8} {}", if detected { "yes" } else { "no" });
+        }
+    }
+
+    println!("kernel tiers:");
+    for t in KernelTier::ALL {
+        let status = if t == KernelTier::Auto {
+            format!("resolves to {}", KernelTier::detect())
+        } else if t.available() {
+            "available".to_string()
+        } else {
+            "unavailable on this host".to_string()
+        };
+        println!("  {:<8} {status}", t.name());
+    }
+    println!("auto-selected tier: {}", KernelTier::detect());
+    // the effective tier folds in the full precedence chain (CLI flag >
+    // TOML > CAPSIM_KERNEL_TIER env > detect); a forced-but-unavailable
+    // tier errors here exactly as it would at model build time
+    let effective = cfg.effective_kernel_tier()?;
+    println!("configured tier: {} (effective: {effective})", cfg.kernel_tier);
+
+    println!("backends:");
+    for b in Backend::ALL {
+        let mark = if b == cfg.backend { "  [active]" } else { "" };
+        let needs = if b.requires_artifacts() {
+            "needs `make artifacts`"
+        } else {
+            "dependency-free"
+        };
+        println!("  {:<10} {needs}{mark}", b.name());
+    }
+    Ok(())
 }
 
 fn info_cmd(flags: &HashMap<String, String>) -> Result<()> {

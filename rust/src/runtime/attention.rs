@@ -1,8 +1,11 @@
 //! A dependency-free **pure-Rust attention backend** — the paper's
 //! predictor architecture (token embedding → multi-head self-attention
 //! over the clip token stream → clip pooling + context fusion → regression
-//! head) executed by the scalar f32 kernels in [`super::tensor`], with no
-//! PJRT, no XLA and no artifacts directory.
+//! head) executed by the f32 kernels in [`super::tensor`], with no PJRT,
+//! no XLA and no artifacts directory. The production path runs on a
+//! runtime-selected [`KernelTier`] (scalar / AVX2 / NEON); every tier
+//! shares the canonical accumulation order, so the tier changes
+//! throughput, never bits (see the contract section in [`super`]).
 //!
 //! Structure of one forward pass (per clip row):
 //!
@@ -26,19 +29,24 @@
 //!   (the compiled PJRT model only approximates this; see
 //!   `tests/prop_attention.rs`);
 //! * **determinism**: weights come from a seeded PRNG or a versioned
-//!   weights file, and every kernel runs in a fixed scalar order, so the
-//!   same `(weights, row, time_scale)` always produces the same bits.
+//!   weights file, and every kernel runs in the fixed canonical
+//!   accumulation order on every tier, so the same
+//!   `(weights, row, time_scale)` always produces the same bits.
 //!
 //! The production forward ([`Predictor::forward_into`]) is **batched and
 //! allocation-free in steady state**: weights are pre-packed into the
 //! transposed/fused [`PackedLinear`] layout at model build, whole
 //! batches run through shared-weight matmuls, and all scratch lives in a
-//! caller-owned [`Workspace`] arena. Every optimization preserves the
-//! per-output-element accumulation order, so the batched path is
-//! bit-identical to the original row-by-row scalar forward — retained as
-//! [`AttentionPredictor::forward_reference`], the oracle the property
-//! suite pins it against and the baseline the `perf_micro` kernel
-//! harness measures (see the contract section in [`super`]'s docs).
+//! caller-owned [`Workspace`] arena. Every optimization — packing,
+//! fusing, blocking, batching, and the SIMD tier — preserves the
+//! canonical per-output-element accumulation order (the 8-lane tree),
+//! so the batched path is bit-identical on every tier to the row-by-row
+//! forward retained as [`AttentionPredictor::forward_reference`] — the
+//! oracle the property suite pins it against and the baseline the
+//! `perf_micro` kernel harness measures (see the contract section in
+//! [`super`]'s docs). `forward_reference` calls only the plain
+//! (canonical-scalar) kernels, so it is tier-independent by
+//! construction.
 //!
 //! Weights can be persisted ([`AttentionPredictor::save`]) and reloaded
 //! ([`AttentionPredictor::load`]) through a versioned binary format; the
@@ -57,9 +65,10 @@ use crate::util::Rng;
 
 use super::manifest::ModelGeometry;
 use super::model::Batch;
+use super::simd::KernelTier;
 use super::tensor::{
-    add_bias, gelu, gelu_slice, layernorm, masked_softmax, matmul, softplus, vecmat,
-    PackedLinear,
+    add_bias, axpy, axpy_tier, dot, dot_tier, gelu, gelu_slice, gelu_slice_tier, layernorm,
+    layernorm_tier, masked_softmax, masked_softmax_tier, matmul, softplus, vecmat, PackedLinear,
 };
 use super::workspace::Workspace;
 use super::Predictor;
@@ -290,6 +299,12 @@ pub struct AttentionPredictor {
     w: Weights,
     /// Derived packed inference layout (never saved or fingerprinted).
     packed: PackedWeights,
+    /// Kernel tier of the batched production path — always a concrete,
+    /// available tier (`effective()`-resolved at construction /
+    /// [`AttentionPredictor::with_tier`]). Never part of the identity:
+    /// all tiers are bit-identical, so predictions and cache keys do
+    /// not depend on it.
+    tier: KernelTier,
 }
 
 impl AttentionPredictor {
@@ -305,7 +320,16 @@ impl AttentionPredictor {
     ) -> AttentionPredictor {
         let d = geometry.embed_dim;
         let packed = PackedWeights::pack(&w, d, ffn_mult * d);
-        AttentionPredictor { geometry, heads, ffn_mult, seed, w, packed }
+        let tier = KernelTier::Auto.effective();
+        AttentionPredictor { geometry, heads, ffn_mult, seed, w, packed, tier }
+    }
+
+    /// Select the kernel tier of the batched production path (builder
+    /// style; `Auto` and unavailable tiers resolve through
+    /// [`KernelTier::effective`]). Bit-identical on every tier.
+    pub fn with_tier(mut self, tier: KernelTier) -> AttentionPredictor {
+        self.tier = tier.effective();
+        self
     }
 
     /// Deterministically initialized weights for `geometry` drawn from
@@ -588,12 +612,10 @@ impl AttentionPredictor {
         for h in 0..self.heads {
             let o = h * hd;
             for i in 0..lc {
+                let q = &s.q[i * d + o..i * d + o + hd];
                 for j in 0..lc {
-                    let mut dot = 0.0f32;
-                    for c in 0..hd {
-                        dot += s.q[i * d + o + c] * s.k[j * d + o + c];
-                    }
-                    s.scores[i * lc + j] = dot * scale;
+                    let k = &s.k[j * d + o..j * d + o + hd];
+                    s.scores[i * lc + j] = dot(q, k) * scale;
                 }
             }
             masked_softmax(&mut s.scores, lc, lc, mask);
@@ -603,9 +625,8 @@ impl AttentionPredictor {
                     if p == 0.0 {
                         continue;
                     }
-                    for c in 0..hd {
-                        s.attn[i * d + o + c] += p * s.v[j * d + o + c];
-                    }
+                    let v = &s.v[j * d + o..j * d + o + hd];
+                    axpy(&mut s.attn[i * d + o..i * d + o + hd], p, v);
                 }
             }
         }
@@ -711,10 +732,7 @@ impl AttentionPredictor {
         vecmat(&s.fused, &self.w.head_w1, 2 * d, d, &mut s.hidden);
         add_bias(&mut s.hidden, &self.w.head_b1);
         gelu_slice(&mut s.hidden);
-        let mut out = self.w.head_b2[0];
-        for c in 0..d {
-            out += s.hidden[c] * self.w.head_w2[c];
-        }
+        let out = self.w.head_b2[0] + dot(&s.hidden, &self.w.head_w2);
         (softplus(out) * time_scale).max(1e-3)
     }
 
@@ -801,7 +819,7 @@ impl AttentionPredictor {
         let scale = 1.0 / (hd as f32).sqrt();
 
         // fused QKV projection: one packed matmul over every token row
-        pw.qkv.apply(&s.x[..bl * d], bl, &mut s.qkv[..bl * 3 * d]);
+        pw.qkv.apply_tier(self.tier, &s.x[..bl * d], bl, &mut s.qkv[..bl * 3 * d]);
 
         // attention mixing per clip row — the only row-scoped stage
         s.attn[..bl * d].fill(0.0);
@@ -815,14 +833,10 @@ impl AttentionPredictor {
                     let q = &qkv[i * 3 * d + o..i * 3 * d + o + hd];
                     for j in 0..lc {
                         let k = &qkv[j * 3 * d + d + o..j * 3 * d + d + o + hd];
-                        let mut dot = 0.0f32;
-                        for c in 0..hd {
-                            dot += q[c] * k[c];
-                        }
-                        s.scores[i * lc + j] = dot * scale;
+                        s.scores[i * lc + j] = dot_tier(self.tier, q, k) * scale;
                     }
                 }
-                masked_softmax(&mut s.scores, lc, lc, mask);
+                masked_softmax_tier(self.tier, &mut s.scores, lc, lc, mask);
                 for i in 0..lc {
                     for j in 0..lc {
                         let p = s.scores[i * lc + j];
@@ -830,29 +844,27 @@ impl AttentionPredictor {
                             continue;
                         }
                         let v = &qkv[j * 3 * d + 2 * d + o..j * 3 * d + 2 * d + o + hd];
-                        for c in 0..hd {
-                            attn[i * d + o + c] += p * v[c];
-                        }
+                        axpy_tier(self.tier, &mut attn[i * d + o..i * d + o + hd], p, v);
                     }
                 }
             }
         }
 
         // output projection + residual + LN over all rows at once
-        pw.wo.apply(&s.attn[..bl * d], bl, &mut s.tmp[..bl * d]);
+        pw.wo.apply_tier(self.tier, &s.attn[..bl * d], bl, &mut s.tmp[..bl * d]);
         for (a, &t) in s.x[..bl * d].iter_mut().zip(&s.tmp[..bl * d]) {
             *a += t;
         }
-        layernorm(&mut s.x[..bl * d], &lw.ln1_g, &lw.ln1_b);
+        layernorm_tier(self.tier, &mut s.x[..bl * d], &lw.ln1_g, &lw.ln1_b);
 
         // FFN as two packed matmuls (biases folded into the stores)
-        pw.ff1.apply(&s.x[..bl * d], bl, &mut s.ff[..bl * f]);
-        gelu_slice(&mut s.ff[..bl * f]);
-        pw.ff2.apply(&s.ff[..bl * f], bl, &mut s.tmp[..bl * d]);
+        pw.ff1.apply_tier(self.tier, &s.x[..bl * d], bl, &mut s.ff[..bl * f]);
+        gelu_slice_tier(self.tier, &mut s.ff[..bl * f]);
+        pw.ff2.apply_tier(self.tier, &s.ff[..bl * f], bl, &mut s.tmp[..bl * d]);
         for (a, &t) in s.x[..bl * d].iter_mut().zip(&s.tmp[..bl * d]) {
             *a += t;
         }
-        layernorm(&mut s.x[..bl * d], &lw.ln2_g, &lw.ln2_b);
+        layernorm_tier(self.tier, &mut s.x[..bl * d], &lw.ln2_g, &lw.ln2_b);
     }
 }
 
@@ -955,7 +967,7 @@ impl Predictor for AttentionPredictor {
                 *v *= inv;
             }
         }
-        self.packed.ctx.apply(&s.ctxv[..b * d], b, &mut s.hidden[..b * d]);
+        self.packed.ctx.apply_tier(self.tier, &s.ctxv[..b * d], b, &mut s.hidden[..b * d]);
         for r in 0..b {
             let fused = &mut s.fused[r * 2 * d..(r + 1) * 2 * d];
             fused[..d].copy_from_slice(&s.clip[r * d..(r + 1) * d]);
@@ -966,24 +978,30 @@ impl Predictor for AttentionPredictor {
 
         // regression head: packed matmul (head_b1 folded in) + GELU +
         // per-row dot with the output vector
-        self.packed.head1.apply(&s.fused[..b * 2 * d], b, &mut s.hidden[..b * d]);
-        gelu_slice(&mut s.hidden[..b * d]);
+        self.packed.head1.apply_tier(self.tier, &s.fused[..b * 2 * d], b, &mut s.hidden[..b * d]);
+        gelu_slice_tier(self.tier, &mut s.hidden[..b * d]);
         for r in 0..b {
-            let mut v = self.w.head_b2[0];
-            for c in 0..d {
-                v += s.hidden[r * d + c] * self.w.head_w2[c];
-            }
+            let h = &s.hidden[r * d..(r + 1) * d];
+            let v = self.w.head_b2[0] + dot_tier(self.tier, h, &self.w.head_w2);
             out.push((softplus(v) * time_scale).max(1e-3));
         }
         Ok(())
     }
 
+    fn kernel_tier(&self) -> Option<KernelTier> {
+        Some(self.tier)
+    }
+
     fn fingerprint(&self) -> u64 {
         // kind + architecture + every weight bit: retraining, reseeding
-        // or editing the weights file must cold-start persisted caches
+        // or editing the weights file must cold-start persisted caches.
+        // KERNEL_CONTRACT_VERSION (not the tier — tiers are
+        // bit-identical) covers changes to the canonical accumulation
+        // order itself, which change every prediction's bits.
         let mut h = super::fingerprint_geometry(&self.geometry);
         h = super::fingerprint_bytes(h, b"attention-rs");
         h = super::fingerprint_mix(h, WEIGHTS_VERSION as u64);
+        h = super::fingerprint_mix(h, super::KERNEL_CONTRACT_VERSION);
         for v in [self.heads, self.w.layers.len(), self.ffn_mult] {
             h = super::fingerprint_mix(h, v as u64);
         }
@@ -1071,6 +1089,31 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn forced_tiers_match_reference_bitwise() {
+        // every available tier must produce the oracle's exact bits;
+        // the broad coverage lives in tests/prop_kernel_tiers.rs
+        let g = small_geometry();
+        let samples: Vec<ClipSample> =
+            (0..5).map(|i| sample(&g, 3 + i as u16, (i % 5) as u16, 2 + i as u16)).collect();
+        let refs: Vec<&ClipSample> = samples.iter().collect();
+        let batch = build_batch(&refs, 8, &g);
+        let oracle = AttentionPredictor::seeded(g.clone(), 33)
+            .forward_reference(&batch, 40.0)
+            .unwrap();
+        for tier in [KernelTier::Auto, KernelTier::Scalar, KernelTier::Avx2, KernelTier::Neon] {
+            if !tier.available() {
+                continue;
+            }
+            let p = AttentionPredictor::seeded(g.clone(), 33).with_tier(tier);
+            assert_ne!(Predictor::kernel_tier(&p), Some(KernelTier::Auto), "tier resolves");
+            let got = p.forward(&batch, 40.0).unwrap();
+            for (i, (x, y)) in oracle.iter().zip(&got).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tier} row {i}");
+            }
         }
     }
 

@@ -74,7 +74,11 @@ impl Backend {
     ///   geometry;
     /// * `Attention` — loads `artifacts/attention.bin` when present
     ///   (versioned weights file), else seeds weights deterministically
-    ///   from `cfg.seed`;
+    ///   from `cfg.seed`; runs its kernels on the tier resolved by
+    ///   [`PipelineConfig::effective_kernel_tier`] (config/CLI/env,
+    ///   default auto-detect) — an explicitly forced tier that is
+    ///   unavailable on this host is an error here, not a silent
+    ///   fallback;
     /// * `Pjrt` — loads the AOT artifacts and initializes (untrained)
     ///   parameters from `cfg.seed`; use [`Backend::build_trained`] for
     ///   a trained model.
@@ -82,6 +86,7 @@ impl Backend {
         match self {
             Backend::Native => Ok(Box::new(NativePredictor::with_defaults())),
             Backend::Attention => {
+                let tier = cfg.effective_kernel_tier()?;
                 let path = Path::new(&cfg.artifacts).join(ATTENTION_WEIGHTS_FILE);
                 if path.is_file() {
                     let p = AttentionPredictor::load(&path)?;
@@ -109,10 +114,10 @@ impl Backend {
                             want.vocab_size
                         ));
                     }
-                    Ok(Box::new(p))
+                    Ok(Box::new(p.with_tier(tier)))
                 } else {
                     let g = super::default_geometry();
-                    Ok(Box::new(AttentionPredictor::seeded(g, cfg.seed)))
+                    Ok(Box::new(AttentionPredictor::seeded(g, cfg.seed).with_tier(tier)))
                 }
             }
             Backend::Pjrt => {
@@ -224,6 +229,26 @@ mod tests {
         let a = Backend::Attention.build_forward(&cfg).unwrap();
         assert_eq!(n.geometry().l_clip, a.geometry().l_clip);
         assert_ne!(n.fingerprint(), a.fingerprint(), "backends must never share a cache key");
+    }
+
+    #[test]
+    fn build_forward_honors_a_forced_kernel_tier() {
+        use crate::runtime::KernelTier;
+        let mut cfg = cfg_without_artifacts();
+        cfg.kernel_tier = KernelTier::Scalar;
+        let p = Backend::Attention.build_forward(&cfg).unwrap();
+        assert_eq!(p.kernel_tier(), Some(KernelTier::Scalar));
+        // the analytic stand-in runs no kernels, so it reports no tier
+        let n = Backend::Native.build_forward(&cfg).unwrap();
+        assert_eq!(n.kernel_tier(), None);
+        // auto resolves to a concrete, available tier (which one can
+        // depend on the CAPSIM_KERNEL_TIER env override — see
+        // tests/prop_kernel_tiers.rs for the pinned-env dispatch test)
+        cfg.kernel_tier = KernelTier::Auto;
+        let a = Backend::Attention.build_forward(&cfg).unwrap();
+        let t = a.kernel_tier().expect("attention reports its tier");
+        assert_ne!(t, KernelTier::Auto);
+        assert!(t.available());
     }
 
     #[test]

@@ -29,8 +29,8 @@
 //! ## Kernel performance & bit-exactness contract
 //!
 //! The `attention` backend's production forward
-//! ([`Predictor::forward_into`]) is **batched, layout-packed and
-//! allocation-free in steady state**:
+//! ([`Predictor::forward_into`]) is **batched, layout-packed,
+//! allocation-free in steady state, and SIMD-dispatched**:
 //!
 //! * weights are pre-transposed once at model build
 //!   ([`tensor::PackedLinear`]) so every matmul inner loop walks
@@ -45,17 +45,43 @@
 //! * all per-layer scratch lives in a caller-owned [`Workspace`] arena
 //!   (one per driving thread: stream stage 3, `DedupState::predict`,
 //!   the eval loop, the benches), sized once from the geometry — the
-//!   steady-state forward performs **zero heap allocations**.
+//!   steady-state forward performs **zero heap allocations**;
+//! * every kernel inner loop is width-generic over the [`simd`] lane
+//!   abstraction and runs on a runtime-selected [`KernelTier`]
+//!   (`scalar` / `avx2` / `neon`, default `auto`; `pipeline.kernel_tier`
+//!   TOML key, `--kernel-tier` flag, `CAPSIM_KERNEL_TIER` env).
 //!
-//! The contract that makes this safe: every optimization preserves the
-//! per-output-element accumulation order (k-innermost, index order, one
-//! accumulator per element), so the packed/fused/blocked/batched path is
-//! **bit-identical** to the PR-3 row-by-row scalar forward — kept as
-//! [`AttentionPredictor::forward_reference`], the oracle that
-//! `tests/prop_attention.rs` pins the production path against (arbitrary
-//! batch compositions, paddings, and dirty-workspace reuse), and the
-//! baseline the `perf_micro` kernel-regression harness measures speedups
-//! against (`BENCH_kernels.json`, uploaded by the CI `perf-smoke` job).
+//! **The canonical accumulation order** (the decision that keeps all of
+//! this bit-exact): every reduction — matmul output elements, attention
+//! score dots, softmax normalizers, layernorm moments — accumulates
+//! element `i` into lane `i % 8` (tails zero-padded), then reduces the
+//! 8 lanes through one fixed-shape tree:
+//! `((s0+s4)+(s2+s6)) + ((s1+s5)+(s3+s7))`. This order is cheap on
+//! every ISA (it is AVX2's and NEON's natural halving sequence) and
+//! exactly reproducible in scalar code, so **all tiers — including the
+//! scalar tier and [`AttentionPredictor::forward_reference`] — produce
+//! identical bits on every host**, and the tier never enters cache
+//! identities. Accumulation never uses fused multiply-add (fusing
+//! changes rounding; the AVX2 gate requires FMA but the kernels only
+//! issue separate `mul`/`add`, which Rust/LLVM never contract), and
+//! element-wise transcendentals (`exp`, `tanh`, `ln_1p`) stay per-lane
+//! libm calls in every tier.
+//!
+//! The packed/fused/blocked/batched/SIMD path is therefore
+//! **bit-identical** to the row-by-row forward kept as
+//! [`AttentionPredictor::forward_reference`] — the oracle that
+//! `tests/prop_attention.rs` and `tests/prop_kernel_tiers.rs` pin the
+//! production path against (arbitrary batch compositions, paddings,
+//! ragged tile edges, fully-masked rows, dirty-workspace reuse, every
+//! available tier), and the baseline the `perf_micro` kernel-regression
+//! harness measures per-tier speedups against (`BENCH_kernels.json`,
+//! uploaded by the CI `perf-smoke` job).
+//!
+//! [`KERNEL_CONTRACT_VERSION`] names the canonical order; it is mixed
+//! into [`Predictor::fingerprint`], so changing the order (as this
+//! version-2 tree did to version 1's k-index-order scalar accumulation)
+//! cold-starts persisted clip caches exactly once instead of silently
+//! serving stale bits.
 //!
 //! ## Serving architecture
 //!
@@ -93,6 +119,7 @@ pub mod backend;
 pub mod manifest;
 pub mod model;
 pub mod native;
+pub mod simd;
 pub mod tensor;
 pub mod workspace;
 
@@ -101,9 +128,20 @@ pub use backend::{Backend, ATTENTION_WEIGHTS_FILE};
 pub use manifest::{Manifest, ModelGeometry, VariantManifest};
 pub use model::{Batch, ModelHandle, Runtime};
 pub use native::NativePredictor;
+pub use simd::{cpu_features, KernelTier};
 pub use workspace::Workspace;
 
 use anyhow::Result;
+
+/// Version of the canonical kernel accumulation order (see the contract
+/// section above). Mixed into every kernel-executing backend's
+/// [`Predictor::fingerprint`]; bump it whenever the canonical order —
+/// and therefore every produced bit — changes, so persisted clip caches
+/// cold-start cleanly.
+///
+/// * v1 — k-innermost, index-order scalar accumulation (PRs 3–6).
+/// * v2 — fixed-shape 8-lane tree reduction, shared by all SIMD tiers.
+pub const KERNEL_CONTRACT_VERSION: u64 = 2;
 
 /// The default model geometry: the `model_config.json` constants every
 /// dependency-free backend shares (and `coordinator::golden` locks the
@@ -183,6 +221,15 @@ pub trait Predictor {
         out.clear();
         out.extend(self.forward(batch, time_scale)?);
         Ok(())
+    }
+
+    /// The kernel tier this backend's production forward runs on, if it
+    /// executes the SIMD-dispatched kernels at all (`None` for backends
+    /// with no kernel cost, like the analytic `native` stand-in or the
+    /// externally-compiled `pjrt` path). Informational — tiers are
+    /// bit-identical, so this never affects predictions or cache keys.
+    fn kernel_tier(&self) -> Option<KernelTier> {
+        None
     }
 
     /// A stable identity key for caches of this backend's predictions

@@ -1,0 +1,796 @@
+//! Runtime-dispatched SIMD kernel tiers behind one lane-abstraction
+//! trait ([`PackedF32`]), modeled on plonky2's `packed_field` pattern:
+//! **one width-generic algorithm, per-architecture lane types, dispatch
+//! decided once at runtime**.
+//!
+//! ## Structure
+//!
+//! * [`PackedF32`] — an 8-lane f32 vector: loads/stores, lane-wise
+//!   `add`/`sub`/`mul`, and the **canonical tree reduction**
+//!   ([`PackedF32::tree_sum`]). Three implementations:
+//!   [`ScalarLanes`] (portable, always available), `x86::Avx2`
+//!   (x86_64, gated on runtime AVX2+FMA detection) and `neon::Neon`
+//!   (aarch64, baseline feature).
+//! * [`body`] — the kernel algorithms (`packed_apply`, `matmul`,
+//!   `masked_softmax`, `layernorm`, `gelu_slice`, `softplus_slice`,
+//!   `dot`, `axpy`), written once, generic over `P: PackedF32`, and
+//!   marked `#[inline(always)]` so each per-arch wrapper monomorphizes
+//!   them with its vector type *inside* a `#[target_feature]` context
+//!   (intrinsics only inline into callers with the same features).
+//! * [`KernelTier`] — the user-visible selector (`auto | scalar | avx2
+//!   | neon`), resolved through `PipelineConfig::effective_kernel_tier`
+//!   (CLI `--kernel-tier` > TOML `pipeline.kernel_tier` >
+//!   `CAPSIM_KERNEL_TIER` env > auto-detect) and threaded through
+//!   `Backend::build_forward` into the attention predictor.
+//!
+//! ## Bit-exactness
+//!
+//! Every tier implements the **same canonical accumulation order** (the
+//! fixed-shape 8-lane tree documented at [`PackedF32::tree_sum`] — the
+//! decision recorded in [`super`]'s contract section), so tier choice
+//! changes throughput, never bits: scalar, AVX2 and NEON are mutually
+//! bit-identical and identical to `forward_reference`. Two rules keep
+//! that true:
+//!
+//! * **no fused multiply-add in accumulation** — the AVX2 tier detects
+//!   FMA (part of the tier gate) but deliberately accumulates with
+//!   separate `mul`/`add`, because fusing changes rounding and a
+//!   bit-matching scalar tier would then need (slow) libm `fma` calls;
+//! * **zero-padded tails are bitwise no-ops** — accumulators start at
+//!   `+0.0` and, in round-to-nearest, `x + y` is `-0.0` only when both
+//!   operands are `-0.0`, so no accumulator lane can ever become
+//!   `-0.0`; adding a padded lane's `+0.0` product therefore preserves
+//!   the accumulator bits exactly. (`layernorm`'s variance pass pads
+//!   with the row *mean* instead, so padded lanes contribute
+//!   `(mean - mean)^2 = +0.0`.)
+//!
+//! `unsafe` is confined to the per-arch modules ([`x86`], [`neon`]);
+//! the dispatchers only enter them after [`KernelTier::effective`] has
+//! proven the features present on this CPU.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+use crate::runtime::tensor::PackedLinear;
+
+/// Lane count of every tier — the fixed shape of the canonical
+/// reduction tree. Not configurable: changing it changes produced bits
+/// (see `KERNEL_CONTRACT_VERSION` in [`super`]).
+pub const LANES: usize = 8;
+
+/// An 8-lane f32 vector: the lane abstraction every kernel inner loop
+/// is generic over. Implementations perform the *same* IEEE operation
+/// per lane, so any two tiers produce identical bits for the element
+/// they compute — the only ordering freedom is reductions, which
+/// [`PackedF32::tree_sum`] pins to one shape.
+///
+/// Implementations for real vector ISAs construct values only inside
+/// `#[target_feature]` wrappers that the dispatchers gate on runtime
+/// feature detection.
+pub trait PackedF32: Copy {
+    /// All lanes `+0.0`.
+    fn zero() -> Self;
+
+    /// All lanes `v`.
+    fn splat(v: f32) -> Self;
+
+    /// Load the first [`LANES`] elements of `src` (panics if shorter).
+    fn load(src: &[f32]) -> Self;
+
+    /// Load up to [`LANES`] leading elements of `src`, padding missing
+    /// lanes with `fill` — the tail load (see the module docs for why
+    /// `0.0` pads are bitwise no-ops in accumulation).
+    fn load_or(src: &[f32], fill: f32) -> Self;
+
+    /// Store all lanes into the first [`LANES`] elements of `dst`
+    /// (panics if shorter).
+    fn store(self, dst: &mut [f32]);
+
+    /// Lanes as an array (for per-lane scalar math, e.g. libm calls).
+    fn to_array(self) -> [f32; LANES];
+
+    /// Rebuild from an array (the inverse of [`PackedF32::to_array`]).
+    fn from_array(a: [f32; LANES]) -> Self;
+
+    /// Lane-wise `self + o`.
+    fn add(self, o: Self) -> Self;
+
+    /// Lane-wise `self - o`.
+    fn sub(self, o: Self) -> Self;
+
+    /// Lane-wise `self * o`.
+    fn mul(self, o: Self) -> Self;
+
+    /// The **canonical horizontal reduction** — the one accumulation
+    /// order every tier shares. With lanes `s0..s7`:
+    ///
+    /// ```text
+    /// q_i = s_i + s_{i+4}        (i = 0..4)   AVX2: low128 + high128
+    /// d_j = q_j + q_{j+2}        (j = 0..2)   AVX2: q + movehl(q)
+    /// r   = d_0 + d_1                         AVX2: d + movehdup(d)
+    /// ```
+    ///
+    /// The shape is exactly the cheap 128-bit halving sequence on both
+    /// AVX2 and NEON, and trivial to mirror in scalar code.
+    fn tree_sum(self) -> f32;
+}
+
+/// The portable tier: [`PackedF32`] on a plain `[f32; 8]`. This is the
+/// *definition* of the canonical semantics — the naive kernels in
+/// [`tensor`](crate::runtime::tensor) and `forward_reference` run the
+/// generic bodies with this type, and the vector tiers must match it
+/// bit-for-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarLanes([f32; LANES]);
+
+impl PackedF32 for ScalarLanes {
+    #[inline(always)]
+    fn zero() -> Self {
+        ScalarLanes([0.0; LANES])
+    }
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        ScalarLanes([v; LANES])
+    }
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        let mut a = [0.0; LANES];
+        a.copy_from_slice(&src[..LANES]);
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn load_or(src: &[f32], fill: f32) -> Self {
+        let mut a = [fill; LANES];
+        let n = src.len().min(LANES);
+        a[..n].copy_from_slice(&src[..n]);
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f32; LANES] {
+        self.0
+    }
+
+    #[inline(always)]
+    fn from_array(a: [f32; LANES]) -> Self {
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(o.0) {
+            *x += y;
+        }
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(o.0) {
+            *x -= y;
+        }
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(o.0) {
+            *x *= y;
+        }
+        ScalarLanes(a)
+    }
+
+    #[inline(always)]
+    fn tree_sum(self) -> f32 {
+        let s = self.0;
+        let q = [s[0] + s[4], s[1] + s[5], s[2] + s[6], s[3] + s[7]];
+        let d = [q[0] + q[2], q[1] + q[3]];
+        d[0] + d[1]
+    }
+}
+
+/// A selectable kernel tier (`--kernel-tier` CLI, `pipeline.kernel_tier`
+/// TOML, `CAPSIM_KERNEL_TIER` env; default [`KernelTier::Auto`]). All
+/// tiers are bit-identical (see the module docs), so the choice affects
+/// throughput only — cache identities and fingerprints never mix it in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Pick the best available tier at runtime ([`KernelTier::detect`]).
+    #[default]
+    Auto,
+    /// The portable [`ScalarLanes`] tier — always available, and the
+    /// semantic definition the vector tiers must match.
+    Scalar,
+    /// x86_64 AVX2 (+FMA detected as part of the gate, but never used
+    /// for accumulation — see the module docs).
+    Avx2,
+    /// aarch64 NEON (a baseline feature of the architecture).
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_detected() -> bool {
+    false
+}
+
+impl KernelTier {
+    /// Every tier, registry order (the order `capsim backends` prints).
+    pub const ALL: [KernelTier; 4] =
+        [KernelTier::Auto, KernelTier::Scalar, KernelTier::Avx2, KernelTier::Neon];
+
+    /// The CLI/TOML/env name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Auto => "auto",
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Whether this tier can run on the current host ( `Auto`/`Scalar`
+    /// always can; vector tiers need their architecture + CPU features).
+    pub fn available(self) -> bool {
+        match self {
+            KernelTier::Auto | KernelTier::Scalar => true,
+            KernelTier::Avx2 => avx2_fma_detected(),
+            KernelTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// The best concrete tier on this host — what `auto` resolves to.
+    pub fn detect() -> KernelTier {
+        if KernelTier::Avx2.available() {
+            KernelTier::Avx2
+        } else if KernelTier::Neon.available() {
+            KernelTier::Neon
+        } else {
+            KernelTier::Scalar
+        }
+    }
+
+    /// Resolve to a concrete, available tier; a tier forced onto a host
+    /// that cannot run it is an error (the strict path config/CLI use).
+    pub fn resolve(self) -> Result<KernelTier> {
+        match self {
+            KernelTier::Auto => Ok(KernelTier::detect()),
+            t if t.available() => Ok(t),
+            t => Err(anyhow!(
+                "kernel tier {t} is not available on this host (auto would pick {})",
+                KernelTier::detect()
+            )),
+        }
+    }
+
+    /// Non-failing [`KernelTier::resolve`]: unavailable tiers fall back
+    /// to the scalar tier (sound — every tier is bit-identical).
+    pub fn effective(self) -> KernelTier {
+        self.resolve().unwrap_or(KernelTier::Scalar)
+    }
+}
+
+impl FromStr for KernelTier {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<KernelTier> {
+        for t in KernelTier::ALL {
+            if s == t.name() {
+                return Ok(t);
+            }
+        }
+        Err(anyhow!("unknown kernel tier {s:?} (expected one of: auto, scalar, avx2, neon)"))
+    }
+}
+
+impl fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The CPU features the tier gates consult, with their detection
+/// results — what `capsim backends` prints so perf and bug reports name
+/// the hardware they ran on.
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        vec![
+            ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+            ("avx", std::arch::is_x86_feature_detected!("avx")),
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ]
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        vec![("neon", true)]
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Vec::new()
+    }
+}
+
+/// The width-generic kernel algorithms. Each is `#[inline(always)]` so
+/// a `#[target_feature]` wrapper monomorphizing it with a vector lane
+/// type gets the intrinsics inlined into one feature-enabled frame.
+/// Instantiated with [`ScalarLanes`] they *are* the canonical scalar
+/// kernels.
+pub(crate) mod body {
+    use super::{PackedF32, PackedLinear, LANES};
+    use crate::runtime::tensor::{gelu, softplus, BLOCK_M, BLOCK_N, SQRT_2_OVER_PI};
+
+    /// Dot product of two equal-length slices in the canonical order:
+    /// element `i` accumulates into lane `i % LANES`, tails are
+    /// zero-padded, lanes reduce through the fixed tree.
+    #[inline(always)]
+    pub(crate) fn dot<P: PackedF32>(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot shape");
+        let mut acc = P::zero();
+        let mut p = 0;
+        while p + LANES <= a.len() {
+            acc = acc.add(P::load(&a[p..]).mul(P::load(&b[p..])));
+            p += LANES;
+        }
+        if p < a.len() {
+            acc = acc.add(P::load_or(&a[p..], 0.0).mul(P::load_or(&b[p..], 0.0)));
+        }
+        acc.tree_sum()
+    }
+
+    /// `dst += s * src`, element-wise (the attention value mix). Purely
+    /// element-wise — same bits at any width by IEEE lane-wise identity.
+    #[inline(always)]
+    pub(crate) fn axpy<P: PackedF32>(dst: &mut [f32], s: f32, src: &[f32]) {
+        assert_eq!(dst.len(), src.len(), "axpy shape");
+        let sv = P::splat(s);
+        let mut j = 0;
+        while j + LANES <= dst.len() {
+            let v = P::load(&dst[j..]).add(sv.mul(P::load(&src[j..])));
+            v.store(&mut dst[j..]);
+            j += LANES;
+        }
+        for (d, &v) in dst[j..].iter_mut().zip(&src[j..]) {
+            *d += s * v;
+        }
+    }
+
+    /// Row-major `out[m, n] = a[m, k] · b[k, n]` in the canonical order.
+    /// `b` columns are strided, so chunks are gathered into a lane array
+    /// first — every tier performs the identical gather + lane
+    /// arithmetic (this is the reference schedule; the production path
+    /// uses [`packed_apply`] on pre-transposed weights).
+    #[inline(always)]
+    pub(crate) fn matmul<P: PackedF32>(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(a.len(), m * k, "lhs shape");
+        assert_eq!(b.len(), k * n, "rhs shape");
+        assert_eq!(out.len(), m * n, "out shape");
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let mut acc = P::zero();
+                let mut p = 0;
+                while p + LANES <= k {
+                    let mut col = [0.0f32; LANES];
+                    for (l, c) in col.iter_mut().enumerate() {
+                        *c = b[(p + l) * n + j];
+                    }
+                    acc = acc.add(P::load(&arow[p..]).mul(P::from_array(col)));
+                    p += LANES;
+                }
+                if p < k {
+                    let mut col = [0.0f32; LANES];
+                    for (l, c) in col.iter_mut().enumerate().take(k - p) {
+                        *c = b[(p + l) * n + j];
+                    }
+                    acc = acc.add(P::load_or(&arow[p..], 0.0).mul(P::from_array(col)));
+                }
+                out[i * n + j] = acc.tree_sum();
+            }
+        }
+    }
+
+    /// [`PackedLinear`]'s blocked/tiled apply in the canonical order:
+    /// same BLOCK_M × BLOCK_N output blocking and 4-wide register tile
+    /// as before, but each of the four accumulators is a lane vector
+    /// walking `k` in 8-lane chunks.
+    #[inline(always)]
+    pub(crate) fn packed_apply<P: PackedF32>(
+        lin: &PackedLinear,
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+    ) {
+        let (k, n) = (lin.k, lin.n);
+        assert_eq!(x.len(), m * k, "input shape");
+        assert_eq!(out.len(), m * n, "output shape");
+        for i0 in (0..m).step_by(BLOCK_M) {
+            let i1 = (i0 + BLOCK_M).min(m);
+            for j0 in (0..n).step_by(BLOCK_N) {
+                let j1 = (j0 + BLOCK_N).min(n);
+                for i in i0..i1 {
+                    let a = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    // 4-wide register tile: four packed weight rows
+                    // stream against a single pass over `a`, each output
+                    // in its own lane-vector accumulator
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let w0 = &lin.wt[j * k..(j + 1) * k];
+                        let w1 = &lin.wt[(j + 1) * k..(j + 2) * k];
+                        let w2 = &lin.wt[(j + 2) * k..(j + 3) * k];
+                        let w3 = &lin.wt[(j + 3) * k..(j + 4) * k];
+                        let (mut s0, mut s1, mut s2, mut s3) =
+                            (P::zero(), P::zero(), P::zero(), P::zero());
+                        let mut p = 0;
+                        while p + LANES <= k {
+                            let av = P::load(&a[p..]);
+                            s0 = s0.add(av.mul(P::load(&w0[p..])));
+                            s1 = s1.add(av.mul(P::load(&w1[p..])));
+                            s2 = s2.add(av.mul(P::load(&w2[p..])));
+                            s3 = s3.add(av.mul(P::load(&w3[p..])));
+                            p += LANES;
+                        }
+                        if p < k {
+                            let av = P::load_or(&a[p..], 0.0);
+                            s0 = s0.add(av.mul(P::load_or(&w0[p..], 0.0)));
+                            s1 = s1.add(av.mul(P::load_or(&w1[p..], 0.0)));
+                            s2 = s2.add(av.mul(P::load_or(&w2[p..], 0.0)));
+                            s3 = s3.add(av.mul(P::load_or(&w3[p..], 0.0)));
+                        }
+                        let (r0, r1, r2, r3) =
+                            (s0.tree_sum(), s1.tree_sum(), s2.tree_sum(), s3.tree_sum());
+                        if lin.bias.is_empty() {
+                            orow[j] = r0;
+                            orow[j + 1] = r1;
+                            orow[j + 2] = r2;
+                            orow[j + 3] = r3;
+                        } else {
+                            orow[j] = r0 + lin.bias[j];
+                            orow[j + 1] = r1 + lin.bias[j + 1];
+                            orow[j + 2] = r2 + lin.bias[j + 2];
+                            orow[j + 3] = r3 + lin.bias[j + 3];
+                        }
+                        j += 4;
+                    }
+                    while j < j1 {
+                        let w0 = &lin.wt[j * k..(j + 1) * k];
+                        let r = dot::<P>(a, w0);
+                        orow[j] = if lin.bias.is_empty() { r } else { r + lin.bias[j] };
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// In-place masked softmax (see `tensor::masked_softmax` for the
+    /// semantics). The max scan is a scalar pass in every tier (max is
+    /// order-independent over finite floats) and the exps are scalar
+    /// libm calls in every tier (element-wise, so tier-invariant); the
+    /// normalizing sum runs in the canonical lane order — masked
+    /// columns hold exactly `+0.0` after the exp pass, so including
+    /// them is bitwise free.
+    #[inline(always)]
+    pub(crate) fn masked_softmax<P: PackedF32>(
+        scores: &mut [f32],
+        rows: usize,
+        cols: usize,
+        mask: &[f32],
+    ) {
+        assert_eq!(scores.len(), rows * cols, "scores shape");
+        assert_eq!(mask.len(), cols, "mask shape");
+        for r in 0..rows {
+            let row = &mut scores[r * cols..(r + 1) * cols];
+            // max over live columns for the usual exp-shift stability
+            let mut max = f32::NEG_INFINITY;
+            for (j, &v) in row.iter().enumerate() {
+                if mask[j] != 0.0 && v > max {
+                    max = v;
+                }
+            }
+            if max == f32::NEG_INFINITY {
+                row.fill(0.0);
+                continue;
+            }
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = if mask[j] != 0.0 { (*v - max).exp() } else { 0.0 };
+            }
+            let mut acc = P::zero();
+            let mut j = 0;
+            while j + LANES <= cols {
+                acc = acc.add(P::load(&row[j..]));
+                j += LANES;
+            }
+            if j < cols {
+                acc = acc.add(P::load_or(&row[j..], 0.0));
+            }
+            // sum >= ~1 because the max column contributes exp(0) = 1
+            let inv = 1.0 / acc.tree_sum();
+            let iv = P::splat(inv);
+            let mut j = 0;
+            while j + LANES <= cols {
+                P::load(&row[j..]).mul(iv).store(&mut row[j..]);
+                j += LANES;
+            }
+            for v in row[j..].iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// In-place layer normalization (see `tensor::layernorm`). Mean and
+    /// variance sums run in the canonical lane order; the variance tail
+    /// pads with `mean` so padded lanes contribute exactly `+0.0`.
+    #[inline(always)]
+    pub(crate) fn layernorm<P: PackedF32>(x: &mut [f32], gamma: &[f32], beta: &[f32], eps: f32) {
+        let d = gamma.len();
+        assert_eq!(beta.len(), d, "gamma/beta shape");
+        assert!(d > 0 && x.len() % d == 0, "rows must be d-sized");
+        for row in x.chunks_exact_mut(d) {
+            let mut acc = P::zero();
+            let mut j = 0;
+            while j + LANES <= d {
+                acc = acc.add(P::load(&row[j..]));
+                j += LANES;
+            }
+            if j < d {
+                acc = acc.add(P::load_or(&row[j..], 0.0));
+            }
+            let mean = acc.tree_sum() / d as f32;
+            let mv = P::splat(mean);
+            let mut acc = P::zero();
+            let mut j = 0;
+            while j + LANES <= d {
+                let c = P::load(&row[j..]).sub(mv);
+                acc = acc.add(c.mul(c));
+                j += LANES;
+            }
+            if j < d {
+                let c = P::load_or(&row[j..], mean).sub(mv);
+                acc = acc.add(c.mul(c));
+            }
+            let var = acc.tree_sum() / d as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            let iv = P::splat(inv);
+            let mut j = 0;
+            while j + LANES <= d {
+                let v = P::load(&row[j..])
+                    .sub(mv)
+                    .mul(iv)
+                    .mul(P::load(&gamma[j..]))
+                    .add(P::load(&beta[j..]));
+                v.store(&mut row[j..]);
+                j += LANES;
+            }
+            for jj in j..d {
+                row[jj] = (row[jj] - mean) * inv * gamma[jj] + beta[jj];
+            }
+        }
+    }
+
+    /// Element-wise GELU. The polynomial and gating arithmetic run
+    /// lane-wise (element-wise, tier-invariant bits); `tanh` has no
+    /// bit-compatible vector form, so it is a per-lane libm call in
+    /// every tier.
+    #[inline(always)]
+    pub(crate) fn gelu_slice<P: PackedF32>(x: &mut [f32]) {
+        let n = x.len();
+        let mut j = 0;
+        while j + LANES <= n {
+            let v = P::load(&x[j..]);
+            let x3 = P::splat(0.044_715).mul(v).mul(v).mul(v);
+            let inner = P::splat(SQRT_2_OVER_PI).mul(v.add(x3));
+            let mut t = inner.to_array();
+            for e in t.iter_mut() {
+                *e = e.tanh();
+            }
+            let r = P::splat(0.5).mul(v).mul(P::splat(1.0).add(P::from_array(t)));
+            r.store(&mut x[j..]);
+            j += LANES;
+        }
+        for v in x[j..].iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+
+    /// Element-wise softplus. Branchy per element (three numeric
+    /// regimes), so every tier evaluates it per lane with the same
+    /// scalar function — tier-invariant by construction.
+    #[inline(always)]
+    pub(crate) fn softplus_slice<P: PackedF32>(x: &mut [f32]) {
+        let n = x.len();
+        let mut j = 0;
+        while j + LANES <= n {
+            let mut t = P::load(&x[j..]).to_array();
+            for e in t.iter_mut() {
+                *e = softplus(*e);
+            }
+            P::from_array(t).store(&mut x[j..]);
+            j += LANES;
+        }
+        for v in x[j..].iter_mut() {
+            *v = softplus(*v);
+        }
+    }
+}
+
+/// Dispatch a kernel to `tier`'s monomorphization. `effective()` first:
+/// `Auto` resolves to the detected tier, an unavailable forced tier
+/// falls back to scalar — so entering a per-arch module is always
+/// backed by a positive runtime feature check (the safety contract of
+/// the `unsafe` blocks below).
+macro_rules! dispatch {
+    ($tier:expr, $kernel:ident ( $($arg:expr),* $(,)? )) => {
+        match $tier.effective() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `effective()` returns Avx2 only after
+            // `is_x86_feature_detected!` proved AVX2+FMA on this CPU.
+            KernelTier::Avx2 => unsafe { x86::$kernel($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is a baseline feature of every aarch64
+            // target Rust compiles for.
+            KernelTier::Neon => unsafe { neon::$kernel($($arg),*) },
+            _ => body::$kernel::<ScalarLanes>($($arg),*),
+        }
+    };
+}
+
+/// [`PackedLinear`] apply on `tier` (see `tensor::PackedLinear::apply`).
+pub(crate) fn packed_apply(
+    tier: KernelTier,
+    lin: &PackedLinear,
+    x: &[f32],
+    m: usize,
+    out: &mut [f32],
+) {
+    dispatch!(tier, packed_apply(lin, x, m, out))
+}
+
+/// Naive-schedule matmul on `tier` (see `tensor::matmul`).
+pub(crate) fn matmul(
+    tier: KernelTier,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    dispatch!(tier, matmul(a, b, m, k, n, out))
+}
+
+/// Masked softmax on `tier` (see `tensor::masked_softmax`).
+pub(crate) fn masked_softmax(
+    tier: KernelTier,
+    scores: &mut [f32],
+    rows: usize,
+    cols: usize,
+    mask: &[f32],
+) {
+    dispatch!(tier, masked_softmax(scores, rows, cols, mask))
+}
+
+/// Layer normalization on `tier` (see `tensor::layernorm`).
+pub(crate) fn layernorm(tier: KernelTier, x: &mut [f32], gamma: &[f32], beta: &[f32], eps: f32) {
+    dispatch!(tier, layernorm(x, gamma, beta, eps))
+}
+
+/// Element-wise GELU on `tier` (see `tensor::gelu_slice`).
+pub(crate) fn gelu_slice(tier: KernelTier, x: &mut [f32]) {
+    dispatch!(tier, gelu_slice(x))
+}
+
+/// Element-wise softplus on `tier` (see `tensor::softplus_slice`).
+pub(crate) fn softplus_slice(tier: KernelTier, x: &mut [f32]) {
+    dispatch!(tier, softplus_slice(x))
+}
+
+/// Canonical-order dot product on `tier` (see `tensor::dot`).
+pub(crate) fn dot(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
+    dispatch!(tier, dot(a, b))
+}
+
+/// `dst += s * src` on `tier` (see `tensor::axpy`).
+pub(crate) fn axpy(tier: KernelTier, dst: &mut [f32], s: f32, src: &[f32]) {
+    dispatch!(tier, axpy(dst, s, src))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in KernelTier::ALL {
+            assert_eq!(t.name().parse::<KernelTier>().unwrap(), t);
+        }
+        assert!("sse".parse::<KernelTier>().is_err());
+        assert!("AVX2".parse::<KernelTier>().is_err(), "names are case-sensitive");
+    }
+
+    #[test]
+    fn auto_resolves_to_an_available_concrete_tier() {
+        let t = KernelTier::Auto.resolve().unwrap();
+        assert_ne!(t, KernelTier::Auto);
+        assert!(t.available());
+        assert_eq!(t, KernelTier::detect());
+        assert_eq!(KernelTier::Auto.effective(), t);
+    }
+
+    #[test]
+    fn unavailable_forced_tier_errors_but_effective_falls_back() {
+        for t in [KernelTier::Avx2, KernelTier::Neon] {
+            if !t.available() {
+                assert!(t.resolve().is_err(), "{t}");
+                assert_eq!(t.effective(), KernelTier::Scalar, "{t}");
+            } else {
+                assert_eq!(t.resolve().unwrap(), t, "{t}");
+            }
+        }
+        assert_eq!(KernelTier::Scalar.resolve().unwrap(), KernelTier::Scalar);
+    }
+
+    #[test]
+    fn scalar_lanes_tree_sum_matches_documented_shape() {
+        // values chosen so every association order differs in f32
+        let s = ScalarLanes::from_array([1e8, 1.0, -1e8, 2.0, 3e-3, 4.0, 0.25, -7.5]);
+        let a = s.to_array();
+        let q = [a[0] + a[4], a[1] + a[5], a[2] + a[6], a[3] + a[7]];
+        let d = [q[0] + q[2], q[1] + q[3]];
+        assert_eq!(s.tree_sum().to_bits(), (d[0] + d[1]).to_bits());
+    }
+
+    #[test]
+    fn load_or_pads_and_store_roundtrips() {
+        let v = ScalarLanes::load_or(&[1.0, 2.0, 3.0], 9.0);
+        assert_eq!(v.to_array(), [1.0, 2.0, 3.0, 9.0, 9.0, 9.0, 9.0, 9.0]);
+        let mut out = [0.0f32; LANES];
+        v.store(&mut out);
+        assert_eq!(out, v.to_array());
+    }
+
+    #[test]
+    fn cpu_features_reports_the_tier_gates() {
+        let feats = cpu_features();
+        if cfg!(target_arch = "x86_64") {
+            let has = |n: &str| feats.iter().any(|&(f, on)| f == n && on);
+            assert_eq!(
+                KernelTier::Avx2.available(),
+                has("avx2") && has("fma"),
+                "tier gate must agree with the reported features"
+            );
+        }
+    }
+}

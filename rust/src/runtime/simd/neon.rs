@@ -1,0 +1,174 @@
+//! The aarch64 NEON tier: [`PackedF32`] on a pair of `float32x4_t`
+//! registers (NEON vectors are 128-bit, so 8 lanes = two of them), plus
+//! one `#[target_feature(enable = "neon")]` wrapper per kernel.
+//!
+//! ## Safety contract
+//!
+//! NEON is a baseline feature of every aarch64 target Rust compiles
+//! for, so the wrappers are unconditionally sound on this architecture;
+//! they still go through the same `dispatch!` gate as AVX2 (entered
+//! only when [`KernelTier::effective`](super::KernelTier::effective)
+//! returned [`Neon`](super::KernelTier::Neon)) to keep one structure
+//! across tiers. Memory safety comes from slice bounds checks taken
+//! before each raw load/store, exactly as in the x86 module.
+//!
+//! The halving reduction maps onto NEON directly: lanes `s_i + s_{i+4}`
+//! are the `vaddq` of the two registers, `q_j + q_{j+2}` is the add of
+//! the low and high 64-bit halves, and the final `d_0 + d_1` is one
+//! pairwise add — the same canonical tree as scalar and AVX2, so the
+//! produced bits are identical.
+
+use std::arch::aarch64::*;
+
+use super::{body, PackedF32, LANES};
+use crate::runtime::tensor::PackedLinear;
+
+/// Eight f32 lanes across two NEON q-registers: lanes 0–3 in `.0`,
+/// lanes 4–7 in `.1`.
+#[derive(Clone, Copy)]
+pub(crate) struct Neon(float32x4_t, float32x4_t);
+
+impl PackedF32 for Neon {
+    #[inline(always)]
+    fn zero() -> Self {
+        // SAFETY: NEON is baseline on aarch64; same for every
+        // intrinsic below.
+        unsafe { Neon(vdupq_n_f32(0.0), vdupq_n_f32(0.0)) }
+    }
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        unsafe { Neon(vdupq_n_f32(v), vdupq_n_f32(v)) }
+    }
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        let src = &src[..LANES]; // bounds check before the raw loads
+        unsafe { Neon(vld1q_f32(src.as_ptr()), vld1q_f32(src.as_ptr().add(4))) }
+    }
+
+    #[inline(always)]
+    fn load_or(src: &[f32], fill: f32) -> Self {
+        let mut a = [fill; LANES];
+        let n = src.len().min(LANES);
+        a[..n].copy_from_slice(&src[..n]);
+        Neon::load(&a)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        let dst = &mut dst[..LANES]; // bounds check before the raw stores
+        unsafe {
+            vst1q_f32(dst.as_mut_ptr(), self.0);
+            vst1q_f32(dst.as_mut_ptr().add(4), self.1);
+        }
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f32; LANES] {
+        let mut a = [0.0; LANES];
+        self.store(&mut a);
+        a
+    }
+
+    #[inline(always)]
+    fn from_array(a: [f32; LANES]) -> Self {
+        Neon::load(&a)
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        unsafe { Neon(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1)) }
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        unsafe { Neon(vsubq_f32(self.0, o.0), vsubq_f32(self.1, o.1)) }
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        unsafe { Neon(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1)) }
+    }
+
+    #[inline(always)]
+    fn tree_sum(self) -> f32 {
+        // The canonical tree, stage for stage (PackedF32::tree_sum):
+        //   q = lanes 0..4 + lanes 4..8     -> vaddq of the two registers
+        //   d = q.low64 + q.high64          -> [q0+q2, q1+q3]
+        //   r = d0 + d1                     -> one pairwise add, lane 0
+        unsafe {
+            let q = vaddq_f32(self.0, self.1);
+            let d = vadd_f32(vget_low_f32(q), vget_high_f32(q));
+            vget_lane_f32::<0>(vpadd_f32(d, d))
+        }
+    }
+}
+
+// One wrapper per kernel, mirroring the x86 module: `#[target_feature]`
+// keeps the structure identical across tiers even though NEON is
+// baseline on aarch64.
+//
+// SAFETY (all of them): requires NEON, which every aarch64 target has.
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn packed_apply(lin: &PackedLinear, x: &[f32], m: usize, out: &mut [f32]) {
+    body::packed_apply::<Neon>(lin, x, m, out)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    body::matmul::<Neon>(a, b, m, k, n, out)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn masked_softmax(scores: &mut [f32], rows: usize, cols: usize, mask: &[f32]) {
+    body::masked_softmax::<Neon>(scores, rows, cols, mask)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32], eps: f32) {
+    body::layernorm::<Neon>(x, gamma, beta, eps)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gelu_slice(x: &mut [f32]) {
+    body::gelu_slice::<Neon>(x)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn softplus_slice(x: &mut [f32]) {
+    body::softplus_slice::<Neon>(x)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    body::dot::<Neon>(a, b)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn axpy(dst: &mut [f32], s: f32, src: &[f32]) {
+    body::axpy::<Neon>(dst, s, src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ScalarLanes;
+    use super::*;
+
+    #[test]
+    fn neon_tree_sum_is_bitwise_scalar_tree_sum() {
+        let cases = [
+            [1e8f32, 1.0, -1e8, 2.0, 3e-3, 4.0, 0.25, -7.5],
+            [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8],
+            [-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0],
+            [f32::MIN_POSITIVE, 1e-38, -1e-38, 3.0, -3.0, 1e30, -1e30, 7.0],
+        ];
+        for c in cases {
+            // SAFETY: NEON is baseline on aarch64.
+            let v = unsafe { dot(&c, &[1.0; 8]) };
+            let s = ScalarLanes::from_array(c).tree_sum();
+            assert_eq!(v.to_bits(), s.to_bits(), "{c:?}");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! The x86_64 AVX2 tier: [`PackedF32`] on `__m256` plus one
+//! `#[target_feature(enable = "avx2,fma")]` wrapper per kernel. All
+//! `unsafe` in the SIMD layer lives here (and in the NEON sibling).
+//!
+//! ## Safety contract
+//!
+//! Every `pub(crate) unsafe fn` below requires **AVX2 and FMA present
+//! on the running CPU**. The only callers are the `dispatch!` arms in
+//! [`super`], which enter this module exclusively after
+//! [`KernelTier::effective`](super::KernelTier::effective) returned
+//! [`Avx2`](super::KernelTier::Avx2) — i.e. after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! succeeded. The trait methods themselves use `unsafe` only for the
+//! intrinsics; memory safety comes from ordinary slice bounds checks
+//! (`&src[..LANES]`) taken *before* the unaligned load/store.
+//!
+//! FMA is part of the tier gate (per the registry definition) but is
+//! deliberately **never used for accumulation**: fusing changes
+//! rounding, and the canonical semantics are separate `mul` + `add`
+//! (see the module docs in [`super`]). Rust emits no fast-math flags,
+//! so LLVM will not contract our `mul`/`add` pairs behind our back.
+
+use std::arch::x86_64::*;
+
+use super::{body, PackedF32, LANES};
+use crate::runtime::tensor::PackedLinear;
+
+/// Eight f32 lanes in one AVX ymm register.
+#[derive(Clone, Copy)]
+pub(crate) struct Avx2(__m256);
+
+impl PackedF32 for Avx2 {
+    #[inline(always)]
+    fn zero() -> Self {
+        // SAFETY: callers are inside an avx2-enabled wrapper (module
+        // safety contract); same for every intrinsic below.
+        Avx2(unsafe { _mm256_setzero_ps() })
+    }
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        Avx2(unsafe { _mm256_set1_ps(v) })
+    }
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        let src = &src[..LANES]; // bounds check before the raw load
+        Avx2(unsafe { _mm256_loadu_ps(src.as_ptr()) })
+    }
+
+    #[inline(always)]
+    fn load_or(src: &[f32], fill: f32) -> Self {
+        let mut a = [fill; LANES];
+        let n = src.len().min(LANES);
+        a[..n].copy_from_slice(&src[..n]);
+        Avx2(unsafe { _mm256_loadu_ps(a.as_ptr()) })
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        let dst = &mut dst[..LANES]; // bounds check before the raw store
+        unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f32; LANES] {
+        let mut a = [0.0; LANES];
+        unsafe { _mm256_storeu_ps(a.as_mut_ptr(), self.0) };
+        a
+    }
+
+    #[inline(always)]
+    fn from_array(a: [f32; LANES]) -> Self {
+        Avx2(unsafe { _mm256_loadu_ps(a.as_ptr()) })
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        Avx2(unsafe { _mm256_add_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        Avx2(unsafe { _mm256_sub_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        Avx2(unsafe { _mm256_mul_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn tree_sum(self) -> f32 {
+        // The canonical tree, stage for stage (PackedF32::tree_sum):
+        //   q = low128 + high128            -> [s0+s4, s1+s5, s2+s6, s3+s7]
+        //   d = q + movehl(q, q)            -> [q0+q2, q1+q3, ..]
+        //       (movehl(q, q) = [q2, q3, q2, q3])
+        //   r = d + movehdup(d), lane 0     -> d0 + d1
+        //       (movehdup(d) = [d1, d1, d3, d3]; SSE3, implied by avx2)
+        unsafe {
+            let lo = _mm256_castps256_ps128(self.0);
+            let hi = _mm256_extractf128_ps::<1>(self.0);
+            let q = _mm_add_ps(lo, hi);
+            let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+            let r = _mm_add_ss(d, _mm_movehdup_ps(d));
+            _mm_cvtss_f32(r)
+        }
+    }
+}
+
+// One wrapper per kernel: `#[target_feature]` makes the whole
+// monomorphized body (generic algorithm + inlined intrinsics) compile
+// as AVX2 code in a single feature-enabled frame.
+//
+// SAFETY (all of them): caller must have verified AVX2+FMA at runtime —
+// see the module safety contract.
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn packed_apply(lin: &PackedLinear, x: &[f32], m: usize, out: &mut [f32]) {
+    body::packed_apply::<Avx2>(lin, x, m, out)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    body::matmul::<Avx2>(a, b, m, k, n, out)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn masked_softmax(scores: &mut [f32], rows: usize, cols: usize, mask: &[f32]) {
+    body::masked_softmax::<Avx2>(scores, rows, cols, mask)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32], eps: f32) {
+    body::layernorm::<Avx2>(x, gamma, beta, eps)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn gelu_slice(x: &mut [f32]) {
+    body::gelu_slice::<Avx2>(x)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn softplus_slice(x: &mut [f32]) {
+    body::softplus_slice::<Avx2>(x)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    body::dot::<Avx2>(a, b)
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn axpy(dst: &mut [f32], s: f32, src: &[f32]) {
+    body::axpy::<Avx2>(dst, s, src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{KernelTier, ScalarLanes};
+    use super::*;
+
+    fn if_avx2() -> bool {
+        KernelTier::Avx2.available()
+    }
+
+    #[test]
+    fn avx2_tree_sum_is_bitwise_scalar_tree_sum() {
+        if !if_avx2() {
+            return;
+        }
+        let cases = [
+            [1e8f32, 1.0, -1e8, 2.0, 3e-3, 4.0, 0.25, -7.5],
+            [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8],
+            [-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0],
+            [f32::MIN_POSITIVE, 1e-38, -1e-38, 3.0, -3.0, 1e30, -1e30, 7.0],
+        ];
+        for c in cases {
+            // SAFETY: gated on runtime AVX2+FMA detection above.
+            let v = unsafe { dot(&c, &[1.0; 8]) };
+            let s = ScalarLanes::from_array(c).tree_sum();
+            assert_eq!(v.to_bits(), s.to_bits(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn avx2_lane_ops_match_scalar_bitwise() {
+        if !if_avx2() {
+            return;
+        }
+        let a = [1.5f32, -2.25, 3.125, 1e-7, -1e7, 0.0, -0.0, 42.0];
+        let b = [0.3f32, 7.0, -0.125, 2e-7, 1e7, -0.0, 0.0, -6.0];
+        // SAFETY: gated on runtime AVX2+FMA detection above.
+        let mut va = a;
+        unsafe { axpy(&mut va, 2.5, &b) };
+        let mut sa = a;
+        crate::runtime::simd::body::axpy::<ScalarLanes>(&mut sa, 2.5, &b);
+        for (x, y) in va.iter().zip(&sa) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

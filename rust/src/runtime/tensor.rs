@@ -1,32 +1,38 @@
 //! Minimal f32 tensor kernels for the pure-Rust attention backend.
 //!
-//! No BLAS, no SIMD intrinsics, no dependencies: plain row-major loops in
-//! a fixed evaluation order, so every result is a deterministic function
-//! of the inputs — bit-identical across runs, thread counts and batch
-//! compositions. Rust never applies fast-math, so `opt-level` does not
-//! change the produced bits either.
+//! No BLAS, no dependencies: every kernel is one width-generic
+//! algorithm in [`simd::body`](crate::runtime::simd), instantiated here
+//! with the portable [`ScalarLanes`] lane type — so the functions in
+//! this module *are* the canonical semantics. The runtime-dispatched
+//! `_tier` variants ([`matmul_tier`], [`PackedLinear::apply_tier`], …)
+//! run the same algorithm over a hardware lane type (AVX2 on x86_64,
+//! NEON on aarch64) selected by [`KernelTier`]; because all tiers share
+//! the **canonical accumulation order** — element `i` accumulates into
+//! lane `i % 8`, tails are zero-padded, lanes reduce through one
+//! fixed-shape tree (see `PackedF32::tree_sum`) — a `_tier` call is
+//! bit-identical to its plain sibling on every host. Rust never applies
+//! fast-math, so `opt-level` does not change produced bits either.
 //!
-//! Two kernel tiers share one arithmetic contract:
+//! Layout tiers on top of the lane tier:
 //!
-//! * the **naive scalar tier** ([`matmul`], [`vecmat`], [`add_bias`]) —
-//!   the reference schedule: for each output element, accumulate over
-//!   `k` in index order into a single f32 register;
-//! * the **packed tier** ([`PackedLinear`]) — the hot-loop layout: the
-//!   weight matrix is pre-transposed once at model build, so every dot
-//!   product walks two contiguous slices, the bias add is folded into
-//!   the store, several matrices sharing an input fuse into one
+//! * the **naive schedule** ([`matmul`], [`vecmat`], [`add_bias`]) —
+//!   reference layout: strided column gathers, no packing;
+//! * the **packed schedule** ([`PackedLinear`]) — the hot-loop layout:
+//!   the weight matrix is pre-transposed once at model build so every
+//!   dot product walks two contiguous slices, the bias add is folded
+//!   into the store, several matrices sharing an input fuse into one
 //!   projection (Q‖K‖V), and the output space is cache-blocked and
 //!   register-tiled.
 //!
-//! The packed tier is **bit-identical** to the naive tier by
+//! The packed schedule is **bit-identical** to the naive schedule by
 //! construction: blocking and tiling only reorder *which output
 //! elements* are computed when; every output element still accumulates
-//! over the full `k` range, in index order, in its own register, and the
-//! bias is still one addition after the full accumulation — exactly the
-//! naive `matmul` + `add_bias` sequence. (This is also why there is no
-//! k-blocking and no multi-accumulator unroll over `k`: either would
-//! split the accumulation and change the rounding.) The unit tests below
-//! and `tests/prop_attention.rs` pin the equivalence bit-for-bit.
+//! over the full `k` range in the canonical lane order, and the bias is
+//! still one addition after the full reduction — exactly the naive
+//! [`matmul`] + [`add_bias`] sequence. (This is also why there is no
+//! k-blocking: splitting the accumulation differently would change the
+//! rounding.) The unit tests below, `tests/prop_attention.rs` and
+//! `tests/prop_kernel_tiers.rs` pin both equivalences bit-for-bit.
 //!
 //! Numerical contracts the property tests pin down
 //! (`tests/prop_attention.rs`):
@@ -38,19 +44,25 @@
 //! * [`layernorm`] of an all-zero vector is the bias vector (variance 0
 //!   is regularized by `EPS`, never divided through directly).
 
+use crate::runtime::simd::{self, body, KernelTier, ScalarLanes};
+
 /// Variance regularizer for [`layernorm`].
 const EPS: f32 = 1e-5;
 
 /// Output-row tile edge of [`PackedLinear::apply`]: `BLOCK_M` input rows
 /// (`BLOCK_M × k` floats, ≤ 8 KiB at the model's k ∈ {64, 128}) are
 /// reused against each weight tile while it is cache-resident.
-const BLOCK_M: usize = 16;
+pub(crate) const BLOCK_M: usize = 16;
 
 /// Output-column tile edge of [`PackedLinear::apply`]: one tile of packed
 /// weight rows (`BLOCK_N × k` floats, 16–32 KiB at the model's shapes)
 /// stays L1/L2-resident while every input row of the M-tile streams
 /// against it.
-const BLOCK_N: usize = 64;
+pub(crate) const BLOCK_N: usize = 64;
+
+/// `sqrt(2/pi)` to f32 precision — the [`gelu`] tanh-approximation
+/// constant, shared with the lane-generic kernel bodies.
+pub(crate) const SQRT_2_OVER_PI: f32 = 0.797_884_6;
 
 /// A linear layer packed for the inference hot loop: weights stored
 /// **pre-transposed** (`wt[j * k + p] = w[p * n + j]`, i.e. row `j` of
@@ -61,12 +73,13 @@ const BLOCK_N: usize = 64;
 /// module docs, and is bit-identical to naive [`matmul`] (+
 /// [`add_bias`]).
 pub struct PackedLinear {
-    /// Transposed weights, row-major `[n, k]`.
-    wt: Vec<f32>,
+    /// Transposed weights, row-major `[n, k]` (read by the lane-generic
+    /// kernel bodies).
+    pub(crate) wt: Vec<f32>,
     /// Per-output bias; empty = no bias.
-    bias: Vec<f32>,
-    k: usize,
-    n: usize,
+    pub(crate) bias: Vec<f32>,
+    pub(crate) k: usize,
+    pub(crate) n: usize,
 }
 
 impl PackedLinear {
@@ -122,82 +135,39 @@ impl PackedLinear {
     }
 
     /// `out[m, n] = x[m, k] · W (+ bias)` over the packed layout,
-    /// cache-blocked and register-tiled; bit-identical to [`matmul`]
-    /// followed by [`add_bias`] (see the module docs for why).
+    /// cache-blocked and register-tiled, in the canonical (scalar-tier)
+    /// lane order; bit-identical to [`matmul`] followed by [`add_bias`].
     pub fn apply(&self, x: &[f32], m: usize, out: &mut [f32]) {
-        let (k, n) = (self.k, self.n);
-        assert_eq!(x.len(), m * k, "input shape");
-        assert_eq!(out.len(), m * n, "output shape");
-        for i0 in (0..m).step_by(BLOCK_M) {
-            let i1 = (i0 + BLOCK_M).min(m);
-            for j0 in (0..n).step_by(BLOCK_N) {
-                let j1 = (j0 + BLOCK_N).min(n);
-                for i in i0..i1 {
-                    let a = &x[i * k..(i + 1) * k];
-                    let orow = &mut out[i * n..(i + 1) * n];
-                    // 4-wide register tile: four packed weight rows
-                    // stream against a single pass over `a`, each output
-                    // in its own accumulator walking k in index order
-                    let mut j = j0;
-                    while j + 4 <= j1 {
-                        let w0 = &self.wt[j * k..(j + 1) * k];
-                        let w1 = &self.wt[(j + 1) * k..(j + 2) * k];
-                        let w2 = &self.wt[(j + 2) * k..(j + 3) * k];
-                        let w3 = &self.wt[(j + 3) * k..(j + 4) * k];
-                        let (mut s0, mut s1, mut s2, mut s3) =
-                            (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                        for p in 0..k {
-                            let av = a[p];
-                            s0 += av * w0[p];
-                            s1 += av * w1[p];
-                            s2 += av * w2[p];
-                            s3 += av * w3[p];
-                        }
-                        if self.bias.is_empty() {
-                            orow[j] = s0;
-                            orow[j + 1] = s1;
-                            orow[j + 2] = s2;
-                            orow[j + 3] = s3;
-                        } else {
-                            orow[j] = s0 + self.bias[j];
-                            orow[j + 1] = s1 + self.bias[j + 1];
-                            orow[j + 2] = s2 + self.bias[j + 2];
-                            orow[j + 3] = s3 + self.bias[j + 3];
-                        }
-                        j += 4;
-                    }
-                    while j < j1 {
-                        let w0 = &self.wt[j * k..(j + 1) * k];
-                        let mut s0 = 0.0f32;
-                        for p in 0..k {
-                            s0 += a[p] * w0[p];
-                        }
-                        orow[j] = if self.bias.is_empty() { s0 } else { s0 + self.bias[j] };
-                        j += 1;
-                    }
-                }
-            }
-        }
+        body::packed_apply::<ScalarLanes>(self, x, m, out);
+    }
+
+    /// [`PackedLinear::apply`] on the selected [`KernelTier`] —
+    /// bit-identical to `apply` on every tier, faster on the vector
+    /// ones.
+    pub fn apply_tier(&self, tier: KernelTier, x: &[f32], m: usize, out: &mut [f32]) {
+        simd::packed_apply(tier, self, x, m, out);
     }
 }
 
 /// Row-major matrix product: `out[m, n] = a[m, k] · b[k, n]`.
 ///
-/// `out` is fully overwritten. The k-loop is innermost and accumulates
-/// into an f32 register in index order — the canonical scalar schedule.
+/// `out` is fully overwritten; accumulation follows the canonical lane
+/// order (see the module docs). Panics on any slice/shape mismatch.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "lhs shape");
-    assert_eq!(b.len(), k * n, "rhs shape");
-    assert_eq!(out.len(), m * n, "out shape");
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += a[i * k + p] * b[p * n + j];
-            }
-            out[i * n + j] = acc;
-        }
-    }
+    body::matmul::<ScalarLanes>(a, b, m, k, n, out);
+}
+
+/// [`matmul`] on the selected [`KernelTier`] (bit-identical).
+pub fn matmul_tier(
+    tier: KernelTier,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    simd::matmul(tier, a, b, m, k, n, out);
 }
 
 /// Vector-matrix product: `out[n] = x[k] · w[k, n]` (a 1-row [`matmul`]).
@@ -205,7 +175,37 @@ pub fn vecmat(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
     matmul(x, w, 1, k, n, out);
 }
 
-/// Add a bias vector to every length-`n` row of `x`.
+/// [`vecmat`] on the selected [`KernelTier`] (bit-identical).
+pub fn vecmat_tier(tier: KernelTier, x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    matmul_tier(tier, x, w, 1, k, n, out);
+}
+
+/// Dot product of two equal-length slices in the canonical lane order —
+/// the reduction primitive every matmul output element is built from,
+/// exposed for the attention score loop. Panics on length mismatch.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    body::dot::<ScalarLanes>(a, b)
+}
+
+/// [`dot`] on the selected [`KernelTier`] (bit-identical).
+pub fn dot_tier(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
+    simd::dot(tier, a, b)
+}
+
+/// `dst += s * src` element-wise (the attention value mix). Purely
+/// element-wise, so tier-invariant bits by IEEE lane-wise identity.
+/// Panics on length mismatch.
+pub fn axpy(dst: &mut [f32], s: f32, src: &[f32]) {
+    body::axpy::<ScalarLanes>(dst, s, src);
+}
+
+/// [`axpy`] on the selected [`KernelTier`] (bit-identical).
+pub fn axpy_tier(tier: KernelTier, dst: &mut [f32], s: f32, src: &[f32]) {
+    simd::axpy(tier, dst, s, src);
+}
+
+/// Add a bias vector to every length-`n` row of `x`. Panics unless
+/// `x.len()` is a whole number of bias-sized rows.
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     let n = bias.len();
     assert!(n > 0 && x.len() % n == 0, "rows must be bias-sized");
@@ -222,78 +222,52 @@ pub fn add_bias(x: &mut [f32], bias: &[f32]) {
 /// row (the attention use: one key-padding mask shared by all queries).
 /// Masked columns get probability exactly 0.0. A row whose mask is all
 /// zero becomes all zeros — a defined, NaN-free "attend to nothing" row —
-/// rather than the NaN a naive `exp / sum` would produce.
+/// rather than the NaN a naive `exp / sum` would produce. The
+/// normalizing sum runs in the canonical lane order over the whole row
+/// (masked entries are exactly `+0.0` after the exp pass, so including
+/// them never changes the sum's bits).
 pub fn masked_softmax(scores: &mut [f32], rows: usize, cols: usize, mask: &[f32]) {
-    assert_eq!(scores.len(), rows * cols, "scores shape");
-    assert_eq!(mask.len(), cols, "mask shape");
-    for r in 0..rows {
-        let row = &mut scores[r * cols..(r + 1) * cols];
-        // max over live columns for the usual exp-shift stability
-        let mut max = f32::NEG_INFINITY;
-        for (j, &v) in row.iter().enumerate() {
-            if mask[j] != 0.0 && v > max {
-                max = v;
-            }
-        }
-        if max == f32::NEG_INFINITY {
-            row.fill(0.0);
-            continue;
-        }
-        let mut sum = 0.0f32;
-        for (j, v) in row.iter_mut().enumerate() {
-            if mask[j] != 0.0 {
-                *v = (*v - max).exp();
-                sum += *v;
-            } else {
-                *v = 0.0;
-            }
-        }
-        // sum >= 1 because the max column contributes exp(0) = 1
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
-    }
+    body::masked_softmax::<ScalarLanes>(scores, rows, cols, mask);
+}
+
+/// [`masked_softmax`] on the selected [`KernelTier`] (bit-identical).
+pub fn masked_softmax_tier(
+    tier: KernelTier,
+    scores: &mut [f32],
+    rows: usize,
+    cols: usize,
+    mask: &[f32],
+) {
+    simd::masked_softmax(tier, scores, rows, cols, mask);
 }
 
 /// In-place layer normalization of each length-`gamma.len()` row of `x`:
-/// `x = (x - mean) / sqrt(var + EPS) * gamma + beta`.
+/// `x = (x - mean) / sqrt(var + EPS) * gamma + beta`, with the mean and
+/// variance sums in the canonical lane order.
 pub fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32]) {
-    let d = gamma.len();
-    assert_eq!(beta.len(), d, "gamma/beta shape");
-    assert!(d > 0 && x.len() % d == 0, "rows must be d-sized");
-    for row in x.chunks_exact_mut(d) {
-        let mut mean = 0.0f32;
-        for &v in row.iter() {
-            mean += v;
-        }
-        mean /= d as f32;
-        let mut var = 0.0f32;
-        for &v in row.iter() {
-            let c = v - mean;
-            var += c * c;
-        }
-        var /= d as f32;
-        let inv = 1.0 / (var + EPS).sqrt();
-        for (j, v) in row.iter_mut().enumerate() {
-            *v = (*v - mean) * inv * gamma[j] + beta[j];
-        }
-    }
+    body::layernorm::<ScalarLanes>(x, gamma, beta, EPS);
+}
+
+/// [`layernorm`] on the selected [`KernelTier`] (bit-identical).
+pub fn layernorm_tier(tier: KernelTier, x: &mut [f32], gamma: &[f32], beta: &[f32]) {
+    simd::layernorm(tier, x, gamma, beta, EPS);
 }
 
 /// GELU activation (tanh approximation, as in the original BERT/GPT
 /// formulation): `0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))`.
 pub fn gelu(x: f32) -> f32 {
-    // sqrt(2/pi), to f32 precision
-    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
 }
 
 /// Apply [`gelu`] element-wise.
 pub fn gelu_slice(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v = gelu(*v);
-    }
+    body::gelu_slice::<ScalarLanes>(x);
+}
+
+/// [`gelu_slice`] on the selected [`KernelTier`] (bit-identical — the
+/// polynomial runs lane-wise, `tanh` stays a per-lane libm call).
+pub fn gelu_slice_tier(tier: KernelTier, x: &mut [f32]) {
+    simd::gelu_slice(tier, x);
 }
 
 /// Numerically stable softplus `ln(1 + e^x)`: strictly positive, smooth,
@@ -306,6 +280,18 @@ pub fn softplus(x: f32) -> f32 {
     } else {
         x.exp().ln_1p()
     }
+}
+
+/// Apply [`softplus`] element-wise.
+pub fn softplus_slice(x: &mut [f32]) {
+    body::softplus_slice::<ScalarLanes>(x);
+}
+
+/// [`softplus_slice`] on the selected [`KernelTier`] (bit-identical —
+/// softplus is branchy per element, so every tier evaluates it per
+/// lane).
+pub fn softplus_slice_tier(tier: KernelTier, x: &mut [f32]) {
+    simd::softplus_slice(tier, x);
 }
 
 #[cfg(test)]
@@ -331,6 +317,60 @@ mod tests {
         assert_eq!(out, a);
     }
 
+    /// The canonical accumulation order, written out longhand: element
+    /// `i` into accumulator `i % 8`, then the fixed tree
+    /// `((s0+s4)+(s2+s6)) + ((s1+s5)+(s3+s7))`. [`dot`] (and therefore
+    /// every matmul output element) must match it bit-for-bit — this is
+    /// the test that pins the contract documented in `runtime/mod.rs`.
+    fn reference_tree_dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut s = [0.0f32; 8];
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            s[i % 8] += x * y;
+        }
+        let q = [s[0] + s[4], s[1] + s[5], s[2] + s[6], s[3] + s[7]];
+        let d = [q[0] + q[2], q[1] + q[3]];
+        d[0] + d[1]
+    }
+
+    #[test]
+    fn dot_follows_the_canonical_tree_order() {
+        let mut rng = crate::util::Rng::new(7);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 65, 130] {
+            let a: Vec<f32> = (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 1e3).collect();
+            let b: Vec<f32> = (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 1e3).collect();
+            let got = dot(&a, &b);
+            let want = reference_tree_dot(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn matmul_outputs_are_canonical_tree_dots() {
+        let mut rng = crate::util::Rng::new(8);
+        let (m, k, n) = (3usize, 13usize, 5usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut out = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let col: Vec<f32> = (0..k).map(|p| b[p * n + j]).collect();
+                let want = reference_tree_dot(&a[i * k..(i + 1) * k], &col);
+                assert_eq!(out[i * n + j].to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_known_values_and_empty() {
+        let mut dst = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let src = [1.0f32; 9];
+        axpy(&mut dst, 0.5, &src);
+        assert_eq!(dst, [1.5, 2.5, 3.5, 4.5, 5.5, 6.5, 7.5, 8.5, 9.5]);
+        let mut empty: [f32; 0] = [];
+        axpy(&mut empty, 2.0, &[]);
+    }
+
     #[test]
     fn vecmat_is_one_row_matmul() {
         let x = [1.0, 2.0, 3.0];
@@ -345,6 +385,59 @@ mod tests {
         let mut x = [1.0, 2.0, 3.0, 4.0];
         add_bias(&mut x, &[10.0, 20.0]);
         assert_eq!(x, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "lhs shape")]
+    fn matmul_rejects_bad_lhs() {
+        let mut out = [0.0f32; 4];
+        matmul(&[1.0; 3], &[1.0; 4], 2, 2, 2, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "rhs shape")]
+    fn matmul_rejects_bad_rhs() {
+        let mut out = [0.0f32; 4];
+        matmul(&[1.0; 4], &[1.0; 5], 2, 2, 2, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "out shape")]
+    fn vecmat_rejects_bad_out() {
+        let mut out = [0.0f32; 3];
+        vecmat(&[1.0; 2], &[1.0; 4], 2, 2, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot shape")]
+    fn dot_rejects_mismatched_lengths() {
+        dot(&[1.0; 3], &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy shape")]
+    fn axpy_rejects_mismatched_lengths() {
+        axpy(&mut [1.0; 3], 1.0, &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows must be bias-sized")]
+    fn add_bias_rejects_ragged_rows() {
+        add_bias(&mut [1.0; 5], &[1.0; 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "input shape")]
+    fn packed_apply_rejects_bad_input() {
+        let packed = PackedLinear::pack(&[1.0; 4], 2, 2);
+        let mut out = [0.0f32; 2];
+        packed.apply(&[1.0; 3], 1, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scores shape")]
+    fn masked_softmax_rejects_bad_scores() {
+        masked_softmax(&mut [0.0; 5], 2, 3, &[1.0; 3]);
     }
 
     #[test]
@@ -409,11 +502,32 @@ mod tests {
     }
 
     #[test]
+    fn gelu_slice_matches_scalar_gelu_bitwise() {
+        let mut rng = crate::util::Rng::new(9);
+        let mut x: Vec<f32> = (0..37).map(|_| (rng.f32() * 2.0 - 1.0) * 8.0).collect();
+        let want: Vec<f32> = x.iter().map(|&v| gelu(v)).collect();
+        gelu_slice(&mut x);
+        for (i, (a, b)) in x.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
     fn softplus_positive_and_asymptotic() {
         assert!(softplus(-50.0) > 0.0);
         assert!((softplus(0.0) - std::f32::consts::LN_2).abs() < 1e-6);
         assert_eq!(softplus(50.0), 50.0);
         assert!(softplus(5.0) > 5.0 && softplus(5.0) < 5.01);
+    }
+
+    #[test]
+    fn softplus_slice_matches_scalar_softplus_bitwise() {
+        let mut x: Vec<f32> = (0..23).map(|i| (i as f32 - 11.0) * 4.5).collect();
+        let want: Vec<f32> = x.iter().map(|&v| softplus(v)).collect();
+        softplus_slice(&mut x);
+        for (i, (a, b)) in x.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
     }
 
     fn random_matrix(rng: &mut crate::util::Rng, len: usize) -> Vec<f32> {
@@ -444,6 +558,29 @@ mod tests {
             packed.apply(&a, m, &mut fast);
             for (i, (x, y)) in naive.iter().zip(&fast).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_variants_bit_equal_canonical_on_every_available_tier() {
+        // the deep per-tier coverage lives in tests/prop_kernel_tiers.rs;
+        // this is the smoke check that the dispatch plumbing itself works
+        let mut rng = crate::util::Rng::new(44);
+        let (m, k, n) = (5usize, 19usize, 21usize);
+        let a = random_matrix(&mut rng, m * k);
+        let w = random_matrix(&mut rng, k * n);
+        let packed = PackedLinear::pack(&w, k, n);
+        let mut want = vec![0.0f32; m * n];
+        packed.apply(&a, m, &mut want);
+        for tier in [KernelTier::Auto, KernelTier::Scalar, KernelTier::Avx2, KernelTier::Neon] {
+            if !tier.available() {
+                continue;
+            }
+            let mut got = vec![f32::NAN; m * n];
+            packed.apply_tier(tier, &a, m, &mut got);
+            for (i, (x, y)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tier} elem {i}");
             }
         }
     }

@@ -1,0 +1,318 @@
+//! Tier-equivalence property tests: every kernel tier this host can run
+//! must produce **bit-identical** output to the canonical scalar
+//! semantics, over arbitrary shapes — ragged tile edges, fully-masked
+//! softmax rows, empty slices — and over the end-to-end attention
+//! forward against [`AttentionPredictor::forward_reference`]. This is
+//! the suite that makes the "tiers never enter cache identities"
+//! contract in `runtime`'s module docs an enforced invariant rather
+//! than a comment.
+//!
+//! Also pins the dispatch plumbing itself: `CAPSIM_KERNEL_TIER=scalar`
+//! forces the scalar fallback through
+//! [`PipelineConfig::effective_kernel_tier`] and
+//! [`Backend::build_forward`], an explicit config tier beats the env,
+//! and an unparseable env value falls back to auto-detection. All env
+//! manipulation lives in **one** test function — integration tests run
+//! multi-threaded, and the process environment is shared state.
+
+use capsim::config::PipelineConfig;
+use capsim::dataset::ClipSample;
+use capsim::predictor::build_batch;
+use capsim::runtime::tensor;
+use capsim::runtime::{AttentionPredictor, KernelTier, ModelGeometry, Predictor, Workspace};
+use capsim::util::{prop, Rng};
+
+/// Every concrete tier this host can run (always includes scalar).
+fn available_tiers() -> Vec<KernelTier> {
+    KernelTier::ALL
+        .into_iter()
+        .filter(|t| *t != KernelTier::Auto && t.available())
+        .collect()
+}
+
+/// A compact geometry so the transformer forward stays cheap per case.
+fn geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 96,
+        embed_dim: 16,
+        l_token: 4,
+        l_clip: 8,
+        m_rows: 6,
+        train_batch: 4,
+        fwd_batch_sizes: vec![1, 4, 8],
+    }
+}
+
+fn random_sample(rng: &mut Rng, g: &ModelGeometry) -> ClipSample {
+    // len 0 is legal (a fully-masked clip) and must stay well-defined
+    let len = rng.below(g.l_clip as u64 + 1) as u16;
+    let tokens = (0..len as usize * g.l_token)
+        .map(|_| rng.below(g.vocab_size as u64) as u16)
+        .collect();
+    let ctx = (0..g.m_rows).map(|_| rng.below(g.vocab_size as u64) as u16).collect();
+    ClipSample { tokens, len, ctx, time: 1.0, key: rng.next_u64(), bench: 0 }
+}
+
+fn random_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 3.0).collect()
+}
+
+/// Bitwise slice comparison with a labelled error.
+fn bits_eq(label: &str, tier: KernelTier, want: &[f32], got: &[f32]) -> Result<(), String> {
+    if want.len() != got.len() {
+        return Err(format!("{label} [{tier}]: {} values vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("{label} [{tier}] diverged at {i}: canonical {a} != tier {b}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn there_is_always_at_least_the_scalar_tier() {
+    let tiers = available_tiers();
+    assert!(tiers.contains(&KernelTier::Scalar));
+    // and auto resolves to one of them
+    assert!(tiers.contains(&KernelTier::detect()));
+}
+
+#[test]
+fn forced_unavailable_tiers_error_on_resolve_but_fall_back_on_effective() {
+    for t in KernelTier::ALL {
+        if t.available() {
+            let want = if t == KernelTier::Auto { KernelTier::detect() } else { t };
+            assert_eq!(t.resolve().unwrap(), want);
+        } else {
+            let err = t.resolve().unwrap_err().to_string();
+            assert!(err.contains(t.name()), "error should name the tier: {err}");
+            assert_eq!(t.effective(), KernelTier::Scalar);
+        }
+    }
+    assert!("sse9".parse::<KernelTier>().is_err());
+    for t in KernelTier::ALL {
+        assert_eq!(t.name().parse::<KernelTier>().unwrap(), t);
+    }
+}
+
+#[test]
+fn packed_apply_bit_equals_canonical_on_every_tier_over_ragged_shapes() {
+    // shapes straddle the BLOCK_M=16 / BLOCK_N=64 tile edges and the
+    // 8-lane vector width, so remainder rows/columns/lanes all occur
+    let tiers = available_tiers();
+    prop::check_res(
+        "tiers-packed-apply",
+        48,
+        |rng| {
+            let m = rng.range(1, 21);
+            let k = rng.range(1, 41);
+            let n = rng.range(1, 71);
+            let x = random_buf(rng, m * k);
+            let w = random_buf(rng, k * n);
+            let bias = if rng.chance(0.5) { random_buf(rng, n) } else { Vec::new() };
+            (m, k, n, x, w, bias)
+        },
+        |(m, k, n, x, w, bias)| {
+            let lin = tensor::PackedLinear::pack_with_bias(w, bias, *k, *n);
+            let mut want = vec![0.0f32; m * n];
+            lin.apply(x, *m, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            for &tier in &tiers {
+                got.iter_mut().for_each(|v| *v = f32::NAN); // stale bits must be overwritten
+                lin.apply_tier(tier, x, *m, &mut got);
+                bits_eq("packed_apply", tier, &want, &got)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matmul_dot_axpy_bit_equal_on_every_tier() {
+    let tiers = available_tiers();
+    prop::check_res(
+        "tiers-matmul-dot-axpy",
+        48,
+        |rng| {
+            let m = rng.range(1, 9);
+            let k = rng.range(0, 40); // k = 0: every output is an empty reduction
+            let n = rng.range(1, 33);
+            let a = random_buf(rng, m * k);
+            let b = random_buf(rng, k * n);
+            let s = (rng.f32() - 0.5) * 4.0;
+            (m, k, n, a, b, s)
+        },
+        |(m, k, n, a, b, s)| {
+            let mut want = vec![0.0f32; m * n];
+            tensor::matmul(a, b, *m, *k, *n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            for &tier in &tiers {
+                tensor::matmul_tier(tier, a, b, *m, *k, *n, &mut got);
+                bits_eq("matmul", tier, &want, &got)?;
+
+                // dot over the first k elements (k = 0: empty reduction)
+                let (va, vb) = (&a[..*k], &b[..*k]);
+                let want_dot = tensor::dot(va, vb);
+                let got_dot = tensor::dot_tier(tier, va, vb);
+                if want_dot.to_bits() != got_dot.to_bits() {
+                    return Err(format!("dot [{tier}]: {want_dot} != {got_dot}"));
+                }
+
+                let mut want_axpy = b.clone();
+                tensor::axpy(&mut want_axpy, *s, b);
+                let mut got_axpy = b.clone();
+                tensor::axpy_tier(tier, &mut got_axpy, *s, b);
+                bits_eq("axpy", tier, &want_axpy, &got_axpy)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn masked_softmax_and_layernorm_bit_equal_on_every_tier() {
+    let tiers = available_tiers();
+    prop::check_res(
+        "tiers-softmax-layernorm",
+        48,
+        |rng| {
+            let rows = rng.range(1, 6);
+            let cols = rng.range(1, 24);
+            let scores: Vec<f32> =
+                (0..rows * cols).map(|_| (rng.f32() * 2.0 - 1.0) * 30.0).collect();
+            // sometimes a fully-masked tile: the all-zero-row edge case
+            let fully_masked = rng.chance(0.2);
+            let mask: Vec<f32> = (0..cols)
+                .map(|_| if fully_masked || rng.chance(0.4) { 0.0 } else { 1.0 })
+                .collect();
+            let d = rng.range(2, 24);
+            let norm_rows = rng.range(1, 5);
+            let x: Vec<f32> = (0..norm_rows * d).map(|_| (rng.f32() - 0.5) * 50.0).collect();
+            let gamma = random_buf(rng, d);
+            let beta = random_buf(rng, d);
+            (rows, cols, scores, mask, d, x, gamma, beta)
+        },
+        |(rows, cols, scores, mask, _d, x, gamma, beta)| {
+            let mut want = scores.clone();
+            tensor::masked_softmax(&mut want, *rows, *cols, mask);
+            for &tier in &tiers {
+                let mut got = scores.clone();
+                tensor::masked_softmax_tier(tier, &mut got, *rows, *cols, mask);
+                bits_eq("masked_softmax", tier, &want, &got)?;
+            }
+
+            let mut want = x.clone();
+            tensor::layernorm(&mut want, gamma, beta);
+            for &tier in &tiers {
+                let mut got = x.clone();
+                tensor::layernorm_tier(tier, &mut got, gamma, beta);
+                bits_eq("layernorm", tier, &want, &got)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn activation_slices_bit_equal_on_every_tier() {
+    let tiers = available_tiers();
+    prop::check_res(
+        "tiers-activations",
+        48,
+        |rng| {
+            let len = rng.range(0, 40); // 0: the empty-slice edge
+            (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * 20.0).collect::<Vec<f32>>()
+        },
+        |x| {
+            let mut want = x.clone();
+            tensor::gelu_slice(&mut want);
+            for &tier in &tiers {
+                let mut got = x.clone();
+                tensor::gelu_slice_tier(tier, &mut got);
+                bits_eq("gelu_slice", tier, &want, &got)?;
+            }
+            let mut want = x.clone();
+            tensor::softplus_slice(&mut want);
+            for &tier in &tiers {
+                let mut got = x.clone();
+                tensor::softplus_slice_tier(tier, &mut got);
+                bits_eq("softplus_slice", tier, &want, &got)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forward_bit_equals_reference_on_every_tier_for_arbitrary_batches() {
+    // the whole-model property: one model per tier (same weights), one
+    // dirty shared workspace per tier, arbitrary batch compositions
+    // (including empty clips) and arbitrary padding — every tier must
+    // reproduce the tier-free row-by-row reference bit for bit
+    let g = geometry();
+    let oracle_model = AttentionPredictor::seeded(g.clone(), 0x71E5);
+    let mut models: Vec<(KernelTier, AttentionPredictor, Workspace)> = available_tiers()
+        .into_iter()
+        .map(|t| (t, AttentionPredictor::seeded(g.clone(), 0x71E5).with_tier(t), Workspace::new()))
+        .collect();
+    let mut preds: Vec<f32> = Vec::new();
+    prop::check_res(
+        "tiers-forward-vs-reference",
+        24,
+        |rng| {
+            let n = rng.range(1, 7);
+            let samples: Vec<ClipSample> = (0..n).map(|_| random_sample(rng, &g)).collect();
+            let cap = n + rng.range(0, 6); // arbitrary padding beyond live
+            (samples, cap)
+        },
+        |(samples, cap)| {
+            let refs: Vec<&ClipSample> = samples.iter().collect();
+            let batch = build_batch(&refs, *cap, &g);
+            let oracle = oracle_model.forward_reference(&batch, 40.0).map_err(|e| e.to_string())?;
+            for (tier, model, ws) in models.iter_mut() {
+                if model.kernel_tier() != Some(*tier) {
+                    return Err(format!("model built for {tier} reports {:?}", model.kernel_tier()));
+                }
+                model.forward_into(&batch, 40.0, ws, &mut preds).map_err(|e| e.to_string())?;
+                bits_eq("forward", *tier, &oracle, &preds)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn env_override_forces_and_loses_to_explicit_tiers() {
+    // sole env-touching test in this binary (see module docs): pins the
+    // full precedence chain config > env > detect through both
+    // `effective_kernel_tier` and `Backend::build_forward`
+    let mut cfg = PipelineConfig::default();
+    cfg.artifacts = std::env::temp_dir()
+        .join("capsim-tiers-no-artifacts")
+        .to_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(cfg.kernel_tier, KernelTier::Auto);
+
+    // CAPSIM_KERNEL_TIER=scalar forces the fallback everywhere
+    std::env::set_var("CAPSIM_KERNEL_TIER", "scalar");
+    assert_eq!(cfg.effective_kernel_tier().unwrap(), KernelTier::Scalar);
+    let p = capsim::runtime::Backend::Attention.build_forward(&cfg).unwrap();
+    assert_eq!(p.kernel_tier(), Some(KernelTier::Scalar));
+
+    // an explicit config tier ignores the env entirely
+    let auto = KernelTier::detect();
+    cfg.kernel_tier = auto;
+    assert_eq!(cfg.effective_kernel_tier().unwrap(), auto);
+    let p = capsim::runtime::Backend::Attention.build_forward(&cfg).unwrap();
+    assert_eq!(p.kernel_tier(), Some(auto));
+
+    // an unparseable env value falls back to auto-detection, not a panic
+    cfg.kernel_tier = KernelTier::Auto;
+    std::env::set_var("CAPSIM_KERNEL_TIER", "sse9");
+    assert_eq!(cfg.effective_kernel_tier().unwrap(), auto);
+
+    std::env::remove_var("CAPSIM_KERNEL_TIER");
+    assert_eq!(cfg.effective_kernel_tier().unwrap(), auto);
+}

@@ -217,6 +217,11 @@ pub struct PipelineConfig {
     /// suites produce, so eviction only engages on long-lived persistent
     /// caches.
     pub cache_max_entries: usize,
+    /// Residency of a warm-started clip-cache image
+    /// (`pipeline.cache_mmap`, default `true`): serve lookups straight
+    /// from the mmap-frozen image (zero-copy, shared across processes),
+    /// or copy entries onto the heap when `false` (`--cache-heap`).
+    pub cache_mmap: bool,
     /// Listen address of the `capsim serve` daemon (`--listen` /
     /// `serve.listen`); port `0` picks a free port.
     pub serve_listen: String,
@@ -251,6 +256,7 @@ impl Default for PipelineConfig {
             batch_depth: 0,
             cache_dir: String::new(),
             cache_max_entries: 1_000_000,
+            cache_mmap: true,
             serve_listen: "127.0.0.1:4650".to_string(),
             serve_linger_us: 2_000,
             l_min: 24,
@@ -287,6 +293,7 @@ impl PipelineConfig {
         c.cache_max_entries = t
             .int("pipeline.cache_max_entries", c.cache_max_entries as i64)
             .max(0) as usize;
+        c.cache_mmap = t.bool("pipeline.cache_mmap", c.cache_mmap);
         c.serve_listen = t.str("serve.listen", &c.serve_listen);
         c.serve_linger_us = t.int("serve.linger_us", c.serve_linger_us as i64).max(0) as u64;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
@@ -431,6 +438,7 @@ mod tests {
             batch_depth = 3
             cache_dir = "warm"
             cache_max_entries = 500
+            cache_mmap = false
             [serve]
             listen = "127.0.0.1:9999"
             linger_us = 750
@@ -456,6 +464,7 @@ mod tests {
         assert_eq!(c.cache_dir, "warm");
         assert_eq!(c.backend, Backend::Attention);
         assert_eq!(c.cache_max_entries, 500);
+        assert!(!c.cache_mmap, "cache_mmap = false forces the heap tier");
         assert_eq!(c.serve_listen, "127.0.0.1:9999");
         assert_eq!(c.serve_linger_us, 750);
         assert_eq!(c.o3.rob_entries, 128);
@@ -485,6 +494,7 @@ mod tests {
         assert!(c.cache_dir.is_empty(), "persistence off by default");
         assert_eq!(c.backend, Backend::Pjrt, "pjrt is the default backend");
         assert_eq!(c.cache_max_entries, 1_000_000, "bound far above suite sizes");
+        assert!(c.cache_mmap, "mmap residency is the default");
         assert_eq!(c.serve_listen, "127.0.0.1:4650");
         assert_eq!(c.serve_linger_us, 2_000);
     }

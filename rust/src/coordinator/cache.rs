@@ -21,11 +21,29 @@
 //! `(backend, parameters, time_scale)` combination — callers hold one
 //! cache per trained model, exactly like an inference-server result cache.
 //! The on-disk format ([`ClipCache::save`] / [`ClipCache::load`]) encodes
-//! that: a versioned header carries the model fingerprint
-//! ([`Predictor::fingerprint`](crate::runtime::Predictor::fingerprint))
-//! and the `time_scale` bits, and a load with a mismatched key (or a
-//! corrupt/truncated file) is refused so callers fall back to a cold
-//! start ([`ClipCache::load_or_cold`]).
+//! that: a checksummed header carries the model fingerprint
+//! ([`Predictor::fingerprint`](crate::runtime::Predictor::fingerprint)),
+//! the `time_scale` bits and the kernel-contract version, and a load with
+//! a mismatched key (or a corrupt/truncated file) is refused so callers
+//! fall back to a cold start ([`ClipCache::load_or_cold`]).
+//!
+//! **Two-tier residency.** [`ClipCache::save`] writes a `CPIM` image
+//! ([`crate::util::image`]): sorted fixed-stride records behind a
+//! checksummed header. [`ClipCache::load`] mmaps that image as a
+//! **frozen read-only tier** consulted before the mutable sharded tier —
+//! open-to-serving is O(1) regardless of entry count, and N processes
+//! warm-starting from one image share a single set of physical pages.
+//! Inserts always land in the mutable tier (and skip keys the frozen
+//! tier already serves); the entry bound governs each tier separately —
+//! the frozen tier is trimmed to the bound at load (key-order prefix,
+//! the same rule an oversized legacy file followed) and eviction bounds
+//! the mutable tier. The image's O(entries) data digest is deferred to
+//! the *first lookup* (keeping the open path O(1)) and checked exactly
+//! once before any frozen byte is trusted: a bad digest permanently
+//! disables the tier, so corruption degrades to misses — never a wrong
+//! prediction. The legacy `CPLC` v1 format still loads (parsed into the
+//! mutable tier) for one release so existing caches migrate on their
+//! next save; see the "Persistence formats" section of the README.
 //! The cache can be **bounded** ([`ClipCache::bounded`], wired to
 //! `pipeline.cache_max_entries` / `--cache-max-entries`): when an insert
 //! would exceed the bound, the oldest-inserted entries are evicted — on
@@ -42,20 +60,24 @@
 //! may canonicalize a shared key to a different first context.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, Once, RwLock};
 
-/// On-disk header magic ("CPLC") of a persisted clip cache.
-const FILE_MAGIC: u32 = 0x434C_5043;
-/// Bump on any incompatible layout change; old files then cold-start.
+use crate::runtime::KERNEL_CONTRACT_VERSION;
+use crate::util::image::{self, ImageSpec, ImageView};
+use crate::util::mmap::Mmap;
+
+/// Header magic ("CPLC") of the **legacy** v1 persisted clip cache,
+/// still readable for one release (see [`ClipCache::save_legacy_v1`]).
+/// Public so format-reporting tools (`capsim backends`) can recognize a
+/// not-yet-migrated cache file.
+pub const FILE_MAGIC: u32 = 0x434C_5043;
+/// The legacy format's version; anything else in a CPLC file cold-starts.
 const FILE_VERSION: u32 = 1;
-
-/// Per-process counter folded into temp-file names so concurrent
-/// [`ClipCache::save`] calls (threads in one process, or several
-/// processes via the pid component) never share a temp file.
-static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+/// Byte stride of one `(key u64, f64 bits)` record in a cache image.
+const RECORD_STRIDE: usize = 16;
 
 /// Hit/miss/eviction counters observed so far (monotone; see
 /// [`ClipCache::stats`]).
@@ -95,9 +117,168 @@ impl CacheStats {
     }
 }
 
+/// Where a cache's persisted contents live — reported by
+/// `capsim backends` and the `serve --stats` reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheSource {
+    /// No persisted image contributed (cold start, or the frozen tier
+    /// was disabled by a failed digest / `clear`).
+    Cold,
+    /// Entries were parsed into the mutable heap tier (legacy `CPLC` v1
+    /// migration, or an explicit heap load).
+    Heap,
+    /// A `CPIM` image is mmap-frozen as the read-only tier.
+    Frozen,
+}
+
+impl CacheSource {
+    /// Stable wire/report encoding (0 cold, 1 heap, 2 frozen).
+    pub fn code(self) -> u64 {
+        match self {
+            CacheSource::Cold => 0,
+            CacheSource::Heap => 1,
+            CacheSource::Frozen => 2,
+        }
+    }
+
+    /// Decode [`code`](CacheSource::code) (wire → enum); unknown codes
+    /// read as `Cold`.
+    pub fn from_code(code: u64) -> CacheSource {
+        match code {
+            1 => CacheSource::Heap,
+            2 => CacheSource::Frozen,
+            _ => CacheSource::Cold,
+        }
+    }
+
+    /// Human label used by `capsim backends` / `serve --stats`.
+    pub fn label(self) -> &'static str {
+        match self {
+            CacheSource::Cold => "cold (no persistent image)",
+            CacheSource::Heap => "heap-loaded",
+            CacheSource::Frozen => "mmap-frozen",
+        }
+    }
+}
+
+/// Frozen-tier verification states (see [`Frozen::state`]).
+const FROZEN_UNVERIFIED: u8 = 0;
+const FROZEN_LIVE: u8 = 1;
+const FROZEN_DEAD: u8 = 2;
+
+/// The read-only mmap tier: sorted fixed-stride records served straight
+/// from the mapped image, shared across every process that opened it.
+struct Frozen {
+    map: Mmap,
+    /// Absolute byte offset of the records section in the image.
+    records_off: usize,
+    /// Records the image holds (the digest covers all of them).
+    n_total: usize,
+    /// Records lookups may see — `min(n_total, bound)`, a key-order
+    /// prefix, matching the trim rule loads always applied.
+    n_visible: usize,
+    /// Payload section position (empty for cache images, but the digest
+    /// definition covers it).
+    payload_off: usize,
+    payload_len: usize,
+    data_digest: u64,
+    /// Runs the one-time O(entries) digest check on first use, so the
+    /// *open* path stays O(1) while no frozen byte is ever trusted
+    /// unverified.
+    verify: Once,
+    /// `FROZEN_UNVERIFIED` until the digest check runs; then
+    /// `FROZEN_LIVE` or `FROZEN_DEAD`. [`ClipCache::clear`] also stores
+    /// `FROZEN_DEAD`, which wins over a (later or racing) verification.
+    state: AtomicU8,
+}
+
+impl Frozen {
+    fn ensure_verified(&self) {
+        self.verify.call_once(|| {
+            let b = self.map.bytes();
+            let records = &b[self.records_off..self.records_off + self.n_total * RECORD_STRIDE];
+            let payload = &b[self.payload_off..self.payload_off + self.payload_len];
+            let ok = image::digest64(&[records, payload]) == self.data_digest;
+            if !ok {
+                eprintln!(
+                    "warning: clip cache image failed its data digest; \
+                     disabling the frozen tier (cold start)"
+                );
+            }
+            let next = if ok { FROZEN_LIVE } else { FROZEN_DEAD };
+            // compare_exchange so a concurrent kill() is never overridden
+            let _ = self.state.compare_exchange(
+                FROZEN_UNVERIFIED,
+                next,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
+        });
+    }
+
+    fn live(&self) -> bool {
+        self.ensure_verified();
+        self.state.load(Ordering::Acquire) == FROZEN_LIVE
+    }
+
+    /// Permanently disable the tier (warm-start invalidation).
+    fn kill(&self) {
+        self.state.store(FROZEN_DEAD, Ordering::Release);
+    }
+
+    fn dead(&self) -> bool {
+        self.state.load(Ordering::Acquire) == FROZEN_DEAD
+    }
+
+    /// Binary-search the sorted record prefix, straight off the mapping.
+    fn lookup(&self, key: u64) -> Option<f64> {
+        if !self.live() {
+            return None;
+        }
+        let b = self.map.bytes();
+        let (mut lo, mut hi) = (0usize, self.n_visible);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let off = self.records_off + mid * RECORD_STRIDE;
+            let k = u64::from_le_bytes(b[off..off + 8].try_into().unwrap());
+            match k.cmp(&key) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => {
+                    let v = u64::from_le_bytes(b[off + 8..off + 16].try_into().unwrap());
+                    return Some(f64::from_bits(v));
+                }
+            }
+        }
+        None
+    }
+
+    /// All visible records (empty when the tier is dead).
+    fn visible_entries(&self) -> Vec<(u64, f64)> {
+        if !self.live() {
+            return Vec::new();
+        }
+        let b = self.map.bytes();
+        (0..self.n_visible)
+            .map(|i| {
+                let off = self.records_off + i * RECORD_STRIDE;
+                (
+                    u64::from_le_bytes(b[off..off + 8].try_into().unwrap()),
+                    f64::from_bits(u64::from_le_bytes(b[off + 8..off + 16].try_into().unwrap())),
+                )
+            })
+            .collect()
+    }
+}
+
 /// Sharded concurrent `fast_clip_key -> predicted cycles` map, with an
-/// optional entry bound (oldest-inserted eviction).
+/// optional entry bound (oldest-inserted eviction) and an optional
+/// frozen read-only mmap tier (see the module docs).
 pub struct ClipCache {
+    /// Read-only tier consulted before the shards; never evicts.
+    frozen: Option<Frozen>,
+    /// Where the persisted contents came from (raw; see [`ClipCache::source`]).
+    loaded_from: CacheSource,
     shards: Vec<RwLock<HashMap<u64, f64>>>,
     /// Maximum resident entries; `0` = unbounded.
     max_entries: usize,
@@ -143,6 +324,8 @@ impl ClipCache {
     pub fn with_shards(n: usize) -> ClipCache {
         let n = n.max(1).next_power_of_two();
         ClipCache {
+            frozen: None,
+            loaded_from: CacheSource::Cold,
             shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
             max_entries: 0,
             count: AtomicUsize::new(0),
@@ -185,13 +368,27 @@ impl ClipCache {
     }
 
     /// Read-only membership probe (no stats side effects) — safe to call
-    /// from the parallel scan stage.
+    /// from the parallel scan stage. Consults the frozen tier first;
+    /// frozen entries can never be evicted, so their `contains`
+    /// observations are stable by construction.
     pub fn contains(&self, key: u64) -> bool {
+        if let Some(f) = &self.frozen {
+            if f.lookup(key).is_some() {
+                return true;
+            }
+        }
         self.shard(key).read().unwrap().contains_key(&key)
     }
 
-    /// Look up a predicted time; counts a hit or a miss.
+    /// Look up a predicted time; counts a hit or a miss. The frozen
+    /// mmap tier answers first (lock-free), then the mutable shards.
     pub fn get(&self, key: u64) -> Option<f64> {
+        if let Some(f) = &self.frozen {
+            if let Some(v) = f.lookup(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(v);
+            }
+        }
         let v = self.shard(key).read().unwrap().get(&key).copied();
         match v {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
@@ -203,7 +400,15 @@ impl ClipCache {
     /// Insert (or overwrite) a predicted time. A fresh key joins the
     /// back of the eviction queue; overwrites keep the key's original
     /// insertion age. May evict the oldest entries when a bound is set.
+    /// Keys the frozen tier already serves are skipped: by the
+    /// determinism contract the value is identical, and a mutable
+    /// duplicate would only double-count and churn the eviction queue.
     pub fn insert(&self, key: u64, time: f64) {
+        if let Some(f) = &self.frozen {
+            if f.lookup(key).is_some() {
+                return;
+            }
+        }
         let fresh = self.shard(key).write().unwrap().insert(key, time).is_none();
         if fresh {
             self.order.lock().unwrap().push_back(key);
@@ -234,13 +439,42 @@ impl ClipCache {
         }
     }
 
-    /// Number of cached unique clips.
+    /// Number of cached unique clips across both tiers. (The mutable
+    /// tier never duplicates a frozen key — `insert` skips those.)
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.frozen_len() + self.shards.iter().map(|s| s.read().unwrap().len()).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Entries served by the frozen mmap tier (0 when absent or
+    /// disabled). Reported before the lazy digest check runs — the
+    /// header count — and drops to 0 if that check later fails.
+    pub fn frozen_len(&self) -> usize {
+        match &self.frozen {
+            Some(f) if !f.dead() => f.n_visible,
+            _ => 0,
+        }
+    }
+
+    /// Where the persisted contents live *now*: a frozen tier that was
+    /// disabled (failed digest, or [`clear`](ClipCache::clear)) reports
+    /// [`CacheSource::Cold`] again.
+    pub fn source(&self) -> CacheSource {
+        match self.loaded_from {
+            CacheSource::Frozen if self.frozen.as_ref().is_none_or(|f| f.dead()) => {
+                CacheSource::Cold
+            }
+            s => s,
+        }
+    }
+
+    /// Whether the frozen tier's bytes are a real shared mapping (vs the
+    /// portable heap-read fallback inside [`Mmap`]). Reporting only.
+    pub fn frozen_mapped(&self) -> bool {
+        self.frozen.as_ref().is_some_and(|f| f.map.is_mapped())
     }
 
     /// Hit/miss/eviction counters accumulated so far.
@@ -254,8 +488,12 @@ impl ClipCache {
 
     /// Drop all entries **and** reset the counters: after a warm-start
     /// invalidation the cache reports a fresh hit rate instead of one
-    /// skewed by lookups against the discarded contents.
+    /// skewed by lookups against the discarded contents. The frozen
+    /// tier is permanently disabled (the mapping itself is read-only).
     pub fn clear(&self) {
+        if let Some(f) = &self.frozen {
+            f.kill();
+        }
         for s in &self.shards {
             s.write().unwrap().clear();
         }
@@ -266,10 +504,19 @@ impl ClipCache {
         self.evictions.store(0, Ordering::Relaxed);
     }
 
-    /// Snapshot of all entries, sorted by key — deterministic bytes for
-    /// [`save`](ClipCache::save) regardless of insertion or shard order.
+    /// Snapshot of all entries across both tiers, sorted by key —
+    /// deterministic bytes for [`save`](ClipCache::save) regardless of
+    /// insertion or shard order. Should a key ever exist in both tiers,
+    /// the mutable value wins (it is the newer write).
     pub fn entries(&self) -> Vec<(u64, f64)> {
         let mut out: Vec<(u64, f64)> = Vec::with_capacity(self.len());
+        if let Some(f) = &self.frozen {
+            for (k, v) in f.visible_entries() {
+                if !self.shard(k).read().unwrap().contains_key(&k) {
+                    out.push((k, v));
+                }
+            }
+        }
         for s in &self.shards {
             out.extend(s.read().unwrap().iter().map(|(&k, &v)| (k, v)));
         }
@@ -277,11 +524,12 @@ impl ClipCache {
         out
     }
 
-    /// Persist the cache for cross-process warm starts. The header keys
-    /// the file to one `(model fingerprint, time_scale)` combination —
-    /// the same contract as the in-memory cache. The size bound is
-    /// enforced on the **snapshot**, so a bounded cache never persists
-    /// more than `max_entries` clips even when inserts race the save.
+    /// Persist the cache (both tiers merged) for cross-process warm
+    /// starts, as a `CPIM` image: checksummed header keyed to one
+    /// `(model fingerprint, time_scale, kernel contract)` combination,
+    /// sorted 16-byte records, data digest. The size bound is enforced
+    /// on the **snapshot**, so a bounded cache never persists more than
+    /// `max_entries` clips even when inserts race the save.
     /// Writes a uniquely-named sibling temp file (pid + sequence — a
     /// fixed name would let two concurrent savers interleave writes and
     /// rename a torn image over the good cache), fsyncs it, and renames
@@ -297,15 +545,45 @@ impl ClipCache {
         if self.max_entries > 0 && entries.len() > self.max_entries {
             entries.truncate(self.max_entries);
         }
-        // `with_extension("tmp")` would *replace* the final extension, so
-        // `clips.cache` and `clips.other` collide on one `clips.tmp`;
-        // append to the full file name instead.
-        let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
-        let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
-        tmp_name.push(format!(".{}.{}.tmp", std::process::id(), seq));
-        let tmp = path.with_file_name(tmp_name);
-        let write = (|| -> std::io::Result<()> {
-            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        let mut records = Vec::with_capacity(entries.len() * RECORD_STRIDE);
+        for &(k, v) in &entries {
+            records.extend_from_slice(&k.to_le_bytes());
+            records.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        image::persist_atomic(path, |w| {
+            image::write_image(
+                w,
+                &ImageSpec {
+                    kind: image::KIND_CLIP_CACHE,
+                    fingerprint,
+                    kernel_contract: KERNEL_CONTRACT_VERSION,
+                    time_scale_bits: time_scale.to_bits(),
+                    meta: &[],
+                    record_stride: RECORD_STRIDE as u32,
+                    records: &records,
+                    payload: &[],
+                },
+            )
+        })?;
+        Ok(entries.len())
+    }
+
+    /// The **legacy v1** (`CPLC`) writer, retained only so tests and the
+    /// persist bench can prove the one-time migration path: v1 files
+    /// still load (into the heap tier) for one release, after which
+    /// every save re-emits the image format above.
+    pub fn save_legacy_v1(
+        &self,
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+    ) -> std::io::Result<usize> {
+        self.enforce_bound();
+        let mut entries = self.entries();
+        if self.max_entries > 0 && entries.len() > self.max_entries {
+            entries.truncate(self.max_entries);
+        }
+        image::persist_atomic(path, |w| {
             w.write_all(&FILE_MAGIC.to_le_bytes())?;
             w.write_all(&FILE_VERSION.to_le_bytes())?;
             w.write_all(&fingerprint.to_le_bytes())?;
@@ -315,23 +593,17 @@ impl ClipCache {
                 w.write_all(&k.to_le_bytes())?;
                 w.write_all(&v.to_bits().to_le_bytes())?;
             }
-            // fsync before rename: without it a crash shortly after the
-            // rename can leave a file whose *name* is durable but whose
-            // bytes are not — exactly the torn cache the temp-file dance
-            // is meant to rule out.
-            w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
-            std::fs::rename(&tmp, path)
-        })();
-        if write.is_err() {
-            let _ = std::fs::remove_file(&tmp);
-        }
-        write?;
+            Ok(())
+        })?;
         Ok(entries.len())
     }
 
-    /// Load a persisted cache, verifying the version and the
-    /// `(fingerprint, time_scale)` key. Corrupt, truncated, or
-    /// mismatched files return `Err` (callers cold-start; see
+    /// Load a persisted cache, verifying the checksummed header and the
+    /// `(fingerprint, time_scale, kernel contract)` key. A `CPIM` image
+    /// becomes the frozen mmap tier (O(1), zero-copy); a legacy `CPLC`
+    /// v1 file is parsed into the mutable tier (one-time migration).
+    /// Corrupt, truncated, or mismatched files return `Err` with the
+    /// offending path in the message (callers cold-start; see
     /// [`load_or_cold`](ClipCache::load_or_cold)). The loaded cache is
     /// unbounded; use [`load_bounded`](ClipCache::load_bounded) to apply
     /// an entry bound.
@@ -341,51 +613,171 @@ impl ClipCache {
 
     /// [`load`](ClipCache::load) into a cache bounded to `max_entries`
     /// (`0` = unbounded). A file holding more than `max_entries` clips
-    /// is trimmed during the load (file order, which is key order — the
-    /// on-disk format does not record insertion age).
+    /// is trimmed during the load: the frozen tier exposes a key-order
+    /// prefix; a legacy file replays its inserts under the bound.
     pub fn load_bounded(
         path: &Path,
         fingerprint: u64,
         time_scale: f32,
         max_entries: usize,
     ) -> std::io::Result<ClipCache> {
-        fn bad(msg: &str) -> std::io::Error {
-            std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
-        }
-        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut b4 = [0u8; 4];
-        let mut b8 = [0u8; 8];
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != FILE_MAGIC {
-            return Err(bad("not a clip-cache file"));
-        }
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != FILE_VERSION {
+        Self::load_image(path, fingerprint, time_scale, max_entries, true)
+    }
+
+    /// [`load_bounded`](ClipCache::load_bounded) forced onto the heap:
+    /// image records are digest-verified eagerly and copied into the
+    /// mutable tier instead of being mmap-frozen. This is the
+    /// `cache_mmap = false` escape hatch and the oracle the equivalence
+    /// tests compare the frozen tier against.
+    pub fn load_heap_bounded(
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+    ) -> std::io::Result<ClipCache> {
+        Self::load_image(path, fingerprint, time_scale, max_entries, false)
+    }
+
+    fn load_image(
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+        frozen_tier: bool,
+    ) -> std::io::Result<ClipCache> {
+        let bad = |msg: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: {msg}", path.display()),
+            )
+        };
+        let map = Mmap::open(path).map_err(|e| {
+            std::io::Error::new(e.kind(), format!("{}: {e}", path.display()))
+        })?;
+        let parsed = {
+            let bytes = map.bytes();
+            if bytes.len() >= 8
+                && u32::from_le_bytes(bytes[0..4].try_into().unwrap()) == FILE_MAGIC
+            {
+                return Self::load_legacy_v1(path, bytes, fingerprint, time_scale, max_entries);
+            }
+            let view = ImageView::parse(bytes).map_err(|m| bad(&m))?;
+            if view.kind != image::KIND_CLIP_CACHE {
+                return Err(bad("image is not a clip cache"));
+            }
+            if view.record_stride as usize != RECORD_STRIDE {
+                return Err(bad("unexpected clip-cache record stride"));
+            }
+            if view.fingerprint != fingerprint {
+                return Err(bad("model fingerprint mismatch"));
+            }
+            if view.time_scale_bits != time_scale.to_bits() {
+                return Err(bad("time_scale mismatch"));
+            }
+            if view.kernel_contract != KERNEL_CONTRACT_VERSION {
+                return Err(bad("kernel contract version mismatch"));
+            }
+            let n_total = view.n_records as usize;
+            let n_visible = if max_entries > 0 { n_total.min(max_entries) } else { n_total };
+            if !frozen_tier {
+                // heap mode: pay the O(entries) digest + copy up front
+                if !view.verify_data() {
+                    return Err(bad("data digest mismatch"));
+                }
+                let mut cache = ClipCache::bounded(max_entries);
+                cache.loaded_from = CacheSource::Heap;
+                for i in 0..n_visible {
+                    let r = view.record(i);
+                    cache.insert(
+                        u64::from_le_bytes(r[0..8].try_into().unwrap()),
+                        f64::from_bits(u64::from_le_bytes(r[8..16].try_into().unwrap())),
+                    );
+                }
+                cache.reset_counters();
+                return Ok(cache);
+            }
+            let base = bytes.as_ptr() as usize;
+            (
+                view.records.as_ptr() as usize - base,
+                n_total,
+                n_visible,
+                view.payload.as_ptr() as usize - base,
+                view.payload.len(),
+                view.data_digest,
+            )
+        };
+        let (records_off, n_total, n_visible, payload_off, payload_len, data_digest) = parsed;
+        let mut cache = ClipCache::bounded(max_entries);
+        cache.loaded_from = CacheSource::Frozen;
+        cache.frozen = Some(Frozen {
+            map,
+            records_off,
+            n_total,
+            n_visible,
+            payload_off,
+            payload_len,
+            data_digest,
+            verify: Once::new(),
+            state: AtomicU8::new(FROZEN_UNVERIFIED),
+        });
+        Ok(cache)
+    }
+
+    /// Parse the legacy `CPLC` v1 byte layout into the mutable tier.
+    /// This path exists for exactly one release: the next save re-emits
+    /// the image format, completing the migration.
+    fn load_legacy_v1(
+        path: &Path,
+        bytes: &[u8],
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+    ) -> std::io::Result<ClipCache> {
+        let bad = |msg: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: {msg}", path.display()),
+            )
+        };
+        let u32_at = |o: usize| {
+            bytes.get(o..o + 4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        };
+        let u64_at = |o: usize| {
+            bytes.get(o..o + 8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        };
+        if u32_at(4) != Some(FILE_VERSION) {
             return Err(bad("unsupported clip-cache version"));
         }
-        r.read_exact(&mut b8)?;
-        if u64::from_le_bytes(b8) != fingerprint {
+        if u64_at(8) != Some(fingerprint) {
             return Err(bad("model fingerprint mismatch"));
         }
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != time_scale.to_bits() {
+        if u32_at(16) != Some(time_scale.to_bits()) {
             return Err(bad("time_scale mismatch"));
         }
-        r.read_exact(&mut b8)?;
-        let n = u64::from_le_bytes(b8) as usize;
-        let cache = ClipCache::bounded(max_entries);
-        for _ in 0..n {
-            r.read_exact(&mut b8)?;
-            let k = u64::from_le_bytes(b8);
-            r.read_exact(&mut b8)?;
-            cache.insert(k, f64::from_bits(u64::from_le_bytes(b8)));
+        let n = u64_at(20).ok_or_else(|| bad("truncated clip-cache file"))? as usize;
+        let body = &bytes[28.min(bytes.len())..];
+        if n.checked_mul(RECORD_STRIDE).is_none_or(|need| body.len() < need) {
+            return Err(bad("truncated clip-cache file"));
         }
-        // loading is plumbing, not cache traffic: start the counters
-        // fresh (evictions included) so stats describe the run ahead
-        cache.hits.store(0, Ordering::Relaxed);
-        cache.misses.store(0, Ordering::Relaxed);
-        cache.evictions.store(0, Ordering::Relaxed);
+        let mut cache = ClipCache::bounded(max_entries);
+        cache.loaded_from = CacheSource::Heap;
+        for i in 0..n {
+            let off = i * RECORD_STRIDE;
+            cache.insert(
+                u64::from_le_bytes(body[off..off + 8].try_into().unwrap()),
+                f64::from_bits(u64::from_le_bytes(body[off + 8..off + 16].try_into().unwrap())),
+            );
+        }
+        cache.reset_counters();
         Ok(cache)
+    }
+
+    /// Loading is plumbing, not cache traffic: start the counters fresh
+    /// (evictions included) so stats describe the run ahead.
+    fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
     }
 
     /// [`load`](ClipCache::load) with a cold-start fallback: a missing,
@@ -397,15 +789,41 @@ impl ClipCache {
 
     /// [`load_bounded`](ClipCache::load_bounded) with the same
     /// cold-start fallback; the fallback cache carries the bound too.
+    /// When a file exists but is unusable, the (path-carrying) reason is
+    /// logged to stderr so the cold start is actionable instead of
+    /// silent; a merely missing file stays quiet.
     pub fn load_or_cold_bounded(
         path: &Path,
         fingerprint: u64,
         time_scale: f32,
         max_entries: usize,
     ) -> (ClipCache, bool) {
-        match Self::load_bounded(path, fingerprint, time_scale, max_entries) {
+        Self::load_or_cold_bounded_with(path, fingerprint, time_scale, max_entries, true)
+    }
+
+    /// [`load_or_cold_bounded`](ClipCache::load_or_cold_bounded) with an
+    /// explicit residency choice: `mmap = false` forces the heap tier
+    /// (the `cache_mmap = false` / `--cache-heap` escape hatch).
+    pub fn load_or_cold_bounded_with(
+        path: &Path,
+        fingerprint: u64,
+        time_scale: f32,
+        max_entries: usize,
+        mmap: bool,
+    ) -> (ClipCache, bool) {
+        let loaded = if mmap {
+            Self::load_bounded(path, fingerprint, time_scale, max_entries)
+        } else {
+            Self::load_heap_bounded(path, fingerprint, time_scale, max_entries)
+        };
+        match loaded {
             Ok(c) => (c, true),
-            Err(_) => (ClipCache::bounded(max_entries), false),
+            Err(e) => {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    eprintln!("warning: cold-starting clip cache: {e}");
+                }
+                (ClipCache::bounded(max_entries), false)
+            }
         }
     }
 }
@@ -743,5 +1161,153 @@ mod tests {
         assert!((st.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(st.lookups(), 2);
         assert_eq!(st.hit_line(), "50.0% (1 hits / 2 lookups)");
+    }
+
+    #[test]
+    fn frozen_and_heap_loads_serve_bit_identical_values() {
+        let dir = std::env::temp_dir().join("capsim_cache_frozen_eq");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        for k in 0..500u64 {
+            c.insert(k.wrapping_mul(0x9E37_79B9_7F4A_7C15), k as f64 * 0.125 - 3.0);
+        }
+        c.save(&path, 9, 40.0).unwrap();
+        let frozen = ClipCache::load(&path, 9, 40.0).unwrap();
+        let heap = ClipCache::load_heap_bounded(&path, 9, 40.0, 0).unwrap();
+        assert_eq!(frozen.source(), CacheSource::Frozen);
+        assert_eq!(heap.source(), CacheSource::Heap);
+        assert_eq!(frozen.frozen_len(), 500);
+        assert_eq!(heap.frozen_len(), 0);
+        for (k, v) in c.entries() {
+            assert_eq!(frozen.get(k).map(f64::to_bits), Some(v.to_bits()));
+            assert_eq!(heap.get(k).map(f64::to_bits), Some(v.to_bits()));
+        }
+        assert_eq!(frozen.entries(), heap.entries());
+        assert_eq!(frozen.get(1), None, "absent keys miss in the frozen tier");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn insert_skips_frozen_keys_and_merged_save_roundtrips() {
+        let dir = std::env::temp_dir().join("capsim_cache_frozen_merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        c.insert(1, 1.0);
+        c.insert(2, 2.0);
+        c.save(&path, 5, 2.0).unwrap();
+        let warm = ClipCache::load(&path, 5, 2.0).unwrap();
+        // the determinism contract says a frozen key's value is already
+        // canonical; a racing re-insert must not shadow it
+        warm.insert(1, 99.0);
+        assert_eq!(warm.get(1), Some(1.0));
+        warm.insert(50, 5.5);
+        assert_eq!(warm.get(50), Some(5.5));
+        assert_eq!(warm.len(), 3);
+        assert_eq!(warm.entries(), vec![(1, 1.0), (2, 2.0), (50, 5.5)]);
+        // a merged save re-freezes both tiers' entries
+        let merged = dir.join("merged.bin");
+        assert_eq!(warm.save(&merged, 5, 2.0).unwrap(), 3);
+        let reloaded = ClipCache::load(&merged, 5, 2.0).unwrap();
+        assert_eq!(reloaded.source(), CacheSource::Frozen);
+        assert_eq!(reloaded.entries(), warm.entries());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&merged);
+    }
+
+    #[test]
+    fn bounded_image_load_exposes_a_key_order_prefix() {
+        let dir = std::env::temp_dir().join("capsim_cache_frozen_bound");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        for k in 0..20u64 {
+            c.insert(k, k as f64);
+        }
+        c.save(&path, 1, 2.0).unwrap();
+        let small = ClipCache::load_bounded(&path, 1, 2.0, 5).unwrap();
+        assert_eq!(small.frozen_len(), 5);
+        assert_eq!(small.len(), 5);
+        assert_eq!(small.entries(), (0..5).map(|k| (k as u64, k as f64)).collect::<Vec<_>>());
+        assert_eq!(small.get(7), None, "beyond the bound is invisible");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clear_kills_the_frozen_tier() {
+        let dir = std::env::temp_dir().join("capsim_cache_frozen_clear");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        c.insert(3, 3.0);
+        c.save(&path, 2, 4.0).unwrap();
+        let warm = ClipCache::load(&path, 2, 4.0).unwrap();
+        assert_eq!(warm.source(), CacheSource::Frozen);
+        warm.clear();
+        assert!(warm.is_empty());
+        assert_eq!(warm.frozen_len(), 0);
+        assert_eq!(warm.source(), CacheSource::Cold);
+        assert_eq!(warm.get(3), None);
+        // the dead tier no longer shadows inserts
+        warm.insert(3, 30.0);
+        assert_eq!(warm.get(3), Some(30.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A bit flip in the records section passes the O(1) header check
+    /// (by design — the open path is size-independent) but the one-time
+    /// digest check on first use must disable the tier: every lookup
+    /// misses, nothing ever serves a wrong value.
+    #[test]
+    fn corrupt_records_degrade_to_misses_never_wrong_values() {
+        let dir = std::env::temp_dir().join("capsim_cache_frozen_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        for k in 0..100u64 {
+            c.insert(k, k as f64 + 0.5);
+        }
+        c.save(&path, 8, 16.0).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let records_off = u64::from_le_bytes(bytes[48..56].try_into().unwrap()) as usize;
+        bytes[records_off + 8] ^= 0x01; // flip one value bit of record 0
+        std::fs::write(&path, &bytes).unwrap();
+        let warm = ClipCache::load(&path, 8, 16.0).unwrap();
+        assert_eq!(warm.source(), CacheSource::Frozen, "open is O(1), digest is deferred");
+        for k in 0..100u64 {
+            assert_eq!(warm.get(k), None, "a corrupt tier must miss, not serve garbage");
+        }
+        assert_eq!(warm.source(), CacheSource::Cold);
+        assert_eq!(warm.frozen_len(), 0);
+        assert!(warm.entries().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_v1_cache_loads_once_then_migrates_to_the_image_format() {
+        let dir = std::env::temp_dir().join("capsim_cache_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("clip_cache.bin");
+        let c = ClipCache::new();
+        for k in 0..50u64 {
+            c.insert(k * 3, k as f64 * 0.5);
+        }
+        c.save_legacy_v1(&path, 3, 7.5).unwrap();
+        let loaded = ClipCache::load(&path, 3, 7.5).unwrap();
+        assert_eq!(loaded.source(), CacheSource::Heap);
+        assert!(!loaded.frozen_mapped());
+        assert_eq!(loaded.frozen_len(), 0);
+        assert_eq!(loaded.entries(), c.entries());
+        // the identity key still guards the legacy format
+        assert!(ClipCache::load(&path, 4, 7.5).is_err(), "fingerprint mismatch");
+        assert!(ClipCache::load(&path, 3, 8.5).is_err(), "time_scale mismatch");
+        // the next save re-emits the image format, completing migration
+        loaded.save(&path, 3, 7.5).unwrap();
+        assert_eq!(image::peek_format(&path).unwrap(), (image::IMAGE_MAGIC, image::IMAGE_VERSION));
+        let migrated = ClipCache::load(&path, 3, 7.5).unwrap();
+        assert_eq!(migrated.source(), CacheSource::Frozen);
+        assert_eq!(migrated.entries(), c.entries());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -30,7 +30,7 @@ pub mod modes;
 pub mod pool;
 pub mod stream;
 
-pub use cache::{CacheStats, ClipCache};
+pub use cache::{CacheSource, CacheStats, ClipCache};
 pub use engine::{capsim_suite, gem5_suite, SuiteBatching, SuiteRun};
 pub use golden::{build_bench_dataset, build_dataset, BenchProfile};
 pub use modes::{capsim_mode, gem5_mode, CapsimRun, Gem5Run};

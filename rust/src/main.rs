@@ -90,6 +90,9 @@ fn load_config(flags: &HashMap<String, String>) -> Result<PipelineConfig> {
         // 0 (or negative) disables the bound
         cfg.cache_max_entries = n.max(0) as usize;
     }
+    if flags.contains_key("cache-heap") {
+        cfg.cache_mmap = false;
+    }
     // backend selection: --backend is the registry flag; --native survives
     // as a deprecating alias (and loses to an explicit --backend)
     if let Some(name) = flags.get("backend") {
@@ -144,6 +147,8 @@ fn help() {
                 model fingerprint + time_scale; mismatches cold-start)\n\
                 --cache-max-entries N (bound the clip cache; oldest-inserted\n\
                 entries are evicted; 0 = unbounded)\n\
+                --cache-heap (copy a warm-start image onto the heap instead\n\
+                of serving from the mmap-frozen view; pipeline.cache_mmap)\n\
                 --backend B (pjrt | native | attention; pjrt needs\n\
                 `make artifacts`, native/attention are dependency-free —\n\
                 attention runs the pure-Rust model)\n\
@@ -404,14 +409,19 @@ fn compare_cmd(flags: &HashMap<String, String>) -> Result<()> {
     };
     let cache = match &cache_file {
         Some(path) => {
-            let (c, warm) = ClipCache::load_or_cold_bounded(
+            let (c, warm) = ClipCache::load_or_cold_bounded_with(
                 path,
                 model.fingerprint(),
                 time_scale,
                 cfg.cache_max_entries,
+                cfg.cache_mmap,
             );
             if warm {
-                println!("warm-started clip cache from {path:?} ({} clips)", c.len());
+                println!(
+                    "warm-started clip cache from {path:?} ({} clips, {})",
+                    c.len(),
+                    c.source().label()
+                );
             } else {
                 println!("no usable clip cache at {path:?} (cold start)");
             }
@@ -489,6 +499,7 @@ fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<S
             Some(Path::new(&cfg.cache_dir).join("clip_cache.bin"))
         },
         cache_max_entries: cfg.cache_max_entries,
+        cache_mmap: cfg.cache_mmap,
     };
     if let Some(v) = flags.get("linger-us") {
         opts.linger_us = v
@@ -508,9 +519,13 @@ fn print_stats(stats: &capsim::serve::StatsReply) {
         "requests {}  rejected {}  batches {}  cross-request batches {}  mean fill {:.2}",
         stats.requests, stats.rejected, stats.batches, stats.cross_batches, stats.mean_fill()
     );
+    println!("predicted {} clips through the model", stats.predicted_clips);
     println!(
-        "cache: {} clips resident, hit rate {:.1}% ({} hits / {} lookups), {} evictions",
+        "cache: {} clips resident ({}, {} mmap-frozen), hit rate {:.1}% \
+         ({} hits / {} lookups), {} evictions",
         stats.cache_len,
+        capsim::coordinator::CacheSource::from_code(stats.cache_source).label(),
+        stats.cache_frozen_len,
         100.0 * stats.hit_rate(),
         stats.cache_hits,
         stats.cache_hits + stats.cache_misses,
@@ -682,6 +697,43 @@ fn backends_cmd(flags: &HashMap<String, String>) -> Result<()> {
             "dependency-free"
         };
         println!("  {:<10} {needs}{mark}", b.name());
+    }
+
+    use capsim::util::image;
+    println!("persistence:");
+    println!(
+        "  image container: CPIM v{} (clip cache + attention weights; \
+         zero-copy mmap warm start)",
+        image::IMAGE_VERSION
+    );
+    println!("  legacy formats: CPLC v1 cache, CAWB v1 weights (read-only migration window)");
+    println!(
+        "  mmap: {}",
+        if cfg!(unix) {
+            "available (read-only MAP_SHARED, shared across processes)"
+        } else {
+            "unavailable on this target (8-byte-aligned heap fallback)"
+        }
+    );
+    if !cfg.cache_dir.is_empty() {
+        let path = Path::new(&cfg.cache_dir).join("clip_cache.bin");
+        match image::peek_format(&path) {
+            Ok((m, v)) if m == image::IMAGE_MAGIC => {
+                println!("  cache file {path:?}: CPIM v{v} image (mmap-frozen on load)");
+            }
+            Ok((m, v)) if m == capsim::coordinator::cache::FILE_MAGIC => {
+                println!("  cache file {path:?}: legacy CPLC v{v} (migrates on next save)");
+            }
+            Ok(_) => println!("  cache file {path:?}: unrecognized format (would cold-start)"),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                println!("  cache file {path:?}: absent (cold start)");
+            }
+            Err(e) => println!("  cache file {path:?}: unreadable ({e})"),
+        }
+        println!(
+            "  cache residency: {}",
+            if cfg.cache_mmap { "mmap-frozen tier (default)" } else { "heap copy (cache_mmap = false)" }
+        );
     }
     Ok(())
 }

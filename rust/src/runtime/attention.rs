@@ -56,11 +56,13 @@
 //! [`Weights`]; the packed layout is derived state, so the on-disk
 //! format and the cache identity are unchanged by the kernel layout.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::util::image::{self, ImageSpec, ImageView};
+use crate::util::mmap::{self, Mmap};
 use crate::util::Rng;
 
 use super::manifest::ModelGeometry;
@@ -73,12 +75,18 @@ use super::tensor::{
 use super::workspace::Workspace;
 use super::Predictor;
 
-/// On-disk magic ("CAWB") of a persisted weights file.
+/// Magic ("CAWB") of the **legacy** v1 weights file, still readable for
+/// one release (saves now emit the `CPIM` image format; see
+/// [`AttentionPredictor::save`]).
 const WEIGHTS_MAGIC: u32 = 0x4257_4143;
-/// Bump on any architecture or layout change; old files are refused.
+/// Architecture/layout version, mixed into fingerprints; the legacy
+/// reader refuses any other value in a CAWB file.
 const WEIGHTS_VERSION: u32 = 1;
 /// Guard against absurd allocations from corrupt headers.
 const MAX_WEIGHT_COUNT: u64 = 1 << 24;
+/// Byte stride of one `(tensor index, payload offset, f32 count)` record
+/// in a weights image.
+const WEIGHTS_RECORD_STRIDE: usize = 24;
 
 /// Attention heads (embed_dim must divide evenly).
 pub const DEFAULT_HEADS: usize = 4;
@@ -287,6 +295,128 @@ fn fill_f32(r: &mut impl Read, t: &mut [f32]) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Decoded weights-file header, shared by the legacy and image readers
+/// so the shape and bound validation exists exactly once.
+struct WeightsHead {
+    geometry: ModelGeometry,
+    heads: usize,
+    layers: usize,
+    ffn_mult: usize,
+    seed: u64,
+    count: u64,
+}
+
+impl WeightsHead {
+    /// Bound every dimension before doing arithmetic on it — a corrupt
+    /// header can neither overflow the expected-count product nor
+    /// provoke a huge allocation — then check the advertised total
+    /// against the shape it implies.
+    fn validate(&self, path: &Path) -> Result<()> {
+        let g = &self.geometry;
+        let arch_ok = g.embed_dim > 0
+            && self.heads > 0
+            && g.embed_dim % self.heads == 0
+            && self.layers > 0
+            && self.ffn_mult > 0;
+        if !arch_ok {
+            return Err(anyhow!("{path:?}: inconsistent architecture header"));
+        }
+        let dims_ok = g.vocab_size <= 1 << 20
+            && g.embed_dim <= 1 << 12
+            && g.l_token <= 1 << 12
+            && g.l_clip <= 1 << 12
+            && g.m_rows <= 1 << 16
+            && g.train_batch <= 1 << 12
+            && self.layers <= 64
+            && self.ffn_mult <= 16
+            && g.fwd_batch_sizes.iter().all(|&b| b > 0 && b <= 1 << 12);
+        if !dims_ok {
+            return Err(anyhow!("{path:?}: implausible geometry header"));
+        }
+        // with the bounds above, every product fits comfortably in u64
+        // and the total is capped by MAX_WEIGHT_COUNT
+        let d = g.embed_dim as u64;
+        let f = self.ffn_mult as u64 * d;
+        let per_layer = 4 * d * d + 2 * d + d * f + f + f * d + d + 2 * d;
+        let expected = g.vocab_size as u64 * d
+            + g.l_clip as u64 * d
+            + self.layers as u64 * per_layer
+            + (d * d + d)
+            + (2 * d * d + d + d + 1);
+        if self.count != expected || self.count > MAX_WEIGHT_COUNT {
+            return Err(anyhow!(
+                "{path:?}: weight count {} does not match header shape ({expected})",
+                self.count
+            ));
+        }
+        Ok(())
+    }
+
+    /// A zeroed weights skeleton with this header's shape, to be filled
+    /// in canonical tensor order. Call [`WeightsHead::validate`] first.
+    fn skeleton(&self) -> Weights {
+        let d = self.geometry.embed_dim;
+        let f = self.ffn_mult * d;
+        let layer = || EncoderLayer {
+            wq: vec![0.0; d * d],
+            wk: vec![0.0; d * d],
+            wv: vec![0.0; d * d],
+            wo: vec![0.0; d * d],
+            ln1_g: vec![0.0; d],
+            ln1_b: vec![0.0; d],
+            ff1_w: vec![0.0; d * f],
+            ff1_b: vec![0.0; f],
+            ff2_w: vec![0.0; f * d],
+            ff2_b: vec![0.0; d],
+            ln2_g: vec![0.0; d],
+            ln2_b: vec![0.0; d],
+        };
+        Weights {
+            embed: vec![0.0; self.geometry.vocab_size * d],
+            pos: vec![0.0; self.geometry.l_clip * d],
+            layers: (0..self.layers).map(|_| layer()).collect(),
+            ctx_w: vec![0.0; d * d],
+            ctx_b: vec![0.0; d],
+            head_w1: vec![0.0; 2 * d * d],
+            head_b1: vec![0.0; d],
+            head_w2: vec![0.0; d],
+            head_b2: vec![0.0; 1],
+        }
+    }
+}
+
+/// Every tensor of `w` in canonical order, mutably — the write-side twin
+/// of `AttentionPredictor::tensors`, used by both loaders to fill a
+/// skeleton.
+fn tensors_mut(w: &mut Weights) -> Vec<&mut [f32]> {
+    let mut out: Vec<&mut [f32]> = vec![w.embed.as_mut_slice(), w.pos.as_mut_slice()];
+    for l in &mut w.layers {
+        out.extend([
+            l.wq.as_mut_slice(),
+            l.wk.as_mut_slice(),
+            l.wv.as_mut_slice(),
+            l.wo.as_mut_slice(),
+            l.ln1_g.as_mut_slice(),
+            l.ln1_b.as_mut_slice(),
+            l.ff1_w.as_mut_slice(),
+            l.ff1_b.as_mut_slice(),
+            l.ff2_w.as_mut_slice(),
+            l.ff2_b.as_mut_slice(),
+            l.ln2_g.as_mut_slice(),
+            l.ln2_b.as_mut_slice(),
+        ]);
+    }
+    out.extend([
+        w.ctx_w.as_mut_slice(),
+        w.ctx_b.as_mut_slice(),
+        w.head_w1.as_mut_slice(),
+        w.head_b1.as_mut_slice(),
+        w.head_w2.as_mut_slice(),
+        w.head_b2.as_mut_slice(),
+    ]);
+    out
+}
+
 /// Deterministic pure-Rust attention predictor; see the module docs.
 pub struct AttentionPredictor {
     geometry: ModelGeometry,
@@ -429,105 +559,223 @@ impl AttentionPredictor {
         self.tensors().iter().map(|t| t.len()).sum()
     }
 
-    /// Persist the weights (versioned; see [`AttentionPredictor::load`]).
-    /// Writes a sibling temp file and renames, like the clip cache.
+    /// Persist the weights as a `CPIM` image (kind = weights): the
+    /// geometry/architecture header in the checksummed meta blob, one
+    /// `(index, payload offset, f32 count)` record per tensor in
+    /// canonical order, a segment-aligned little-endian f32 payload, and
+    /// the live [`Predictor::fingerprint`] in the header as a load-time
+    /// self-check. Published via the shared unique-temp + fsync +
+    /// atomic-rename discipline, so a crashed or racing writer never
+    /// leaves a torn file behind. [`AttentionPredictor::load`] still
+    /// reads the legacy `CAWB` v1 stream for one release.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let tmp = path.with_extension("tmp");
-        {
-            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            w.write_all(&WEIGHTS_MAGIC.to_le_bytes())?;
-            w.write_all(&WEIGHTS_VERSION.to_le_bytes())?;
-            let g = &self.geometry;
-            for v in [g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch] {
-                w.write_all(&(v as u32).to_le_bytes())?;
-            }
-            w.write_all(&(g.fwd_batch_sizes.len() as u32).to_le_bytes())?;
-            for &b in &g.fwd_batch_sizes {
-                w.write_all(&(b as u32).to_le_bytes())?;
-            }
-            for v in [self.heads, self.w.layers.len(), self.ffn_mult] {
-                w.write_all(&(v as u32).to_le_bytes())?;
-            }
-            w.write_all(&self.seed.to_le_bytes())?;
-            w.write_all(&(self.param_count() as u64).to_le_bytes())?;
-            for t in self.tensors() {
-                for &v in t {
-                    w.write_all(&v.to_bits().to_le_bytes())?;
-                }
-            }
-            w.flush()?;
+        let g = &self.geometry;
+        let mut meta = Vec::new();
+        for v in [g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch] {
+            meta.extend_from_slice(&(v as u32).to_le_bytes());
         }
-        std::fs::rename(&tmp, path)
+        meta.extend_from_slice(&(g.fwd_batch_sizes.len() as u32).to_le_bytes());
+        for &b in &g.fwd_batch_sizes {
+            meta.extend_from_slice(&(b as u32).to_le_bytes());
+        }
+        for v in [self.heads, self.w.layers.len(), self.ffn_mult] {
+            meta.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        meta.extend_from_slice(&self.seed.to_le_bytes());
+        meta.extend_from_slice(&(self.param_count() as u64).to_le_bytes());
+
+        let tensors = self.tensors();
+        let mut records = Vec::with_capacity(tensors.len() * WEIGHTS_RECORD_STRIDE);
+        let mut payload = Vec::with_capacity(self.param_count() * 4);
+        for (i, t) in tensors.iter().enumerate() {
+            records.extend_from_slice(&(i as u64).to_le_bytes());
+            records.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            records.extend_from_slice(&(t.len() as u64).to_le_bytes());
+            for &v in *t {
+                payload.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        image::persist_atomic(path, |w| {
+            image::write_image(
+                w,
+                &ImageSpec {
+                    kind: image::KIND_WEIGHTS,
+                    fingerprint: Predictor::fingerprint(self),
+                    kernel_contract: super::KERNEL_CONTRACT_VERSION,
+                    time_scale_bits: 0,
+                    meta: &meta,
+                    record_stride: WEIGHTS_RECORD_STRIDE as u32,
+                    records: &records,
+                    payload: &payload,
+                },
+            )
+        })
     }
 
-    /// Load a persisted weights file, refusing wrong magic/version,
-    /// inconsistent shapes, or truncated data.
+    /// Load persisted weights. A `CPIM` image is mmap'd, its data digest
+    /// verified **eagerly** (the payload is bounded by
+    /// [`MAX_WEIGHT_COUNT`], so the O(data) check is cheap and no byte is
+    /// ever trusted unverified), and its f32 payload copied once into
+    /// place through zero-copy [`mmap::f32_view`] slices; a legacy `CAWB`
+    /// v1 stream still parses for one release. Wrong magic/version,
+    /// inconsistent shapes, truncated or bit-flipped data are refused
+    /// with the offending path in the message — callers cold-start,
+    /// never construct a wrong predictor.
     pub fn load(path: &Path) -> Result<AttentionPredictor> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?,
-        );
-        if read_u32(&mut r)? != WEIGHTS_MAGIC {
+        let map = Mmap::open(path).map_err(|e| anyhow!("opening {path:?}: {e}"))?;
+        let bytes = map.bytes();
+        if bytes.len() >= 4 && u32::from_le_bytes(bytes[0..4].try_into().unwrap()) == WEIGHTS_MAGIC
+        {
+            return Self::load_legacy_v1(path, bytes);
+        }
+        let view = ImageView::parse(bytes).map_err(|m| anyhow!("{path:?}: {m}"))?;
+        Self::load_image(path, &view)
+    }
+
+    /// The `CPIM` weights reader; `view` has already passed the O(1)
+    /// header/bounds validation of [`ImageView::parse`].
+    fn load_image(path: &Path, view: &ImageView<'_>) -> Result<AttentionPredictor> {
+        if view.kind != image::KIND_WEIGHTS {
+            return Err(anyhow!("{path:?}: not a weights image (kind {})", view.kind));
+        }
+        if view.record_stride as usize != WEIGHTS_RECORD_STRIDE {
+            return Err(anyhow!("{path:?}: unexpected weights record stride"));
+        }
+        if !view.verify_data() {
+            return Err(anyhow!("{path:?}: weights data digest mismatch"));
+        }
+        let head = (|| -> std::io::Result<WeightsHead> {
+            let mut r = std::io::Cursor::new(view.meta);
+            let vocab_size = read_u32(&mut r)? as usize;
+            let embed_dim = read_u32(&mut r)? as usize;
+            let l_token = read_u32(&mut r)? as usize;
+            let l_clip = read_u32(&mut r)? as usize;
+            let m_rows = read_u32(&mut r)? as usize;
+            let train_batch = read_u32(&mut r)? as usize;
+            let n_fwd = read_u32(&mut r)? as usize;
+            if n_fwd > 64 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "implausible fwd batch list",
+                ));
+            }
+            let mut fwd_batch_sizes = Vec::with_capacity(n_fwd);
+            for _ in 0..n_fwd {
+                fwd_batch_sizes.push(read_u32(&mut r)? as usize);
+            }
+            let heads = read_u32(&mut r)? as usize;
+            let layers = read_u32(&mut r)? as usize;
+            let ffn_mult = read_u32(&mut r)? as usize;
+            let seed = read_u64(&mut r)?;
+            let count = read_u64(&mut r)?;
+            if r.position() != view.meta.len() as u64 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "trailing bytes after weights header",
+                ));
+            }
+            let geometry = ModelGeometry {
+                vocab_size,
+                embed_dim,
+                l_token,
+                l_clip,
+                m_rows,
+                train_batch,
+                fwd_batch_sizes,
+            };
+            Ok(WeightsHead { geometry, heads, layers, ffn_mult, seed, count })
+        })()
+        .map_err(|e| anyhow!("{path:?}: bad weights meta: {e}"))?;
+        head.validate(path)?;
+
+        let mut w = head.skeleton();
+        {
+            let mut tensors = tensors_mut(&mut w);
+            if view.n_records != tensors.len() as u64 {
+                return Err(anyhow!(
+                    "{path:?}: {} tensor records, header shape implies {}",
+                    view.n_records,
+                    tensors.len()
+                ));
+            }
+            for (i, t) in tensors.iter_mut().enumerate() {
+                let rec = view.record(i);
+                let idx = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+                let off = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+                let n = u64::from_le_bytes(rec[16..24].try_into().unwrap());
+                if idx != i as u64 || n != t.len() as u64 {
+                    return Err(anyhow!(
+                        "{path:?}: tensor record {i} disagrees with the header shape"
+                    ));
+                }
+                let start = usize::try_from(off)
+                    .ok()
+                    .filter(|&s| s <= view.payload.len())
+                    .ok_or_else(|| anyhow!("{path:?}: tensor record {i} out of payload bounds"))?;
+                let end = start
+                    .checked_add(t.len() * 4)
+                    .filter(|&e| e <= view.payload.len())
+                    .ok_or_else(|| anyhow!("{path:?}: tensor record {i} out of payload bounds"))?;
+                let src = &view.payload[start..end];
+                match mmap::f32_view(src) {
+                    Some(s) => t.copy_from_slice(s),
+                    // the payload section is segment-aligned, so only a
+                    // hostile in-payload offset lands here; decode
+                    // portably instead of refusing
+                    None => {
+                        for (dst, c) in t.iter_mut().zip(src.chunks_exact(4)) {
+                            *dst = f32::from_bits(u32::from_le_bytes(c.try_into().unwrap()));
+                        }
+                    }
+                }
+            }
+        }
+        let out =
+            AttentionPredictor::from_weights(head.geometry, head.heads, head.ffn_mult, head.seed, w);
+        debug_assert_eq!(out.param_count() as u64, head.count);
+        // The stored fingerprint is a self-check of the reconstructed
+        // predictor. It mixes KERNEL_CONTRACT_VERSION, so it is only
+        // comparable when the image was written under the same contract;
+        // weights themselves stay valid across contract bumps.
+        if view.kernel_contract == super::KERNEL_CONTRACT_VERSION
+            && Predictor::fingerprint(&out) != view.fingerprint
+        {
+            return Err(anyhow!("{path:?}: weights fingerprint self-check failed"));
+        }
+        Ok(out)
+    }
+
+    /// The legacy `CAWB` v1 reader (sequential f32 stream), kept for the
+    /// one-release migration window; saves always re-emit the image
+    /// format.
+    fn load_legacy_v1(path: &Path, bytes: &[u8]) -> Result<AttentionPredictor> {
+        let trunc = |e: std::io::Error| anyhow!("{path:?}: truncated weights file: {e}");
+        let mut r = std::io::Cursor::new(bytes);
+        if read_u32(&mut r).map_err(trunc)? != WEIGHTS_MAGIC {
             return Err(anyhow!("{path:?}: not an attention weights file"));
         }
-        if read_u32(&mut r)? != WEIGHTS_VERSION {
+        if read_u32(&mut r).map_err(trunc)? != WEIGHTS_VERSION {
             return Err(anyhow!("{path:?}: unsupported weights version"));
         }
-        let vocab_size = read_u32(&mut r)? as usize;
-        let embed_dim = read_u32(&mut r)? as usize;
-        let l_token = read_u32(&mut r)? as usize;
-        let l_clip = read_u32(&mut r)? as usize;
-        let m_rows = read_u32(&mut r)? as usize;
-        let train_batch = read_u32(&mut r)? as usize;
-        let n_fwd = read_u32(&mut r)? as usize;
+        let vocab_size = read_u32(&mut r).map_err(trunc)? as usize;
+        let embed_dim = read_u32(&mut r).map_err(trunc)? as usize;
+        let l_token = read_u32(&mut r).map_err(trunc)? as usize;
+        let l_clip = read_u32(&mut r).map_err(trunc)? as usize;
+        let m_rows = read_u32(&mut r).map_err(trunc)? as usize;
+        let train_batch = read_u32(&mut r).map_err(trunc)? as usize;
+        let n_fwd = read_u32(&mut r).map_err(trunc)? as usize;
         if n_fwd > 64 {
             return Err(anyhow!("{path:?}: implausible fwd batch list"));
         }
         let mut fwd_batch_sizes = Vec::with_capacity(n_fwd);
         for _ in 0..n_fwd {
-            fwd_batch_sizes.push(read_u32(&mut r)? as usize);
+            fwd_batch_sizes.push(read_u32(&mut r).map_err(trunc)? as usize);
         }
-        let heads = read_u32(&mut r)? as usize;
-        let layers = read_u32(&mut r)? as usize;
-        let ffn_mult = read_u32(&mut r)? as usize;
-        let seed = read_u64(&mut r)?;
-        let count = read_u64(&mut r)?;
-        let arch_ok =
-            embed_dim > 0 && heads > 0 && embed_dim % heads == 0 && layers > 0 && ffn_mult > 0;
-        if !arch_ok {
-            return Err(anyhow!("{path:?}: inconsistent architecture header"));
-        }
-        // bound every dimension before doing arithmetic on it, so a
-        // corrupt header can neither overflow the `expected` product
-        // below nor provoke a huge allocation
-        let dims_ok = vocab_size <= 1 << 20
-            && embed_dim <= 1 << 12
-            && l_token <= 1 << 12
-            && l_clip <= 1 << 12
-            && m_rows <= 1 << 16
-            && train_batch <= 1 << 12
-            && layers <= 64
-            && ffn_mult <= 16
-            && fwd_batch_sizes.iter().all(|&b| b > 0 && b <= 1 << 12);
-        if !dims_ok {
-            return Err(anyhow!("{path:?}: implausible geometry header"));
-        }
-
-        // validate the advertised total against the header shape BEFORE
-        // allocating anything (with the bounds above, every product fits
-        // comfortably in u64 and the total is capped by MAX_WEIGHT_COUNT)
-        let d = embed_dim as u64;
-        let f = ffn_mult as u64 * d;
-        let per_layer = 4 * d * d + 2 * d + d * f + f + f * d + d + 2 * d;
-        let expected = vocab_size as u64 * d
-            + l_clip as u64 * d
-            + layers as u64 * per_layer
-            + (d * d + d)
-            + (2 * d * d + d + d + 1);
-        if count != expected || count > MAX_WEIGHT_COUNT {
-            return Err(anyhow!(
-                "{path:?}: weight count {count} does not match header shape ({expected})"
-            ));
-        }
+        let heads = read_u32(&mut r).map_err(trunc)? as usize;
+        let layers = read_u32(&mut r).map_err(trunc)? as usize;
+        let ffn_mult = read_u32(&mut r).map_err(trunc)? as usize;
+        let seed = read_u64(&mut r).map_err(trunc)?;
+        let count = read_u64(&mut r).map_err(trunc)?;
         let geometry = ModelGeometry {
             vocab_size,
             embed_dim,
@@ -537,60 +785,18 @@ impl AttentionPredictor {
             train_batch,
             fwd_batch_sizes,
         };
+        let head = WeightsHead { geometry, heads, layers, ffn_mult, seed, count };
+        head.validate(path)?;
 
-        // build a zeroed skeleton with the recorded shape, fill it
-        // tensor by tensor in canonical order, then pack for inference
-        let d = embed_dim;
-        let f = ffn_mult * d;
-        let layer = || EncoderLayer {
-            wq: vec![0.0; d * d],
-            wk: vec![0.0; d * d],
-            wv: vec![0.0; d * d],
-            wo: vec![0.0; d * d],
-            ln1_g: vec![0.0; d],
-            ln1_b: vec![0.0; d],
-            ff1_w: vec![0.0; d * f],
-            ff1_b: vec![0.0; f],
-            ff2_w: vec![0.0; f * d],
-            ff2_b: vec![0.0; d],
-            ln2_g: vec![0.0; d],
-            ln2_b: vec![0.0; d],
-        };
-        let mut w = Weights {
-            embed: vec![0.0; vocab_size * d],
-            pos: vec![0.0; l_clip * d],
-            layers: (0..layers).map(|_| layer()).collect(),
-            ctx_w: vec![0.0; d * d],
-            ctx_b: vec![0.0; d],
-            head_w1: vec![0.0; 2 * d * d],
-            head_b1: vec![0.0; d],
-            head_w2: vec![0.0; d],
-            head_b2: vec![0.0; 1],
-        };
-        fill_f32(&mut r, &mut w.embed)?;
-        fill_f32(&mut r, &mut w.pos)?;
-        for l in &mut w.layers {
-            fill_f32(&mut r, &mut l.wq)?;
-            fill_f32(&mut r, &mut l.wk)?;
-            fill_f32(&mut r, &mut l.wv)?;
-            fill_f32(&mut r, &mut l.wo)?;
-            fill_f32(&mut r, &mut l.ln1_g)?;
-            fill_f32(&mut r, &mut l.ln1_b)?;
-            fill_f32(&mut r, &mut l.ff1_w)?;
-            fill_f32(&mut r, &mut l.ff1_b)?;
-            fill_f32(&mut r, &mut l.ff2_w)?;
-            fill_f32(&mut r, &mut l.ff2_b)?;
-            fill_f32(&mut r, &mut l.ln2_g)?;
-            fill_f32(&mut r, &mut l.ln2_b)?;
+        // fill a zeroed skeleton tensor by tensor in canonical order,
+        // then pack for inference
+        let mut w = head.skeleton();
+        for t in tensors_mut(&mut w) {
+            fill_f32(&mut r, t).map_err(trunc)?;
         }
-        fill_f32(&mut r, &mut w.ctx_w)?;
-        fill_f32(&mut r, &mut w.ctx_b)?;
-        fill_f32(&mut r, &mut w.head_w1)?;
-        fill_f32(&mut r, &mut w.head_b1)?;
-        fill_f32(&mut r, &mut w.head_w2)?;
-        fill_f32(&mut r, &mut w.head_b2)?;
-        let out = AttentionPredictor::from_weights(geometry, heads, ffn_mult, seed, w);
-        debug_assert_eq!(out.param_count() as u64, count);
+        let out =
+            AttentionPredictor::from_weights(head.geometry, head.heads, head.ffn_mult, head.seed, w);
+        debug_assert_eq!(out.param_count() as u64, head.count);
         Ok(out)
     }
 
@@ -1246,12 +1452,60 @@ mod tests {
         for corrupt in [0u32, u32::MAX] {
             p.save(&path).unwrap();
             let mut bytes = std::fs::read(&path).unwrap();
-            // header layout: magic, version, six geometry u32s, n_fwd,
-            // then the fwd batch sizes — first entry at byte 36
-            bytes[36..40].copy_from_slice(&corrupt.to_le_bytes());
+            // meta layout: six geometry u32s, n_fwd, then the fwd batch
+            // sizes — first entry at meta offset 28. Re-seal the header
+            // checksum after the patch so the dimension guard itself,
+            // not the checksum, is what refuses the file.
+            let off = image::HEADER_LEN + 28;
+            bytes[off..off + 4].copy_from_slice(&corrupt.to_le_bytes());
+            let meta_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+            let reseal = image::digest64(&[
+                &bytes[..88],
+                &bytes[image::HEADER_LEN..image::HEADER_LEN + meta_len],
+            ]);
+            bytes[88..96].copy_from_slice(&reseal.to_le_bytes());
             std::fs::write(&path, &bytes).unwrap();
             assert!(AttentionPredictor::load(&path).is_err(), "fwd size {corrupt}");
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_v1_weights_still_load() {
+        let g = small_geometry();
+        let p = AttentionPredictor::seeded(g.clone(), 7);
+        // hand-write the CAWB v1 stream exactly as the previous release's
+        // writer produced it
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&WEIGHTS_MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&WEIGHTS_VERSION.to_le_bytes());
+        for v in [g.vocab_size, g.embed_dim, g.l_token, g.l_clip, g.m_rows, g.train_batch] {
+            bytes.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        bytes.extend_from_slice(&(g.fwd_batch_sizes.len() as u32).to_le_bytes());
+        for &b in &g.fwd_batch_sizes {
+            bytes.extend_from_slice(&(b as u32).to_le_bytes());
+        }
+        for v in [p.heads, p.w.layers.len(), p.ffn_mult] {
+            bytes.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        bytes.extend_from_slice(&p.seed.to_le_bytes());
+        bytes.extend_from_slice(&(p.param_count() as u64).to_le_bytes());
+        for t in p.tensors() {
+            for &v in t {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let dir = std::env::temp_dir().join("capsim_attn_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("attention_v1.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let q = AttentionPredictor::load(&path).unwrap();
+        assert_eq!(
+            Predictor::fingerprint(&q),
+            Predictor::fingerprint(&p),
+            "legacy load is identity-preserving"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -83,6 +83,34 @@
 //! cold-starts persisted clip caches exactly once instead of silently
 //! serving stale bits.
 //!
+//! ## Persistence contract
+//!
+//! Both persisted artifacts — the clip cache and the attention weights —
+//! share one container, the `CPIM` image
+//! ([`image`](crate::util::image)): a fixed little-endian header
+//! carrying format version, [`Predictor::fingerprint`],
+//! [`KERNEL_CONTRACT_VERSION`] and a header checksum; fixed-stride
+//! records; and a 4096-aligned f32 payload covered by a data digest.
+//! Alignment means a mapped image yields zero-copy `&[f32]` views
+//! ([`mmap::f32_view`](crate::util::mmap::f32_view)), so a warm start is
+//! O(1): parse + checksum the header, map the rest, verify payload
+//! bytes the first time they are actually read (weights verify eagerly
+//! — every byte feeds the model; the cache defers to first lookup).
+//! Key rules: a cache image must match fingerprint, `time_scale` *and*
+//! kernel-contract version exactly (its values are produced bits); a
+//! weights image survives contract bumps (weights are inputs, not
+//! outputs — only the fingerprint self-check is skipped across a bump).
+//! Writers publish via unique temp + fsync + atomic rename
+//! ([`image::persist_atomic`](crate::util::image::persist_atomic)), and
+//! a rename swaps the directory entry, never the mapped inode, so
+//! concurrent readers keep a complete old image. Any corruption —
+//! truncation, bit flip, hostile header — degrades to a cold start with
+//! the offending path in the error; it never panics and never serves a
+//! wrong value (`tests/persist_images.rs` drives every truncation and a
+//! flip in every byte). The pre-image formats (`CPLC` v1 caches, `CAWB`
+//! v1 weights) load read-only for one release and migrate to `CPIM` on
+//! the next save.
+//!
 //! ## Serving architecture
 //!
 //! The [`serve`](crate::serve) daemon is the runtime's long-lived

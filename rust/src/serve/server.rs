@@ -63,6 +63,10 @@ pub struct ServeOptions {
     pub cache_path: Option<PathBuf>,
     /// Entry bound for the persistent cache (`0` = unbounded).
     pub cache_max_entries: usize,
+    /// Serve warm-start entries straight from the mmap-frozen image
+    /// (`true`, the default) or copy them onto the heap
+    /// (`cache_mmap = false` / `--cache-heap`).
+    pub cache_mmap: bool,
 }
 
 impl Default for ServeOptions {
@@ -74,6 +78,7 @@ impl Default for ServeOptions {
             time_scale: 40.0,
             cache_path: None,
             cache_max_entries: 1_000_000,
+            cache_mmap: true,
         }
     }
 }
@@ -109,6 +114,8 @@ fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
         cache_misses: cs.misses,
         cache_len: cache.len() as u64,
         cache_evictions: cs.evictions,
+        cache_frozen_len: cache.frozen_len() as u64,
+        cache_source: cache.source().code(),
     }
 }
 
@@ -158,11 +165,12 @@ impl Server {
         let Server { listener, opts } = self;
         let addr = listener.local_addr().context("listener address")?;
         let (cache, warm_start) = match opts.cache_path.as_deref() {
-            Some(p) => ClipCache::load_or_cold_bounded(
+            Some(p) => ClipCache::load_or_cold_bounded_with(
                 p,
                 model.fingerprint(),
                 opts.time_scale,
                 opts.cache_max_entries,
+                opts.cache_mmap,
             ),
             None => (ClipCache::bounded(opts.cache_max_entries), false),
         };

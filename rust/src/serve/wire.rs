@@ -92,6 +92,13 @@ pub struct StatsReply {
     pub cache_misses: u64,
     pub cache_len: u64,
     pub cache_evictions: u64,
+    /// Entries served by the read-only mmap-frozen tier (0 when the
+    /// cache is heap-resident or cold).
+    pub cache_frozen_len: u64,
+    /// Where the cache contents came from, as
+    /// [`CacheSource::code`](crate::coordinator::CacheSource::code):
+    /// 0 cold, 1 heap-loaded, 2 mmap-frozen.
+    pub cache_source: u64,
 }
 
 impl StatsReply {
@@ -280,6 +287,8 @@ impl Response {
                     s.cache_misses,
                     s.cache_len,
                     s.cache_evictions,
+                    s.cache_frozen_len,
+                    s.cache_source,
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -321,6 +330,8 @@ impl Response {
                 cache_misses: c.u64()?,
                 cache_len: c.u64()?,
                 cache_evictions: c.u64()?,
+                cache_frozen_len: c.u64()?,
+                cache_source: c.u64()?,
             }),
             TAG_BUSY => Response::Busy { retry_ms: c.u32()?, queue_depth: c.u32()? },
             TAG_SHUTDOWN_ACK => Response::ShutdownAck,
@@ -373,6 +384,8 @@ mod tests {
             cache_misses: 35,
             cache_len: 35,
             cache_evictions: 1,
+            cache_frozen_len: 20,
+            cache_source: 2,
         };
         let resps = [
             Response::Predictions(vec![1.5, -0.25, 1e300]),

@@ -1,0 +1,426 @@
+//! `CPIM` — the shared on-disk **image container** behind the mmap
+//! persistence of the clip cache and the attention weights (no `unsafe`
+//! here; the mapping and pointer casts live in [`crate::util::mmap`]).
+//!
+//! Layout (all little-endian), designed so a reader can go from open to
+//! serving in O(1): a fixed 96-byte header + a small kind-specific meta
+//! blob, both covered by a checksum, then two segment-aligned sections —
+//! fixed-stride records (sorted by key, binary-searchable in place) and a
+//! raw payload (f32 data for weights). Section starts are padded to
+//! [`SEG_ALIGN`] so any mmap base (page-aligned by definition) gives
+//! aligned in-memory views.
+//!
+//! ```text
+//! off  size field
+//!   0    u32 magic            "CPIM"
+//!   4    u32 container version (1)
+//!   8    u32 kind             (1 = clip cache, 2 = attention weights)
+//!  12    u32 meta_len
+//!  16    u64 fingerprint      Predictor::fingerprint the image is keyed by
+//!  24    u64 kernel_contract  KERNEL_CONTRACT_VERSION at save time
+//!  32    u32 time_scale bits  (0 where not applicable)
+//!  36    u32 record_stride
+//!  40    u64 n_records
+//!  48    u64 records_off      SEG_ALIGN-aligned
+//!  56    u64 records_len      == n_records * record_stride
+//!  64    u64 payload_off      SEG_ALIGN-aligned
+//!  72    u64 payload_len
+//!  80    u64 data_digest      digest64 over records ++ payload
+//!  88    u64 header_checksum  digest64 over bytes [0, 88) ++ meta
+//!  96    meta bytes, zero padding, records, zero padding, payload
+//! ```
+//!
+//! Verification is two-phase by design: [`ImageView::parse`] checks the
+//! header checksum plus every bound/alignment/stride invariant in O(1),
+//! which is what makes warm start size-independent; [`ImageView::verify_data`]
+//! recomputes the O(data) digest and is run eagerly for the small weights
+//! payload but deferred to first use for the cache (see
+//! `coordinator::cache`), so corruption is always caught before any byte
+//! is trusted, without putting an O(entries) scan on the open path.
+
+use std::io::Write;
+
+/// Header magic "CPIM" (CaPsim IMage).
+pub const IMAGE_MAGIC: u32 = 0x4D49_5043;
+/// Bump on any incompatible container change; old images then cold-start.
+pub const IMAGE_VERSION: u32 = 1;
+/// Image kind: clip cache (16-byte `key,f64` records, empty payload).
+pub const KIND_CLIP_CACHE: u32 = 1;
+/// Image kind: attention weights (24-byte tensor records, f32 payload).
+pub const KIND_WEIGHTS: u32 = 2;
+/// Section alignment. 4096 divides every real page size, so an offset
+/// aligned to it is at least 4096-aligned in any mapping.
+pub const SEG_ALIGN: usize = 4096;
+/// Fixed header size (everything before the meta blob).
+pub const HEADER_LEN: usize = 96;
+/// Upper bound on the kind-specific meta blob — parse refuses beyond it,
+/// so a hostile `meta_len` can never drive a large read or allocation.
+pub const MAX_META_LEN: u32 = 1 << 16;
+
+/// FNV-1a over 8-byte little-endian words (tail zero-padded), seeded with
+/// the section lengths. Word-wise rather than byte-wise so verifying the
+/// weights payload runs at memcpy-like speed, and the same function
+/// serves both the O(1) header checksum and the O(data) segment digest.
+pub fn digest64(sections: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut mix = |v: u64| {
+        h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
+    };
+    for s in sections {
+        mix(s.len() as u64);
+        let mut chunks = s.chunks_exact(8);
+        for c in &mut chunks {
+            mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            mix(u64::from_le_bytes(tail));
+        }
+    }
+    h
+}
+
+/// Everything an image writer must supply; offsets, padding, digests and
+/// the checksum are derived here so every writer shares one layout.
+pub struct ImageSpec<'a> {
+    pub kind: u32,
+    pub fingerprint: u64,
+    pub kernel_contract: u64,
+    pub time_scale_bits: u32,
+    pub meta: &'a [u8],
+    pub record_stride: u32,
+    pub records: &'a [u8],
+    pub payload: &'a [u8],
+}
+
+/// Serialize `spec` as one complete image. The caller owns durability
+/// (unique temp file + fsync + rename); this only produces bytes.
+pub fn write_image(w: &mut impl Write, spec: &ImageSpec<'_>) -> std::io::Result<()> {
+    assert!(spec.record_stride > 0, "record stride must be non-zero");
+    assert_eq!(
+        spec.records.len() % spec.record_stride as usize,
+        0,
+        "records must be whole strides"
+    );
+    assert!(spec.meta.len() <= MAX_META_LEN as usize, "meta blob too large");
+    let n_records = (spec.records.len() / spec.record_stride as usize) as u64;
+    let records_off = align_up(HEADER_LEN + spec.meta.len());
+    let payload_off = align_up(records_off + spec.records.len());
+
+    let mut head = Vec::with_capacity(HEADER_LEN);
+    head.extend_from_slice(&IMAGE_MAGIC.to_le_bytes());
+    head.extend_from_slice(&IMAGE_VERSION.to_le_bytes());
+    head.extend_from_slice(&spec.kind.to_le_bytes());
+    head.extend_from_slice(&(spec.meta.len() as u32).to_le_bytes());
+    head.extend_from_slice(&spec.fingerprint.to_le_bytes());
+    head.extend_from_slice(&spec.kernel_contract.to_le_bytes());
+    head.extend_from_slice(&spec.time_scale_bits.to_le_bytes());
+    head.extend_from_slice(&spec.record_stride.to_le_bytes());
+    head.extend_from_slice(&n_records.to_le_bytes());
+    head.extend_from_slice(&(records_off as u64).to_le_bytes());
+    head.extend_from_slice(&(spec.records.len() as u64).to_le_bytes());
+    head.extend_from_slice(&(payload_off as u64).to_le_bytes());
+    head.extend_from_slice(&(spec.payload.len() as u64).to_le_bytes());
+    head.extend_from_slice(&digest64(&[spec.records, spec.payload]).to_le_bytes());
+    let checksum = digest64(&[&head, spec.meta]);
+    head.extend_from_slice(&checksum.to_le_bytes());
+    debug_assert_eq!(head.len(), HEADER_LEN);
+
+    w.write_all(&head)?;
+    w.write_all(spec.meta)?;
+    w.write_all(&vec![0u8; records_off - HEADER_LEN - spec.meta.len()])?;
+    w.write_all(spec.records)?;
+    w.write_all(&vec![0u8; payload_off - records_off - spec.records.len()])?;
+    w.write_all(spec.payload)
+}
+
+fn align_up(off: usize) -> usize {
+    off.div_ceil(SEG_ALIGN) * SEG_ALIGN
+}
+
+/// A parsed, bounds- and checksum-verified view into an image's bytes.
+/// Constructing one is O(1) + O(meta); it borrows, never copies.
+pub struct ImageView<'a> {
+    pub kind: u32,
+    pub fingerprint: u64,
+    pub kernel_contract: u64,
+    pub time_scale_bits: u32,
+    pub record_stride: u32,
+    pub n_records: u64,
+    pub meta: &'a [u8],
+    pub records: &'a [u8],
+    pub payload: &'a [u8],
+    pub data_digest: u64,
+}
+
+impl<'a> ImageView<'a> {
+    /// Parse and validate a header. Anything short of a fully coherent
+    /// image — wrong magic/version, bad checksum, out-of-bounds or
+    /// misaligned sections, stride/length mismatch, oversized meta —
+    /// returns `Err` so the caller cold-starts. Every arithmetic step is
+    /// overflow-checked; hostile headers can neither panic nor allocate.
+    pub fn parse(bytes: &'a [u8]) -> Result<ImageView<'a>, String> {
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        if bytes.len() < HEADER_LEN {
+            return Err(format!("{} bytes is too short for an image header", bytes.len()));
+        }
+        if u32_at(0) != IMAGE_MAGIC {
+            return Err("not a CPIM image".into());
+        }
+        if u32_at(4) != IMAGE_VERSION {
+            return Err(format!("unsupported image version {}", u32_at(4)));
+        }
+        let meta_len = u32_at(12);
+        if meta_len > MAX_META_LEN {
+            return Err(format!("oversized meta blob ({meta_len} bytes)"));
+        }
+        let meta_end = HEADER_LEN
+            .checked_add(meta_len as usize)
+            .filter(|&e| e <= bytes.len())
+            .ok_or("meta blob out of bounds")?;
+        let meta = &bytes[HEADER_LEN..meta_end];
+        let stored = u64_at(88);
+        if digest64(&[&bytes[..88], meta]) != stored {
+            return Err("header checksum mismatch (torn or corrupt header)".into());
+        }
+        // From here the header is internally consistent *as written*; the
+        // remaining checks pin it to this file's actual size and layout.
+        let record_stride = u32_at(36);
+        let n_records = u64_at(40);
+        let section = |off: u64, len: u64, align: usize, what: &str| -> Result<&'a [u8], String> {
+            let end = off.checked_add(len).ok_or_else(|| format!("{what} length overflow"))?;
+            if end > bytes.len() as u64 {
+                return Err(format!("{what} section out of bounds"));
+            }
+            if off as usize % align != 0 {
+                return Err(format!("{what} section misaligned"));
+            }
+            if len > 0 && (off as usize) < meta_end {
+                return Err(format!("{what} section overlaps the header"));
+            }
+            Ok(&bytes[off as usize..end as usize])
+        };
+        let records_len = u64_at(56);
+        if record_stride == 0
+            || record_stride as usize > SEG_ALIGN
+            || n_records.checked_mul(record_stride as u64) != Some(records_len)
+        {
+            return Err("record stride/count/length disagree".into());
+        }
+        let records = section(u64_at(48), records_len, SEG_ALIGN, "records")?;
+        let payload = section(u64_at(64), u64_at(72), SEG_ALIGN, "payload")?;
+        Ok(ImageView {
+            kind: u32_at(8),
+            fingerprint: u64_at(16),
+            kernel_contract: u64_at(24),
+            time_scale_bits: u32_at(32),
+            record_stride,
+            n_records,
+            meta,
+            records,
+            payload,
+            data_digest: u64_at(80),
+        })
+    }
+
+    /// Recompute the data digest over records ++ payload. O(data) — the
+    /// one intentionally non-O(1) check; see the module docs for when
+    /// each caller runs it.
+    pub fn verify_data(&self) -> bool {
+        digest64(&[self.records, self.payload]) == self.data_digest
+    }
+
+    /// Record `i`'s bytes (panics if out of range — callers index within
+    /// `n_records`, which `parse` proved in-bounds).
+    pub fn record(&self, i: usize) -> &'a [u8] {
+        let s = self.record_stride as usize;
+        &self.records[i * s..(i + 1) * s]
+    }
+}
+
+/// Monotonic per-process sequence for unique temp-file names.
+static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Shared durable-publish discipline for every persisted format: write to
+/// a uniquely-named sibling temp file (pid + sequence — a fixed
+/// `with_extension("tmp")` name would let two concurrent savers
+/// interleave writes and rename a torn file over the good one), fsync,
+/// then atomically rename into place; the temp is unlinked on error.
+/// fsync before rename matters: without it a crash shortly after the
+/// rename can leave a file whose *name* is durable but whose bytes are
+/// not — exactly the torn image [`ImageView::parse`] exists to refuse.
+pub fn persist_atomic(
+    path: &std::path::Path,
+    write_body: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> std::io::Result<()>,
+) -> std::io::Result<()> {
+    let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut tmp_name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    tmp_name.push(format!(".{}.{}.tmp", std::process::id(), seq));
+    let tmp = path.with_file_name(tmp_name);
+    let write = (|| -> std::io::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write_body(&mut w)?;
+        w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if write.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write
+}
+
+/// Peek a file's leading magic/version without loading it — powers the
+/// `capsim backends` persistence report. Returns `(magic, version)`.
+pub fn peek_format(path: &std::path::Path) -> std::io::Result<(u32, u32)> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head)?;
+    Ok((
+        u32::from_le_bytes(head[0..4].try_into().unwrap()),
+        u32::from_le_bytes(head[4..8].try_into().unwrap()),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(records: &[u8], payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_image(
+            &mut out,
+            &ImageSpec {
+                kind: KIND_CLIP_CACHE,
+                fingerprint: 0xFEED,
+                kernel_contract: 2,
+                time_scale_bits: 40.0f32.to_bits(),
+                meta: b"meta!",
+                record_stride: 16,
+                records,
+                payload,
+            },
+        )
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let records: Vec<u8> = (0..64u8).collect(); // 4 records of 16
+        let payload = [7u8; 12];
+        let img = sample(&records, &payload);
+        let v = ImageView::parse(&img).unwrap();
+        assert_eq!(v.kind, KIND_CLIP_CACHE);
+        assert_eq!(v.fingerprint, 0xFEED);
+        assert_eq!(v.kernel_contract, 2);
+        assert_eq!(v.time_scale_bits, 40.0f32.to_bits());
+        assert_eq!(v.meta, b"meta!");
+        assert_eq!(v.n_records, 4);
+        assert_eq!(v.records, &records[..]);
+        assert_eq!(v.payload, &payload[..]);
+        assert_eq!(v.record(2), &records[32..48]);
+        assert!(v.verify_data());
+    }
+
+    #[test]
+    fn sections_are_seg_aligned() {
+        let img = sample(&[0u8; 32], &[1u8; 8]);
+        let v = ImageView::parse(&img).unwrap();
+        let base = img.as_ptr() as usize;
+        assert_eq!((v.records.as_ptr() as usize - base) % SEG_ALIGN, 0);
+        assert_eq!((v.payload.as_ptr() as usize - base) % SEG_ALIGN, 0);
+    }
+
+    #[test]
+    fn every_single_byte_truncation_is_refused_or_intact() {
+        let img = sample(&[3u8; 48], &[9u8; 4]);
+        for cut in 0..img.len() {
+            let t = &img[..cut];
+            if let Ok(v) = ImageView::parse(t) {
+                // a parseable truncation may only drop trailing padding —
+                // the data itself must still be whole and verified
+                assert!(v.verify_data(), "truncation at {cut} parsed but data is torn");
+                assert_eq!(v.records, &[3u8; 48][..]);
+                assert_eq!(v.payload, &[9u8; 4][..]);
+            }
+        }
+        assert!(ImageView::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn every_header_byte_flip_is_caught() {
+        let img = sample(&[5u8; 16], b"");
+        for pos in 0..HEADER_LEN + 5 {
+            for bit in [1u8, 0x80] {
+                let mut m = img.clone();
+                m[pos] ^= bit;
+                assert!(
+                    ImageView::parse(&m).is_err(),
+                    "header/meta flip at byte {pos} went unnoticed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn data_flips_fail_digest_not_parse() {
+        let img = sample(&[5u8; 32], &[6u8; 8]);
+        let v = ImageView::parse(&img).unwrap();
+        let records_start = v.records.as_ptr() as usize - img.as_ptr() as usize;
+        let mut m = img.clone();
+        m[records_start + 7] ^= 0x10;
+        let v = ImageView::parse(&m).expect("header still coherent");
+        assert!(!v.verify_data(), "record flip must fail the digest");
+    }
+
+    #[test]
+    fn hostile_headers_cannot_panic() {
+        // all-zero, all-ones, and a sweep of single-field extremes
+        assert!(ImageView::parse(&[0u8; HEADER_LEN]).is_err());
+        assert!(ImageView::parse(&[0xFF; HEADER_LEN * 2]).is_err());
+        let img = sample(&[1u8; 16], b"");
+        for field_off in [12usize, 36, 40, 48, 56, 64, 72] {
+            for val in [u64::MAX, u64::MAX / 2, 1 << 32] {
+                if field_off == 12 && val == 1 << 32 {
+                    // low u32 is 0: a *smaller* meta_len re-sealed with a
+                    // fresh checksum is a coherent (if odd) image, not a
+                    // hostile one — skip it
+                    continue;
+                }
+                let mut m = img.clone();
+                m[field_off..field_off + 8.min(HEADER_LEN - field_off)]
+                    .copy_from_slice(&val.to_le_bytes()[..8.min(HEADER_LEN - field_off)]);
+                // re-seal the checksum so the size checks themselves run
+                let meta_len = u32::from_le_bytes(m[12..16].try_into().unwrap()) as usize;
+                let meta_end = (HEADER_LEN + meta_len).min(m.len());
+                let meta = m[HEADER_LEN.min(meta_end)..meta_end].to_vec();
+                let sum = digest64(&[&m[..88], &meta]);
+                m[88..96].copy_from_slice(&sum.to_le_bytes());
+                assert!(ImageView::parse(&m).is_err(), "extreme field at {field_off} accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn digest64_is_order_and_boundary_sensitive() {
+        assert_ne!(digest64(&[b"ab", b"c"]), digest64(&[b"a", b"bc"]));
+        assert_ne!(digest64(&[b"abc"]), digest64(&[b"acb"]));
+        assert_ne!(digest64(&[b""]), digest64(&[b"\0"]));
+        // deterministic across calls
+        assert_eq!(digest64(&[b"stable"]), digest64(&[b"stable"]));
+    }
+
+    #[test]
+    fn peek_format_reads_magic_and_version() {
+        let dir = std::env::temp_dir().join("capsim_image_peek");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("img.bin");
+        std::fs::write(&p, sample(&[0u8; 16], b"")).unwrap();
+        assert_eq!(peek_format(&p).unwrap(), (IMAGE_MAGIC, IMAGE_VERSION));
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,252 @@
+//! Read-only file mapping — **all `unsafe` in the persistence stack lives
+//! in this module**, nowhere else.
+//!
+//! [`Mmap::open`] maps a file `PROT_READ`/`MAP_SHARED` so N processes that
+//! open the same image share one set of physical pages (the kernel page
+//! cache) with zero copies and O(1) setup time. The raw `mmap`/`munmap`
+//! bindings are declared `extern "C"` against the platform libc that `std`
+//! already links — the zero-dependency rule means no `libc` crate.
+//!
+//! On non-unix targets, or when the syscall fails, [`Mmap::open`] degrades
+//! to an 8-byte-aligned heap read of the whole file (the portable
+//! fallback). Callers observe the same `&[u8]`; [`Mmap::is_mapped`] says
+//! which path was taken so tooling can report "mmap-frozen" vs
+//! "heap-loaded" truthfully.
+//!
+//! Safety argument for the mapped path: the mapping is `PROT_READ`, the
+//! pointer/length pair comes straight from a successful `mmap` of `len`
+//! bytes and is unmapped exactly once in `Drop`, and the struct is
+//! `Send + Sync` because a read-only mapping has no writers to race.
+//! A concurrent `rename(2)` over the file swaps the directory entry, not
+//! the mapped inode, so a mapping taken before an atomic re-save keeps
+//! reading the old, complete image — never a torn mix. The one hazard
+//! mmap cannot rule out is another process *truncating* the mapped inode
+//! (reads past EOF then fault); image files are only ever replaced whole
+//! via rename, never truncated in place, so this stays outside the
+//! supported contract.
+
+use std::io::Read;
+use std::path::Path;
+
+/// A read-only view of a file's bytes: memory-mapped where possible,
+/// heap-read otherwise.
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Portable fallback: the file copied into an 8-byte-aligned heap
+    /// buffer (u64 backing), so offset alignment within the buffer
+    /// matches the mapped case for every scalar type the formats use.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// A PROT_READ mapping (or an owned immutable buffer) has no interior
+// mutability and no writers; sharing it across threads is sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+
+    // Bound against the libc std already links. `off_t` is 64-bit on
+    // every unix target we build for; we only ever pass offset 0 anyway.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+impl Mmap {
+    /// Map `path` read-only. Falls back to a heap read when mapping is
+    /// unavailable (non-unix, empty file, or a refused syscall); only a
+    /// real I/O failure is an error.
+    pub fn open(path: &Path) -> std::io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            if len > 0 && len <= usize::MAX as u64 {
+                let len = len as usize;
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_SHARED,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != sys::map_failed() {
+                    // fd can close now; the mapping keeps the inode alive
+                    return Ok(Mmap { inner: Inner::Mapped { ptr: ptr as *const u8, len } });
+                }
+            }
+            Self::open_heap_from(file)
+        }
+        #[cfg(not(unix))]
+        {
+            Self::open_heap_from(std::fs::File::open(path)?)
+        }
+    }
+
+    /// The portable fallback, also used directly by tests: read the whole
+    /// file into an 8-byte-aligned buffer.
+    fn open_heap_from(mut file: std::fs::File) -> std::io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "file too large to load",
+            ));
+        }
+        let len = len as usize;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        {
+            // View the u64 backing as bytes for the read — u64 has no
+            // invalid bit patterns, so writing arbitrary bytes is sound.
+            let dst = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(dst)?;
+        }
+        Ok(Mmap { inner: Inner::Heap { buf, len } })
+    }
+
+    /// The file's bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Heap { buf, len } => {
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// `true` when the bytes are a real shared mapping (zero-copy across
+    /// processes), `false` on the heap-read fallback.
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { .. } => true,
+            Inner::Heap { .. } => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len } = &self.inner {
+            // Failure here would mean the pointer/length pair we minted in
+            // `open` went bad, which the type makes impossible; ignore.
+            unsafe { sys::munmap(*ptr as *mut std::ffi::c_void, *len) };
+        }
+    }
+}
+
+/// Reinterpret `bytes` as little-endian `f32`s without copying. Returns
+/// `None` unless the slice is 4-byte aligned and a whole number of f32s —
+/// the caller degrades (cold start / heap copy) instead of hitting UB.
+/// Only meaningful on little-endian hosts, which is all this project
+/// builds for; the on-disk format is explicitly little-endian.
+pub fn f32_view(bytes: &[u8]) -> Option<&[f32]> {
+    if bytes.as_ptr() as usize % std::mem::align_of::<f32>() != 0 || bytes.len() % 4 != 0 {
+        return None;
+    }
+    // Alignment and length are checked above; f32 accepts all bit
+    // patterns, and the source is an immutable borrow of the same bytes.
+    Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("capsim_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_bytes_match_file() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|v| v.to_le_bytes()).collect();
+        let p = tmp("roundtrip.bin", &data);
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        #[cfg(unix)]
+        assert!(m.is_mapped(), "unix should take the real mmap path");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_bytes() {
+        let p = tmp("empty.bin", b"");
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.bytes().is_empty());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(Mmap::open(Path::new("/nonexistent/capsim.img")).is_err());
+    }
+
+    #[test]
+    fn heap_fallback_is_8_aligned_and_identical() {
+        let data: Vec<u8> = (0..999u32).flat_map(|v| v.to_le_bytes()).collect();
+        let p = tmp("heap.bin", &data);
+        let m = Mmap::open_heap_from(std::fs::File::open(&p).unwrap()).unwrap();
+        assert!(!m.is_mapped());
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.bytes().as_ptr() as usize % 8, 0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn f32_view_checks_alignment_and_length() {
+        let mut backing = vec![0u8; 64];
+        let base = backing.as_mut_ptr() as usize;
+        // find a 4-aligned window inside the buffer
+        let off = (4 - base % 4) % 4;
+        let aligned = &backing[off..off + 16];
+        let v = f32_view(aligned).expect("aligned whole-f32 slice");
+        assert_eq!(v.len(), 4);
+        assert!(f32_view(&aligned[..15]).is_none(), "ragged length refused");
+        assert!(f32_view(&backing[off + 1..off + 13]).is_none(), "misaligned refused");
+    }
+
+    #[test]
+    fn mapping_survives_rename_replacement() {
+        let p = tmp("swap.bin", &[1u8; 4096]);
+        let m = Mmap::open(&p).unwrap();
+        // atomically replace the file; the old inode stays mapped
+        let p2 = tmp("swap_new.bin", &[2u8; 4096]);
+        std::fs::rename(&p2, &p).unwrap();
+        assert!(m.bytes().iter().all(|&b| b == 1), "mapping reads the pre-rename image");
+        let fresh = Mmap::open(&p).unwrap();
+        assert!(fresh.bytes().iter().all(|&b| b == 2));
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,7 +1,9 @@
 //! Offline-friendly utilities: the vendored crate set has no serde / rand /
 //! criterion / proptest, so the small pieces we need live here, tested.
 
+pub mod image;
 pub mod json;
+pub mod mmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,262 @@
+//! Hostile-image property tests for the `CPIM` persistence stack: every
+//! truncation, a bit flip in every byte, misaligned/oversized header
+//! fields — each must produce a clean refusal (cold start) or a view
+//! that still serves only the original values. The one outcome that is
+//! never acceptable is a *wrong* value or a crash. A final pair of
+//! tests re-execs this binary to prove two concurrent processes can
+//! serve bit-identical answers from one shared read-only image.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use capsim::coordinator::{CacheSource, ClipCache};
+use capsim::runtime::{AttentionPredictor, ModelGeometry, Predictor};
+use capsim::util::image;
+
+const FP: u64 = 0xFEED_F00D;
+const TS: f32 = 2.5;
+const N_CLIPS: u64 = 8;
+
+/// Env var that flips this binary into "child" mode for the
+/// two-process test; holds the image path the child must load.
+const CHILD_ENV: &str = "CAPSIM_PERSIST_CHILD";
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("capsim_persist_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The value stored under `key` — chosen exactly representable in f32,
+/// so the persisted copy round-trips bit-identically.
+fn value(key: u64) -> f64 {
+    key as f64 * 0.5 + 0.25
+}
+
+fn saved_image(dir: &Path) -> (PathBuf, Vec<u8>) {
+    let cache = ClipCache::new();
+    for k in 0..N_CLIPS {
+        cache.insert(k, value(k));
+    }
+    let path = dir.join("cache.bin");
+    cache.save(&path, FP, TS).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > image::HEADER_LEN, "image must have segments");
+    (path, bytes)
+}
+
+/// The safety property every hostile image is held to: loading either
+/// fails outright, or yields a cache whose every lookup misses or
+/// returns exactly the original value. Panics and wrong values fail.
+fn assert_refused_or_harmless(path: &Path, label: &str) {
+    if let Ok(c) = ClipCache::load_bounded(path, FP, TS, 0) {
+        for k in 0..N_CLIPS {
+            let got = c.get(k);
+            assert!(
+                got.is_none() || got == Some(value(k)),
+                "{label}: key {k} served {got:?}, want miss or {}",
+                value(k)
+            );
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_a_cache_image_is_refused_or_harmless() {
+    let dir = scratch("trunc");
+    let (_path, bytes) = saved_image(&dir);
+    let hostile = dir.join("hostile.bin");
+    for len in 0..bytes.len() {
+        std::fs::write(&hostile, &bytes[..len]).unwrap();
+        assert_refused_or_harmless(&hostile, &format!("truncated to {len}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_bit_flip_in_any_byte_never_serves_a_wrong_value() {
+    let dir = scratch("flip");
+    let (_path, bytes) = saved_image(&dir);
+    let hostile = dir.join("hostile.bin");
+    for pos in 0..bytes.len() {
+        let mut b = bytes.clone();
+        b[pos] ^= 1 << (pos % 8);
+        std::fs::write(&hostile, &b).unwrap();
+        assert_refused_or_harmless(&hostile, &format!("bit flip at byte {pos}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recompute and re-seal the header checksum after patching header
+/// fields, so the *semantic* validation (bounds, alignment, digests) is
+/// what gets exercised rather than the checksum.
+fn reseal(bytes: &mut [u8]) {
+    let meta_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let meta_end = (image::HEADER_LEN + meta_len).min(bytes.len());
+    let sum = image::digest64(&[&bytes[..88], &bytes[image::HEADER_LEN..meta_end]]);
+    bytes[88..96].copy_from_slice(&sum.to_le_bytes());
+}
+
+#[test]
+fn misaligned_and_oversized_header_fields_cold_start_cleanly() {
+    let dir = scratch("header");
+    let (_path, bytes) = saved_image(&dir);
+    let hostile = dir.join("hostile.bin");
+    // (byte offset, hostile u64 value) — record/payload geometry lies:
+    // misaligned offsets, lengths past EOF, absurd counts and strides
+    let patches: &[(usize, u64, &str)] = &[
+        (36, 0, "record stride 0"),
+        (36, 3, "record stride 3"),
+        (36, u32::MAX as u64, "record stride u32::MAX"),
+        (40, u64::MAX, "n_records u64::MAX"),
+        (40, 1 << 40, "n_records 2^40"),
+        (48, 4097, "records_off misaligned"),
+        (48, u64::MAX, "records_off past EOF"),
+        (56, u64::MAX, "records_len past EOF"),
+        (64, 4099, "payload_off misaligned"),
+        (64, u64::MAX, "payload_off past EOF"),
+        (72, u64::MAX, "payload_len past EOF"),
+        (80, 0, "data digest zeroed"),
+        (16, FP ^ 1, "fingerprint mismatch"),
+    ];
+    for &(off, val, label) in patches {
+        let mut b = bytes.clone();
+        if off == 36 {
+            b[off..off + 4].copy_from_slice(&(val as u32).to_le_bytes());
+        } else {
+            b[off..off + 8].copy_from_slice(&val.to_le_bytes());
+        }
+        reseal(&mut b);
+        std::fs::write(&hostile, &b).unwrap();
+        assert_refused_or_harmless(&hostile, label);
+    }
+    // an oversized meta_len is refused before the checksum can even be
+    // recomputed over it
+    let mut b = bytes.clone();
+    b[12..16].copy_from_slice(&(image::MAX_META_LEN + 1).to_le_bytes());
+    std::fs::write(&hostile, &b).unwrap();
+    assert_refused_or_harmless(&hostile, "meta_len over MAX_META_LEN");
+
+    // and whatever the corruption, the cold-start wrapper must hand back
+    // a usable empty cache rather than propagate the failure
+    let (cold, warm) = ClipCache::load_or_cold_bounded(&hostile, FP, TS, 0);
+    assert!(!warm, "corrupt image must not report a warm start");
+    assert_eq!(cold.source(), CacheSource::Cold);
+    cold.insert(7, 1.5);
+    assert_eq!(cold.get(7), Some(1.5));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn small_geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 64,
+        embed_dim: 16,
+        l_token: 4,
+        l_clip: 8,
+        m_rows: 6,
+        train_batch: 4,
+        fwd_batch_sizes: vec![1, 4, 8],
+    }
+}
+
+#[test]
+fn corrupt_weights_images_are_refused_or_load_bit_identically() {
+    let dir = scratch("weights");
+    let p = AttentionPredictor::seeded(small_geometry(), 7);
+    let fp = p.fingerprint();
+    let path = dir.join("weights.bin");
+    p.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let reloaded = AttentionPredictor::load(&path).unwrap();
+    assert_eq!(reloaded.fingerprint(), fp, "clean image round-trips");
+
+    let hostile = dir.join("hostile.bin");
+    // truncations at a coprime stride plus the segment boundaries
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(101).collect();
+    cuts.extend([0, image::HEADER_LEN, 4096, 8192, bytes.len() - 1]);
+    for len in cuts {
+        let len = len.min(bytes.len() - 1);
+        std::fs::write(&hostile, &bytes[..len]).unwrap();
+        assert!(
+            AttentionPredictor::load(&hostile).is_err(),
+            "truncation to {len} bytes must be refused"
+        );
+    }
+    // bit flips: weights verify eagerly, so a flip either fails the load
+    // or (padding bytes) leaves the loaded model bit-identical
+    for pos in (0..bytes.len()).step_by(97) {
+        let mut b = bytes.clone();
+        b[pos] ^= 1 << (pos % 8);
+        std::fs::write(&hostile, &b).unwrap();
+        match AttentionPredictor::load(&hostile) {
+            Err(_) => {}
+            Ok(q) => assert_eq!(
+                q.fingerprint(),
+                fp,
+                "bit flip at {pos} survived the load but changed the model"
+            ),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The entry-order hash both sides of the two-process test compute: a
+/// child that loads the shared image must reproduce it exactly.
+fn entries_hash(c: &ClipCache) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for k in 0..N_CLIPS {
+        let v = c.get(k).expect("shared image must serve every key");
+        h = (h ^ k).wrapping_mul(0x100_0000_01b3);
+        h = (h ^ v.to_bits()).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Child half of the two-process test: runs as a no-op in a normal
+/// suite pass, and only does work when re-exec'd with [`CHILD_ENV`]
+/// pointing at a shared image.
+#[test]
+fn shared_image_child() {
+    let Ok(path) = std::env::var(CHILD_ENV) else { return };
+    let c = ClipCache::load_bounded(Path::new(&path), FP, TS, 0).unwrap();
+    assert_eq!(c.source(), CacheSource::Frozen, "child must see the frozen tier");
+    println!("CHILD_OK {:016x}", entries_hash(&c));
+}
+
+#[test]
+fn two_processes_serve_bit_identical_answers_from_one_image() {
+    let dir = scratch("shared");
+    let (path, _bytes) = saved_image(&dir);
+    let expected = {
+        let c = ClipCache::load_bounded(&path, FP, TS, 0).unwrap();
+        format!("CHILD_OK {:016x}", entries_hash(&c))
+    };
+    let exe = std::env::current_exe().unwrap();
+    let spawn = || {
+        Command::new(&exe)
+            .args(["shared_image_child", "--exact", "--nocapture"])
+            .env(CHILD_ENV, &path)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .unwrap()
+    };
+    // both children hold the image open concurrently: read-only shared
+    // pages, no writer, bit-identical answers
+    let (a, b) = (spawn(), spawn());
+    for child in [a, b] {
+        let out = child.wait_with_output().unwrap();
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success(),
+            "child failed: {stdout}\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(
+            stdout.contains(&expected),
+            "child must print {expected:?}, got:\n{stdout}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

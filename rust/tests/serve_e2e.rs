@@ -28,6 +28,7 @@ fn opts(linger_us: u64, queue_depth: usize) -> ServeOptions {
         time_scale: TS,
         cache_path: None,
         cache_max_entries: 10_000,
+        cache_mmap: true,
     }
 }
 
@@ -238,6 +239,7 @@ fn shutdown_saves_the_cache_and_restart_warm_starts() {
         time_scale: 33.0,
         cache_path: Some(cache_path.clone()),
         cache_max_entries: 10_000,
+        cache_mmap: true,
     };
     let g = NativePredictor::with_defaults().geometry().clone();
     let clips = synthetic_clips(0xD15C, 0, 0, 10, &g);

@@ -25,6 +25,10 @@
 //! * **serve latency** — p50/p99/mean per client concurrency against a
 //!   `capsim serve` daemon (attention backend), with the per-sweep batch
 //!   fill showing cross-request batching engage as concurrency rises;
+//! * **serve replica throughput** — the same fixed burst against daemons
+//!   at `predict_loops` ∈ {1, 2, 4}: wall time → clips/s plus the
+//!   per-loop batch split (row-locality keeps the answers bit-identical,
+//!   so only throughput may move);
 //! * **persist load wall time** — `CPIM` image load at two cache sizes
 //!   100x apart, mmap-frozen vs heap-copied: the mmap path only parses
 //!   and checksums the fixed header, so its wall time must stay flat
@@ -211,6 +215,10 @@ fn main() -> anyhow::Result<()> {
     // batching paying off ----
     serve_latency_sweep(&cfg)?;
 
+    // ---- serve throughput per replica count: one shared weight set,
+    // N predict loops ----
+    serve_replica_sweep(&cfg)?;
+
     // ---- persistence: image load wall time at two sizes 100x apart ----
     persist_load_bench()?;
     Ok(())
@@ -295,6 +303,7 @@ fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
         listen: "127.0.0.1:0".into(),
         linger_us: 500,
         queue_depth: cfg.effective_queue_depth(),
+        predict_loops: 1,
         time_scale: 40.0,
         cache_path: None,
         cache_max_entries: cfg.cache_max_entries,
@@ -304,8 +313,7 @@ fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
     let addr = server.addr();
     let seed_cfg = cfg.clone();
     let daemon = std::thread::spawn(move || -> anyhow::Result<ServeSummary> {
-        // build the model inside the thread: Predictor is not Send
-        let model = Backend::Attention.build_forward(&seed_cfg)?;
+        let model = Backend::Attention.build_shared(&seed_cfg)?;
         server.run(model.as_ref())
     });
 
@@ -354,5 +362,73 @@ fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
         summary.stats.mean_fill(),
         summary.stats.rejected
     );
+    Ok(())
+}
+
+/// Throughput per replica count: the same fixed no-cache burst against
+/// daemons at `predict_loops` ∈ {1, 2, 4} (one weight set shared
+/// read-only by all loops). Row-locality pins the answers, so the only
+/// thing allowed to move across rows is the wall clock — and the
+/// per-loop batch split shows whether the replicas actually share load.
+fn serve_replica_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<()> {
+    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary};
+
+    let g = capsim::runtime::default_geometry();
+    let mut t = Table::new(
+        "Serve throughput — replicated predict loops (attention daemon, fixed burst)",
+        &["Loops", "Clips", "wall s", "clips/s", "fill", "per-loop batches"],
+    );
+    for &n_loops in &[1usize, 2, 4] {
+        let opts = ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            linger_us: 500,
+            queue_depth: cfg.effective_queue_depth().max(8),
+            predict_loops: n_loops,
+            time_scale: 40.0,
+            cache_path: None,
+            cache_max_entries: cfg.cache_max_entries,
+            cache_mmap: true,
+        };
+        let server = Server::bind(opts)?;
+        let addr = server.addr();
+        let seed_cfg = cfg.clone();
+        let daemon = std::thread::spawn(move || -> anyhow::Result<ServeSummary> {
+            let model = Backend::Attention.build_shared(&seed_cfg)?;
+            server.run(model.as_ref())
+        });
+
+        // same burst every row (same seed): only the replica count moves
+        let spec = BurstSpec {
+            clients: 8,
+            requests: 16,
+            clips: 6,
+            use_cache: false,
+            seed: 0x2E9_11CA,
+        };
+        let clips = (spec.clients * spec.requests * spec.clips) as f64;
+        let t0 = std::time::Instant::now();
+        burst(addr, &g, &spec)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        Client::connect(addr)?.shutdown()?;
+        let summary = daemon.join().expect("serve daemon panicked")?;
+        assert_eq!(summary.stats.per_loop.len(), n_loops);
+        let per_loop = summary
+            .stats
+            .per_loop
+            .iter()
+            .map(|l| l.batches.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        t.row(vec![
+            n_loops.to_string(),
+            format!("{clips:.0}"),
+            format!("{wall:.3}"),
+            format!("{:.0}", clips / wall.max(1e-9)),
+            format!("{:.2}", summary.stats.mean_fill()),
+            per_loop,
+        ]);
+    }
+    t.emit("fig7_serve_replicas");
     Ok(())
 }

@@ -225,11 +225,20 @@ pub struct PipelineConfig {
     /// Listen address of the `capsim serve` daemon (`--listen` /
     /// `serve.listen`); port `0` picks a free port.
     pub serve_listen: String,
-    /// How long (µs) the serve daemon's predict loop lets a partial
-    /// batch wait for more requests before flushing (`--linger-us` /
+    /// How long (µs) a serve predict loop lets a partial batch wait for
+    /// more requests before flushing (`--linger-us` /
     /// `serve.linger_us`). Larger values trade first-clip latency for
-    /// fuller cross-request batches.
+    /// fuller cross-request batches. Clamped to
+    /// [`serve::MAX_LINGER_US`](crate::serve::MAX_LINGER_US) (60 s) at
+    /// parse time so the `Busy` retry hint derived from it stays sane.
     pub serve_linger_us: u64,
+    /// Replicated predict loops of the serve daemon (`--predict-loops`
+    /// / `serve.predict_loops`). Each loop owns private
+    /// accumulator/runner state over one shared read-only weight set;
+    /// row-locality keeps answers bit-identical for every value. `0` =
+    /// auto (a small multiple of the cores, see
+    /// [`PipelineConfig::effective_predict_loops`]).
+    pub serve_predict_loops: usize,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -259,6 +268,7 @@ impl Default for PipelineConfig {
             cache_mmap: true,
             serve_listen: "127.0.0.1:4650".to_string(),
             serve_linger_us: 2_000,
+            serve_predict_loops: 0,
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -295,7 +305,10 @@ impl PipelineConfig {
             .max(0) as usize;
         c.cache_mmap = t.bool("pipeline.cache_mmap", c.cache_mmap);
         c.serve_listen = t.str("serve.listen", &c.serve_listen);
-        c.serve_linger_us = t.int("serve.linger_us", c.serve_linger_us as i64).max(0) as u64;
+        c.serve_linger_us = (t.int("serve.linger_us", c.serve_linger_us as i64).max(0) as u64)
+            .min(crate::serve::MAX_LINGER_US);
+        c.serve_predict_loops =
+            t.int("serve.predict_loops", c.serve_predict_loops as i64).max(0) as usize;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -377,6 +390,18 @@ impl PipelineConfig {
             self.batch_depth
         }
     }
+
+    /// Predict-loop replicas the serve daemon should spawn (resolves
+    /// `0 = auto`: one per core up to 4 — the forward pass already
+    /// parallelizes within a batch, so a handful of loops saturates the
+    /// admission side long before weight-sharing stops paying).
+    pub fn effective_predict_loops(&self) -> usize {
+        if self.serve_predict_loops == 0 {
+            crate::coordinator::pool::default_threads().min(4).max(1)
+        } else {
+            self.serve_predict_loops
+        }
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +467,7 @@ mod tests {
             [serve]
             listen = "127.0.0.1:9999"
             linger_us = 750
+            predict_loops = 3
             [o3]
             rob_entries = 128
             [train]
@@ -467,6 +493,8 @@ mod tests {
         assert!(!c.cache_mmap, "cache_mmap = false forces the heap tier");
         assert_eq!(c.serve_listen, "127.0.0.1:9999");
         assert_eq!(c.serve_linger_us, 750);
+        assert_eq!(c.serve_predict_loops, 3);
+        assert_eq!(c.effective_predict_loops(), 3);
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -497,6 +525,19 @@ mod tests {
         assert!(c.cache_mmap, "mmap residency is the default");
         assert_eq!(c.serve_listen, "127.0.0.1:4650");
         assert_eq!(c.serve_linger_us, 2_000);
+        assert_eq!(c.serve_predict_loops, 0, "0 = auto");
+        let loops = c.effective_predict_loops();
+        assert!((1..=4).contains(&loops), "auto picks 1..=4 loops, got {loops}");
+    }
+
+    #[test]
+    fn serve_linger_and_predict_loops_are_clamped_at_parse_time() {
+        // an absurd linger_us clamps to MAX_LINGER_US instead of later
+        // truncating the u32 retry hint; negative loop counts mean auto
+        let t = parse_toml("[serve]\nlinger_us = 999_999_999_999\npredict_loops = -2").unwrap();
+        let c = PipelineConfig::from_toml(&t);
+        assert_eq!(c.serve_linger_us, crate::serve::MAX_LINGER_US);
+        assert_eq!(c.serve_predict_loops, 0, "negative clamps to auto");
     }
 
     #[test]

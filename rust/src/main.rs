@@ -10,7 +10,8 @@
 //! capsim dataset --out F [--config F] build + save the golden dataset
 //! capsim train  [--steps N] [--variant V] train a predictor end-to-end
 //! capsim compare [--config F]       Fig.-7 style gem5 vs CAPSim timing
-//! capsim serve  [--listen A] [--linger-us N] run the prediction daemon
+//! capsim serve  [--listen A] [--linger-us N] [--predict-loops N]
+//!               run the prediction daemon
 //!               (--stats / --shutdown query a running daemon instead)
 //! capsim burst  [--listen A] [--clients N]  fire a client burst at a daemon
 //! capsim backends                   CPU features, kernel tiers, backends
@@ -30,7 +31,7 @@ use capsim::o3::O3Core;
 use capsim::predictor::{train, TrainParams};
 use capsim::report::Table;
 use capsim::runtime::{cpu_features, Backend, KernelTier, Predictor, Runtime};
-use capsim::serve::{BurstSpec, Client, Server, ServeOptions};
+use capsim::serve::{BurstSpec, Client, Server, ServeOptions, MAX_LINGER_US};
 use capsim::util::stats;
 use capsim::workloads::{suite, Scale};
 
@@ -160,10 +161,15 @@ fn help() {
          serve:  --listen ADDR (default 127.0.0.1:4650 / serve.listen TOML;\n\
                 port 0 picks a free port)\n\
                 --linger-us N (how long a partial batch waits for more\n\
-                requests before flushing; default 2000 / serve.linger_us)\n\
-                --queue-depth N (admission bound; overload answers Busy +\n\
-                retry hint), --cache-dir DIR (persistent clip cache, saved\n\
-                on graceful shutdown), --time-scale X (cache key part)\n\
+                requests before flushing; default 2000 / serve.linger_us;\n\
+                capped at 60s)\n\
+                --predict-loops N (replicated predict loops over one shared\n\
+                read-only weight set; 0 = auto / serve.predict_loops;\n\
+                row-locality keeps answers bit-identical for every N)\n\
+                --queue-depth N (admission bound, split across the loops;\n\
+                overload answers Busy + retry hint), --cache-dir DIR\n\
+                (persistent clip cache, saved on graceful shutdown),\n\
+                --time-scale X (cache key part)\n\
                 --stats / --shutdown (query or stop a *running* daemon)\n\
          burst:  --listen ADDR  --clients N  --requests N  --clips N\n\
                 --seed N  --no-cache  --expect-cross-batch (fail unless\n\
@@ -485,6 +491,14 @@ fn resolve_addr(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result
 }
 
 fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<ServeOptions> {
+    let mut cfg = cfg.clone();
+    if let Some(v) = flags.get("predict-loops") {
+        let n: i64 = v
+            .parse()
+            .map_err(|_| anyhow!("--predict-loops expects an integer, got {v}"))?;
+        // 0 (or negative) means auto, like the serve.predict_loops key
+        cfg.serve_predict_loops = n.max(0) as usize;
+    }
     let mut opts = ServeOptions {
         listen: flags
             .get("listen")
@@ -492,6 +506,7 @@ fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<S
             .unwrap_or_else(|| cfg.serve_listen.clone()),
         linger_us: cfg.serve_linger_us,
         queue_depth: cfg.effective_queue_depth(),
+        predict_loops: cfg.effective_predict_loops(),
         time_scale: 40.0,
         cache_path: if cfg.cache_dir.is_empty() {
             None
@@ -505,6 +520,15 @@ fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<S
         opts.linger_us = v
             .parse()
             .map_err(|_| anyhow!("--linger-us expects an integer, got {v}"))?;
+    }
+    // validate here, at the option edge, so the Busy retry hint derived
+    // from the linger can never truncate (the TOML path clamps likewise)
+    if opts.linger_us > MAX_LINGER_US {
+        eprintln!(
+            "warning: --linger-us {} exceeds the {MAX_LINGER_US} us ceiling; clamping",
+            opts.linger_us
+        );
+        opts.linger_us = MAX_LINGER_US;
     }
     if let Some(v) = flags.get("time-scale") {
         opts.time_scale = v
@@ -520,6 +544,17 @@ fn print_stats(stats: &capsim::serve::StatsReply) {
         stats.requests, stats.rejected, stats.batches, stats.cross_batches, stats.mean_fill()
     );
     println!("predicted {} clips through the model", stats.predicted_clips);
+    if stats.per_loop.len() > 1 {
+        for (i, l) in stats.per_loop.iter().enumerate() {
+            println!(
+                "predict loop {i}: {} batches, {} clips, mean fill {:.2}, {} cross-request",
+                l.batches,
+                l.predicted_clips,
+                l.mean_fill(),
+                l.cross_batches
+            );
+        }
+    }
     println!(
         "cache: {} clips resident ({}, {} mmap-frozen), hit rate {:.1}% \
          ({} hits / {} lookups), {} evictions",
@@ -556,19 +591,23 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
              dependency-free backend; pick --backend native or --backend attention"
         );
     }
-    let model = cfg.backend.build_forward(&cfg)?;
+    // one weight set, shared read-only by every predict-loop replica
+    let model = cfg.backend.build_shared(&cfg)?;
     let opts = serve_opts(flags, &cfg)?;
+    let (linger_us, queue_depth, predict_loops) =
+        (opts.linger_us, opts.queue_depth, opts.predict_loops);
     let server = Server::bind(opts)?;
     let tier = model
         .kernel_tier()
         .map(|t| format!(", kernel tier {t}"))
         .unwrap_or_default();
     println!(
-        "serving {} predictions on {} (linger {} us, queue depth {}{tier})",
+        "serving {} predictions on {} (linger {} us, queue depth {}, predict loops {}{tier})",
         cfg.backend,
         server.addr(),
-        cfg.serve_linger_us,
-        cfg.effective_queue_depth()
+        linger_us,
+        queue_depth,
+        predict_loops
     );
     let summary = server.run(model.as_ref())?;
     println!("warm start: {}", summary.warm_start);
@@ -652,6 +691,26 @@ mod tests {
     fn empty_args() {
         assert!(parse_flags(&[]).is_empty());
     }
+
+    #[test]
+    fn serve_opts_clamps_linger_and_resolves_predict_loops() {
+        use std::collections::HashMap;
+        let cfg = capsim::config::PipelineConfig::default();
+        let mut flags: HashMap<String, String> = HashMap::new();
+        // regression for the wrapped retry hint: an absurd --linger-us
+        // clamps at the option edge instead of truncating downstream
+        flags.insert("linger-us".into(), "999999999999".into());
+        flags.insert("predict-loops".into(), "3".into());
+        let opts = super::serve_opts(&flags, &cfg).unwrap();
+        assert_eq!(opts.linger_us, capsim::serve::MAX_LINGER_US);
+        assert_eq!(opts.predict_loops, 3);
+        // 0 or negative means auto, which resolves to at least one loop
+        flags.insert("predict-loops".into(), "-1".into());
+        let opts = super::serve_opts(&flags, &cfg).unwrap();
+        assert!((1..=4).contains(&opts.predict_loops));
+        flags.insert("predict-loops".into(), "not-a-number".into());
+        assert!(super::serve_opts(&flags, &cfg).is_err());
+    }
 }
 
 /// `capsim backends` — what this host can run: detected CPU features,
@@ -698,6 +757,15 @@ fn backends_cmd(flags: &HashMap<String, String>) -> Result<()> {
         };
         println!("  {:<10} {needs}{mark}", b.name());
     }
+
+    println!(
+        "serve: predict loops {} (serve.predict_loops {}; 0 = auto), linger {} us, \
+         queue depth {}",
+        cfg.effective_predict_loops(),
+        cfg.serve_predict_loops,
+        cfg.serve_linger_us,
+        cfg.effective_queue_depth()
+    );
 
     use capsim::util::image;
     println!("persistence:");

@@ -23,6 +23,7 @@
 use std::fmt;
 use std::path::Path;
 use std::str::FromStr;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -85,47 +86,33 @@ impl Backend {
     pub fn build_forward(self, cfg: &PipelineConfig) -> Result<Box<dyn Predictor>> {
         match self {
             Backend::Native => Ok(Box::new(NativePredictor::with_defaults())),
-            Backend::Attention => {
-                let tier = cfg.effective_kernel_tier()?;
-                let path = Path::new(&cfg.artifacts).join(ATTENTION_WEIGHTS_FILE);
-                if path.is_file() {
-                    let p = AttentionPredictor::load(&path)?;
-                    // the dataset is sliced/tokenized with the default
-                    // geometry constants, so a weights file from another
-                    // shape must be refused, not silently preferred
-                    // (mirrors the PJRT manifest re-validation)
-                    let (g, want) = (p.geometry(), super::default_geometry());
-                    if g.l_token != want.l_token
-                        || g.l_clip != want.l_clip
-                        || g.m_rows != want.m_rows
-                        || g.vocab_size < want.vocab_size
-                    {
-                        return Err(anyhow!(
-                            "{path:?}: weights geometry (l_token {}, l_clip {}, m {}, vocab {}) \
-                             does not match the dataset constants (l_token {}, l_clip {}, m {}, \
-                             vocab >= {})",
-                            g.l_token,
-                            g.l_clip,
-                            g.m_rows,
-                            g.vocab_size,
-                            want.l_token,
-                            want.l_clip,
-                            want.m_rows,
-                            want.vocab_size
-                        ));
-                    }
-                    Ok(Box::new(p.with_tier(tier)))
-                } else {
-                    let g = super::default_geometry();
-                    Ok(Box::new(AttentionPredictor::seeded(g, cfg.seed).with_tier(tier)))
-                }
-            }
+            Backend::Attention => Ok(Box::new(build_attention(cfg)?)),
             Backend::Pjrt => {
                 let rt = Runtime::load(Path::new(&cfg.artifacts))?;
                 let mut model = rt.load_variant("capsim")?;
                 model.init_params(cfg.seed as u32)?;
                 Ok(Box::new(model))
             }
+        }
+    }
+
+    /// Construct a forward-only predictor that can be **shared
+    /// read-only across threads** — the form the replicated serve
+    /// predict loops need. Same construction rules as
+    /// [`Backend::build_forward`] (weights deserialize once; replicas
+    /// are references, not copies), but the return type carries the
+    /// `Send + Sync` bounds. `Native` and `Attention` are plain-data
+    /// models whose forward pass is `&self` over a caller-owned
+    /// workspace, so sharing is free; `Pjrt` holds a foreign runtime
+    /// handle with no thread-safety contract and is refused.
+    pub fn build_shared(self, cfg: &PipelineConfig) -> Result<Arc<dyn Predictor + Send + Sync>> {
+        match self {
+            Backend::Native => Ok(Arc::new(NativePredictor::with_defaults())),
+            Backend::Attention => Ok(Arc::new(build_attention(cfg)?)),
+            Backend::Pjrt => Err(anyhow!(
+                "the pjrt backend cannot be shared across predict loops \
+                 (its runtime handle is not thread-safe); use --backend attention or native"
+            )),
         }
     }
 
@@ -166,6 +153,48 @@ impl Backend {
             }
             _ => Ok((self.build_forward(cfg)?, ds.mean_time() as f32)),
         }
+    }
+}
+
+/// Build the pure-Rust attention predictor: load
+/// `artifacts/attention.bin` when present (refusing a geometry that
+/// does not match the dataset constants), else seed deterministically
+/// from `cfg.seed`; kernels run on the resolved tier. Shared by
+/// [`Backend::build_forward`] and [`Backend::build_shared`] so both
+/// paths construct bit-identical models.
+fn build_attention(cfg: &PipelineConfig) -> Result<AttentionPredictor> {
+    let tier = cfg.effective_kernel_tier()?;
+    let path = Path::new(&cfg.artifacts).join(ATTENTION_WEIGHTS_FILE);
+    if path.is_file() {
+        let p = AttentionPredictor::load(&path)?;
+        // the dataset is sliced/tokenized with the default geometry
+        // constants, so a weights file from another shape must be
+        // refused, not silently preferred (mirrors the PJRT manifest
+        // re-validation)
+        let (g, want) = (p.geometry(), super::default_geometry());
+        if g.l_token != want.l_token
+            || g.l_clip != want.l_clip
+            || g.m_rows != want.m_rows
+            || g.vocab_size < want.vocab_size
+        {
+            return Err(anyhow!(
+                "{path:?}: weights geometry (l_token {}, l_clip {}, m {}, vocab {}) \
+                 does not match the dataset constants (l_token {}, l_clip {}, m {}, \
+                 vocab >= {})",
+                g.l_token,
+                g.l_clip,
+                g.m_rows,
+                g.vocab_size,
+                want.l_token,
+                want.l_clip,
+                want.m_rows,
+                want.vocab_size
+            ));
+        }
+        Ok(p.with_tier(tier))
+    } else {
+        let g = super::default_geometry();
+        Ok(AttentionPredictor::seeded(g, cfg.seed).with_tier(tier))
     }
 }
 
@@ -249,6 +278,27 @@ mod tests {
         let t = a.kernel_tier().expect("attention reports its tier");
         assert_ne!(t, KernelTier::Auto);
         assert!(t.available());
+    }
+
+    #[test]
+    fn build_shared_matches_build_forward_and_refuses_pjrt() {
+        let cfg = cfg_without_artifacts();
+        for b in [Backend::Native, Backend::Attention] {
+            let boxed = b.build_forward(&cfg).unwrap();
+            let shared = b.build_shared(&cfg).unwrap();
+            assert_eq!(
+                boxed.fingerprint(),
+                shared.fingerprint(),
+                "{b}: shared replicas must hit the same cache identity"
+            );
+        }
+        let err = Backend::Pjrt.build_shared(&cfg).unwrap_err();
+        assert!(err.to_string().contains("cannot be shared"));
+        // the bound the replicated predict loops rely on, checked at
+        // compile time: a shared model crosses threads read-only
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<AttentionPredictor>();
+        assert_send_sync::<NativePredictor>();
     }
 
     #[test]

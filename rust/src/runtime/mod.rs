@@ -114,33 +114,43 @@
 //! ## Serving architecture
 //!
 //! The [`serve`](crate::serve) daemon is the runtime's long-lived
-//! deployment shape: one backend built once through
-//! [`Backend::build_forward`], then shared by every client connection.
-//! A request travels
+//! deployment shape: one weight set built once through
+//! [`Backend::build_shared`] (an `Arc<dyn Predictor + Send + Sync>` —
+//! weights deserialize exactly once), then shared read-only by N
+//! replicated predict loops (`--predict-loops`). A request travels
 //!
 //! ```text
-//!   client ──frame──▶ session thread ──bounded admission──▶ predict loop
-//!                      (validate against    (queue_depth;     (one model,
-//!                       ModelGeometry)       full → Busy +     one Workspace,
-//!                                            retry hint)       one shared
-//!                                                              BatchAccumulator)
+//!   client ──frame──▶ session thread ──round-robin over──▶ predict loop i
+//!                      (validate against   N bounded        (private Workspace,
+//!                       ModelGeometry)     queues; all       BatchRunner and
+//!                                          full → Busy +     BatchAccumulator;
+//!                                          retry hint)       SHARED weights+cache)
 //!   client ◀─reply── settle: rows routed back per request ◀── forward
 //! ```
 //!
-//! Clips from *different* requests fill **one** accumulator, flushed on
+//! Replication is cheap because the forward pass is `&self`: all
+//! mutable state (workspace arenas, accumulator, routing maps) lives in
+//! the loop, so a "replica" is a reference to the one model plus a few
+//! KB of private buffers — never a second copy of the weights. Clips
+//! from *different* requests fill each loop's accumulator, flushed on
 //! batch-full or a small linger deadline, so concurrent small requests
-//! ride full batches. This is only sound because the dependency-free
-//! backends are **row-local**: a clip's prediction is a function of that
-//! clip alone, never of its batch neighbors or padding (the invariance
-//! `tests/prop_attention.rs` pins). Cross-request batching therefore
-//! changes throughput and latency, never answers — concurrent serving
-//! is bit-identical to single-shot calls, which `tests/serve_e2e.rs`
-//! asserts end to end. The daemon's persistent clip cache reuses the
-//! coordinator's [`ClipCache`](crate::coordinator::ClipCache), keyed by
-//! [`Predictor::fingerprint`] + `time_scale` like every other warm
-//! start. The `pjrt` backend is excluded from serving: its predictions
-//! are batch-composition sensitive (≈1e-3), which would break the
-//! bit-identical contract.
+//! ride full batches. Both layers of freedom — which replica a request
+//! lands on, and which batch mix it rides — are only sound because the
+//! dependency-free backends are **row-local**: a clip's prediction is a
+//! function of that clip alone, never of its batch neighbors or padding
+//! (the invariance `tests/prop_attention.rs` pins). Dispatch and batch
+//! composition therefore change throughput and latency, never answers —
+//! serving at any `predict_loops` is bit-identical to single-shot
+//! calls, which the `tests/serve_e2e.rs` replica-invariance matrix
+//! asserts end to end across loop counts {1, 2, 4}. The daemon's
+//! persistent clip cache reuses the coordinator's concurrent
+//! [`ClipCache`](crate::coordinator::ClipCache) (one instance shared by
+//! all loops), keyed by [`Predictor::fingerprint`] + `time_scale` like
+//! every other warm start; per-loop forward counters surface in
+//! `StatsReply::per_loop`. The `pjrt` backend is excluded from serving:
+//! its predictions are batch-composition sensitive (≈1e-3) and its
+//! runtime handle has no thread-safety contract, either of which would
+//! break the replicated bit-identical contract.
 
 pub mod attention;
 pub mod backend;

@@ -10,13 +10,23 @@
 //! ([`wire`]).
 //!
 //! The piece that makes a *shared* daemon worthwhile is cross-request
-//! batching ([`server`]): every client's cache-missing clips feed one
+//! batching ([`server`]): every client's cache-missing clips feed a
 //! [`BatchAccumulator`](crate::predictor::BatchAccumulator) — the same
 //! type the suite engine fills across benchmark boundaries — so
 //! concurrent small requests ride full forward batches instead of each
 //! paying a padded one. Row-local backends make this invisible in the
 //! answers: predictions are bit-identical to single-shot runs, whatever
 //! the batch mix.
+//!
+//! The predict side scales horizontally (`--predict-loops N`): N
+//! replicated predict loops pull from the bounded admission tier, each
+//! with a private accumulator and [`BatchRunner`] state over **one**
+//! shared read-only weight set and the shared concurrent clip cache.
+//! Row-locality again does the correctness work — which replica (and
+//! which batch mix) serves a clip can never change its bits, so replica
+//! count is a pure throughput knob, proved by the `serve_e2e`
+//! replica-invariance matrix. [`StatsReply::per_loop`] reports each
+//! replica's batch/fill counters so load sharing is observable.
 //!
 //! [`client`] is the matching client plus the deterministic burst-load
 //! harness used by the e2e tests, the CI smoke job, and the Fig.-7
@@ -27,5 +37,7 @@ pub mod server;
 pub mod wire;
 
 pub use client::{burst, synthetic_clips, BurstReport, BurstSpec, Client, PredictOutcome};
-pub use server::{Server, ServeOptions, ServeSummary};
-pub use wire::{Request, Response, StatsReply, WireClip, FLAG_USE_CACHE, MAX_FRAME};
+pub use server::{retry_hint_ms, Server, ServeOptions, ServeSummary, MAX_LINGER_US};
+pub use wire::{
+    LoopStats, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE, MAX_FRAME,
+};

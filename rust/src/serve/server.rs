@@ -2,37 +2,41 @@
 //! many clients over the [`wire`](super::wire) protocol.
 //!
 //! ```text
-//!  client sessions (1 thread each)        predict loop (caller thread)
-//!  ┌─────────────────────────────┐   admission   ┌──────────────────────┐
-//!  │ read frame → validate clips │──sync_channel─▶ cache lookups        │
-//!  │ try_send  (Busy when full)  │  (bounded by  │ BatchAccumulator     │
-//!  │ block on per-request reply ◀│─ queue_depth) │   (cross-request)    │
-//!  └─────────────────────────────┘               │ flush: full batch or │
-//!                                                │   linger deadline    │
-//!                                                │ settle → route rows  │
-//!                                                │   back per request   │
-//!                                                └──────────────────────┘
+//!  client sessions (1 thread each)            N predict loops (replicas)
+//!  ┌─────────────────────────────┐  per-loop  ┌──────────────────────┐
+//!  │ read frame → validate clips │  bounded   │ loop 0: cache lookups│
+//!  │ round-robin try_send over   │──channels──▶ BatchAccumulator     │
+//!  │   the loops; all full →Busy │            │ flush: full batch or │
+//!  │ block on per-request reply ◀│────────────│   linger deadline    │
+//!  └─────────────────────────────┘            ├──────────────────────┤
+//!                                             │ loop 1: …            │
+//!                                             └──────────────────────┘
 //! ```
 //!
-//! One model, one [`BatchRunner`], one predict loop: requests from
-//! different clients fill **one shared accumulator**, so concurrent
-//! small requests ride full batches (`StatsReply::cross_batches`,
-//! `mean_fill`). Because every registered backend is row-local (the
-//! batch-invariance contract pinned by the runtime tests), a clip's
-//! prediction is bit-identical whether its batch was filled by one
-//! client or five — serving changes throughput, never answers.
+//! **One read-only model, N predict loops.** Every loop shares the same
+//! weight set (the forward pass is `&self`; all mutable forward state
+//! lives in the loop's own [`BatchRunner`]) and the same concurrent
+//! [`ClipCache`], but owns a private `BatchAccumulator` and in-flight
+//! routing map. Requests are spread across loops round-robin, failing
+//! over to any loop with queue room. Because every registered backend is
+//! row-local (the batch-invariance contract pinned by the runtime
+//! tests), a clip's prediction is bit-identical whatever replica and
+//! whatever batch mix served it — replication changes throughput, never
+//! answers (`tests/serve_e2e.rs` proves it across `predict_loops`
+//! ∈ {1, 2, 4}).
 //!
-//! Backpressure is the bounded admission channel: when `queue_depth`
-//! requests are already waiting, new ones bounce immediately with
-//! [`Response::Busy`] carrying a retry hint, so daemon memory stays
-//! bounded no matter how many clients pile on. Shutdown drains: accepted
-//! work is finished, the tail batch flushed, and the clip cache saved
-//! before [`Server::run`] returns.
+//! Backpressure is the bounded admission tier: each loop's channel holds
+//! `queue_depth / N` waiting requests, and only when **every** loop is
+//! full does a request bounce with [`Response::Busy`] + a retry hint, so
+//! daemon memory stays bounded no matter how many clients pile on.
+//! Shutdown drains: accepted work is finished, every replica flushes its
+//! own tail batch, and the clip cache is saved before [`Server::run`]
+//! returns.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
@@ -44,19 +48,38 @@ use crate::predictor::{BatchAccumulator, BatchRunner};
 use crate::runtime::{ModelGeometry, Predictor};
 
 use super::wire::{
-    read_frame, write_frame, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE,
+    read_frame, write_frame, LoopStats, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE,
 };
+
+/// Upper bound on [`ServeOptions::linger_us`] (60 s). Option parsing
+/// (CLI and TOML) clamps to this, and [`retry_hint_ms`] saturates
+/// anyway, so an absurd linger can never wrap the `u32` retry hint into
+/// a tiny value that makes clients hammer an overloaded daemon.
+pub const MAX_LINGER_US: u64 = 60_000_000;
+
+/// The `Busy` retry hint for a given linger: about one linger period,
+/// at least 1 ms, **saturating** on the `u64 → u32` conversion (a plain
+/// `as u32` silently truncated oversized lingers to a wrapped hint).
+pub fn retry_hint_ms(linger_us: u64) -> u32 {
+    u32::try_from((linger_us / 1_000).max(1)).unwrap_or(u32::MAX)
+}
 
 /// Daemon configuration (CLI flags + `[serve]` TOML keys).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Listen address (`--listen`); port 0 picks a free port.
     pub listen: String,
-    /// How long a partial batch may wait for more requests (`--linger-us`).
+    /// How long a partial batch may wait for more requests (`--linger-us`,
+    /// clamped to [`MAX_LINGER_US`] at parse time).
     pub linger_us: u64,
-    /// Admission-queue bound (`--queue-depth`): requests waiting for the
-    /// predict loop beyond this bounce with `Busy`.
+    /// Admission bound (`--queue-depth`): total requests waiting for the
+    /// predict loops beyond this bounce with `Busy`. Split evenly across
+    /// the loops (each gets at least 1 slot).
     pub queue_depth: usize,
+    /// Replicated predict loops (`--predict-loops` /
+    /// `serve.predict_loops`): each owns a private accumulator/runner
+    /// over the shared read-only weights. Clamped to >= 1.
+    pub predict_loops: usize,
     /// Prediction time scale — part of the cache key.
     pub time_scale: f32,
     /// Warm-start / save path for the persistent clip cache.
@@ -75,6 +98,7 @@ impl Default for ServeOptions {
             listen: "127.0.0.1:4650".into(),
             linger_us: 2_000,
             queue_depth: 16,
+            predict_loops: 1,
             time_scale: 40.0,
             cache_path: None,
             cache_max_entries: 1_000_000,
@@ -93,40 +117,67 @@ pub struct ServeSummary {
     pub warm_start: bool,
 }
 
+/// Forward-side counters owned by one predict loop. Per-loop rather
+/// than global so `StatsReply::per_loop` can show whether the replicas
+/// actually share the load (and the fill each one achieves).
 #[derive(Default)]
-struct Counters {
-    requests: AtomicU64,
-    rejected: AtomicU64,
+struct LoopCounters {
     predicted_clips: AtomicU64,
     batches: AtomicU64,
     cross_batches: AtomicU64,
 }
 
+struct Counters {
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    loops: Vec<LoopCounters>,
+}
+
+impl Counters {
+    fn new(n_loops: usize) -> Counters {
+        Counters {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            loops: (0..n_loops).map(|_| LoopCounters::default()).collect(),
+        }
+    }
+}
+
 fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
     let cs = cache.stats();
+    let per_loop: Vec<LoopStats> = counters
+        .loops
+        .iter()
+        .map(|l| LoopStats {
+            batches: l.batches.load(Ordering::Relaxed),
+            predicted_clips: l.predicted_clips.load(Ordering::Relaxed),
+            cross_batches: l.cross_batches.load(Ordering::Relaxed),
+        })
+        .collect();
     StatsReply {
         requests: counters.requests.load(Ordering::Relaxed),
         rejected: counters.rejected.load(Ordering::Relaxed),
-        predicted_clips: counters.predicted_clips.load(Ordering::Relaxed),
-        batches: counters.batches.load(Ordering::Relaxed),
-        cross_batches: counters.cross_batches.load(Ordering::Relaxed),
+        predicted_clips: per_loop.iter().map(|l| l.predicted_clips).sum(),
+        batches: per_loop.iter().map(|l| l.batches).sum(),
+        cross_batches: per_loop.iter().map(|l| l.cross_batches).sum(),
         cache_hits: cs.hits,
         cache_misses: cs.misses,
         cache_len: cache.len() as u64,
         cache_evictions: cs.evictions,
         cache_frozen_len: cache.frozen_len() as u64,
         cache_source: cache.source().code(),
+        per_loop,
     }
 }
 
-/// One admitted predict request, queued for the predict loop.
+/// One admitted predict request, queued for a predict loop.
 struct Job {
     clips: Vec<(u64, ClipSample)>,
     use_cache: bool,
     reply: SyncSender<Vec<f64>>,
 }
 
-/// Routing tag threaded through the shared accumulator:
+/// Routing tag threaded through a loop's accumulator:
 /// `(request id, slot in that request, clip content key)`.
 type Tag = (u64, usize, u64);
 
@@ -159,9 +210,13 @@ impl Server {
     }
 
     /// Serve until a `Shutdown` request (or a fatal model error), then
-    /// drain, save the cache, and report. Blocks the calling thread —
-    /// the predict loop runs here so the model never has to be `Send`.
-    pub fn run(self, model: &dyn Predictor) -> Result<ServeSummary> {
+    /// drain every replica's tail, save the cache, and report. Blocks
+    /// the calling thread until the drain completes. The model is
+    /// shared read-only by all `predict_loops` replicas (`Send + Sync`;
+    /// each loop keeps its own mutable forward state), so one weight
+    /// set in memory serves every loop — no per-replica
+    /// re-deserialization.
+    pub fn run(self, model: &(dyn Predictor + Send + Sync)) -> Result<ServeSummary> {
         let Server { listener, opts } = self;
         let addr = listener.local_addr().context("listener address")?;
         let (cache, warm_start) = match opts.cache_path.as_deref() {
@@ -174,12 +229,24 @@ impl Server {
             ),
             None => (ClipCache::bounded(opts.cache_max_entries), false),
         };
-        let counters = Counters::default();
+        let n_loops = opts.predict_loops.max(1);
+        let counters = Counters::new(n_loops);
         let shutdown = AtomicBool::new(false);
-        let queue_depth = opts.queue_depth.max(1);
-        let (tx, rx) = sync_channel::<Job>(queue_depth);
-        let retry_ms = (opts.linger_us / 1_000).max(1) as u32;
-        let linger = Duration::from_micros(opts.linger_us);
+        // split the admission bound across the loops; every loop keeps at
+        // least one slot so a large replica count never starves admission
+        let per_loop_depth = opts.queue_depth.max(1).div_ceil(n_loops);
+        let admission_cap = per_loop_depth * n_loops;
+        let mut txs = Vec::with_capacity(n_loops);
+        let mut rxs = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            let (tx, rx) = sync_channel::<Job>(per_loop_depth);
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let rr = AtomicUsize::new(0);
+        let linger_us = opts.linger_us.min(MAX_LINGER_US);
+        let retry_ms = retry_hint_ms(linger_us);
+        let linger = Duration::from_micros(linger_us);
         let time_scale = opts.time_scale;
         let g = model.geometry().clone();
 
@@ -187,10 +254,12 @@ impl Server {
             let cache = &cache;
             let counters = &counters;
             let shutdown = &shutdown;
-            // Acceptor owns the only long-lived sender clone; sessions
-            // clone from it. When the acceptor breaks out and the last
-            // session ends, the channel disconnects and the predict loop
-            // below drains out — that ordering *is* the graceful drain.
+            let rr = &rr;
+            // Acceptor owns the only long-lived sender clones; sessions
+            // clone from them. When the acceptor breaks out and the last
+            // session ends, every loop's channel disconnects and the
+            // predict loops below drain out — that ordering *is* the
+            // graceful drain of all N tails.
             s.spawn(move || {
                 for stream in listener.incoming() {
                     if shutdown.load(Ordering::SeqCst) {
@@ -200,24 +269,42 @@ impl Server {
                         Ok(st) => st,
                         Err(_) => continue,
                     };
-                    let tx = tx.clone();
+                    let txs = txs.clone();
                     let g = g.clone();
                     s.spawn(move || {
                         session(
-                            stream, tx, g, cache, counters, shutdown, retry_ms, addr,
-                            queue_depth,
+                            stream, txs, rr, g, cache, counters, shutdown, retry_ms, addr,
+                            admission_cap,
                         )
                     });
                 }
             });
-            let r = predict_loop(model, rx, cache, counters, linger, time_scale);
-            if r.is_err() {
-                // fatal model error: stop accepting; sessions see the
-                // disconnected queue and answer with Error
-                shutdown.store(true, Ordering::SeqCst);
-                let _ = TcpStream::connect(addr);
+            let handles: Vec<_> = rxs
+                .into_iter()
+                .enumerate()
+                .map(|(i, rx)| {
+                    let lc = &counters.loops[i];
+                    s.spawn(move || {
+                        let r = predict_loop(model, rx, cache, lc, linger, time_scale);
+                        if r.is_err() {
+                            // fatal model error in this replica: stop
+                            // accepting; sessions fail over to surviving
+                            // loops and, once none are left, answer Error
+                            shutdown.store(true, Ordering::SeqCst);
+                            let _ = TcpStream::connect(addr);
+                        }
+                        r
+                    })
+                })
+                .collect();
+            let mut first = Ok(());
+            for h in handles {
+                let r = h.join().expect("predict loop panicked");
+                if first.is_ok() {
+                    first = r;
+                }
             }
-            r
+            first
         });
         loop_result?;
 
@@ -287,11 +374,48 @@ fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64, ClipSample
         .collect()
 }
 
+/// Outcome of offering a job to the predict loops.
+enum Dispatch {
+    /// A loop took the job; await the reply.
+    Sent,
+    /// Every live loop's queue was full — backpressure, answer `Busy`.
+    Full,
+    /// No loop is receiving any more — shutdown (or every replica died).
+    Disconnected,
+}
+
+/// Offer `job` to the loops starting at the round-robin cursor; the
+/// first one with queue room takes it. Round-robin spreads steady load
+/// evenly; the failover scan keeps one slow replica from bouncing
+/// requests while its siblings sit idle. Row-locality means the choice
+/// of loop can never change an answer, only its latency.
+fn dispatch(txs: &[SyncSender<Job>], rr: &AtomicUsize, mut job: Job) -> Dispatch {
+    let n = txs.len();
+    let start = rr.fetch_add(1, Ordering::Relaxed) % n;
+    let mut saw_full = false;
+    for k in 0..n {
+        match txs[(start + k) % n].try_send(job) {
+            Ok(()) => return Dispatch::Sent,
+            Err(TrySendError::Full(j)) => {
+                saw_full = true;
+                job = j;
+            }
+            Err(TrySendError::Disconnected(j)) => job = j,
+        }
+    }
+    if saw_full {
+        Dispatch::Full
+    } else {
+        Dispatch::Disconnected
+    }
+}
+
 /// One client connection: decode frames, admit predict work, answer.
 #[allow(clippy::too_many_arguments)]
 fn session(
     mut stream: TcpStream,
-    tx: SyncSender<Job>,
+    txs: Vec<SyncSender<Job>>,
+    rr: &AtomicUsize,
     g: ModelGeometry,
     cache: &ClipCache,
     counters: &Counters,
@@ -332,18 +456,19 @@ fn session(
                     } else {
                         let use_cache = flags & FLAG_USE_CACHE != 0;
                         let (rtx, rrx) = sync_channel::<Vec<f64>>(1);
-                        match tx.try_send(Job { clips: converted, use_cache, reply: rtx }) {
-                            Ok(()) => match rrx.recv() {
+                        match dispatch(&txs, rr, Job { clips: converted, use_cache, reply: rtx })
+                        {
+                            Dispatch::Sent => match rrx.recv() {
                                 Ok(preds) => Response::Predictions(preds),
                                 Err(_) => {
                                     Response::Error("predictor dropped the request".into())
                                 }
                             },
-                            Err(TrySendError::Full(_)) => {
+                            Dispatch::Full => {
                                 counters.rejected.fetch_add(1, Ordering::Relaxed);
                                 Response::Busy { retry_ms, queue_depth: queue_depth as u32 }
                             }
-                            Err(TrySendError::Disconnected(_)) => {
+                            Dispatch::Disconnected => {
                                 Response::Error("server is shutting down".into())
                             }
                         }
@@ -363,14 +488,14 @@ fn settle(
     tags: &[Tag],
     preds: &[f32],
     cache: &ClipCache,
-    counters: &Counters,
+    lc: &LoopCounters,
     inflight: &mut HashMap<u64, Inflight>,
 ) {
     debug_assert_eq!(tags.len(), preds.len());
-    counters.batches.fetch_add(1, Ordering::Relaxed);
-    counters.predicted_clips.fetch_add(tags.len() as u64, Ordering::Relaxed);
+    lc.batches.fetch_add(1, Ordering::Relaxed);
+    lc.predicted_clips.fetch_add(tags.len() as u64, Ordering::Relaxed);
     if tags.windows(2).any(|w| w[0].0 != w[1].0) {
-        counters.cross_batches.fetch_add(1, Ordering::Relaxed);
+        lc.cross_batches.fetch_add(1, Ordering::Relaxed);
     }
     for (&(id, slot, key), &p) in tags.iter().zip(preds) {
         let v = p as f64;
@@ -394,14 +519,16 @@ fn finish_slot(inflight: &mut HashMap<u64, Inflight>, id: u64, slot: usize, v: f
     }
 }
 
-/// The single predict loop: pulls admitted jobs, resolves cache hits
-/// inline, fills the shared accumulator with the misses, and flushes on
-/// batch-full or linger expiry.
+/// One predict-loop replica: pulls jobs admitted to its own bounded
+/// channel, resolves cache hits inline (the cache is shared by all
+/// replicas), fills its private accumulator with the misses, and
+/// flushes on batch-full or linger expiry. Request ids are local to the
+/// loop — a request's rows never leave the replica that admitted it.
 fn predict_loop(
-    model: &dyn Predictor,
+    model: &(dyn Predictor + Send + Sync),
     rx: Receiver<Job>,
     cache: &ClipCache,
-    counters: &Counters,
+    lc: &LoopCounters,
     linger: Duration,
     time_scale: f32,
 ) -> Result<()> {
@@ -448,7 +575,7 @@ fn predict_loop(
                     if let Some((tags, batch)) = acc.push((id, slot, key), sample) {
                         deadline = None;
                         let preds = runner.forward(model, &batch, time_scale)?;
-                        settle(&tags, preds, cache, counters, &mut inflight);
+                        settle(&tags, preds, cache, lc, &mut inflight);
                     }
                 }
                 if acc.pending() == 0 {
@@ -459,31 +586,24 @@ fn predict_loop(
             }
             None => {
                 // linger expired with no new work: flush the partial batch
-                flush_tail(
-                    model,
-                    &mut acc,
-                    &mut runner,
-                    cache,
-                    counters,
-                    &mut inflight,
-                    time_scale,
-                )?;
+                flush_tail(model, &mut acc, &mut runner, cache, lc, &mut inflight, time_scale)?;
                 deadline = None;
             }
         }
     }
-    // drain: the channel disconnected with clips still accumulated
-    flush_tail(model, &mut acc, &mut runner, cache, counters, &mut inflight, time_scale)?;
+    // drain: this replica's channel disconnected with clips still
+    // accumulated — flush its tail before reporting back
+    flush_tail(model, &mut acc, &mut runner, cache, lc, &mut inflight, time_scale)?;
     Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
 fn flush_tail(
-    model: &dyn Predictor,
+    model: &(dyn Predictor + Send + Sync),
     acc: &mut BatchAccumulator<Tag>,
     runner: &mut BatchRunner,
     cache: &ClipCache,
-    counters: &Counters,
+    lc: &LoopCounters,
     inflight: &mut HashMap<u64, Inflight>,
     time_scale: f32,
 ) -> Result<()> {
@@ -493,6 +613,65 @@ fn flush_tail(
     }
     let tags: Vec<Tag> = tail.iter().map(|&(t, _)| t).collect();
     let preds = runner.forward_tail(model, &tail, time_scale)?;
-    settle(&tags, preds, cache, counters, inflight);
+    settle(&tags, preds, cache, lc, inflight);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_hint_saturates_instead_of_wrapping() {
+        assert_eq!(retry_hint_ms(0), 1, "hint must stay usable");
+        assert_eq!(retry_hint_ms(500), 1);
+        assert_eq!(retry_hint_ms(2_000), 2);
+        assert_eq!(retry_hint_ms(MAX_LINGER_US), 60_000);
+        // regression: (linger_us / 1000) as u32 wrapped this to a tiny
+        // hint; the saturating conversion pins the ceiling instead
+        assert_eq!(retry_hint_ms(u64::MAX), u32::MAX);
+        assert_eq!(retry_hint_ms((u32::MAX as u64 + 7) * 1_000), u32::MAX);
+    }
+
+    fn dummy_job() -> (Job, Receiver<Vec<f64>>) {
+        let (rtx, rrx) = sync_channel(1);
+        (Job { clips: Vec::new(), use_cache: false, reply: rtx }, rrx)
+    }
+
+    #[test]
+    fn dispatch_round_robins_and_fails_over() {
+        let (tx0, rx0) = sync_channel::<Job>(1);
+        let (tx1, rx1) = sync_channel::<Job>(1);
+        let txs = vec![tx0, tx1];
+        let rr = AtomicUsize::new(0);
+        // first two jobs land on alternating loops
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
+        assert!(rx0.try_recv().is_ok(), "loop 0 got the first job");
+        assert!(rx1.try_recv().is_ok(), "loop 1 got the second job");
+        // fill loop 0's slot: the next job targeting it fails over to 1
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
+        // both slots now full: backpressure, not an error
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Full));
+        drop(rx0);
+        drop(rx1);
+        // all receivers gone: shutdown, not backpressure
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Disconnected));
+    }
+
+    #[test]
+    fn dispatch_skips_a_dead_loop_while_one_survives() {
+        let (tx0, rx0) = sync_channel::<Job>(1);
+        let (tx1, _rx1_keepalive) = sync_channel::<Job>(4);
+        drop(rx0); // replica 0 died (fatal model error)
+        let txs = vec![tx0, tx1];
+        let rr = AtomicUsize::new(0); // cursor points at the dead loop
+        for _ in 0..3 {
+            assert!(
+                matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent),
+                "the surviving replica keeps serving"
+            );
+        }
+    }
 }

@@ -74,9 +74,35 @@ pub enum Request {
     Shutdown,
 }
 
+/// Per-predict-loop forward counters: one entry per replica in
+/// [`StatsReply::per_loop`], in loop-spawn order. The global
+/// `predicted_clips`/`batches`/`cross_batches` are the sums of these,
+/// so the per-loop view shows whether the replicas actually share load
+/// (and what fill each one achieves) without changing any aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoopStats {
+    /// Forward batches this loop executed.
+    pub batches: u64,
+    /// Clip rows this loop sent through the model.
+    pub predicted_clips: u64,
+    /// Batches mixing clips from more than one request.
+    pub cross_batches: u64,
+}
+
+impl LoopStats {
+    /// Mean live rows per forward batch on this loop (0 when none ran).
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.predicted_clips as f64 / self.batches as f64
+        }
+    }
+}
+
 /// Server counters as reported over the wire (`serve --stats`) and in
 /// the post-run [`ServeSummary`](super::ServeSummary).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StatsReply {
     /// Predict requests admitted for counting (including cache-only ones).
     pub requests: u64,
@@ -99,6 +125,9 @@ pub struct StatsReply {
     /// [`CacheSource::code`](crate::coordinator::CacheSource::code):
     /// 0 cold, 1 heap-loaded, 2 mmap-frozen.
     pub cache_source: u64,
+    /// Per-replica forward counters, one entry per predict loop. The
+    /// global forward counters above are the sums of these.
+    pub per_loop: Vec<LoopStats>,
 }
 
 impl StatsReply {
@@ -292,6 +321,12 @@ impl Response {
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
+                out.extend_from_slice(&(s.per_loop.len() as u32).to_le_bytes());
+                for l in &s.per_loop {
+                    out.extend_from_slice(&l.batches.to_le_bytes());
+                    out.extend_from_slice(&l.predicted_clips.to_le_bytes());
+                    out.extend_from_slice(&l.cross_batches.to_le_bytes());
+                }
                 out
             }
             Response::Busy { retry_ms, queue_depth } => {
@@ -320,19 +355,33 @@ impl Response {
                     .collect::<Result<Vec<f64>>>()?;
                 Response::Predictions(preds)
             }
-            TAG_STATS_REPLY => Response::Stats(StatsReply {
-                requests: c.u64()?,
-                rejected: c.u64()?,
-                predicted_clips: c.u64()?,
-                batches: c.u64()?,
-                cross_batches: c.u64()?,
-                cache_hits: c.u64()?,
-                cache_misses: c.u64()?,
-                cache_len: c.u64()?,
-                cache_evictions: c.u64()?,
-                cache_frozen_len: c.u64()?,
-                cache_source: c.u64()?,
-            }),
+            TAG_STATS_REPLY => {
+                let mut s = StatsReply {
+                    requests: c.u64()?,
+                    rejected: c.u64()?,
+                    predicted_clips: c.u64()?,
+                    batches: c.u64()?,
+                    cross_batches: c.u64()?,
+                    cache_hits: c.u64()?,
+                    cache_misses: c.u64()?,
+                    cache_len: c.u64()?,
+                    cache_evictions: c.u64()?,
+                    cache_frozen_len: c.u64()?,
+                    cache_source: c.u64()?,
+                    per_loop: Vec::new(),
+                };
+                let n = c.count(24)?;
+                s.per_loop = (0..n)
+                    .map(|_| {
+                        Ok(LoopStats {
+                            batches: c.u64()?,
+                            predicted_clips: c.u64()?,
+                            cross_batches: c.u64()?,
+                        })
+                    })
+                    .collect::<Result<Vec<LoopStats>>>()?;
+                Response::Stats(s)
+            }
             TAG_BUSY => Response::Busy { retry_ms: c.u32()?, queue_depth: c.u32()? },
             TAG_SHUTDOWN_ACK => Response::ShutdownAck,
             TAG_ERROR => {
@@ -386,11 +435,16 @@ mod tests {
             cache_evictions: 1,
             cache_frozen_len: 20,
             cache_source: 2,
+            per_loop: vec![
+                LoopStats { batches: 5, predicted_clips: 25, cross_batches: 2 },
+                LoopStats { batches: 3, predicted_clips: 15, cross_batches: 1 },
+            ],
         };
         let resps = [
             Response::Predictions(vec![1.5, -0.25, 1e300]),
             Response::Predictions(vec![]),
-            Response::Stats(stats),
+            Response::Stats(stats.clone()),
+            Response::Stats(StatsReply::default()),
             Response::Busy { retry_ms: 2, queue_depth: 16 },
             Response::ShutdownAck,
             Response::Error("nope".into()),
@@ -400,6 +454,8 @@ mod tests {
         }
         assert!((stats.mean_fill() - 5.0).abs() < 1e-12);
         assert!((stats.hit_rate() - 0.125).abs() < 1e-12);
+        assert!((stats.per_loop[0].mean_fill() - 5.0).abs() < 1e-12);
+        assert_eq!(stats.per_loop.iter().map(|l| l.batches).sum::<u64>(), stats.batches);
     }
 
     #[test]
@@ -416,6 +472,11 @@ mod tests {
         let mut forged = vec![TAG_PREDICTIONS];
         forged.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Response::decode(&forged).is_err());
+        // same guard on the per-loop counter list in a stats reply
+        let mut stats = Response::Stats(StatsReply::default()).encode();
+        let count_at = stats.len() - 4;
+        stats[count_at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(&stats).is_err());
     }
 
     #[test]

@@ -29,12 +29,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) with linear interpolation.
+///
+/// NaN samples are ignored: a latency harness that records one poisoned
+/// measurement must not panic mid-report (the old
+/// `partial_cmp(..).unwrap()` sort did exactly that) or smear NaN into
+/// every percentile. An input of only NaNs behaves like an empty input.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -95,6 +100,19 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // regression: one NaN latency used to panic the sort unwrap in
+        // BurstReport::p50_ms / p99_ms and the fig7 serve-latency table
+        let xs = [10.0, f64::NAN, 20.0, 30.0, f64::NAN, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0, "all-NaN acts like empty");
+        // infinities still sort (total_cmp), they are not filtered
+        assert_eq!(percentile(&[f64::INFINITY, 1.0], 0.0), 1.0);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn opts(linger_us: u64, queue_depth: usize) -> ServeOptions {
         listen: "127.0.0.1:0".into(),
         linger_us,
         queue_depth,
+        predict_loops: 1,
         time_scale: TS,
         cache_path: None,
         cache_max_entries: 10_000,
@@ -97,6 +98,93 @@ fn concurrent_clients_get_bit_identical_answers() {
     assert_eq!(summary.stats.requests, (CLIENTS * 2 * 2) as u64);
     assert!(!summary.warm_start);
     assert_eq!(summary.cache_saved, None, "no cache path configured");
+}
+
+/// The replica-invariance matrix: the same request streams against
+/// `predict_loops` ∈ {1, 2, 4} must produce bit-identical predictions —
+/// cold (each daemon predicts every clip itself, spread across its
+/// replicas) and warm (served from the shared cache) — all equal to the
+/// single-shot forward. Row-locality is the argument; this is the proof.
+#[test]
+fn replica_counts_are_bit_identical() {
+    let model = AttentionPredictor::with_defaults();
+    let g = model.geometry().clone();
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 8;
+    let all: Vec<(u64, ClipSample)> = (0..CLIENTS as u64)
+        .flat_map(|c| synthetic_clips(0x5CA1E, c, 0, PER_CLIENT, &g))
+        .collect();
+    // ground truth: each clip forwarded alone, straight through the model
+    let mut runner = BatchRunner::new();
+    let expected: Vec<f64> = all
+        .iter()
+        .map(|pair| {
+            runner.forward_tail(&model, std::slice::from_ref(pair), TS).unwrap()[0] as f64
+        })
+        .collect();
+
+    for n_loops in [1usize, 2, 4] {
+        let mut o = opts(1_000, 8);
+        o.predict_loops = n_loops;
+        let server = Server::bind(o).unwrap();
+        let addr = server.addr();
+        let daemon = std::thread::spawn(move || {
+            let model = AttentionPredictor::with_defaults();
+            server.run(&model)
+        });
+
+        // cold pass predicts on whichever replica each request lands on;
+        // warm pass reads the shared cache — same bits both ways
+        for pass in 0..2 {
+            std::thread::scope(|s| {
+                for c in 0..CLIENTS {
+                    let all = &all;
+                    let expected = &expected;
+                    s.spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let lo = c * PER_CLIENT;
+                        let clips = &all[lo..lo + PER_CLIENT];
+                        let (preds, _) = client.predict_retry(clips, true, 1_000).unwrap();
+                        assert_eq!(preds.len(), clips.len());
+                        for (i, p) in preds.iter().enumerate() {
+                            assert_eq!(
+                                p.to_bits(),
+                                expected[lo + i].to_bits(),
+                                "loops {n_loops}, pass {pass}, clip {}",
+                                lo + i
+                            );
+                        }
+                    });
+                }
+            });
+        }
+
+        let stats = Client::connect(addr).unwrap().stats().unwrap();
+        assert_eq!(stats.per_loop.len(), n_loops, "one counter block per replica");
+        assert_eq!(
+            stats.predicted_clips,
+            all.len() as u64,
+            "loops {n_loops}: cold pass predicted each clip exactly once"
+        );
+        assert_eq!(
+            stats.cache_hits,
+            all.len() as u64,
+            "loops {n_loops}: warm pass came entirely from the shared cache"
+        );
+        assert_eq!(
+            stats.per_loop.iter().map(|l| l.predicted_clips).sum::<u64>(),
+            stats.predicted_clips,
+            "per-loop counters sum to the aggregate"
+        );
+        assert_eq!(
+            stats.per_loop.iter().map(|l| l.batches).sum::<u64>(),
+            stats.batches,
+            "per-loop batch counters sum to the aggregate"
+        );
+
+        Client::connect(addr).unwrap().shutdown().unwrap();
+        daemon.join().unwrap().unwrap();
+    }
 }
 
 /// A predictor wrapper that makes every forward slow — the backpressure
@@ -188,6 +276,79 @@ fn full_admission_queue_answers_busy_with_retry_hint() {
     assert_eq!(summary.stats.predicted_clips, (CLIENTS * REQUESTS * 2) as u64);
 }
 
+/// The backpressure accounting must survive replication: with 2 predict
+/// loops splitting the admission bound, every client-observed `Busy` is
+/// still exactly one server-side rejection, and every accepted request
+/// is eventually predicted by *some* replica.
+#[test]
+fn busy_accounting_holds_across_replicated_loops() {
+    let mut o = opts(0, 2);
+    o.predict_loops = 2; // depth 1 per loop
+    let server = Server::bind(o).unwrap();
+    let addr = server.addr();
+    let daemon = std::thread::spawn(move || {
+        let model = SlowPredictor {
+            inner: NativePredictor::with_defaults(),
+            delay: Duration::from_millis(25),
+        };
+        server.run(&model)
+    });
+    let g = NativePredictor::with_defaults().geometry().clone();
+
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 3;
+    let mut busy_total = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS as u64)
+            .map(|c| {
+                let g = &g;
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut busy = 0usize;
+                    for r in 0..REQUESTS as u64 {
+                        let clips = synthetic_clips(0xB0B2, c, r, 2, g);
+                        loop {
+                            match client.predict(&clips, false).unwrap() {
+                                PredictOutcome::Predictions(p) => {
+                                    assert_eq!(p.len(), clips.len());
+                                    break;
+                                }
+                                PredictOutcome::Busy { retry_ms } => {
+                                    assert!(retry_ms >= 1, "retry hint must be usable");
+                                    busy += 1;
+                                    std::thread::sleep(Duration::from_millis(retry_ms as u64));
+                                }
+                            }
+                        }
+                    }
+                    busy
+                })
+            })
+            .collect();
+        for h in handles {
+            busy_total += h.join().unwrap();
+        }
+    });
+
+    Client::connect(addr).unwrap().shutdown().unwrap();
+    let summary = daemon.join().unwrap().unwrap();
+    assert_eq!(summary.stats.per_loop.len(), 2);
+    assert_eq!(
+        summary.stats.rejected, busy_total as u64,
+        "a Busy is only answered when every loop's queue is full — 1:1 with rejections"
+    );
+    assert_eq!(
+        summary.stats.requests,
+        (CLIENTS * REQUESTS + busy_total) as u64,
+        "requests counts every predict attempt; the Busy bounces are the rejected subset"
+    );
+    assert_eq!(
+        summary.stats.predicted_clips,
+        (CLIENTS * REQUESTS * 2) as u64,
+        "every accepted request was predicted by some replica, each clip once"
+    );
+}
+
 /// Two requests landing within the linger window must share one forward
 /// batch (`cross_batches`, mean fill > 1) — the point of a shared daemon.
 #[test]
@@ -236,6 +397,7 @@ fn shutdown_saves_the_cache_and_restart_warm_starts() {
         listen: "127.0.0.1:0".into(),
         linger_us: 500,
         queue_depth: 4,
+        predict_loops: 1,
         time_scale: 33.0,
         cache_path: Some(cache_path.clone()),
         cache_max_entries: 10_000,

@@ -22,9 +22,12 @@
 //! * **persistent clip cache** — a second run warm-started from the
 //!   on-disk cache must resolve every clip without inference
 //!   (warm-start hit rate > 0, zero new predictions);
-//! * **serve latency** — p50/p99/mean per client concurrency against a
-//!   `capsim serve` daemon (attention backend), with the per-sweep batch
-//!   fill showing cross-request batching engage as concurrency rises;
+//! * **serve latency** — p50/p99/mean per session layer (epoll event
+//!   loop vs thread-per-connection, where the host has both) and client
+//!   concurrency against a `capsim serve` daemon (attention backend),
+//!   with the per-sweep batch fill showing cross-request batching
+//!   engage as concurrency rises. Machine-readable copy lands in
+//!   `CAPSIM_SERVE_OUT` (default `BENCH_serve.json`);
 //! * **serve replica throughput** — the same fixed burst against daemons
 //!   at `predict_loops` ∈ {1, 2, 4}: wall time → clips/s plus the
 //!   per-loop batch split (row-locality keeps the answers bit-identical,
@@ -297,71 +300,106 @@ fn persist_load_bench() -> anyhow::Result<()> {
 }
 
 fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<()> {
-    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary};
+    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary, SessionLayer};
+    use capsim::util::json::Json;
 
-    let opts = ServeOptions {
-        listen: "127.0.0.1:0".into(),
-        linger_us: 500,
-        queue_depth: cfg.effective_queue_depth(),
-        predict_loops: 1,
-        time_scale: 40.0,
-        cache_path: None,
-        cache_max_entries: cfg.cache_max_entries,
-        cache_mmap: true,
+    // one sweep per session layer this host can run: the daemon restarts
+    // per layer, so every row starts from a cold daemon and the layers
+    // see identical deterministic bursts (same seeds)
+    let layers: &[SessionLayer] = if capsim::util::epoll::available() {
+        &[SessionLayer::Epoll, SessionLayer::Threads]
+    } else {
+        &[SessionLayer::Threads]
     };
-    let server = Server::bind(opts)?;
-    let addr = server.addr();
-    let seed_cfg = cfg.clone();
-    let daemon = std::thread::spawn(move || -> anyhow::Result<ServeSummary> {
-        let model = Backend::Attention.build_shared(&seed_cfg)?;
-        server.run(model.as_ref())
-    });
-
     let g = capsim::runtime::default_geometry();
     let mut t = Table::new(
-        "Serve latency — p50/p99 per client concurrency (attention daemon)",
-        &["Clients", "Requests", "p50 ms", "p99 ms", "mean ms", "fill", "x-req batches"],
+        "Serve latency — p50/p99 per session layer and client concurrency (attention daemon)",
+        &["Layer", "Clients", "Requests", "p50 ms", "p99 ms", "mean ms", "fill", "x-req batches"],
     );
-    let mut prev_clips = 0u64;
-    let mut prev_batches = 0u64;
-    let mut prev_cross = 0u64;
-    for (i, &clients) in [1usize, 2, 4, 8].iter().enumerate() {
-        let spec = BurstSpec {
-            clients,
-            requests: 24,
-            clips: 6,
-            use_cache: false,
-            seed: 0xF16_5EED + i as u64,
+    let mut rows = Vec::new();
+    for &layer in layers {
+        let opts = ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            linger_us: 500,
+            queue_depth: cfg.effective_queue_depth(),
+            predict_loops: 1,
+            time_scale: 40.0,
+            cache_path: None,
+            cache_max_entries: cfg.cache_max_entries,
+            cache_mmap: true,
+            session_layer: layer,
+            idle_timeout_ms: 60_000,
         };
-        let report = burst(addr, &g, &spec)?;
-        let clips_d = report.stats.predicted_clips - prev_clips;
-        let batches_d = report.stats.batches - prev_batches;
-        let cross_d = report.stats.cross_batches - prev_cross;
-        prev_clips = report.stats.predicted_clips;
-        prev_batches = report.stats.batches;
-        prev_cross = report.stats.cross_batches;
-        let fill = if batches_d == 0 { 0.0 } else { clips_d as f64 / batches_d as f64 };
-        t.row(vec![
-            clients.to_string(),
-            (clients * spec.requests).to_string(),
-            format!("{:.3}", report.p50_ms()),
-            format!("{:.3}", report.p99_ms()),
-            format!("{:.3}", report.mean_ms()),
-            format!("{fill:.2}"),
-            cross_d.to_string(),
-        ]);
+        let server = Server::bind(opts)?;
+        let addr = server.addr();
+        let seed_cfg = cfg.clone();
+        let daemon = std::thread::spawn(move || -> anyhow::Result<ServeSummary> {
+            let model = Backend::Attention.build_shared(&seed_cfg)?;
+            server.run(model.as_ref())
+        });
+
+        let mut prev_clips = 0u64;
+        let mut prev_batches = 0u64;
+        let mut prev_cross = 0u64;
+        for (i, &clients) in [1usize, 2, 4, 8].iter().enumerate() {
+            let spec = BurstSpec {
+                clients,
+                requests: 24,
+                clips: 6,
+                use_cache: false,
+                seed: 0xF16_5EED + i as u64,
+                workers: 0,
+            };
+            let t0 = std::time::Instant::now();
+            let report = burst(addr, &g, &spec)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let clips_d = report.stats.predicted_clips - prev_clips;
+            let batches_d = report.stats.batches - prev_batches;
+            let cross_d = report.stats.cross_batches - prev_cross;
+            prev_clips = report.stats.predicted_clips;
+            prev_batches = report.stats.batches;
+            prev_cross = report.stats.cross_batches;
+            let fill = if batches_d == 0 { 0.0 } else { clips_d as f64 / batches_d as f64 };
+            let n_requests = clients * spec.requests;
+            t.row(vec![
+                layer.to_string(),
+                clients.to_string(),
+                n_requests.to_string(),
+                format!("{:.3}", report.p50_ms()),
+                format!("{:.3}", report.p99_ms()),
+                format!("{:.3}", report.mean_ms()),
+                format!("{fill:.2}"),
+                cross_d.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("layer", Json::str(layer.to_string())),
+                ("clients", Json::num(clients as f64)),
+                ("requests", Json::num(n_requests as f64)),
+                ("p50_ms", Json::num(report.p50_ms())),
+                ("p99_ms", Json::num(report.p99_ms())),
+                ("mean_ms", Json::num(report.mean_ms())),
+                ("throughput_rps", Json::num(n_requests as f64 / wall.max(1e-9))),
+            ]));
+        }
+
+        Client::connect(addr)?.shutdown()?;
+        let summary = daemon.join().expect("serve daemon panicked")?;
+        println!(
+            "serve [{layer}] drained: {} requests, {} batches, mean fill {:.2}, {} rejected",
+            summary.stats.requests,
+            summary.stats.batches,
+            summary.stats.mean_fill(),
+            summary.stats.rejected
+        );
     }
     t.emit("fig7_serve_latency");
 
-    Client::connect(addr)?.shutdown()?;
-    let summary = daemon.join().expect("serve daemon panicked")?;
-    println!(
-        "serve drained: {} requests, {} batches, mean fill {:.2}, {} rejected",
-        summary.stats.requests,
-        summary.stats.batches,
-        summary.stats.mean_fill(),
-        summary.stats.rejected
-    );
+    // machine-readable trajectory, uploaded like BENCH_kernels.json so
+    // perf PRs can diff p50/p99/throughput per layer and concurrency
+    let out = std::env::var("CAPSIM_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let doc = Json::obj(vec![("schema", Json::num(1.0)), ("sweeps", Json::arr(rows))]);
+    std::fs::write(&out, doc.dump_pretty())?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -371,7 +409,7 @@ fn serve_latency_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
 /// thing allowed to move across rows is the wall clock — and the
 /// per-loop batch split shows whether the replicas actually share load.
 fn serve_replica_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<()> {
-    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary};
+    use capsim::serve::{burst, BurstSpec, Client, Server, ServeOptions, ServeSummary, SessionLayer};
 
     let g = capsim::runtime::default_geometry();
     let mut t = Table::new(
@@ -388,6 +426,8 @@ fn serve_replica_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
             cache_path: None,
             cache_max_entries: cfg.cache_max_entries,
             cache_mmap: true,
+            session_layer: SessionLayer::Auto,
+            idle_timeout_ms: 60_000,
         };
         let server = Server::bind(opts)?;
         let addr = server.addr();
@@ -404,6 +444,7 @@ fn serve_replica_sweep(cfg: &capsim::config::PipelineConfig) -> anyhow::Result<(
             clips: 6,
             use_cache: false,
             seed: 0x2E9_11CA,
+            workers: 0,
         };
         let clips = (spec.clients * spec.requests * spec.clips) as f64;
         let t0 = std::time::Instant::now();

@@ -239,6 +239,16 @@ pub struct PipelineConfig {
     /// auto (a small multiple of the cores, see
     /// [`PipelineConfig::effective_predict_loops`]).
     pub serve_predict_loops: usize,
+    /// Session tier of the serve daemon (`--session-layer` /
+    /// `serve.session_layer`): `auto` (default) resolves to the epoll
+    /// event loop on Linux and thread-per-connection elsewhere. Forcing
+    /// `epoll` on a host without it errors at daemon start. Unknown
+    /// TOML values fall back to `auto`; the CLI flag is strict.
+    pub serve_session_layer: crate::serve::SessionLayer,
+    /// Reap a serve connection after this many ms without traffic
+    /// (`--idle-timeout-ms` / `serve.idle_timeout_ms`, `0` = never) so
+    /// half-open clients cannot pin session state forever.
+    pub serve_idle_timeout_ms: u64,
     /// Slicer minimum clip length (paper L_min).
     pub l_min: usize,
     /// Training-label slicing policy.
@@ -269,6 +279,8 @@ impl Default for PipelineConfig {
             serve_listen: "127.0.0.1:4650".to_string(),
             serve_linger_us: 2_000,
             serve_predict_loops: 0,
+            serve_session_layer: crate::serve::SessionLayer::Auto,
+            serve_idle_timeout_ms: 60_000,
             l_min: 24,
             train_slicing: TrainSlicing::Algo1,
             train_steps: 300,
@@ -309,6 +321,11 @@ impl PipelineConfig {
             .min(crate::serve::MAX_LINGER_US);
         c.serve_predict_loops =
             t.int("serve.predict_loops", c.serve_predict_loops as i64).max(0) as usize;
+        c.serve_session_layer =
+            crate::serve::SessionLayer::parse(&t.str("serve.session_layer", "auto"))
+                .unwrap_or(c.serve_session_layer);
+        c.serve_idle_timeout_ms =
+            t.int("serve.idle_timeout_ms", c.serve_idle_timeout_ms as i64).max(0) as u64;
         c.l_min = t.int("pipeline.l_min", c.l_min as i64) as usize;
         c.train_slicing = match t.str("pipeline.train_slicing", "algo1").as_str() {
             "fixed" => TrainSlicing::Fixed,
@@ -468,6 +485,8 @@ mod tests {
             listen = "127.0.0.1:9999"
             linger_us = 750
             predict_loops = 3
+            session_layer = "threads"
+            idle_timeout_ms = 2500
             [o3]
             rob_entries = 128
             [train]
@@ -495,6 +514,8 @@ mod tests {
         assert_eq!(c.serve_linger_us, 750);
         assert_eq!(c.serve_predict_loops, 3);
         assert_eq!(c.effective_predict_loops(), 3);
+        assert_eq!(c.serve_session_layer, crate::serve::SessionLayer::Threads);
+        assert_eq!(c.serve_idle_timeout_ms, 2500);
         assert_eq!(c.o3.rob_entries, 128);
         assert_eq!(c.o3.fetch_width, 8, "default preserved");
         assert_eq!(c.train_steps, 10);
@@ -526,6 +547,8 @@ mod tests {
         assert_eq!(c.serve_listen, "127.0.0.1:4650");
         assert_eq!(c.serve_linger_us, 2_000);
         assert_eq!(c.serve_predict_loops, 0, "0 = auto");
+        assert_eq!(c.serve_session_layer, crate::serve::SessionLayer::Auto);
+        assert_eq!(c.serve_idle_timeout_ms, 60_000, "idle reaping is on by default");
         let loops = c.effective_predict_loops();
         assert!((1..=4).contains(&loops), "auto picks 1..=4 loops, got {loops}");
     }
@@ -538,6 +561,23 @@ mod tests {
         let c = PipelineConfig::from_toml(&t);
         assert_eq!(c.serve_linger_us, crate::serve::MAX_LINGER_US);
         assert_eq!(c.serve_predict_loops, 0, "negative clamps to auto");
+    }
+
+    #[test]
+    fn serve_session_layer_and_idle_timeout_parse_with_fallbacks() {
+        use crate::serve::SessionLayer;
+        for (s, want) in [
+            ("auto", SessionLayer::Auto),
+            ("epoll", SessionLayer::Epoll),
+            ("threads", SessionLayer::Threads),
+            ("kqueue", SessionLayer::Auto), // unknown TOML value → default
+        ] {
+            let t = parse_toml(&format!("[serve]\nsession_layer = \"{s}\"")).unwrap();
+            assert_eq!(PipelineConfig::from_toml(&t).serve_session_layer, want, "{s}");
+        }
+        // negative idle timeout clamps to 0 (= never reap)
+        let t = parse_toml("[serve]\nidle_timeout_ms = -5").unwrap();
+        assert_eq!(PipelineConfig::from_toml(&t).serve_idle_timeout_ms, 0);
     }
 
     #[test]

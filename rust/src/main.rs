@@ -11,9 +11,10 @@
 //! capsim train  [--steps N] [--variant V] train a predictor end-to-end
 //! capsim compare [--config F]       Fig.-7 style gem5 vs CAPSim timing
 //! capsim serve  [--listen A] [--linger-us N] [--predict-loops N]
-//!               run the prediction daemon
+//!               [--session-layer L] run the prediction daemon
 //!               (--stats / --shutdown query a running daemon instead)
-//! capsim burst  [--listen A] [--clients N]  fire a client burst at a daemon
+//! capsim burst  [--listen A] [--clients N] [--workers N]
+//!               fire a client burst at a daemon
 //! capsim backends                   CPU features, kernel tiers, backends
 //! capsim info                       artifact manifest summary
 //! ```
@@ -31,7 +32,7 @@ use capsim::o3::O3Core;
 use capsim::predictor::{train, TrainParams};
 use capsim::report::Table;
 use capsim::runtime::{cpu_features, Backend, KernelTier, Predictor, Runtime};
-use capsim::serve::{BurstSpec, Client, Server, ServeOptions, MAX_LINGER_US};
+use capsim::serve::{BurstSpec, Client, Server, ServeOptions, SessionLayer, MAX_LINGER_US};
 use capsim::util::stats;
 use capsim::workloads::{suite, Scale};
 
@@ -166,14 +167,21 @@ fn help() {
                 --predict-loops N (replicated predict loops over one shared\n\
                 read-only weight set; 0 = auto / serve.predict_loops;\n\
                 row-locality keeps answers bit-identical for every N)\n\
+                --session-layer L (auto | epoll | threads; auto picks the\n\
+                epoll event loop on Linux, one thread per connection\n\
+                elsewhere / serve.session_layer; bit-identical either way)\n\
+                --idle-timeout-ms N (reap a connection after N ms without\n\
+                traffic; 0 = never / serve.idle_timeout_ms; default 60000)\n\
                 --queue-depth N (admission bound, split across the loops;\n\
                 overload answers Busy + retry hint), --cache-dir DIR\n\
                 (persistent clip cache, saved on graceful shutdown),\n\
                 --time-scale X (cache key part)\n\
                 --stats / --shutdown (query or stop a *running* daemon)\n\
          burst:  --listen ADDR  --clients N  --requests N  --clips N\n\
-                --seed N  --no-cache  --expect-cross-batch (fail unless\n\
-                batches mixed requests)  --shutdown (stop the daemon after)"
+                --workers N (worker threads multiplexing the logical\n\
+                clients; 0 = auto)  --seed N  --no-cache\n\
+                --expect-cross-batch (fail unless batches mixed requests)\n\
+                --shutdown (stop the daemon after)"
     );
 }
 
@@ -515,7 +523,21 @@ fn serve_opts(flags: &HashMap<String, String>, cfg: &PipelineConfig) -> Result<S
         },
         cache_max_entries: cfg.cache_max_entries,
         cache_mmap: cfg.cache_mmap,
+        session_layer: cfg.serve_session_layer,
+        idle_timeout_ms: cfg.serve_idle_timeout_ms,
     };
+    // the CLI flag is strict where the TOML key falls back to auto
+    if let Some(v) = flags.get("session-layer") {
+        opts.session_layer = SessionLayer::parse(v)
+            .ok_or_else(|| anyhow!("--session-layer expects auto|epoll|threads, got {v}"))?;
+    }
+    if let Some(v) = flags.get("idle-timeout-ms") {
+        let n: i64 = v
+            .parse()
+            .map_err(|_| anyhow!("--idle-timeout-ms expects an integer, got {v}"))?;
+        // 0 (or negative) disables idle reaping, like the TOML key
+        opts.idle_timeout_ms = n.max(0) as u64;
+    }
     if let Some(v) = flags.get("linger-us") {
         opts.linger_us = v
             .parse()
@@ -596,15 +618,20 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let opts = serve_opts(flags, &cfg)?;
     let (linger_us, queue_depth, predict_loops) =
         (opts.linger_us, opts.queue_depth, opts.predict_loops);
+    // resolve for the banner; Server::run re-resolves (and errors
+    // cleanly on a forced-but-unavailable layer)
+    let session_layer = opts.session_layer.resolve().unwrap_or(opts.session_layer);
     let server = Server::bind(opts)?;
     let tier = model
         .kernel_tier()
         .map(|t| format!(", kernel tier {t}"))
         .unwrap_or_default();
     println!(
-        "serving {} predictions on {} (linger {} us, queue depth {}, predict loops {}{tier})",
+        "serving {} predictions on {} (session layer {}, linger {} us, queue depth {}, \
+         predict loops {}{tier})",
         cfg.backend,
         server.addr(),
+        session_layer,
         linger_us,
         queue_depth,
         predict_loops
@@ -636,6 +663,9 @@ fn burst_cmd(flags: &HashMap<String, String>) -> Result<()> {
         clips: int_flag("clips", 6)?.max(1),
         use_cache: !flags.contains_key("no-cache"),
         seed: int_flag("seed", 0x5EED)? as u64,
+        // 0 = auto: the pool stays bounded however many logical
+        // clients the burst opens
+        workers: int_flag("workers", 0)?,
     };
     // load generation uses the default geometry — the one every
     // dependency-free backend serves; the daemon validates each clip
@@ -711,6 +741,24 @@ mod tests {
         flags.insert("predict-loops".into(), "not-a-number".into());
         assert!(super::serve_opts(&flags, &cfg).is_err());
     }
+
+    #[test]
+    fn serve_opts_session_layer_flag_is_strict_and_idle_clamps() {
+        use std::collections::HashMap;
+        let cfg = capsim::config::PipelineConfig::default();
+        let mut flags: HashMap<String, String> = HashMap::new();
+        let opts = super::serve_opts(&flags, &cfg).unwrap();
+        assert_eq!(opts.session_layer, capsim::serve::SessionLayer::Auto);
+        assert_eq!(opts.idle_timeout_ms, 60_000);
+        flags.insert("session-layer".into(), "threads".into());
+        flags.insert("idle-timeout-ms".into(), "-9".into());
+        let opts = super::serve_opts(&flags, &cfg).unwrap();
+        assert_eq!(opts.session_layer, capsim::serve::SessionLayer::Threads);
+        assert_eq!(opts.idle_timeout_ms, 0, "negative disables reaping");
+        // unknown layers error on the CLI (the TOML key falls back)
+        flags.insert("session-layer".into(), "kqueue".into());
+        assert!(super::serve_opts(&flags, &cfg).is_err());
+    }
 }
 
 /// `capsim backends` — what this host can run: detected CPU features,
@@ -759,12 +807,17 @@ fn backends_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
 
     println!(
-        "serve: predict loops {} (serve.predict_loops {}; 0 = auto), linger {} us, \
-         queue depth {}",
+        "serve: session layer {} (serve.session_layer {}; epoll available: {}), \
+         predict loops {} (serve.predict_loops {}; 0 = auto), linger {} us, \
+         queue depth {}, idle timeout {} ms",
+        cfg.serve_session_layer.resolve().unwrap_or(cfg.serve_session_layer),
+        cfg.serve_session_layer,
+        capsim::util::epoll::available(),
         cfg.effective_predict_loops(),
         cfg.serve_predict_loops,
         cfg.serve_linger_us,
-        cfg.effective_queue_depth()
+        cfg.effective_queue_depth(),
+        cfg.serve_idle_timeout_ms
     );
 
     use capsim::util::image;

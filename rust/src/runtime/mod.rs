@@ -114,36 +114,49 @@
 //! ## Serving architecture
 //!
 //! The [`serve`](crate::serve) daemon is the runtime's long-lived
-//! deployment shape: one weight set built once through
-//! [`Backend::build_shared`] (an `Arc<dyn Predictor + Send + Sync>` —
-//! weights deserialize exactly once), then shared read-only by N
-//! replicated predict loops (`--predict-loops`). A request travels
+//! deployment shape, built as three tiers: a **session layer** owning
+//! the client sockets, N **replicated predict loops**, and underneath
+//! them **one** weight set built once through [`Backend::build_shared`]
+//! (an `Arc<dyn Predictor + Send + Sync>` — weights deserialize exactly
+//! once) plus one shared clip cache. A request travels
 //!
 //! ```text
-//!   client ──frame──▶ session thread ──round-robin over──▶ predict loop i
-//!                      (validate against   N bounded        (private Workspace,
-//!                       ModelGeometry)     queues; all       BatchRunner and
-//!                                          full → Busy +     BatchAccumulator;
-//!                                          retry hint)       SHARED weights+cache)
+//!   client ──frame──▶ session layer ──round-robin over──▶ predict loop i
+//!                      epoll event loop     N bounded       (private Workspace,
+//!                      (1 thread, all       queues; all      BatchRunner and
+//!                      sockets; Linux       full → Busy +    BatchAccumulator)
+//!                      default) — or one    retry hint            │
+//!                      thread per conn;                          ▼
+//!                      validate against               SHARED weights + clip cache
+//!                      ModelGeometry                  (read-only Arc, one copy)
 //!   client ◀─reply── settle: rows routed back per request ◀── forward
 //! ```
 //!
-//! Replication is cheap because the forward pass is `&self`: all
-//! mutable state (workspace arenas, accumulator, routing maps) lives in
-//! the loop, so a "replica" is a reference to the one model plus a few
-//! KB of private buffers — never a second copy of the weights. Clips
-//! from *different* requests fill each loop's accumulator, flushed on
-//! batch-full or a small linger deadline, so concurrent small requests
-//! ride full batches. Both layers of freedom — which replica a request
-//! lands on, and which batch mix it rides — are only sound because the
+//! The session layer is selected by
+//! [`SessionLayer`](crate::serve::SessionLayer): on Linux the default
+//! is a readiness-driven epoll event loop (hand-declared syscalls in
+//! [`util::epoll`](crate::util::epoll) — connection count stops being a
+//! thread count; an incremental frame decoder makes every byte split
+//! equivalent to blocking reads, pinned by `tests/prop_wire_codec.rs`),
+//! elsewhere one thread per connection. Both run the identical validate
+//! → dispatch → reply sequence and reap idle connections after
+//! `idle_timeout_ms`. Replication is cheap because the forward pass is
+//! `&self`: all mutable state (workspace arenas, accumulator, routing
+//! maps) lives in the loop, so a "replica" is a reference to the one
+//! model plus a few KB of private buffers — never a second copy of the
+//! weights. Clips from *different* requests fill each loop's
+//! accumulator, flushed on batch-full or a small linger deadline, so
+//! concurrent small requests ride full batches. All three layers of
+//! freedom — which session layer served a request, which replica it
+//! landed on, and which batch mix it rode — are only sound because the
 //! dependency-free backends are **row-local**: a clip's prediction is a
 //! function of that clip alone, never of its batch neighbors or padding
-//! (the invariance `tests/prop_attention.rs` pins). Dispatch and batch
-//! composition therefore change throughput and latency, never answers —
-//! serving at any `predict_loops` is bit-identical to single-shot
-//! calls, which the `tests/serve_e2e.rs` replica-invariance matrix
-//! asserts end to end across loop counts {1, 2, 4}. The daemon's
-//! persistent clip cache reuses the coordinator's concurrent
+//! (the invariance `tests/prop_attention.rs` pins). Session layer,
+//! dispatch, and batch composition therefore change throughput and
+//! latency, never answers — which the `tests/serve_e2e.rs` invariance
+//! matrix asserts end to end across session layers {epoll, threads} ×
+//! loop counts {1, 4} (and {1, 2, 4} on the default layer). The
+//! daemon's persistent clip cache reuses the coordinator's concurrent
 //! [`ClipCache`](crate::coordinator::ClipCache) (one instance shared by
 //! all loops), keyed by [`Predictor::fingerprint`] + `time_scale` like
 //! every other warm start; per-loop forward counters surface in

@@ -106,19 +106,24 @@ impl Client {
 }
 
 /// Shape of a burst-load run: `clients` concurrent connections each
-/// sending `requests` requests of `clips` clips.
+/// sending `requests` requests of `clips` clips, driven by a bounded
+/// pool of `workers` OS threads (`0` = auto).
 #[derive(Clone, Copy, Debug)]
 pub struct BurstSpec {
+    /// Logical clients — concurrent *connections*, not threads.
     pub clients: usize,
     pub requests: usize,
     pub clips: usize,
     pub use_cache: bool,
     pub seed: u64,
+    /// Worker threads multiplexing the logical clients (`--workers`,
+    /// `0` = auto: up to 16, never more than `clients`).
+    pub workers: usize,
 }
 
 impl Default for BurstSpec {
     fn default() -> BurstSpec {
-        BurstSpec { clients: 4, requests: 25, clips: 6, use_cache: true, seed: 0x5EED }
+        BurstSpec { clients: 4, requests: 25, clips: 6, use_cache: true, seed: 0x5EED, workers: 0 }
     }
 }
 
@@ -176,34 +181,51 @@ pub fn synthetic_clips(
 }
 
 /// Fire one burst at a running daemon and collect per-request latency.
-/// Each client thread runs its requests back-to-back, retrying through
-/// `Busy` bounces; latency includes those retries (it is what a caller
-/// actually waits).
+/// The logical clients are multiplexed over a bounded worker pool: each
+/// worker owns the clients `c ≡ w (mod workers)`, opens **all** their
+/// connections up front and holds them for the whole burst (so the
+/// daemon really sees `clients` concurrent connections — `--clients
+/// 256` exercises a 256-socket session table), then round-robins their
+/// requests. One thread per logical client used to make the harness hit
+/// the thread ceiling before the daemon did. Requests retry through
+/// `Busy` bounces and latency includes those retries (it is what a
+/// caller actually waits); the deterministic clip streams depend only
+/// on `(seed, client, request)`, so the worker count never changes what
+/// is sent.
 pub fn burst(addr: SocketAddr, g: &ModelGeometry, spec: &BurstSpec) -> Result<BurstReport> {
+    let workers = match spec.workers {
+        0 => spec.clients.clamp(1, 16),
+        w => w.min(spec.clients.max(1)),
+    };
     let mut latencies: Vec<f64> = Vec::with_capacity(spec.clients * spec.requests);
     let mut busy_retries = 0usize;
     std::thread::scope(|s| -> Result<()> {
-        let handles: Vec<_> = (0..spec.clients)
-            .map(|c| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
                 s.spawn(move || -> Result<(Vec<f64>, usize)> {
-                    let mut client = Client::connect(addr)?;
-                    let mut lats = Vec::with_capacity(spec.requests);
+                    let mine: Vec<usize> = (w..spec.clients).step_by(workers).collect();
+                    let mut conns = Vec::with_capacity(mine.len());
+                    for &c in &mine {
+                        conns.push((c as u64, Client::connect(addr)?));
+                    }
+                    let mut lats = Vec::with_capacity(mine.len() * spec.requests);
                     let mut retries = 0usize;
                     for r in 0..spec.requests {
-                        let clips =
-                            synthetic_clips(spec.seed, c as u64, r as u64, spec.clips, g);
-                        let t0 = Instant::now();
-                        let (_preds, n_retry) =
-                            client.predict_retry(&clips, spec.use_cache, 10_000)?;
-                        lats.push(t0.elapsed().as_secs_f64());
-                        retries += n_retry;
+                        for (c, client) in conns.iter_mut() {
+                            let clips = synthetic_clips(spec.seed, *c, r as u64, spec.clips, g);
+                            let t0 = Instant::now();
+                            let (_preds, n_retry) =
+                                client.predict_retry(&clips, spec.use_cache, 10_000)?;
+                            lats.push(t0.elapsed().as_secs_f64());
+                            retries += n_retry;
+                        }
                     }
                     Ok((lats, retries))
                 })
             })
             .collect();
         for h in handles {
-            let (lats, retries) = h.join().expect("burst client thread panicked")?;
+            let (lats, retries) = h.join().expect("burst worker thread panicked")?;
             latencies.extend(lats);
             busy_retries += retries;
         }

@@ -1,0 +1,493 @@
+//! The epoll session layer: **one thread owns every client socket**.
+//!
+//! Where the threaded layer spends an OS thread per connection blocked
+//! in `read_frame`, this loop keeps all sockets non-blocking, sleeps in
+//! [`Poller::wait`], and advances whichever connection the kernel says
+//! is ready: bytes read feed the connection's incremental
+//! [`FrameDecoder`], complete requests dispatch into the same
+//! round-robin replica queues the threaded layer uses, and replies
+//! accumulate in a per-connection outbox that flushes on writability.
+//! Predict replies cross back from the replica threads through
+//! [`Completions`] — a mutex'd queue plus the poller's eventfd waker.
+//!
+//! **Semantics are the threaded layer's, exactly.** Requests on one
+//! connection are served strictly in order (frame processing is gated
+//! while a predict is in flight, mirroring the threaded session's
+//! blocking reply wait), `Busy`/`Error` answers and counter updates are
+//! the same code paths ([`dispatch`], [`convert`], [`snapshot`]), and
+//! shutdown mirrors the drain: stop accepting, keep serving live
+//! connections, exit when the last one closes — dropping the job
+//! senders then drains every replica's tail. Row-locality already
+//! guarantees the predict tier is mix-invariant, so the only thing this
+//! layer could get wrong is framing or ordering; `tests/serve_e2e.rs`
+//! pins bit-equality against the threaded layer and
+//! `tests/prop_wire_codec.rs` pins the codec against the blocking
+//! reader.
+//!
+//! Interest management is level-triggered and explicit: read interest
+//! is dropped while a request is in flight (no busy-wake on bytes we
+//! will not decode yet), write interest exists only while the outbox
+//! has unsent bytes. Idle connections (no traffic for
+//! `idle_timeout_ms`, nothing in flight) are reaped on a timeout
+//! derived from the nearest deadline, so a half-open client costs one
+//! table entry for a bounded time instead of a thread forever.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::epoll::Waker;
+
+/// Completed predictions crossing from the predict loops back into the
+/// event loop. `None` means the replica died before answering — the
+/// event-layer mirror of the threaded session's disconnected reply
+/// channel, surfaced to the client as the same `Error` response.
+pub(super) struct Completions {
+    queue: Mutex<VecDeque<(u64, Option<Vec<f64>>)>>,
+    waker: Waker,
+}
+
+impl Completions {
+    pub(super) fn new(waker: Waker) -> Completions {
+        Completions { queue: Mutex::new(VecDeque::new()), waker }
+    }
+
+    /// Called from predict-loop threads (via `ReplyTo`): enqueue and
+    /// poke the event loop awake.
+    pub(super) fn push(&self, conn: u64, preds: Option<Vec<f64>>) {
+        self.queue.lock().expect("completion queue poisoned").push_back((conn, preds));
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> VecDeque<(u64, Option<Vec<f64>>)> {
+        std::mem::take(&mut *self.queue.lock().expect("completion queue poisoned"))
+    }
+}
+
+/// Everything the event loop shares with the rest of the daemon — the
+/// same set the threaded `session` receives, plus the completion queue.
+pub(super) struct Ctx<'a> {
+    pub txs: Vec<std::sync::mpsc::SyncSender<super::server::Job>>,
+    pub rr: &'a std::sync::atomic::AtomicUsize,
+    pub g: crate::runtime::ModelGeometry,
+    pub cache: &'a crate::coordinator::ClipCache,
+    pub counters: &'a super::server::Counters,
+    pub shutdown: &'a std::sync::atomic::AtomicBool,
+    pub retry_ms: u32,
+    pub queue_depth: usize,
+    pub idle: Option<std::time::Duration>,
+    pub completions: std::sync::Arc<Completions>,
+}
+
+#[cfg(unix)]
+pub(super) use imp::run;
+
+#[cfg(not(unix))]
+pub(super) fn run(
+    _listener: std::net::TcpListener,
+    _poller: crate::util::epoll::Poller,
+    _ctx: Ctx<'_>,
+) -> anyhow::Result<()> {
+    // Unreachable in practice: `Poller::new` already failed on any host
+    // that would land here, and `SessionLayer::resolve` refuses first.
+    anyhow::bail!("the epoll session layer is unsupported on this platform")
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::collections::HashMap;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use anyhow::{Context as _, Result};
+
+    use crate::util::epoll::{Event, Poller};
+
+    use super::super::server::{convert, dispatch, snapshot, Dispatch, Job, ReplyTo};
+    use super::super::wire::{FrameDecoder, Request, Response, FLAG_USE_CACHE};
+    use super::Ctx;
+
+    /// Token the listener is registered under. Connection tokens count
+    /// up from 0 and are never reused, so a stale readiness event after
+    /// a close can only miss the table, never hit a new connection.
+    const LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+    struct Conn {
+        stream: TcpStream,
+        decoder: FrameDecoder,
+        outbox: Vec<u8>,
+        out_pos: usize,
+        last_activity: Instant,
+        /// A predict is queued or batching; frame processing is gated
+        /// until its reply lands (per-connection request order).
+        inflight: bool,
+        /// Close once the outbox drains (shutdown ack, fatal response).
+        closing: bool,
+        /// Peer sent EOF; serve what is buffered, then close.
+        peer_eof: bool,
+        want_read: bool,
+        want_write: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                decoder: FrameDecoder::new(),
+                outbox: Vec::new(),
+                out_pos: 0,
+                last_activity: Instant::now(),
+                inflight: false,
+                closing: false,
+                peer_eof: false,
+                want_read: true,
+                want_write: false,
+            }
+        }
+
+        fn outbox_drained(&self) -> bool {
+            self.out_pos == self.outbox.len()
+        }
+    }
+
+    /// Append one response as a wire frame to the connection's outbox.
+    fn push_frame(outbox: &mut Vec<u8>, payload: &[u8]) {
+        outbox.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        outbox.extend_from_slice(payload);
+    }
+
+    /// Serve until shutdown is requested **and** the last live
+    /// connection closes (the threaded layer's drain ordering), then
+    /// return — dropping `ctx.txs` is what lets the replicas drain.
+    pub(in super::super) fn run(
+        listener: TcpListener,
+        mut poller: Poller,
+        ctx: Ctx<'_>,
+    ) -> Result<()> {
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        poller
+            .add(listener.as_raw_fd(), LISTENER_TOKEN, true, false)
+            .context("registering the listener")?;
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 0;
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let timeout = reap_idle(&mut conns, &poller, ctx.idle);
+            // Checked after reaping: if the reaper just closed the last
+            // connection during shutdown, nothing would ever wake the
+            // poll again.
+            if ctx.shutdown.load(Ordering::SeqCst) && conns.is_empty() {
+                break;
+            }
+            events.clear();
+            poller.wait(&mut events, timeout).context("epoll wait")?;
+            // Completions first: a reply both fills an outbox and
+            // un-gates the connection's next buffered request.
+            for (token, preds) in ctx.completions.drain() {
+                let found = match conns.get_mut(&token) {
+                    // A job bounced before admission (Busy) drops its
+                    // ReplyTo; that stale `None` must not become an
+                    // error frame on a connection with nothing pending.
+                    Some(conn) if conn.inflight => {
+                        conn.inflight = false;
+                        conn.last_activity = Instant::now();
+                        let resp = match preds {
+                            Some(p) => Response::Predictions(p),
+                            None => Response::Error("predictor dropped the request".into()),
+                        };
+                        push_frame(&mut conn.outbox, &resp.encode());
+                        true
+                    }
+                    _ => false,
+                };
+                if found {
+                    step_conn(token, &mut conns, &poller, &ctx);
+                }
+            }
+            for ev in events.iter().copied() {
+                if ev.token == LISTENER_TOKEN {
+                    accept_ready(&listener, &poller, &mut conns, &mut next_token, &ctx);
+                } else {
+                    socket_ready(ev, &mut conns, &poller, &ctx);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the accept queue. During shutdown new connections are
+    /// accepted and immediately dropped — the exact behavior of the
+    /// threaded acceptor's post-shutdown poke, and what turns a fatal
+    /// replica's `connect(addr)` poke into a loop wakeup.
+    fn accept_ready(
+        listener: &TcpListener,
+        poller: &Poller,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        ctx: &Ctx<'_>,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if ctx.shutdown.load(Ordering::SeqCst) {
+                        continue; // accepted and dropped
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = *next_token;
+                    *next_token += 1;
+                    if poller.add(stream.as_raw_fd(), token, true, false).is_ok() {
+                        conns.insert(token, Conn::new(stream));
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Kernel readiness on one connection: pull bytes on readable, then
+    /// let `step_conn` decode/dispatch/flush.
+    fn socket_ready(ev: Event, conns: &mut HashMap<u64, Conn>, poller: &Poller, ctx: &Ctx<'_>) {
+        let token = ev.token;
+        if ev.hangup {
+            close_conn(token, conns, poller);
+            return;
+        }
+        let mut dead = false;
+        if let Some(conn) = conns.get_mut(&token) {
+            if ev.readable {
+                let mut buf = [0u8; 16 * 1024];
+                loop {
+                    match conn.stream.read(&mut buf) {
+                        Ok(0) => {
+                            conn.peer_eof = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            conn.last_activity = Instant::now();
+                            if conn.decoder.feed(&buf[..n]).is_err() {
+                                // poisoned length prefix: the threaded
+                                // layer also just drops the connection
+                                dead = true;
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        } else {
+            return; // stale event for an already-closed connection
+        }
+        if dead {
+            close_conn(token, conns, poller);
+        } else {
+            step_conn(token, conns, poller, ctx);
+        }
+    }
+
+    /// Advance one connection after any state change: decode buffered
+    /// frames while the ordering gate allows, flush the outbox,
+    /// recompute poll interest, close when finished or broken.
+    fn step_conn(token: u64, conns: &mut HashMap<u64, Conn>, poller: &Poller, ctx: &Ctx<'_>) {
+        let mut dead = false;
+        if let Some(conn) = conns.get_mut(&token) {
+            while !dead && !conn.inflight && !conn.closing {
+                match conn.decoder.pop() {
+                    Ok(Some(frame)) => handle_frame(token, conn, &frame, ctx),
+                    Ok(None) => break,
+                    Err(_) => dead = true,
+                }
+            }
+            if !dead {
+                dead = flush_outbox(conn).is_err();
+            }
+            if !dead
+                && conn.outbox_drained()
+                && (conn.closing
+                    || (conn.peer_eof && !conn.inflight && conn.decoder.buffered() == 0))
+            {
+                dead = true;
+            }
+            if !dead {
+                let want_read = !conn.inflight && !conn.closing && !conn.peer_eof;
+                let want_write = !conn.outbox_drained();
+                if (want_read, want_write) != (conn.want_read, conn.want_write) {
+                    conn.want_read = want_read;
+                    conn.want_write = want_write;
+                    dead = poller
+                        .modify(conn.stream.as_raw_fd(), token, want_read, want_write)
+                        .is_err();
+                }
+            }
+        }
+        if dead {
+            close_conn(token, conns, poller);
+        }
+    }
+
+    /// One complete request frame — the same decode → dispatch → respond
+    /// sequence as the threaded `session`, with the outbox standing in
+    /// for the blocking `write_frame`.
+    fn handle_frame(token: u64, conn: &mut Conn, frame: &[u8], ctx: &Ctx<'_>) {
+        conn.last_activity = Instant::now();
+        let req = match Request::decode(frame) {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = Response::Error(format!("bad request: {e}"));
+                push_frame(&mut conn.outbox, &resp.encode());
+                conn.closing = true; // threaded layer ends the session here too
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Stats => Response::Stats(snapshot(ctx.counters, ctx.cache)),
+            Request::Shutdown => {
+                ctx.shutdown.store(true, Ordering::SeqCst);
+                conn.closing = true;
+                Response::ShutdownAck
+            }
+            Request::Predict { flags, clips } => match convert(&clips, &ctx.g) {
+                Err(e) => Response::Error(format!("invalid clips: {e}")),
+                Ok(converted) => {
+                    ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    if converted.is_empty() {
+                        Response::Predictions(Vec::new())
+                    } else {
+                        let use_cache = flags & FLAG_USE_CACHE != 0;
+                        let reply = ReplyTo::event(token, Arc::clone(&ctx.completions));
+                        match dispatch(&ctx.txs, ctx.rr, Job { clips: converted, use_cache, reply })
+                        {
+                            Dispatch::Sent => {
+                                conn.inflight = true;
+                                return; // reply arrives through Completions
+                            }
+                            Dispatch::Full => {
+                                ctx.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                Response::Busy {
+                                    retry_ms: ctx.retry_ms,
+                                    queue_depth: ctx.queue_depth as u32,
+                                }
+                            }
+                            Dispatch::Disconnected => {
+                                Response::Error("server is shutting down".into())
+                            }
+                        }
+                    }
+                }
+            },
+        };
+        push_frame(&mut conn.outbox, &resp.encode());
+    }
+
+    /// Write as much of the outbox as the socket accepts right now.
+    /// `Err` means the connection is broken.
+    fn flush_outbox(conn: &mut Conn) -> std::io::Result<()> {
+        while conn.out_pos < conn.outbox.len() {
+            match conn.stream.write(&conn.outbox[conn.out_pos..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if conn.outbox_drained() {
+            conn.outbox.clear();
+            conn.out_pos = 0;
+        }
+        Ok(())
+    }
+
+    fn close_conn(token: u64, conns: &mut HashMap<u64, Conn>, poller: &Poller) {
+        if let Some(conn) = conns.remove(&token) {
+            // Closing the fd deregisters it anyway; explicit delete keeps
+            // the table and the interest set in lockstep.
+            let _ = poller.delete(conn.stream.as_raw_fd());
+        }
+    }
+
+    /// Reap connections idle past the deadline and return the time to
+    /// the nearest remaining deadline as the poll timeout. In-flight
+    /// connections are waiting on the predict tier, not idle — they are
+    /// exempt until their reply lands (which refreshes the clock).
+    fn reap_idle(
+        conns: &mut HashMap<u64, Conn>,
+        poller: &Poller,
+        idle: Option<Duration>,
+    ) -> Option<Duration> {
+        let idle = idle?;
+        let now = Instant::now();
+        let mut next: Option<Duration> = None;
+        let mut expired: Vec<u64> = Vec::new();
+        for (&token, conn) in conns.iter() {
+            if conn.inflight {
+                continue;
+            }
+            let age = now.duration_since(conn.last_activity);
+            if age >= idle {
+                expired.push(token);
+            } else {
+                let left = idle - age;
+                next = Some(next.map_or(left, |n| n.min(left)));
+            }
+        }
+        for token in expired {
+            close_conn(token, conns, poller);
+        }
+        next
+    }
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use crate::serve::server::ReplyTo;
+    use crate::util::epoll::Poller;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn completions_wake_the_poller_and_drain_in_order() {
+        let mut poller = Poller::new().unwrap();
+        let completions = Arc::new(Completions::new(poller.waker()));
+        let c2 = Arc::clone(&completions);
+        let t = std::thread::spawn(move || {
+            c2.push(1, Some(vec![1.0]));
+            c2.push(2, None);
+        });
+        t.join().unwrap();
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+        let drained: Vec<_> = completions.drain().into();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0], (1, Some(vec![1.0])));
+        assert_eq!(drained[1], (2, None));
+        assert!(completions.drain().is_empty());
+    }
+
+    #[test]
+    fn dropping_an_event_reply_delivers_an_explicit_failure() {
+        let poller = Poller::new().unwrap();
+        let completions = Arc::new(Completions::new(poller.waker()));
+        let reply = ReplyTo::event(42, Arc::clone(&completions));
+        drop(reply); // replica died before answering
+        let drained = completions.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0], (42, None), "the connection must learn, not hang");
+    }
+}

@@ -18,26 +18,34 @@
 //! answers: predictions are bit-identical to single-shot runs, whatever
 //! the batch mix.
 //!
-//! The predict side scales horizontally (`--predict-loops N`): N
+//! The daemon is three tiers. The **session layer** owns client
+//! connections: a readiness-driven epoll event loop ([`event`], the
+//! Linux default — one thread for every socket) or the portable
+//! thread-per-connection fallback, selected by [`SessionLayer`]
+//! (`--session-layer` / `serve.session_layer`). The **replica
+//! dispatch** tier scales the predict side (`--predict-loops N`): N
 //! replicated predict loops pull from the bounded admission tier, each
-//! with a private accumulator and [`BatchRunner`] state over **one**
-//! shared read-only weight set and the shared concurrent clip cache.
-//! Row-locality again does the correctness work — which replica (and
-//! which batch mix) serves a clip can never change its bits, so replica
-//! count is a pure throughput knob, proved by the `serve_e2e`
-//! replica-invariance matrix. [`StatsReply::per_loop`] reports each
-//! replica's batch/fill counters so load sharing is observable.
+//! with a private accumulator and [`BatchRunner`] state. Underneath sit
+//! the **shared weights and cache**: one read-only weight set and one
+//! concurrent clip cache serve every replica. Row-locality does the
+//! correctness work at every tier — which session layer, which replica,
+//! and which batch mix serve a clip can never change its bits, proved
+//! by the `serve_e2e` invariance matrix over session layers × replica
+//! counts. [`StatsReply::per_loop`] reports each replica's batch/fill
+//! counters so load sharing is observable.
 //!
 //! [`client`] is the matching client plus the deterministic burst-load
-//! harness used by the e2e tests, the CI smoke job, and the Fig.-7
-//! latency table.
+//! harness (bounded worker pool — hundreds of logical clients without
+//! hundreds of threads) used by the e2e tests, the CI smoke job, and
+//! the Fig.-7 latency table.
 
 pub mod client;
+mod event;
 pub mod server;
 pub mod wire;
 
 pub use client::{burst, synthetic_clips, BurstReport, BurstSpec, Client, PredictOutcome};
-pub use server::{retry_hint_ms, Server, ServeOptions, ServeSummary, MAX_LINGER_US};
+pub use server::{retry_hint_ms, Server, ServeOptions, ServeSummary, SessionLayer, MAX_LINGER_US};
 pub use wire::{
-    LoopStats, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE, MAX_FRAME,
+    FrameDecoder, LoopStats, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE, MAX_FRAME,
 };

@@ -2,16 +2,28 @@
 //! many clients over the [`wire`](super::wire) protocol.
 //!
 //! ```text
-//!  client sessions (1 thread each)            N predict loops (replicas)
+//!  session tier (one of two layers)           N predict loops (replicas)
 //!  ┌─────────────────────────────┐  per-loop  ┌──────────────────────┐
-//!  │ read frame → validate clips │  bounded   │ loop 0: cache lookups│
-//!  │ round-robin try_send over   │──channels──▶ BatchAccumulator     │
-//!  │   the loops; all full →Busy │            │ flush: full batch or │
-//!  │ block on per-request reply ◀│────────────│   linger deadline    │
-//!  └─────────────────────────────┘            ├──────────────────────┤
-//!                                             │ loop 1: …            │
+//!  │ epoll event loop (1 thread, │  bounded   │ loop 0: cache lookups│
+//!  │   all sockets) — or one     │──channels──▶ BatchAccumulator     │
+//!  │   thread per connection     │            │ flush: full batch or │
+//!  │ validate → round-robin over │            │   linger deadline    │
+//!  │   the loops; all full →Busy ◀────────────├──────────────────────┤
+//!  └─────────────────────────────┘  replies   │ loop 1: …            │
 //!                                             └──────────────────────┘
 //! ```
+//!
+//! **Two session layers, one contract.** [`SessionLayer`] picks who owns
+//! the client sockets: the readiness-driven event loop in
+//! [`event`](super::event) (default on Linux — connection count stops
+//! being a thread count) or the portable thread-per-connection fallback
+//! (default elsewhere). Both run the same validate → dispatch → reply
+//! sequence per connection, so which layer served a request is
+//! observable only as latency, never as different bytes —
+//! `tests/serve_e2e.rs` pins bit-equality across layers × replica
+//! counts. Idle connections are reaped after
+//! [`ServeOptions::idle_timeout_ms`] in either layer, so a half-open
+//! client cannot pin daemon state forever.
 //!
 //! **One read-only model, N predict loops.** Every loop shares the same
 //! weight set (the forward pass is `&self`; all mutable forward state
@@ -38,6 +50,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
@@ -46,7 +59,9 @@ use crate::coordinator::ClipCache;
 use crate::dataset::ClipSample;
 use crate::predictor::{BatchAccumulator, BatchRunner};
 use crate::runtime::{ModelGeometry, Predictor};
+use crate::util::epoll::{self, Poller};
 
+use super::event::{self, Completions};
 use super::wire::{
     read_frame, write_frame, LoopStats, Request, Response, StatsReply, WireClip, FLAG_USE_CACHE,
 };
@@ -62,6 +77,64 @@ pub const MAX_LINGER_US: u64 = 60_000_000;
 /// `as u32` silently truncated oversized lingers to a wrapped hint).
 pub fn retry_hint_ms(linger_us: u64) -> u32 {
     u32::try_from((linger_us / 1_000).max(1)).unwrap_or(u32::MAX)
+}
+
+/// Which tier owns the client sockets (`--session-layer` /
+/// `serve.session_layer`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionLayer {
+    /// Pick for the host: epoll on Linux, threads elsewhere (default).
+    Auto,
+    /// One readiness-driven event loop thread owns every connection
+    /// (Linux only). Connection count stops being a thread count.
+    Epoll,
+    /// One OS thread per connection — the portable fallback.
+    Threads,
+}
+
+impl SessionLayer {
+    /// Parse a CLI/TOML value. `None` for unknown strings — the CLI
+    /// treats that as an error, TOML falls back to the default.
+    pub fn parse(s: &str) -> Option<SessionLayer> {
+        match s {
+            "auto" => Some(SessionLayer::Auto),
+            "epoll" => Some(SessionLayer::Epoll),
+            "threads" => Some(SessionLayer::Threads),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` against the host. Forcing `epoll` on a host
+    /// without it is an error, not a silent fallback — the same rule as
+    /// forcing an unavailable kernel tier.
+    pub fn resolve(self) -> Result<SessionLayer> {
+        match self {
+            SessionLayer::Auto => Ok(if epoll::available() {
+                SessionLayer::Epoll
+            } else {
+                SessionLayer::Threads
+            }),
+            SessionLayer::Epoll => {
+                ensure!(
+                    epoll::available(),
+                    "session layer 'epoll' forced but this host has no epoll \
+                     (Linux only); use --session-layer threads"
+                );
+                Ok(SessionLayer::Epoll)
+            }
+            SessionLayer::Threads => Ok(SessionLayer::Threads),
+        }
+    }
+}
+
+impl std::fmt::Display for SessionLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SessionLayer::Auto => "auto",
+            SessionLayer::Epoll => "epoll",
+            SessionLayer::Threads => "threads",
+        })
+    }
 }
 
 /// Daemon configuration (CLI flags + `[serve]` TOML keys).
@@ -90,6 +163,14 @@ pub struct ServeOptions {
     /// (`true`, the default) or copy them onto the heap
     /// (`cache_mmap = false` / `--cache-heap`).
     pub cache_mmap: bool,
+    /// Session tier (`--session-layer` / `serve.session_layer`):
+    /// `auto` (default) resolves to epoll on Linux, threads elsewhere.
+    pub session_layer: SessionLayer,
+    /// Reap a connection after this many ms without traffic (`0` =
+    /// never). The event loop reaps between requests; the threaded
+    /// fallback applies it as a socket read timeout. A connection
+    /// waiting on an in-flight predict is working, not idle.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -103,6 +184,8 @@ impl Default for ServeOptions {
             cache_path: None,
             cache_max_entries: 1_000_000,
             cache_mmap: true,
+            session_layer: SessionLayer::Auto,
+            idle_timeout_ms: 60_000,
         }
     }
 }
@@ -127,9 +210,9 @@ struct LoopCounters {
     cross_batches: AtomicU64,
 }
 
-struct Counters {
-    requests: AtomicU64,
-    rejected: AtomicU64,
+pub(super) struct Counters {
+    pub(super) requests: AtomicU64,
+    pub(super) rejected: AtomicU64,
     loops: Vec<LoopCounters>,
 }
 
@@ -143,7 +226,7 @@ impl Counters {
     }
 }
 
-fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
+pub(super) fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
     let cs = cache.stats();
     let per_loop: Vec<LoopStats> = counters
         .loops
@@ -170,11 +253,56 @@ fn snapshot(counters: &Counters, cache: &ClipCache) -> StatsReply {
     }
 }
 
+/// Where a finished request's predictions go: back to a blocked session
+/// thread (threaded layer) or into the event loop's completion queue
+/// (epoll layer). Dropping an unsent `ReplyTo` delivers the failure —
+/// the channel variant by disconnecting the receiver, the event variant
+/// by pushing an explicit `None` — so a dying replica can never strand
+/// a connection in either layer.
+pub(super) struct ReplyTo {
+    inner: Option<ReplyInner>,
+}
+
+enum ReplyInner {
+    Channel(SyncSender<Vec<f64>>),
+    Event { conn: u64, completions: Arc<Completions> },
+}
+
+impl ReplyTo {
+    pub(super) fn channel(tx: SyncSender<Vec<f64>>) -> ReplyTo {
+        ReplyTo { inner: Some(ReplyInner::Channel(tx)) }
+    }
+
+    pub(super) fn event(conn: u64, completions: Arc<Completions>) -> ReplyTo {
+        ReplyTo { inner: Some(ReplyInner::Event { conn, completions }) }
+    }
+
+    /// Deliver the predictions. A dead recipient (client hung up) is
+    /// fine — the answer is simply dropped.
+    fn send(mut self, preds: Vec<f64>) {
+        match self.inner.take() {
+            Some(ReplyInner::Channel(tx)) => {
+                let _ = tx.send(preds);
+            }
+            Some(ReplyInner::Event { conn, completions }) => completions.push(conn, Some(preds)),
+            None => {}
+        }
+    }
+}
+
+impl Drop for ReplyTo {
+    fn drop(&mut self) {
+        if let Some(ReplyInner::Event { conn, completions }) = self.inner.take() {
+            completions.push(conn, None);
+        }
+    }
+}
+
 /// One admitted predict request, queued for a predict loop.
-struct Job {
-    clips: Vec<(u64, ClipSample)>,
-    use_cache: bool,
-    reply: SyncSender<Vec<f64>>,
+pub(super) struct Job {
+    pub(super) clips: Vec<(u64, ClipSample)>,
+    pub(super) use_cache: bool,
+    pub(super) reply: ReplyTo,
 }
 
 /// Routing tag threaded through a loop's accumulator:
@@ -183,7 +311,7 @@ type Tag = (u64, usize, u64);
 
 /// A request whose rows are still spread across pending batches.
 struct Inflight {
-    reply: SyncSender<Vec<f64>>,
+    reply: ReplyTo,
     out: Vec<f64>,
     remaining: usize,
     use_cache: bool,
@@ -219,6 +347,21 @@ impl Server {
     pub fn run(self, model: &(dyn Predictor + Send + Sync)) -> Result<ServeSummary> {
         let Server { listener, opts } = self;
         let addr = listener.local_addr().context("listener address")?;
+        let layer = opts.session_layer.resolve()?;
+        let idle = match opts.idle_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        // Build the poller before any thread spawns so a host that
+        // cannot epoll (or is out of fds) fails the whole run cleanly.
+        let event_state = match layer {
+            SessionLayer::Epoll => {
+                let poller = Poller::new().context("creating the epoll poller")?;
+                let completions = Arc::new(Completions::new(poller.waker()));
+                Some((poller, completions))
+            }
+            _ => None,
+        };
         let (cache, warm_start) = match opts.cache_path.as_deref() {
             Some(p) => ClipCache::load_or_cold_bounded_with(
                 p,
@@ -255,30 +398,48 @@ impl Server {
             let counters = &counters;
             let shutdown = &shutdown;
             let rr = &rr;
-            // Acceptor owns the only long-lived sender clones; sessions
-            // clone from them. When the acceptor breaks out and the last
-            // session ends, every loop's channel disconnects and the
-            // predict loops below drain out — that ordering *is* the
-            // graceful drain of all N tails.
-            s.spawn(move || {
-                for stream in listener.incoming() {
-                    if shutdown.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let stream = match stream {
-                        Ok(st) => st,
-                        Err(_) => continue,
+            // The session tier owns the only long-lived sender clones.
+            // When it exits (event loop returns, or the acceptor breaks
+            // out and the last session thread ends), every loop's channel
+            // disconnects and the predict loops below drain out — that
+            // ordering *is* the graceful drain of all N tails.
+            let tier = match event_state {
+                Some((poller, completions)) => {
+                    let ctx = event::Ctx {
+                        txs,
+                        rr,
+                        g,
+                        cache,
+                        counters,
+                        shutdown,
+                        retry_ms,
+                        queue_depth: admission_cap,
+                        idle,
+                        completions,
                     };
-                    let txs = txs.clone();
-                    let g = g.clone();
-                    s.spawn(move || {
-                        session(
-                            stream, txs, rr, g, cache, counters, shutdown, retry_ms, addr,
-                            admission_cap,
-                        )
-                    });
+                    s.spawn(move || event::run(listener, poller, ctx))
                 }
-            });
+                None => s.spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match stream {
+                            Ok(st) => st,
+                            Err(_) => continue,
+                        };
+                        let txs = txs.clone();
+                        let g = g.clone();
+                        s.spawn(move || {
+                            session(
+                                stream, txs, rr, g, cache, counters, shutdown, retry_ms, addr,
+                                admission_cap, idle,
+                            )
+                        });
+                    }
+                    Ok(())
+                }),
+            };
             let handles: Vec<_> = rxs
                 .into_iter()
                 .enumerate()
@@ -303,6 +464,10 @@ impl Server {
                 if first.is_ok() {
                     first = r;
                 }
+            }
+            let tier_r = tier.join().expect("session tier panicked");
+            if first.is_ok() {
+                first = tier_r;
             }
             first
         });
@@ -331,7 +496,7 @@ impl Server {
 /// Validate wire clips against the model geometry and build the
 /// `ClipSample`s the batcher expects. All-or-nothing: one bad clip
 /// refuses the whole request before it can occupy a queue slot.
-fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64, ClipSample)>> {
+pub(super) fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64, ClipSample)>> {
     clips
         .iter()
         .enumerate()
@@ -375,7 +540,7 @@ fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64, ClipSample
 }
 
 /// Outcome of offering a job to the predict loops.
-enum Dispatch {
+pub(super) enum Dispatch {
     /// A loop took the job; await the reply.
     Sent,
     /// Every live loop's queue was full — backpressure, answer `Busy`.
@@ -389,7 +554,7 @@ enum Dispatch {
 /// evenly; the failover scan keeps one slow replica from bouncing
 /// requests while its siblings sit idle. Row-locality means the choice
 /// of loop can never change an answer, only its latency.
-fn dispatch(txs: &[SyncSender<Job>], rr: &AtomicUsize, mut job: Job) -> Dispatch {
+pub(super) fn dispatch(txs: &[SyncSender<Job>], rr: &AtomicUsize, mut job: Job) -> Dispatch {
     let n = txs.len();
     let start = rr.fetch_add(1, Ordering::Relaxed) % n;
     let mut saw_full = false;
@@ -423,7 +588,13 @@ fn session(
     retry_ms: u32,
     addr: SocketAddr,
     queue_depth: usize,
+    idle: Option<Duration>,
 ) {
+    // Reap half-open clients: a connection that goes `idle` without
+    // completing a frame times out the blocking read and ends the
+    // session. The reply wait below blocks on a channel, not the
+    // socket, so an in-flight predict is never cut short by this.
+    let _ = stream.set_read_timeout(idle);
     loop {
         // client hangup (or a poisoned length prefix) ends the session
         let frame = match read_frame(&mut stream) {
@@ -456,8 +627,8 @@ fn session(
                     } else {
                         let use_cache = flags & FLAG_USE_CACHE != 0;
                         let (rtx, rrx) = sync_channel::<Vec<f64>>(1);
-                        match dispatch(&txs, rr, Job { clips: converted, use_cache, reply: rtx })
-                        {
+                        let reply = ReplyTo::channel(rtx);
+                        match dispatch(&txs, rr, Job { clips: converted, use_cache, reply }) {
                             Dispatch::Sent => match rrx.recv() {
                                 Ok(preds) => Response::Predictions(preds),
                                 Err(_) => {
@@ -515,7 +686,7 @@ fn finish_slot(inflight: &mut HashMap<u64, Inflight>, id: u64, slot: usize, v: f
     fl.remaining -= 1;
     if fl.remaining == 0 {
         let fl = inflight.remove(&id).expect("entry just updated");
-        let _ = fl.reply.send(fl.out);
+        fl.reply.send(fl.out);
     }
 }
 
@@ -635,7 +806,39 @@ mod tests {
 
     fn dummy_job() -> (Job, Receiver<Vec<f64>>) {
         let (rtx, rrx) = sync_channel(1);
-        (Job { clips: Vec::new(), use_cache: false, reply: rtx }, rrx)
+        (Job { clips: Vec::new(), use_cache: false, reply: ReplyTo::channel(rtx) }, rrx)
+    }
+
+    #[test]
+    fn session_layer_parses_displays_and_resolves() {
+        for (s, l) in [
+            ("auto", SessionLayer::Auto),
+            ("epoll", SessionLayer::Epoll),
+            ("threads", SessionLayer::Threads),
+        ] {
+            assert_eq!(SessionLayer::parse(s), Some(l));
+            assert_eq!(l.to_string(), s);
+        }
+        assert_eq!(SessionLayer::parse("kqueue"), None);
+        assert_eq!(SessionLayer::parse("Epoll"), None, "values are lowercase");
+        // threads always resolves; auto never stays auto
+        assert_eq!(SessionLayer::Threads.resolve().unwrap(), SessionLayer::Threads);
+        let auto = SessionLayer::Auto.resolve().unwrap();
+        assert_ne!(auto, SessionLayer::Auto);
+        if crate::util::epoll::available() {
+            assert_eq!(auto, SessionLayer::Epoll);
+            assert_eq!(SessionLayer::Epoll.resolve().unwrap(), SessionLayer::Epoll);
+        } else {
+            assert_eq!(auto, SessionLayer::Threads);
+            assert!(SessionLayer::Epoll.resolve().is_err(), "forced epoll must not fall back");
+        }
+    }
+
+    #[test]
+    fn dropping_a_channel_reply_disconnects_the_receiver() {
+        let (job, rrx) = dummy_job();
+        drop(job);
+        assert!(rrx.recv().is_err(), "an unsent reply must not hang the session");
     }
 
     #[test]

@@ -41,14 +41,80 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
     r.read_exact(&mut b4)?;
     let n = u32::from_le_bytes(b4);
     if n > MAX_FRAME {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame of {n} bytes exceeds the {MAX_FRAME} byte cap"),
-        ));
+        return Err(oversized(n));
     }
     let mut buf = vec![0u8; n as usize];
     r.read_exact(&mut buf)?;
     Ok(buf)
+}
+
+fn oversized(n: u32) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("frame of {n} bytes exceeds the {MAX_FRAME} byte cap"),
+    )
+}
+
+/// Incremental frame decoder for non-blocking sockets: feed whatever
+/// bytes arrived, pop complete frames. Resumable at **any** byte
+/// boundary — a frame split mid-header or mid-payload just waits for
+/// more bytes — and bit-identical to repeated [`read_frame`] calls over
+/// the same stream (the property suite in `tests/prop_wire_codec.rs`
+/// pins this). An oversized length prefix is refused the moment the
+/// 4-byte header is visible, before any payload allocation, with the
+/// same [`MAX_FRAME`] cap as the blocking path.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Bytes fed but not yet popped as complete frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Payload length of the frame at the front of the buffer: `None`
+    /// while the header is still partial, an error past [`MAX_FRAME`].
+    fn front_len(&self) -> std::io::Result<Option<usize>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let n = u32::from_le_bytes(self.buf[..4].try_into().unwrap());
+        if n > MAX_FRAME {
+            return Err(oversized(n));
+        }
+        Ok(Some(n as usize))
+    }
+
+    /// Append bytes read off the socket. Errors as soon as the front
+    /// frame's header announces an oversized payload — the connection is
+    /// already unframed at that point and must be dropped.
+    pub fn feed(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.buf.extend_from_slice(bytes);
+        self.front_len().map(|_| ())
+    }
+
+    /// Pop the next complete frame payload, `None` while incomplete. A
+    /// later frame's corrupt header only becomes visible (and refused)
+    /// once it reaches the front, exactly like sequential [`read_frame`]
+    /// calls would encounter it.
+    pub fn pop(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        let n = match self.front_len()? {
+            Some(n) => n,
+            None => return Ok(None),
+        };
+        if self.buf.len() < 4 + n {
+            return Ok(None);
+        }
+        let frame = self.buf[4..4 + n].to_vec();
+        self.buf.drain(..4 + n);
+        Ok(Some(frame))
+    }
 }
 
 /// One clip as it crosses the wire: the caller-chosen content key plus
@@ -489,6 +555,55 @@ mod tests {
         assert_eq!(read_frame(&mut r).unwrap(), b"");
         let bad = (MAX_FRAME + 1).to_le_bytes();
         assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn decoder_matches_blocking_reads_at_any_split() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, b"hello").unwrap();
+        write_frame(&mut stream, b"").unwrap();
+        write_frame(&mut stream, &[0xAB; 300]).unwrap();
+        // byte-at-a-time feed: the worst-case split
+        let mut dec = FrameDecoder::new();
+        let mut frames = Vec::new();
+        for &b in &stream {
+            dec.feed(&[b]).unwrap();
+            while let Some(f) = dec.pop().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], b"hello");
+        assert_eq!(frames[1], b"");
+        assert_eq!(frames[2], vec![0xAB; 300]);
+        assert_eq!(dec.buffered(), 0);
+        // whole stream in one feed pops the same frames
+        let mut dec = FrameDecoder::new();
+        dec.feed(&stream).unwrap();
+        for want in &frames {
+            assert_eq!(&dec.pop().unwrap().unwrap(), want);
+        }
+        assert!(dec.pop().unwrap().is_none());
+    }
+
+    #[test]
+    fn decoder_refuses_oversized_headers_like_read_frame() {
+        let mut dec = FrameDecoder::new();
+        assert!(dec.feed(&(MAX_FRAME + 1).to_le_bytes()).is_err());
+        // behind a valid frame, the bad header is refused once it
+        // reaches the front — the valid frame still comes out first
+        let mut stream = Vec::new();
+        write_frame(&mut stream, b"ok").unwrap();
+        stream.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&stream).unwrap();
+        assert_eq!(dec.pop().unwrap().unwrap(), b"ok");
+        assert!(dec.pop().is_err());
+        // a partial header is just "not yet", never an error
+        let mut dec = FrameDecoder::new();
+        dec.feed(&[0xFF, 0xFF]).unwrap();
+        assert!(dec.pop().unwrap().is_none());
+        assert_eq!(dec.buffered(), 2);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Readiness polling for the serve session layer — **all `unsafe` in the
+//! event-driven serving stack lives in this module**, nowhere else (same
+//! confinement rule as [`super::mmap`] for the persistence stack).
+//!
+//! [`Poller`] wraps a Linux `epoll` instance plus an `eventfd` wakeup
+//! channel, bound `extern "C"` against the libc `std` already links — the
+//! zero-dependency rule means no `libc`/`mio` crate. The API is the small
+//! readiness core an event loop needs: register/modify/deregister a fd
+//! with a `u64` token, block in [`Poller::wait`] with a timeout, and poke
+//! the loop from any thread through a cloneable [`Waker`] (the predict
+//! loops use this to signal completed batches).
+//!
+//! On non-Linux targets the module still compiles: [`available`] reports
+//! `false`, [`Poller::new`] returns `ErrorKind::Unsupported`, and the
+//! serve layer falls back to thread-per-connection sessions. Forcing
+//! `--session-layer epoll` on such a host is an error, not a silent
+//! fallback — same convention as forcing an unavailable kernel tier.
+//!
+//! Safety argument for the Linux path: every fd we pass to the kernel is
+//! either owned by the `Poller` (epoll fd, eventfd — closed exactly once
+//! in `Drop`) or borrowed from a caller-owned socket that the event loop
+//! keeps alive for the registration's lifetime; `epoll_event` uses the
+//! kernel's ABI layout (packed on x86_64, naturally aligned elsewhere);
+//! and the wait buffer is sized/valid for the `maxevents` we report.
+//! Tokens are plain data to the kernel — stale events after a `delete`
+//! are possible in principle and the event loop treats unknown tokens as
+//! no-ops.
+
+use std::io;
+
+/// Readiness delivered by [`Poller::wait`]. `readable`/`writable` follow
+/// the registered interest; `hangup` covers `EPOLLHUP`/`EPOLLERR`, which
+/// the kernel reports regardless of interest.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+/// `true` when this host has a real readiness backend (Linux epoll).
+pub fn available() -> bool {
+    cfg!(target_os = "linux")
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::sync::Arc;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const EFD_NONBLOCK: i32 = 0x800;
+    const EFD_CLOEXEC: i32 = 0x80000;
+
+    /// The kernel's `struct epoll_event`. On x86_64 Linux it is packed to
+    /// 12 bytes (a 32-bit-era ABI fossil); everywhere else it has natural
+    /// alignment. Getting this wrong silently corrupts `data` for every
+    /// event after the first, so the layout is pinned by a test below.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut std::ffi::c_void, count: usize) -> isize;
+        fn write(fd: i32, buf: *const std::ffi::c_void, count: usize) -> isize;
+    }
+
+    /// An owned kernel fd, closed exactly once on drop.
+    struct OwnedFd(i32);
+
+    impl Drop for OwnedFd {
+        fn drop(&mut self) {
+            // The fd came from a successful create/eventfd call and nothing
+            // else closes it; a failure here has no recovery.
+            unsafe { close(self.0) };
+        }
+    }
+
+    /// Token the internal eventfd is registered under. Caller tokens must
+    /// stay below this; the event loop's slab indices trivially do.
+    const WAKE_TOKEN: u64 = u64::MAX;
+
+    /// A Linux epoll instance plus an eventfd wake channel.
+    pub struct Poller {
+        epfd: OwnedFd,
+        wake: Arc<OwnedFd>,
+        buf: Vec<EpollEvent>,
+    }
+
+    /// Cross-thread handle that makes a blocked [`Poller::wait`] return.
+    /// Cloneable, `Send + Sync`; wakes coalesce (the eventfd is a counter).
+    #[derive(Clone)]
+    pub struct Waker {
+        wake: Arc<OwnedFd>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            // A full counter (EAGAIN) still leaves the fd readable, so a
+            // lost increment cannot lose the wakeup; ignore the result.
+            unsafe {
+                write(self.wake.0, (&one as *const u64).cast(), 8);
+            }
+        }
+    }
+
+    fn interest_bits(read: bool, write: bool) -> u32 {
+        (if read { EPOLLIN } else { 0 }) | (if write { EPOLLOUT } else { 0 })
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let epfd = OwnedFd(epfd);
+            let wfd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+            if wfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let wake = Arc::new(OwnedFd(wfd));
+            let poller = Poller { epfd, wake, buf: vec![EpollEvent { events: 0, data: 0 }; 256] };
+            poller.ctl(EPOLL_CTL_ADD, poller.wake.0, EPOLLIN, WAKE_TOKEN)?;
+            Ok(poller)
+        }
+
+        /// A cloneable cross-thread wake handle for this poller.
+        pub fn waker(&self) -> Waker {
+            Waker { wake: Arc::clone(&self.wake) }
+        }
+
+        fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd.0, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register `fd` under `token` with the given interest. The caller
+        /// keeps `fd` open until [`Poller::delete`] (or the fd's close,
+        /// which deregisters implicitly).
+        pub fn add(&self, fd: i32, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, interest_bits(read, write), token)
+        }
+
+        /// Replace the interest set of an already-registered `fd`.
+        pub fn modify(&self, fd: i32, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, interest_bits(read, write), token)
+        }
+
+        /// Deregister `fd`. Events already queued for it may still be
+        /// delivered by an in-flight `wait`; callers match on token.
+        pub fn delete(&self, fd: i32) -> io::Result<()> {
+            // Pre-2.6.9 kernels required a non-null event for DEL; passing
+            // one is free and keeps the call portable.
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until readiness, a wake, or the timeout; `None` blocks
+        /// indefinitely. Appends caller events to `events` (wake events are
+        /// drained internally and not reported) and returns how many were
+        /// appended — `0` means timeout or a bare wake.
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<std::time::Duration>,
+        ) -> io::Result<usize> {
+            let timeout_ms: i32 = match timeout {
+                // Round up so a 0.4 ms deadline doesn't spin at timeout 0.
+                Some(d) => d.as_millis().saturating_add(1).min(i32::MAX as u128) as i32,
+                None => -1,
+            };
+            let n = loop {
+                let rc = unsafe {
+                    epoll_wait(
+                        self.epfd.0,
+                        self.buf.as_mut_ptr(),
+                        self.buf.len() as i32,
+                        timeout_ms,
+                    )
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            let mut appended = 0;
+            for i in 0..n {
+                let ev = self.buf[i];
+                let (bits, token) = (ev.events, ev.data);
+                if token == WAKE_TOKEN {
+                    let mut counter: u64 = 0;
+                    // Drain the coalesced counter; EAGAIN (already empty) is
+                    // fine — the next wake re-arms it.
+                    unsafe { read(self.wake.0, (&mut counter as *mut u64).cast(), 8) };
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLHUP | EPOLLERR) != 0,
+                });
+                appended += 1;
+            }
+            Ok(appended)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::io::Write as _;
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+        use std::time::Duration;
+
+        #[test]
+        fn epoll_event_layout_matches_kernel_abi() {
+            let expect = if cfg!(target_arch = "x86_64") { 12 } else { 16 };
+            assert_eq!(std::mem::size_of::<EpollEvent>(), expect);
+        }
+
+        #[test]
+        fn empty_poller_times_out_with_no_events() {
+            let mut p = Poller::new().unwrap();
+            let mut evs = Vec::new();
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0);
+            assert!(evs.is_empty());
+        }
+
+        #[test]
+        fn listener_becomes_readable_on_connect() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut p = Poller::new().unwrap();
+            p.add(listener.as_raw_fd(), 7, true, false).unwrap();
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let mut evs = Vec::new();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert!(evs.iter().any(|e| e.token == 7 && e.readable));
+        }
+
+        #[test]
+        fn connected_stream_reports_writable_then_modify_masks_it() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            let mut p = Poller::new().unwrap();
+            p.add(server.as_raw_fd(), 3, false, true).unwrap();
+            let mut evs = Vec::new();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert!(evs.iter().any(|e| e.token == 3 && e.writable));
+
+            // Drop write interest, gain read interest: quiet until data.
+            p.modify(server.as_raw_fd(), 3, true, false).unwrap();
+            evs.clear();
+            let n = p.wait(&mut evs, Some(Duration::from_millis(20))).unwrap();
+            assert_eq!(n, 0, "no data yet, write interest masked");
+            (&client).write_all(b"x").unwrap();
+            p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert!(evs.iter().any(|e| e.token == 3 && e.readable));
+        }
+
+        #[test]
+        fn waker_unblocks_wait_from_another_thread() {
+            let mut p = Poller::new().unwrap();
+            let waker = p.waker();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                waker.wake();
+                waker.wake(); // coalesces with the first
+            });
+            let mut evs = Vec::new();
+            let n = p.wait(&mut evs, Some(Duration::from_secs(10))).unwrap();
+            t.join().unwrap();
+            assert_eq!(n, 0, "a bare wake reports no caller events");
+            // Drained: the next wait times out instead of spinning on the
+            // still-readable eventfd.
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0);
+        }
+
+        #[test]
+        fn delete_stops_event_delivery() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut p = Poller::new().unwrap();
+            p.add(listener.as_raw_fd(), 1, true, false).unwrap();
+            p.delete(listener.as_raw_fd()).unwrap();
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let mut evs = Vec::new();
+            let n = p.wait(&mut evs, Some(Duration::from_millis(30))).unwrap();
+            assert_eq!(n, 0, "deregistered fd stays silent");
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    use super::Event;
+    use std::io;
+
+    /// Stub poller for hosts without epoll: construction fails with
+    /// `Unsupported` and the serve layer uses threaded sessions instead.
+    pub struct Poller {
+        _priv: (),
+    }
+
+    /// Stub waker (unreachable in practice — no `Poller` can exist).
+    #[derive(Clone)]
+    pub struct Waker {
+        _priv: (),
+    }
+
+    impl Waker {
+        pub fn wake(&self) {}
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "epoll session layer requires Linux; use --session-layer threads",
+            ))
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { _priv: () }
+        }
+
+        pub fn add(&self, _fd: i32, _token: u64, _read: bool, _write: bool) -> io::Result<()> {
+            unreachable!("stub Poller cannot be constructed")
+        }
+
+        pub fn modify(&self, _fd: i32, _token: u64, _read: bool, _write: bool) -> io::Result<()> {
+            unreachable!("stub Poller cannot be constructed")
+        }
+
+        pub fn delete(&self, _fd: i32) -> io::Result<()> {
+            unreachable!("stub Poller cannot be constructed")
+        }
+
+        pub fn wait(
+            &mut self,
+            _events: &mut Vec<Event>,
+            _timeout: Option<std::time::Duration>,
+        ) -> io::Result<usize> {
+            unreachable!("stub Poller cannot be constructed")
+        }
+    }
+}
+
+pub use imp::{Poller, Waker};

@@ -1,6 +1,7 @@
 //! Offline-friendly utilities: the vendored crate set has no serde / rand /
 //! criterion / proptest, so the small pieces we need live here, tested.
 
+pub mod epoll;
 pub mod image;
 pub mod json;
 pub mod mmap;

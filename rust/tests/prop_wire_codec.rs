@@ -1,0 +1,234 @@
+//! Property suite for the serve wire codec: the incremental
+//! `FrameDecoder` the epoll session layer reads with must be
+//! bit-identical to the blocking `read_frame` loop a session thread
+//! runs — at **every** byte boundary the kernel could split a stream
+//! on, for whole streams, truncated streams, oversized length
+//! prefixes, and garbage payloads alike. The session layers can only
+//! be interchangeable if the two framing paths are.
+
+use capsim::serve::wire::{read_frame, write_frame};
+use capsim::serve::{FrameDecoder, Request, WireClip, MAX_FRAME};
+use capsim::util::prop::check_res;
+use capsim::util::Rng;
+
+/// A random stream of whole frames (empty payloads included) plus a
+/// random chunking of its bytes — the two independent axes the
+/// decoder must be invariant over.
+fn random_stream(rng: &mut Rng) -> (Vec<Vec<u8>>, Vec<u8>, Vec<usize>) {
+    let n_frames = rng.below(7) as usize;
+    let payloads: Vec<Vec<u8>> = (0..n_frames)
+        .map(|_| {
+            let len = if rng.chance(0.2) { 0 } else { rng.range(1, 300) };
+            (0..len).map(|_| rng.next_u64() as u8).collect()
+        })
+        .collect();
+    let mut stream = Vec::new();
+    for p in &payloads {
+        write_frame(&mut stream, p).unwrap();
+    }
+    let sizes = chunk_sizes(rng, stream.len());
+    (payloads, stream, sizes)
+}
+
+/// Random chunk sizes covering `total` bytes: mostly a small dribble
+/// (1..=9 bytes, what a slow sender produces), occasionally one gulp.
+fn chunk_sizes(rng: &mut Rng, total: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut left = total;
+    while left > 0 {
+        let take = if rng.chance(0.1) { left } else { (1 + rng.below(9) as usize).min(left) };
+        sizes.push(take);
+        left -= take;
+    }
+    sizes
+}
+
+/// Drive the decoder over the chunking; collect frames until the bytes
+/// run out or the decoder refuses the stream.
+fn decode_chunked(stream: &[u8], sizes: &[usize]) -> Result<Vec<Vec<u8>>, String> {
+    let mut dec = FrameDecoder::new();
+    let mut frames = Vec::new();
+    let mut off = 0;
+    for &s in sizes {
+        dec.feed(&stream[off..off + s]).map_err(|e| e.to_string())?;
+        off += s;
+        loop {
+            match dec.pop() {
+                Ok(Some(f)) => frames.push(f),
+                Ok(None) => break,
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+    }
+    Ok(frames)
+}
+
+/// The blocking reference: `read_frame` in a loop until the stream
+/// runs dry (`Ok` with the frames so far — a trailing partial frame is
+/// "not yet", exactly like the decoder buffering it) or a refusal.
+fn decode_blocking(stream: &[u8]) -> Result<Vec<Vec<u8>>, String> {
+    let mut r = stream;
+    let mut frames = Vec::new();
+    loop {
+        if r.is_empty() {
+            return Ok(frames);
+        }
+        match read_frame(&mut r) {
+            Ok(f) => frames.push(f),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(frames),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+}
+
+/// Whatever chunking the kernel produces, the decoder must hand back
+/// exactly the frames that were written — and exactly what blocking
+/// reads over the same bytes produce.
+#[test]
+fn any_chunking_decodes_bit_identically_to_blocking_reads() {
+    check_res("chunked == blocking", 96, random_stream, |(payloads, stream, sizes)| {
+        let chunked = decode_chunked(stream, sizes).map_err(|e| format!("chunked: {e}"))?;
+        let blocking = decode_blocking(stream).map_err(|e| format!("blocking: {e}"))?;
+        if &chunked != payloads {
+            return Err("chunked frames differ from the written payloads".into());
+        }
+        if chunked != blocking {
+            return Err("chunked and blocking frames differ".into());
+        }
+        Ok(())
+    });
+}
+
+/// Cutting a stream anywhere — mid-header, mid-payload, between frames
+/// — yields a prefix of the written frames in both paths, never an
+/// error: an incomplete frame is "not yet", not corruption.
+#[test]
+fn truncation_yields_a_frame_prefix_never_an_error() {
+    check_res(
+        "truncated stream",
+        96,
+        |rng| {
+            let (payloads, stream, _) = random_stream(rng);
+            let cut = match stream.len() {
+                0 => 0,
+                n => rng.below(n as u64) as usize,
+            };
+            let sizes = chunk_sizes(rng, cut);
+            (payloads, stream[..cut].to_vec(), sizes)
+        },
+        |(payloads, stream, sizes)| {
+            let chunked = decode_chunked(stream, sizes).map_err(|e| format!("chunked: {e}"))?;
+            let blocking = decode_blocking(stream).map_err(|e| format!("blocking: {e}"))?;
+            if chunked != blocking {
+                return Err("chunked and blocking disagree on the truncated stream".into());
+            }
+            if chunked.len() > payloads.len()
+                || chunked.iter().zip(payloads).any(|(got, want)| got != want)
+            {
+                return Err("truncation must yield a prefix of the written frames".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Any length prefix past `MAX_FRAME` is refused the moment the 4-byte
+/// header is visible — before any payload allocation — with the **same
+/// error text** in both paths, even when the bad header hides behind a
+/// valid frame or arrives one byte at a time.
+#[test]
+fn oversized_lengths_are_refused_identically_at_header_time() {
+    check_res(
+        "oversized header",
+        64,
+        |rng| {
+            let n = MAX_FRAME + 1 + rng.below((u32::MAX - MAX_FRAME) as u64) as u32;
+            let mut stream = Vec::new();
+            if rng.chance(0.5) {
+                write_frame(&mut stream, b"ok").unwrap();
+            }
+            stream.extend_from_slice(&n.to_le_bytes());
+            // bytes after the bad header are unreachable either way
+            for _ in 0..rng.below(16) {
+                stream.push(rng.next_u64() as u8);
+            }
+            (n, stream)
+        },
+        |(n, stream)| {
+            let blocking = decode_blocking(stream);
+            // one byte at a time: the bad header itself split four ways
+            let chunked = decode_chunked(stream, &vec![1; stream.len()]);
+            let (be, ce) = match (blocking, chunked) {
+                (Err(be), Err(ce)) => (be, ce),
+                other => return Err(format!("both paths must refuse, got {other:?}")),
+            };
+            if be != ce {
+                return Err(format!("refusal texts differ: '{be}' vs '{ce}'"));
+            }
+            if !be.contains(&format!("frame of {n} bytes")) {
+                return Err(format!("refusal should name the bad length: '{be}'"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_clip(rng: &mut Rng) -> WireClip {
+    let len = rng.range(1, 4) as u16;
+    WireClip {
+        key: rng.next_u64(),
+        len,
+        tokens: (0..len as usize * 4).map(|_| rng.next_u64() as u16).collect(),
+        ctx: (0..5).map(|_| rng.next_u64() as u16).collect(),
+    }
+}
+
+/// A payload — valid, truncated, bit-flipped, or raw noise — framed and
+/// recovered through either path must hand `Request::decode` the exact
+/// same bytes, so both session layers accept and refuse identically.
+#[test]
+fn garbage_payloads_decode_identically_through_either_path() {
+    check_res(
+        "request decode parity",
+        96,
+        |rng| {
+            let mut payload = match rng.below(4) {
+                0 => {
+                    let clips = vec![random_clip(rng)];
+                    Request::Predict { flags: rng.next_u64() as u8, clips }.encode()
+                }
+                1 => Request::Stats.encode(),
+                2 => {
+                    let clips = vec![random_clip(rng)];
+                    let mut p = Request::Predict { flags: 0, clips }.encode();
+                    p.truncate(rng.below(p.len() as u64 + 1) as usize);
+                    p
+                }
+                _ => (0..rng.below(40)).map(|_| rng.next_u64() as u8).collect(),
+            };
+            if rng.chance(0.3) && !payload.is_empty() {
+                let i = rng.range(0, payload.len());
+                payload[i] ^= 1 << rng.below(8);
+            }
+            payload
+        },
+        |payload| {
+            let mut stream = Vec::new();
+            write_frame(&mut stream, payload).unwrap();
+            let via_blocking = read_frame(&mut &stream[..]).map_err(|e| e.to_string())?;
+            let mut frames = decode_chunked(&stream, &vec![1; stream.len()])
+                .map_err(|e| format!("chunked: {e}"))?;
+            let via_chunked = frames.pop().ok_or("chunked path lost the frame")?;
+            if &via_blocking != payload || &via_chunked != payload {
+                return Err("framing must hand back the exact payload bytes".into());
+            }
+            let a = Request::decode(&via_blocking).map_err(|e| e.to_string());
+            let b = Request::decode(&via_chunked).map_err(|e| e.to_string());
+            match (&a, &b) {
+                (Ok(x), Ok(y)) if x == y => Ok(()),
+                (Err(x), Err(y)) if x == y => Ok(()),
+                _ => Err(format!("decode outcomes diverge: {a:?} vs {b:?}")),
+            }
+        },
+    );
+}

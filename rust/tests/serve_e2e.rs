@@ -16,7 +16,7 @@ use capsim::coordinator::ClipCache;
 use capsim::dataset::ClipSample;
 use capsim::predictor::BatchRunner;
 use capsim::runtime::{AttentionPredictor, Batch, ModelGeometry, NativePredictor, Predictor};
-use capsim::serve::{synthetic_clips, Client, PredictOutcome, Server, ServeOptions};
+use capsim::serve::{synthetic_clips, Client, PredictOutcome, Server, ServeOptions, SessionLayer};
 
 const TS: f32 = 40.0;
 
@@ -30,6 +30,18 @@ fn opts(linger_us: u64, queue_depth: usize) -> ServeOptions {
         cache_path: None,
         cache_max_entries: 10_000,
         cache_mmap: true,
+        session_layer: SessionLayer::Auto,
+        idle_timeout_ms: 0,
+    }
+}
+
+/// Every session layer this host can run: both on Linux, just the
+/// threaded fallback elsewhere.
+fn layers() -> Vec<SessionLayer> {
+    if capsim::util::epoll::available() {
+        vec![SessionLayer::Epoll, SessionLayer::Threads]
+    } else {
+        vec![SessionLayer::Threads]
     }
 }
 
@@ -183,6 +195,142 @@ fn replica_counts_are_bit_identical() {
         );
 
         Client::connect(addr).unwrap().shutdown().unwrap();
+        daemon.join().unwrap().unwrap();
+    }
+}
+
+/// The session-layer invariance matrix: the same request streams served
+/// through the epoll event loop and through thread-per-connection
+/// sessions, over 1 and 4 predict loops, must produce bit-identical
+/// predictions — cold (predicted, in whatever cross-request batches the
+/// layer's timing produces) and warm (from the shared cache) — all
+/// equal to the single-shot forward. Which tier owns the sockets is
+/// observable only as latency, never as different bytes.
+#[test]
+fn session_layers_are_bit_identical_across_replica_counts() {
+    let model = AttentionPredictor::with_defaults();
+    let g = model.geometry().clone();
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 8;
+    let all: Vec<(u64, ClipSample)> = (0..CLIENTS as u64)
+        .flat_map(|c| synthetic_clips(0xE9011, c, 0, PER_CLIENT, &g))
+        .collect();
+    // ground truth: each clip forwarded alone, straight through the model
+    let mut runner = BatchRunner::new();
+    let expected: Vec<f64> = all
+        .iter()
+        .map(|pair| {
+            runner.forward_tail(&model, std::slice::from_ref(pair), TS).unwrap()[0] as f64
+        })
+        .collect();
+
+    for layer in layers() {
+        for n_loops in [1usize, 4] {
+            let mut o = opts(1_000, 8);
+            o.session_layer = layer;
+            o.predict_loops = n_loops;
+            let server = Server::bind(o).unwrap();
+            let addr = server.addr();
+            let daemon = std::thread::spawn(move || {
+                let model = AttentionPredictor::with_defaults();
+                server.run(&model)
+            });
+
+            // cold pass predicts on whichever replica each request lands
+            // on; warm pass reads the shared cache — same bits both ways
+            for pass in 0..2 {
+                std::thread::scope(|s| {
+                    for c in 0..CLIENTS {
+                        let all = &all;
+                        let expected = &expected;
+                        s.spawn(move || {
+                            let mut client = Client::connect(addr).unwrap();
+                            let lo = c * PER_CLIENT;
+                            let clips = &all[lo..lo + PER_CLIENT];
+                            let (preds, _) = client.predict_retry(clips, true, 1_000).unwrap();
+                            assert_eq!(preds.len(), clips.len());
+                            for (i, p) in preds.iter().enumerate() {
+                                assert_eq!(
+                                    p.to_bits(),
+                                    expected[lo + i].to_bits(),
+                                    "layer {layer}, loops {n_loops}, pass {pass}, clip {}",
+                                    lo + i
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+
+            let stats = Client::connect(addr).unwrap().stats().unwrap();
+            assert_eq!(
+                stats.per_loop.len(),
+                n_loops,
+                "layer {layer}: one counter block per replica"
+            );
+            assert_eq!(
+                stats.predicted_clips,
+                all.len() as u64,
+                "layer {layer}, loops {n_loops}: cold pass predicted each clip exactly once"
+            );
+            assert_eq!(
+                stats.cache_hits,
+                all.len() as u64,
+                "layer {layer}, loops {n_loops}: warm pass came entirely from the shared cache"
+            );
+
+            Client::connect(addr).unwrap().shutdown().unwrap();
+            daemon.join().unwrap().unwrap();
+        }
+    }
+}
+
+/// A half-open connection — connected, never completes a frame — must
+/// be reaped after `idle_timeout_ms` in **both** session layers, and
+/// reaping it must not disturb a live session that keeps issuing
+/// requests straight through the deadline.
+#[test]
+fn idle_connections_are_reaped_without_disturbing_live_sessions() {
+    use std::io::Read;
+
+    let g = NativePredictor::with_defaults().geometry().clone();
+    for layer in layers() {
+        let mut o = opts(500, 8);
+        o.session_layer = layer;
+        o.idle_timeout_ms = 300;
+        let server = Server::bind(o).unwrap();
+        let addr = server.addr();
+        let daemon = std::thread::spawn(move || server.run(&NativePredictor::with_defaults()));
+
+        // the half-open client: a raw socket that sends nothing at all
+        let mut idle = std::net::TcpStream::connect(addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+        // a live session keeps working well past the idle deadline (its
+        // requests arrive every ~50 ms against a 300 ms timeout)
+        let mut client = Client::connect(addr).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut r = 0u64;
+        while t0.elapsed() < Duration::from_millis(900) {
+            let clips = synthetic_clips(0x1D7E, 9, r, 2, &g);
+            let (preds, _) = client.predict_retry(&clips, true, 1_000).unwrap();
+            assert_eq!(preds.len(), 2, "layer {layer}: live session must keep being served");
+            r += 1;
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(r >= 2, "layer {layer}: the live client got work done during the window");
+
+        // the daemon closed the silent connection: a clean EOF, not a
+        // 5-second hang (the client-side timeout above turns a missed
+        // reap into a loud error instead of a stuck test)
+        let mut buf = [0u8; 1];
+        let n = idle
+            .read(&mut buf)
+            .unwrap_or_else(|e| panic!("layer {layer}: reaping should close the socket: {e}"));
+        assert_eq!(n, 0, "layer {layer}: expected EOF from the reaped connection");
+
+        client.shutdown().unwrap();
+        drop(client);
         daemon.join().unwrap().unwrap();
     }
 }
@@ -402,6 +550,8 @@ fn shutdown_saves_the_cache_and_restart_warm_starts() {
         cache_path: Some(cache_path.clone()),
         cache_max_entries: 10_000,
         cache_mmap: true,
+        session_layer: SessionLayer::Auto,
+        idle_timeout_ms: 0,
     };
     let g = NativePredictor::with_defaults().geometry().clone();
     let clips = synthetic_clips(0xD15C, 0, 0, 10, &g);

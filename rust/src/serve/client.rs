@@ -191,7 +191,11 @@ pub fn synthetic_clips(
 /// `Busy` bounces and latency includes those retries (it is what a
 /// caller actually waits); the deterministic clip streams depend only
 /// on `(seed, client, request)`, so the worker count never changes what
-/// is sent.
+/// is sent. Round-robining means each held connection idles for its
+/// siblings' request times between its own — against a daemon with a
+/// short `--idle-timeout-ms` the reaper can close it mid-burst, so a
+/// failed request reconnects once (latency then includes the
+/// reconnect) before giving up.
 pub fn burst(addr: SocketAddr, g: &ModelGeometry, spec: &BurstSpec) -> Result<BurstReport> {
     let workers = match spec.workers {
         0 => spec.clients.clamp(1, 16),
@@ -215,7 +219,17 @@ pub fn burst(addr: SocketAddr, g: &ModelGeometry, spec: &BurstSpec) -> Result<Bu
                             let clips = synthetic_clips(spec.seed, *c, r as u64, spec.clips, g);
                             let t0 = Instant::now();
                             let (_preds, n_retry) =
-                                client.predict_retry(&clips, spec.use_cache, 10_000)?;
+                                match client.predict_retry(&clips, spec.use_cache, 10_000) {
+                                    Ok(done) => done,
+                                    Err(_) => {
+                                        // the daemon's idle reaper can close a
+                                        // held connection while the worker is
+                                        // busy with its siblings; one fresh
+                                        // connection, then fail for real
+                                        *client = Client::connect(addr)?;
+                                        client.predict_retry(&clips, spec.use_cache, 10_000)?
+                                    }
+                                };
                             lats.push(t0.elapsed().as_secs_f64());
                             retries += n_retry;
                         }

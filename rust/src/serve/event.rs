@@ -27,7 +27,12 @@
 //! Interest management is level-triggered and explicit: read interest
 //! is dropped while a request is in flight (no busy-wake on bytes we
 //! will not decode yet), write interest exists only while the outbox
-//! has unsent bytes. Idle connections (no traffic for
+//! has unsent bytes. Hangup is a drain, not an instant close — the
+//! kernel may still hold request bytes past a FIN/RST, and the
+//! threaded layer reads until the socket actually fails — so the read
+//! side is drained, buffered requests are served, and the fd is
+//! deregistered (HUP ignores the interest mask) until the reply lands
+//! or the flush fails. Idle connections (no traffic for
 //! `idle_timeout_ms`, nothing in flight) are reaped on a timeout
 //! derived from the nearest deadline, so a half-open client costs one
 //! table entry for a bounded time instead of a thread forever.
@@ -128,6 +133,11 @@ mod imp {
         closing: bool,
         /// Peer sent EOF; serve what is buffered, then close.
         peer_eof: bool,
+        /// Still in the poller's interest table. Cleared on hangup —
+        /// the fd is deregistered early because `EPOLLHUP`/`EPOLLERR`
+        /// are reported regardless of interest and would busy-wake the
+        /// loop while an in-flight reply is still being computed.
+        registered: bool,
         want_read: bool,
         want_write: bool,
     }
@@ -143,6 +153,7 @@ mod imp {
                 inflight: false,
                 closing: false,
                 peer_eof: false,
+                registered: true,
                 want_read: true,
                 want_write: false,
             }
@@ -188,9 +199,11 @@ mod imp {
             // un-gates the connection's next buffered request.
             for (token, preds) in ctx.completions.drain() {
                 let found = match conns.get_mut(&token) {
-                    // A job bounced before admission (Busy) drops its
-                    // ReplyTo; that stale `None` must not become an
-                    // error frame on a connection with nothing pending.
+                    // Bounced jobs are defused at dispatch, so a
+                    // completion for a live token always answers its one
+                    // in-flight request; the `inflight` guard is pure
+                    // defense (tokens are never reused, so a completion
+                    // racing a close can only miss the table).
                     Some(conn) if conn.inflight => {
                         conn.inflight = false;
                         conn.last_activity = Instant::now();
@@ -252,16 +265,17 @@ mod imp {
     }
 
     /// Kernel readiness on one connection: pull bytes on readable, then
-    /// let `step_conn` decode/dispatch/flush.
+    /// let `step_conn` decode/dispatch/flush. Hangup (`EPOLLHUP` /
+    /// `EPOLLERR`) is not an immediate close: the kernel may still hold
+    /// request bytes past a FIN/RST, and the threaded layer reads until
+    /// the socket actually fails — so drain the read side first, serve
+    /// what was buffered, and let the (best-effort) outbox flush or the
+    /// drained/peer-EOF check in `step_conn` retire the connection.
     fn socket_ready(ev: Event, conns: &mut HashMap<u64, Conn>, poller: &Poller, ctx: &Ctx<'_>) {
         let token = ev.token;
-        if ev.hangup {
-            close_conn(token, conns, poller);
-            return;
-        }
         let mut dead = false;
         if let Some(conn) = conns.get_mut(&token) {
-            if ev.readable {
+            if ev.readable || ev.hangup {
                 let mut buf = [0u8; 16 * 1024];
                 loop {
                     match conn.stream.read(&mut buf) {
@@ -285,6 +299,17 @@ mod imp {
                             break;
                         }
                     }
+                }
+            }
+            if ev.hangup && !dead {
+                // Nothing more will arrive; deregister now (HUP/ERR
+                // ignore the interest mask, so a registered fd would
+                // wake every poll until an in-flight reply lands) and
+                // let `step_conn` serve the buffered tail.
+                conn.peer_eof = true;
+                if conn.registered {
+                    conn.registered = false;
+                    let _ = poller.delete(conn.stream.as_raw_fd());
                 }
             }
         } else {
@@ -320,7 +345,7 @@ mod imp {
             {
                 dead = true;
             }
-            if !dead {
+            if !dead && conn.registered {
                 let want_read = !conn.inflight && !conn.closing && !conn.peer_eof;
                 let want_write = !conn.outbox_drained();
                 if (want_read, want_write) != (conn.want_read, conn.want_write) {
@@ -373,14 +398,22 @@ mod imp {
                                 conn.inflight = true;
                                 return; // reply arrives through Completions
                             }
-                            Dispatch::Full => {
+                            Dispatch::Full(bounced) => {
+                                // Defused, not dropped: a drop-side `None`
+                                // completion here could be consumed as the
+                                // reply to this connection's *next*
+                                // pipelined request if one dispatches
+                                // before the completion queue drains —
+                                // leaving every later reply off by one.
+                                bounced.reply.defuse();
                                 ctx.counters.rejected.fetch_add(1, Ordering::Relaxed);
                                 Response::Busy {
                                     retry_ms: ctx.retry_ms,
                                     queue_depth: ctx.queue_depth as u32,
                                 }
                             }
-                            Dispatch::Disconnected => {
+                            Dispatch::Disconnected(bounced) => {
+                                bounced.reply.defuse();
                                 Response::Error("server is shutting down".into())
                             }
                         }
@@ -417,7 +450,9 @@ mod imp {
         if let Some(conn) = conns.remove(&token) {
             // Closing the fd deregisters it anyway; explicit delete keeps
             // the table and the interest set in lockstep.
-            let _ = poller.delete(conn.stream.as_raw_fd());
+            if conn.registered {
+                let _ = poller.delete(conn.stream.as_raw_fd());
+            }
         }
     }
 
@@ -489,5 +524,42 @@ mod tests {
         let drained = completions.drain();
         assert_eq!(drained.len(), 1);
         assert_eq!(drained[0], (42, None), "the connection must learn, not hang");
+    }
+
+    /// Regression: a job bounced at admission (`Busy`) must leave the
+    /// completion queue untouched once defused. Before the defuse, the
+    /// drop-side `(conn, None)` could be consumed as the reply to the
+    /// connection's *next* pipelined request dispatched ahead of the
+    /// drain, putting every later reply on that connection off by one.
+    #[test]
+    fn bounced_event_reply_defuses_to_no_stale_completion() {
+        use crate::serve::server::{dispatch, Dispatch, Job};
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::mpsc::sync_channel;
+
+        let poller = Poller::new().unwrap();
+        let completions = Arc::new(Completions::new(poller.waker()));
+        let (tx, _rx) = sync_channel::<Job>(1);
+        let txs = vec![tx];
+        let rr = AtomicUsize::new(0);
+        let park = Job {
+            clips: Vec::new(),
+            use_cache: false,
+            reply: ReplyTo::event(7, Arc::clone(&completions)),
+        };
+        assert!(matches!(dispatch(&txs, &rr, park), Dispatch::Sent));
+        let bounce = Job {
+            clips: Vec::new(),
+            use_cache: false,
+            reply: ReplyTo::event(7, Arc::clone(&completions)),
+        };
+        match dispatch(&txs, &rr, bounce) {
+            Dispatch::Full(job) => job.reply.defuse(),
+            _ => panic!("one-slot queue with a parked job must bounce Full"),
+        }
+        assert!(
+            completions.drain().is_empty(),
+            "a defused bounce must not fabricate a completion"
+        );
     }
 }

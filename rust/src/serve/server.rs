@@ -277,6 +277,16 @@ impl ReplyTo {
         ReplyTo { inner: Some(ReplyInner::Event { conn, completions }) }
     }
 
+    /// Disarm a reply that will never fire because its job bounced at
+    /// admission (`Busy` / shutting down) and the caller answers inline.
+    /// The drop-side failure push exists for replicas dying with a
+    /// *dispatched* job; letting it fire for a bounced one would queue a
+    /// stale `(conn, None)` completion that the event loop could consume
+    /// as the reply to that connection's next pipelined request.
+    pub(super) fn defuse(mut self) {
+        self.inner = None;
+    }
+
     /// Deliver the predictions. A dead recipient (client hung up) is
     /// fine — the answer is simply dropped.
     fn send(mut self, preds: Vec<f64>) {
@@ -539,14 +549,17 @@ pub(super) fn convert(clips: &[WireClip], g: &ModelGeometry) -> Result<Vec<(u64,
         .collect()
 }
 
-/// Outcome of offering a job to the predict loops.
+/// Outcome of offering a job to the predict loops. The bounce variants
+/// hand the job back so the caller can [`ReplyTo::defuse`] its reply —
+/// dropping it inside `dispatch` would let the event variant's drop
+/// hook push a failure completion for a request that was never admitted.
 pub(super) enum Dispatch {
     /// A loop took the job; await the reply.
     Sent,
     /// Every live loop's queue was full — backpressure, answer `Busy`.
-    Full,
+    Full(Job),
     /// No loop is receiving any more — shutdown (or every replica died).
-    Disconnected,
+    Disconnected(Job),
 }
 
 /// Offer `job` to the loops starting at the round-robin cursor; the
@@ -569,9 +582,9 @@ pub(super) fn dispatch(txs: &[SyncSender<Job>], rr: &AtomicUsize, mut job: Job) 
         }
     }
     if saw_full {
-        Dispatch::Full
+        Dispatch::Full(job)
     } else {
-        Dispatch::Disconnected
+        Dispatch::Disconnected(job)
     }
 }
 
@@ -635,11 +648,13 @@ fn session(
                                     Response::Error("predictor dropped the request".into())
                                 }
                             },
-                            Dispatch::Full => {
+                            Dispatch::Full(bounced) => {
+                                bounced.reply.defuse();
                                 counters.rejected.fetch_add(1, Ordering::Relaxed);
                                 Response::Busy { retry_ms, queue_depth: queue_depth as u32 }
                             }
-                            Dispatch::Disconnected => {
+                            Dispatch::Disconnected(bounced) => {
+                                bounced.reply.defuse();
                                 Response::Error("server is shutting down".into())
                             }
                         }
@@ -855,12 +870,32 @@ mod tests {
         // fill loop 0's slot: the next job targeting it fails over to 1
         assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
         assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
-        // both slots now full: backpressure, not an error
-        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Full));
+        // both slots now full: backpressure, not an error — and the job
+        // comes back so the caller can defuse its reply
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Full(_)));
         drop(rx0);
         drop(rx1);
         // all receivers gone: shutdown, not backpressure
-        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Disconnected));
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Disconnected(_)));
+    }
+
+    #[test]
+    fn bounced_job_comes_back_with_a_live_reply() {
+        let (tx, _rx) = sync_channel::<Job>(1);
+        let txs = vec![tx];
+        let rr = AtomicUsize::new(0);
+        assert!(matches!(dispatch(&txs, &rr, dummy_job().0), Dispatch::Sent));
+        let (job, rrx) = dummy_job();
+        match dispatch(&txs, &rr, job) {
+            // the returned reply is the same one the caller built: only
+            // dropping (or defusing) it disconnects the receiver
+            Dispatch::Full(bounced) => {
+                assert!(matches!(rrx.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)));
+                bounced.reply.defuse();
+                assert!(rrx.recv().is_err(), "defused channel reply disconnects");
+            }
+            _ => panic!("one-slot queue with a parked job must bounce Full"),
+        }
     }
 
     #[test]
